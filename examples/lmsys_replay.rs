@@ -1,0 +1,59 @@
+//! §5.2 reproduction driver at adjustable scale: the high- and
+//! low-demand serving experiments on the LMSYS-calibrated workload with
+//! the Llama2-70B/2×A100 performance model — the pipeline behind
+//! Figures 3, 4, 8 and 11 (the figure benches sweep it; this example is
+//! the single-run, human-readable version).
+//!
+//! Run: `cargo run --release --example lmsys_replay -- --n 1000`
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::{continuous, SimConfig};
+use kvsched::util::cli::Args;
+use kvsched::workload::lmsys::LmsysGen;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 1000);
+    let seed = args.u64_or("seed", 3);
+
+    for (name, lambda) in [("high demand (λ=50)", 50.0), ("low demand (λ=10)", 10.0)] {
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(seed);
+        let inst = gen.instance(n, lambda, continuous::PAPER_M, &mut rng);
+
+        let mut table = Table::new(
+            &format!("{name}: {} requests, M = {}", inst.n(), inst.m),
+            &["algorithm", "avg_latency_s", "max_mem", "clearings", "finished"],
+        );
+        let perf = Llama70bA100x2::default();
+        for mut sched in kvsched::sched::paper_benchmark_suite() {
+            let out = continuous::try_simulate(
+                &inst,
+                sched.as_mut(),
+                &Predictor::exact(),
+                &perf,
+                seed,
+                SimConfig {
+                    max_rounds: 500_000,
+                    record_series: false,
+                    ..SimConfig::default()
+                },
+            )?;
+            table.row(&[
+                out.algo.clone(),
+                fmt(out.avg_latency()),
+                out.max_mem().to_string(),
+                out.overflow_events.to_string(),
+                out.finished.to_string(),
+            ]);
+        }
+        table.print();
+        table.save_json(&format!(
+            "lmsys_replay_{}",
+            if lambda > 20.0 { "high" } else { "low" }
+        ));
+    }
+    Ok(())
+}

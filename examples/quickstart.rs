@@ -1,0 +1,63 @@
+//! Quickstart: generate an LMSYS-like workload, run MC-SF against the
+//! paper's baselines on the Llama2-70B/2×A100 performance model, and
+//! print the comparison — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart [-- --n 400 --lambda 50]`
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::{continuous, SimConfig};
+use kvsched::util::cli::Args;
+use kvsched::workload::lmsys::LmsysGen;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 1000);
+    let lambda = args.f64_or("lambda", 50.0);
+    let seed = args.u64_or("seed", 1);
+
+    // 1. A workload: n requests with LMSYS-calibrated lengths arriving
+    //    as a Poisson process, served under the paper's KV budget.
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(seed);
+    let inst = gen.instance(n, lambda, continuous::PAPER_M, &mut rng);
+    println!(
+        "workload: {} requests, λ={lambda}/s, M={} KV tokens",
+        inst.n(),
+        inst.m
+    );
+
+    // 2. The serving simulation: per-iteration latency from the
+    //    analytic Llama2-70B on 2×A100 model (the paper's Vidur role).
+    let perf = Llama70bA100x2::default();
+
+    // 3. Compare MC-SF with the §5.2 baselines.
+    let mut table = Table::new(
+        "MC-SF vs baselines (avg end-to-end latency)",
+        &["algorithm", "avg_s", "p50_s", "p95_s", "clearings", "finished"],
+    );
+    for mut sched in kvsched::sched::paper_benchmark_suite() {
+        let out = continuous::try_simulate(
+            &inst,
+            sched.as_mut(),
+            &Predictor::exact(),
+            &perf,
+            seed,
+            SimConfig::default(),
+        )?;
+        let s = out.summary();
+        table.row(&[
+            out.algo.clone(),
+            fmt(out.avg_latency()),
+            fmt(s.p50),
+            fmt(s.p95),
+            out.overflow_events.to_string(),
+            out.finished.to_string(),
+        ]);
+    }
+    table.print();
+    table.save_json("quickstart");
+    println!("\n(rows also saved to results/quickstart.json)");
+    Ok(())
+}

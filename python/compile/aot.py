@@ -1,0 +1,192 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernel) to
+HLO *text* artifacts the Rust runtime loads via PJRT.
+
+Run once at build time (`make artifacts`); Python never serves requests.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser
+re-assigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs under --out (default ../artifacts):
+  manifest.json            model config + parameter table + executables
+  weights.bin              all parameters, f32 little-endian, spec order
+  decode_b{B}.hlo.txt      one decode-step executable per batch bucket
+  prefill_b{B}_t{T}.hlo.txt  prefill executables
+  goldens.json             reference outputs for the Rust runtime test
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch buckets compiled ahead of time; the runtime pads the live batch
+# up to the nearest bucket.
+DECODE_BUCKETS = [1, 2, 4, 8]
+PREFILL_BUCKETS = [(1, 32), (2, 32), (4, 32)]  # (B, T)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def decode_arg_specs(cfg: M.ModelConfig, b: int):
+    l, c, h, dh = cfg.n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_specs(cfg)]
+    specs += [
+        jax.ShapeDtypeStruct((b,), jnp.int32),               # tokens
+        jax.ShapeDtypeStruct((l, b, c, h, dh), jnp.float32),  # k_cache
+        jax.ShapeDtypeStruct((l, b, c, h, dh), jnp.float32),  # v_cache
+        jax.ShapeDtypeStruct((b,), jnp.int32),               # lengths
+    ]
+    return specs
+
+
+def prefill_arg_specs(cfg: M.ModelConfig, b: int, t: int):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_specs(cfg)]
+    specs += [
+        jax.ShapeDtypeStruct((b, t), jnp.int32),  # tokens
+        jax.ShapeDtypeStruct((b,), jnp.int32),    # lengths
+    ]
+    return specs
+
+
+def lower_decode(cfg: M.ModelConfig, b: int) -> str:
+    fn = M.decode_step_flat(cfg)
+    lowered = jax.jit(fn).lower(*decode_arg_specs(cfg, b))
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg: M.ModelConfig, b: int, t: int) -> str:
+    flat = M.prefill_flat(cfg)
+
+    def fn(*args):
+        logits, k, v, _lens = flat(*args)
+        return logits, k, v
+
+    lowered = jax.jit(fn).lower(*prefill_arg_specs(cfg, b, t))
+    return to_hlo_text(lowered)
+
+
+def export_weights(cfg: M.ModelConfig, params, out_dir: str):
+    table = []
+    offset = 0
+    chunks = []
+    for name, shape in M.param_specs(cfg):
+        arr = np.asarray(params[name], np.float32)
+        assert arr.shape == tuple(shape)
+        chunks.append(arr.tobytes())  # C-order f32 LE
+        size = arr.size
+        table.append(
+            {"name": name, "shape": list(shape), "offset": offset, "size": size}
+        )
+        offset += size
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(b"".join(chunks))
+    return table
+
+
+def make_goldens(cfg: M.ModelConfig, params) -> dict:
+    """Reference serving trace for the Rust runtime test: prefill the
+    prompt, then greedy-decode a few tokens. Deterministic."""
+    prompt = [72, 101, 108, 108, 111]  # b"Hello"
+    b, t = 1, min(32, cfg.max_seq // 2)
+    toks = np.zeros((b, t), np.int32)
+    toks[0, : len(prompt)] = prompt
+    lens = jnp.asarray([len(prompt)], jnp.int32)
+    logits, kc, vc, _ = M.prefill(params, jnp.asarray(toks), lens, cfg)
+    first_logits = np.asarray(logits[0], np.float32)
+    generated = []
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    cur_len = lens
+    for _ in range(6):
+        generated.append(int(cur[0]))
+        logits, kc, vc = M.decode_step(params, cur, kc, vc, cur_len, cfg)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        cur_len = cur_len + 1
+    return {
+        "prompt": prompt,
+        "prefill_logits_head": [float(x) for x in first_logits[:16]],
+        "greedy_tokens": generated,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = M.ModelConfig(
+        d_model=args.d_model,
+        n_layers=args.layers,
+        n_heads=args.heads,
+        max_seq=args.max_seq,
+        seed=args.seed,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    params = M.init_params(cfg)
+
+    param_table = export_weights(cfg, params, args.out)
+
+    decode_entries = []
+    for b in DECODE_BUCKETS:
+        text = lower_decode(cfg, b)
+        fname = f"decode_b{b}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        decode_entries.append({"batch": b, "file": fname})
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    prefill_entries = []
+    for b, t in PREFILL_BUCKETS:
+        text = lower_prefill(cfg, b, t)
+        fname = f"prefill_b{b}_t{t}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        prefill_entries.append({"batch": b, "seq": t, "file": fname})
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    goldens = make_goldens(cfg, params)
+    with open(os.path.join(args.out, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "max_seq": cfg.max_seq,
+            "ffn_mult": cfg.ffn_mult,
+            "seed": cfg.seed,
+        },
+        "params": param_table,
+        "weights_file": "weights.bin",
+        "decode": decode_entries,
+        "prefill": prefill_entries,
+        "goldens": "goldens.json",
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Pallas decode-attention kernel — the serving hot spot (L1).
+
+One program instance per (batch row, head); inside the kernel the KV
+cache is consumed in fixed-size chunks with an **online-softmax**
+accumulator (running max / normalizer), the same single-pass structure
+FlashAttention/FlashDecoding use. This is the TPU re-think of the GPU
+kernels the serving literature tunes (DESIGN.md §Hardware-Adaptation):
+
+* the chunk size `block_c` bounds the VMEM-resident K/V tile
+  (`2 · block_c · Dh · 4` bytes per program) — BlockSpec-style HBM→VMEM
+  staging rather than CUDA shared-memory tiles;
+* the two contractions (`q·Kᵀ` over `Dh`, `p·V` over `block_c`) are
+  MXU-shaped matmuls in f32 accumulate;
+* masking by cache length is positional, so padded cache slots cost no
+  extra traffic beyond the current chunk.
+
+On this image Pallas must run with `interpret=True` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); correctness is asserted against
+`ref.decode_attention_ref` and the real-TPU resource envelope is
+estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_c: int):
+    """Kernel body for one (batch, head) program.
+
+    Block shapes (VMEM views; batch/head dims squeezed by the BlockSpec):
+      len_ref: [1]       valid cache length for this row
+      q_ref:   [Dh]      the query
+      k_ref:   [C, Dh]   this row+head's keys
+      v_ref:   [C, Dh]   this row+head's values
+      o_ref:   [Dh]      output
+    """
+    c_total = k_ref.shape[0]
+    dh = q_ref.shape[0]
+    length = len_ref[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[...].astype(jnp.float32)[None, :] * scale  # [1, Dh]
+
+    n_chunks = pl.cdiv(c_total, block_c)
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * block_c
+        # Dynamic slices clamp their start so the window fits; for the
+        # tail chunk (C not a multiple of block_c) this re-reads a few
+        # already-processed positions, which the `pos >= start` mask
+        # below excludes from the accumulator.
+        st = jnp.minimum(start, c_total - block_c)
+        k = k_ref[pl.ds(st, block_c), :].astype(jnp.float32)  # [bc, Dh]
+        v = v_ref[pl.ds(st, block_c), :].astype(jnp.float32)  # [bc, Dh]
+        # [1, bc] scores for this chunk (contraction over Dh -> MXU).
+        s = q @ k.T
+        pos = st + jax.lax.iota(jnp.int32, block_c)
+        valid = ((pos < length) & (pos >= start))[None, :]
+        s = jnp.where(valid, s, -jnp.inf)
+        # Online softmax update.
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))  # [1]
+        # Guard exp(-inf - -inf): when nothing valid yet m stays -inf and
+        # alpha must be 1 (no rescale).
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_new), 1.0)
+        p = jnp.exp(s - m_new[:, None])  # [1, bc]; exp(-inf)=0 for masked
+        p = jnp.where(valid, p, 0.0)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_new = acc_prev * alpha[:, None] + p @ v  # [1, Dh]
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((1,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc0 = jnp.zeros((1, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_chunks, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None])[0].astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_c: int = 64,
+                     interpret: bool = True):
+    """Batched decode attention via Pallas.
+
+    Args:
+      q:        [B, H, Dh]
+      k_cache:  [B, C, H, Dh]
+      v_cache:  [B, C, H, Dh]
+      lengths:  [B] int32, valid positions per row.
+      block_c:  KV chunk length staged per VMEM tile.
+      interpret: run the kernel in interpret mode (required on CPU PJRT).
+
+    Returns:
+      [B, H, Dh] attention output, dtype of `q`.
+    """
+    b, c, h, dh = k_cache.shape
+    assert q.shape == (b, h, dh), (q.shape, k_cache.shape)
+    block_c = min(block_c, c)
+
+    grid = (b, h)
+    kernel = functools.partial(_decode_attn_kernel, block_c=block_c)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),                 # lengths
+            pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),  # q
+            pl.BlockSpec((None, c, None, dh), lambda i, j: (i, 0, j, 0)),  # k
+            pl.BlockSpec((None, c, None, dh), lambda i, j: (i, 0, j, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)
+
+
+def vmem_bytes(block_c: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set per program instance: the staged K and
+    V chunks plus q/accumulator rows. Used by the §Perf analysis."""
+    return 2 * block_c * dh * dtype_bytes + 3 * dh * dtype_bytes

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: `pytest python/tests` checks the
+Pallas implementations against these reference functions over randomized
+shapes/dtypes (hypothesis sweeps), and `aot.py` embeds reference outputs
+as goldens for the Rust runtime test.
+"""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token (decode-phase) attention against a KV cache.
+
+    Args:
+      q:        [B, H, Dh]   query for the token being generated.
+      k_cache:  [B, C, H, Dh] keys, valid in [0, lengths[b]).
+      v_cache:  [B, C, H, Dh] values.
+      lengths:  [B] int32     number of valid cache positions per row.
+
+    Returns:
+      [B, H, Dh] attention output.
+    """
+    b, c, h, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    # scores[b, h, c]
+    scores = jnp.einsum("bhd,bchd->bhc", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(c)[None, None, :]
+    mask = pos < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhc,bchd->bhd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def causal_attention_ref(q, k, v, lengths):
+    """Prefill-phase causal attention.
+
+    Args:
+      q, k, v:  [B, T, H, Dh]
+      lengths:  [B] int32  valid prompt length per row (padding masked).
+
+    Returns:
+      [B, T, H, Dh]
+    """
+    b, t, h, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(t)[None, None, :, None]
+    kpos = jnp.arange(t)[None, None, None, :]
+    causal = kpos <= qpos
+    valid = kpos < lengths[:, None, None, None]
+    scores = jnp.where(causal & valid, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

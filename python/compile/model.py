@@ -1,0 +1,220 @@
+"""L2: a small decoder-only transformer with an explicit KV cache,
+written in JAX and calling the L1 Pallas decode-attention kernel.
+
+Two entry points are AOT-lowered per batch bucket (see `aot.py`):
+
+* `prefill(params, tokens[B,T], lengths[B])` — process prompts, fill the
+  KV cache, return last-position logits;
+* `decode_step(params, token[B], k_cache, v_cache, lengths[B])` — one
+  serving iteration: append each row's token to its cache and return
+  next-token logits (this is what the Rust coordinator calls in its
+  batch loop; the Pallas kernel runs inside it).
+
+Byte-level vocabulary (256 + BOS) so the Rust side needs no tokenizer.
+Weights are runtime inputs (exported to `artifacts/weights.bin`), not
+HLO constants — production-shaped "load a model, then serve".
+"""
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.decode_attention import decode_attention
+from .kernels.ref import causal_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 257  # 256 bytes + BOS
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    max_seq: int = 96  # KV-cache capacity C
+    ffn_mult: int = 4
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return self.ffn_mult * self.d_model
+
+
+# Parameter layout: a fixed, ordered list of (name, shape) so the Rust
+# runtime can map artifacts/weights.bin without reflection.
+def param_specs(cfg: ModelConfig) -> List:
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.max_seq, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wk", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wv", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w_up", (cfg.d_model, cfg.d_ffn)),
+            (f"l{i}.w_down", (cfg.d_ffn, cfg.d_model)),
+        ]
+    specs += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Deterministic random init (the 'small real model' served e2e)."""
+    rng = np.random.default_rng(cfg.seed)
+    params = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith("_g"):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith("_b"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else cfg.d_model
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, cfg: ModelConfig):
+    # [..., d_model] -> [..., H, Dh]
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+def _merge_heads(x, cfg: ModelConfig):
+    return x.reshape(x.shape[:-2] + (cfg.d_model,))
+
+
+def _block_decode(params, i, x, k_cache_l, v_cache_l, lengths, cfg):
+    """One transformer block for a single-token step.
+
+    x: [B, d]; caches: [B, C, H, Dh]; lengths: [B] (cache fill BEFORE this
+    token). Returns (x, new_k_cache_l, new_v_cache_l).
+    """
+    p = lambda n: params[f"l{i}.{n}"]
+    h = _layer_norm(x, p("ln1_g"), p("ln1_b"))
+    q = _split_heads(h @ p("wq"), cfg)  # [B, H, Dh]
+    k = _split_heads(h @ p("wk"), cfg)
+    v = _split_heads(h @ p("wv"), cfg)
+    # Append this token's K/V at position `lengths[b]` per row.
+    def put(cache, new):
+        # cache [C, H, Dh], new [H, Dh], idx scalar
+        def upd(c, n, idx):
+            return jax.lax.dynamic_update_slice(c, n[None], (idx, 0, 0))
+        return jax.vmap(upd)(cache, new, lengths)
+    k_cache_l = put(k_cache_l, k)
+    v_cache_l = put(v_cache_l, v)
+    attn = decode_attention(q, k_cache_l, v_cache_l, lengths + 1)
+    x = x + _merge_heads(attn, cfg) @ p("wo")
+    h2 = _layer_norm(x, p("ln2_g"), p("ln2_b"))
+    x = x + jax.nn.gelu(h2 @ p("w_up")) @ p("w_down")
+    return x, k_cache_l, v_cache_l
+
+
+def decode_step(params, tokens, k_cache, v_cache, lengths, cfg: ModelConfig):
+    """One serving iteration.
+
+    Args:
+      tokens:  [B] int32 — token to process for each row (the previously
+               generated one, or BOS right after prefill-less start).
+      k_cache: [L, B, C, H, Dh]; v_cache same.
+      lengths: [B] int32 — tokens already in the cache.
+
+    Returns:
+      (logits [B, vocab], new_k_cache, new_v_cache)
+    """
+    x = params["tok_emb"][tokens] + params["pos_emb"][lengths]
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        x, kl, vl = _block_decode(params, i, x, k_cache[i], v_cache[i], lengths, cfg)
+        new_k.append(kl)
+        new_v.append(vl)
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill(params, tokens, lengths, cfg: ModelConfig):
+    """Process whole (padded) prompts, producing the KV cache and the
+    logits at each row's last valid position.
+
+    Args:
+      tokens:  [B, T] int32, right-padded.
+      lengths: [B] int32 valid lengths (1 ≤ len ≤ T).
+
+    Returns:
+      (logits [B, vocab], k_cache [L,B,C,H,Dh], v_cache, lengths)
+    """
+    b, t = tokens.shape
+    c = cfg.max_seq
+    pos = jnp.arange(t)
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos][None]
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        p = lambda n: params[f"l{i}.{n}"]
+        h = _layer_norm(x, p("ln1_g"), p("ln1_b"))
+        q = _split_heads(h @ p("wq"), cfg)  # [B, T, H, Dh]
+        k = _split_heads(h @ p("wk"), cfg)
+        v = _split_heads(h @ p("wv"), cfg)
+        attn = causal_attention_ref(q, k, v, lengths)
+        x = x + _merge_heads(attn, cfg) @ p("wo")
+        h2 = _layer_norm(x, p("ln2_g"), p("ln2_b"))
+        x = x + jax.nn.gelu(h2 @ p("w_up")) @ p("w_down")
+        # Pad K/V out to cache capacity.
+        pad = [(0, 0), (0, c - t), (0, 0), (0, 0)]
+        ks.append(jnp.pad(k, pad))
+        vs.append(jnp.pad(v, pad))
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits_all = x @ params["tok_emb"].T  # [B, T, vocab]
+    last = jnp.take_along_axis(
+        logits_all, (lengths - 1)[:, None, None], axis=1
+    ).squeeze(1)
+    return last, jnp.stack(ks), jnp.stack(vs), lengths
+
+
+def params_list(params: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Parameters in the canonical spec order (the runtime's ABI)."""
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def decode_step_flat(cfg: ModelConfig):
+    """decode_step as a flat-argument function for AOT lowering:
+    (w_0..w_k, tokens, k_cache, v_cache, lengths) -> tuple outputs."""
+    specs = param_specs(cfg)
+
+    def fn(*args):
+        nw = len(specs)
+        params = {name: arg for (name, _), arg in zip(specs, args[:nw])}
+        tokens, k_cache, v_cache, lengths = args[nw:]
+        return decode_step(params, tokens, k_cache, v_cache, lengths, cfg)
+
+    return fn
+
+
+def prefill_flat(cfg: ModelConfig):
+    """prefill as a flat-argument function for AOT lowering."""
+    specs = param_specs(cfg)
+
+    def fn(*args):
+        nw = len(specs)
+        params = {name: arg for (name, _), arg in zip(specs, args[:nw])}
+        tokens, lengths = args[nw:]
+        return prefill(params, tokens, lengths, cfg)
+
+    return fn

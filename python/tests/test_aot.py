@@ -1,0 +1,93 @@
+"""AOT pipeline checks: HLO text is produced, parseable-looking, and the
+manifest/weights/goldens agree with the model definition."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+CFG = M.ModelConfig(d_model=32, n_layers=1, n_heads=2, max_seq=16)
+
+
+def _entry_arity(text: str) -> int:
+    """Number of entry parameters, from the entry_computation_layout
+    header: `{(t1, t2, ...) -> ...}` — tensors at paren depth 1."""
+    inputs = text.split("entry_computation_layout={(", 1)[1]
+    depth, count = 1, 1
+    for ch in inputs:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                break
+        elif ch == "," and depth == 1:
+            count += 1
+    return count
+
+
+def test_decode_hlo_text_shape():
+    text = aot.lower_decode(CFG, 2)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # All runtime tensors present as entry parameters: weights + 4 args.
+    assert _entry_arity(text) == len(M.param_specs(CFG)) + 4
+
+
+def test_prefill_hlo_text_shape():
+    text = aot.lower_prefill(CFG, 1, 8)
+    assert text.startswith("HloModule")
+    assert _entry_arity(text) == len(M.param_specs(CFG)) + 2
+
+
+def test_weights_roundtrip(tmp_path):
+    params = M.init_params(CFG)
+    table = aot.export_weights(CFG, params, str(tmp_path))
+    blob = (tmp_path / "weights.bin").read_bytes()
+    total = sum(e["size"] for e in table)
+    assert len(blob) == 4 * total
+    arr = np.frombuffer(blob, np.float32)
+    for entry in table:
+        chunk = arr[entry["offset"]: entry["offset"] + entry["size"]]
+        expect = np.asarray(params[entry["name"]], np.float32).ravel()
+        np.testing.assert_array_equal(chunk, expect)
+
+
+def test_goldens_deterministic():
+    params = M.init_params(CFG)
+    g1 = aot.make_goldens(CFG, params)
+    g2 = aot.make_goldens(CFG, params)
+    assert g1 == g2
+    assert len(g1["greedy_tokens"]) == 6
+    assert all(0 <= t < CFG.vocab for t in g1["greedy_tokens"])
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "../../artifacts/manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_built_manifest_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.ModelConfig(
+        d_model=man["model"]["d_model"],
+        n_layers=man["model"]["n_layers"],
+        n_heads=man["model"]["n_heads"],
+        max_seq=man["model"]["max_seq"],
+        seed=man["model"]["seed"],
+    )
+    specs = M.param_specs(cfg)
+    assert [e["name"] for e in man["params"]] == [n for n, _ in specs]
+    total = sum(e["size"] for e in man["params"])
+    assert os.path.getsize(os.path.join(root, "weights.bin")) == 4 * total
+    for entry in man["decode"] + man["prefill"]:
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), entry
+        with open(path) as f:
+            assert f.read(9) == "HloModule"

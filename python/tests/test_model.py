@@ -1,0 +1,129 @@
+"""L2 correctness: transformer invariants that the serving path relies
+on — KV-cache decode ≡ full prefill, causal masking, padding
+insensitivity, and the flat-argument AOT wrappers."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = M.ModelConfig(d_model=32, n_layers=2, n_heads=2, max_seq=24)
+    return cfg, M.init_params(cfg)
+
+
+def _random_prompts(rng, b, t, lens_hi):
+    toks = np.zeros((b, t), np.int32)
+    lens = rng.integers(1, lens_hi + 1, size=b)
+    for i in range(b):
+        toks[i, : lens[i]] = rng.integers(0, 256, size=lens[i])
+    return jnp.asarray(toks), jnp.asarray(lens, jnp.int32)
+
+
+def test_prefill_shapes(small):
+    cfg, params = small
+    toks, lens = _random_prompts(np.random.default_rng(0), 3, 8, 8)
+    logits, kc, vc, _ = M.prefill(params, toks, lens, cfg)
+    assert logits.shape == (3, cfg.vocab)
+    assert kc.shape == (cfg.n_layers, 3, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    assert vc.shape == kc.shape
+
+
+def test_decode_step_shapes(small):
+    cfg, params = small
+    toks, lens = _random_prompts(np.random.default_rng(1), 2, 8, 8)
+    _, kc, vc, _ = M.prefill(params, toks, lens, cfg)
+    nxt = jnp.asarray([1, 2], jnp.int32)
+    logits, kc2, vc2 = M.decode_step(params, nxt, kc, vc, lens, cfg)
+    assert logits.shape == (2, cfg.vocab)
+    assert kc2.shape == kc.shape
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 3))
+def test_iterated_decode_equals_prefill(seed, steps):
+    """The fundamental KV-cache property: decoding token-by-token gives
+    the same logits as prefilling the extended sequence."""
+    cfg = M.ModelConfig(d_model=32, n_layers=2, n_heads=2, max_seq=24)
+    params = M.init_params(cfg)
+    rng = np.random.default_rng(seed)
+    b, t = 2, 10
+    toks, lens = _random_prompts(rng, b, t, t - steps)
+    logits, kc, vc, _ = M.prefill(params, toks, lens, cfg)
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    cur_len = lens
+    seq = np.array(jnp.pad(toks, ((0, 0), (0, steps))))
+    for _ in range(steps):
+        for i in range(b):
+            seq[i, int(cur_len[i])] = int(cur[i])
+        logits, kc, vc = M.decode_step(params, cur, kc, vc, cur_len, cfg)
+        cur_len = cur_len + 1
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        ref_logits, _, _, _ = M.prefill(params, jnp.asarray(seq), cur_len, cfg)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_causal_masking(small):
+    """Changing padding bytes after a row's valid length must not change
+    its logits."""
+    cfg, params = small
+    rng = np.random.default_rng(7)
+    toks, lens = _random_prompts(rng, 2, 12, 6)
+    logits, _, _, _ = M.prefill(params, toks, lens, cfg)
+    toks2 = toks.at[:, 7:].set(99)  # garbage in the padding region
+    logits2, _, _, _ = M.prefill(params, toks2, lens, cfg)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rows_do_not_interact(small):
+    cfg, params = small
+    rng = np.random.default_rng(8)
+    toks, lens = _random_prompts(rng, 3, 8, 8)
+    logits, _, _, _ = M.prefill(params, toks, lens, cfg)
+    solo, _, _, _ = M.prefill(params, toks[1:2], lens[1:2], cfg)
+    np.testing.assert_allclose(np.asarray(logits[1:2]), np.asarray(solo),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_param_specs_cover_init(small):
+    cfg, params = small
+    specs = M.param_specs(cfg)
+    assert set(params.keys()) == {name for name, _ in specs}
+    for name, shape in specs:
+        assert params[name].shape == tuple(shape), name
+    # Deterministic across calls.
+    again = M.init_params(cfg)
+    for name, _ in specs:
+        np.testing.assert_array_equal(np.asarray(params[name]),
+                                      np.asarray(again[name]))
+
+
+def test_flat_wrappers_match_dict_api(small):
+    cfg, params = small
+    rng = np.random.default_rng(9)
+    toks, lens = _random_prompts(rng, 1, 8, 8)
+    w = M.params_list(params, cfg)
+
+    flat_prefill = M.prefill_flat(cfg)
+    lg_f, kc_f, vc_f, _ = flat_prefill(*w, toks, lens)
+    lg_d, kc_d, vc_d, _ = M.prefill(params, toks, lens, cfg)
+    np.testing.assert_allclose(np.asarray(lg_f), np.asarray(lg_d))
+
+    flat_decode = M.decode_step_flat(cfg)
+    nxt = jnp.asarray([5], jnp.int32)
+    out_f = flat_decode(*w, nxt, kc_f, vc_f, lens)
+    out_d = M.decode_step(params, nxt, kc_d, vc_d, lens, cfg)
+    np.testing.assert_allclose(np.asarray(out_f[0]), np.asarray(out_d[0]))
+
+
+def test_logits_are_finite(small):
+    cfg, params = small
+    toks, lens = _random_prompts(np.random.default_rng(10), 2, 8, 8)
+    logits, _, _, _ = M.prefill(params, toks, lens, cfg)
+    assert bool(jnp.isfinite(logits).all())

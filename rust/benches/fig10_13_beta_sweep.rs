@@ -1,0 +1,66 @@
+//! Figures 10 and 13 (Appendix C): average latency of the α-protection
+//! β-clearing heuristics across clearing probabilities β, with α fixed
+//! at 0.1 and 0.2 — high demand (Fig 10) and low demand (Fig 13).
+//!
+//! Expected shape: stable performance for β ∈ [0.05, 0.25]; extremely
+//! small β frees memory too slowly after overflow (long clearing
+//! phases), large β clears too much and recomputes.
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::{continuous, SimConfig};
+use kvsched::util::cli::Args;
+use kvsched::workload::lmsys::LmsysGen;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 600);
+    let seed = args.u64_or("seed", 11);
+    let betas = args.list_or("betas", &[0.02, 0.05, 0.10, 0.15, 0.20, 0.30, 0.50]);
+    let perf = Llama70bA100x2::default();
+    let cfg = SimConfig {
+        max_rounds: 300_000,
+        record_series: false,
+        ..SimConfig::default()
+    };
+
+    for (fig, label, lambda) in [(10, "high demand λ=50", 50.0), (13, "low demand λ=10", 10.0)] {
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(seed);
+        let inst = gen.instance(n, lambda, continuous::PAPER_M, &mut rng);
+        let mut table = Table::new(
+            &format!("Fig {fig} — β sweep ({label})"),
+            &["beta", "avg_latency α=0.1", "avg_latency α=0.2", "clearings α=0.1"],
+        );
+        for &beta in &betas {
+            let mut cells = vec![fmt(beta)];
+            let mut clearings = 0;
+            for alpha in [0.1, 0.2] {
+                let mut sched = AlphaProtection::new(alpha, beta);
+                let out = continuous::try_simulate(
+                    &inst,
+                    &mut sched,
+                    &Predictor::exact(),
+                    &perf,
+                    seed,
+                    cfg,
+                )
+                .unwrap();
+                cells.push(if out.finished {
+                    fmt(out.avg_latency())
+                } else {
+                    "diverged".into()
+                });
+                if alpha == 0.1 {
+                    clearings = out.overflow_events;
+                }
+            }
+            cells.push(clearings.to_string());
+            table.row(&cells);
+        }
+        table.print();
+        table.save_json(&format!("fig{fig}_beta_sweep"));
+        println!("paper shape: stable for β in [0.05, 0.25]; extremes degrade");
+    }
+}

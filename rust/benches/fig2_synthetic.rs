@@ -1,0 +1,110 @@
+//! Figure 2 (§5.1): histogram of MC-SF vs hindsight-optimal latency
+//! ratio under Arrival Models 1 and 2.
+//!
+//! The paper: 200 trials, n ∈ [40,60], M ∈ [30,50], Gurobi. Our exact
+//! branch-and-bound replaces Gurobi (DESIGN.md substitution 1), so the
+//! default trial count/scale is reduced to keep `cargo bench` fast;
+//! `--trials N --scale paper` restores the paper's setting. Expected
+//! shape: Model 1 average ratio ≈ 1.00 with many exact hits; Model 2
+//! slightly higher (information asymmetry).
+
+use kvsched::bench::{fmt, Table};
+use kvsched::core::{Instance, Request};
+use kvsched::opt::{hindsight_optimal, HindsightConfig};
+use kvsched::prelude::*;
+use kvsched::sim::discrete;
+use kvsched::util::cli::Args;
+use kvsched::util::stats;
+
+fn instance(model: u8, paper_scale: bool, rng: &mut Rng) -> Instance {
+    if paper_scale {
+        return match model {
+            1 => kvsched::workload::synthetic::arrival_model_1(rng),
+            _ => kvsched::workload::synthetic::arrival_model_2(rng),
+        };
+    }
+    // Reduced scale: same structure, smaller n/M/T.
+    let m = rng.i64_range(12, 18) as u64;
+    match model {
+        1 => {
+            let n = rng.usize_range(6, 9);
+            let reqs = (0..n)
+                .map(|i| {
+                    let s = rng.i64_range(1, 3) as u64;
+                    let o = rng.i64_range(1, (m - s).min(8) as i64) as u64;
+                    Request::new(i, 0.0, s, o)
+                })
+                .collect();
+            Instance::new(m, reqs)
+        }
+        _ => {
+            let t_max = rng.i64_range(6, 10) as u64;
+            let lambda = rng.f64_range(0.5, 1.2);
+            let mut reqs = Vec::new();
+            for t in 1..=t_max {
+                for _ in 0..rng.poisson(lambda) {
+                    let s = rng.i64_range(1, 3) as u64;
+                    let o = rng.i64_range(1, (m - s).min(8) as i64) as u64;
+                    reqs.push(Request::new(reqs.len(), t as f64, s, o));
+                }
+            }
+            if reqs.is_empty() || reqs.len() > 9 {
+                return instance(model, paper_scale, rng);
+            }
+            Instance::new(m, reqs)
+        }
+    }
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let trials = args.usize_or("trials", 12);
+    let paper_scale = args.str_or("scale", "small") == "paper";
+    for (model, label) in [(1u8, "Arrival Model 1"), (2u8, "Arrival Model 2")] {
+        let mut rng = Rng::new(100 + model as u64);
+        let mut ratios = Vec::new();
+        let mut exact = 0;
+        let mut cfg = HindsightConfig::default();
+        cfg.milp.time_limit = 15.0;
+        cfg.milp.max_nodes = 2000;
+        for _ in 0..trials {
+            let inst = instance(model, paper_scale, &mut rng);
+            let Ok(sol) = hindsight_optimal(&inst, &cfg) else {
+                continue;
+            };
+            if !sol.proven_optimal {
+                continue;
+            }
+            let out = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+            let ratio = out.total_latency() / sol.total_latency;
+            if ratio < 1.0 + 1e-9 {
+                exact += 1;
+            }
+            ratios.push(ratio);
+        }
+        let mut table = Table::new(
+            &format!("Fig 2 — {label}: MC-SF / hindsight-optimal ratio"),
+            &["bin", "count", "bar"],
+        );
+        let (edges, counts) = stats::histogram(&ratios, 1.0, 1.25, 10);
+        let maxc = counts.iter().copied().max().unwrap_or(1) as f64;
+        for (e, c) in edges.iter().zip(&counts) {
+            table.row(&[
+                format!("[{:.3},{:.3})", e, e + 0.025),
+                c.to_string(),
+                stats::ascii_bar(*c as f64, maxc, 40),
+            ]);
+        }
+        table.print();
+        println!(
+            "paper: avg {} | measured: avg {} best {} worst {} ({} trials, {} exact optima)",
+            if model == 1 { "1.005" } else { "1.047" },
+            fmt(stats::mean(&ratios)),
+            fmt(stats::min(&ratios)),
+            fmt(stats::max(&ratios)),
+            ratios.len(),
+            exact
+        );
+        table.save_json(&format!("fig2_model{model}"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Figure 5 (§5.2.2): average end-to-end latency under prediction error
+//! ε ∈ {0.2, 0.5, 0.8} with `ô ~ U((1−ε)o, (1+ε)o)` and the α = 0.1
+//! protection margin, vs the FCFS benchmark.
+//!
+//! Expected shape: latency degrades as ε grows (noisier estimates +
+//! conservative budget) but MC-SF with protection stays well below FCFS
+//! even at ε = 0.8.
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::{continuous, SimConfig};
+use kvsched::util::cli::Args;
+use kvsched::workload::lmsys::LmsysGen;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 800);
+    let seed = args.u64_or("seed", 6);
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(seed);
+    let inst = gen.instance(n, 50.0, continuous::PAPER_M, &mut rng);
+    let perf = Llama70bA100x2::default();
+    let cfg = SimConfig {
+        max_rounds: 400_000,
+        record_series: false,
+        ..SimConfig::default()
+    };
+
+    let mut table = Table::new(
+        "Fig 5 — latency under prediction error (α=0.1 protection)",
+        &["configuration", "avg_latency_s", "clearings", "finished"],
+    );
+
+    // Oracle MC-SF (ε = 0) for reference.
+    let out = continuous::try_simulate(
+        &inst,
+        &mut McSf::default(),
+        &Predictor::exact(),
+        &perf,
+        seed,
+        cfg,
+    )
+    .unwrap();
+    table.row(&[
+        "MC-SF exact".into(),
+        fmt(out.avg_latency()),
+        out.overflow_events.to_string(),
+        out.finished.to_string(),
+    ]);
+
+    for eps in [0.2, 0.5, 0.8] {
+        let pred = Predictor::uniform_noise(eps, 42);
+        let mut sched = McSf::with_protection(0.1);
+        let out =
+            continuous::try_simulate(&inst, &mut sched, &pred, &perf, seed, cfg).unwrap();
+        table.row(&[
+            format!("MC-SF ε={eps} α=0.1"),
+            fmt(out.avg_latency()),
+            out.overflow_events.to_string(),
+            out.finished.to_string(),
+        ]);
+    }
+
+    // FCFS baseline (vLLM-style threshold, no forward check).
+    let mut fcfs = FcfsThreshold::default();
+    let out =
+        continuous::try_simulate(&inst, &mut fcfs, &Predictor::exact(), &perf, seed, cfg)
+            .unwrap();
+    table.row(&[
+        "FCFS(0.9)".into(),
+        if out.finished {
+            fmt(out.avg_latency())
+        } else {
+            "diverged".into()
+        },
+        out.overflow_events.to_string(),
+        out.finished.to_string(),
+    ]);
+
+    table.print();
+    table.save_json("fig5_prediction_error");
+    println!(
+        "\npaper shape: latency increases with ε; MC-SF+protection \
+         remains far below FCFS even at ε=0.8"
+    );
+}

@@ -1,0 +1,66 @@
+//! Figure 7 (Appendix C): distribution of prompt and output lengths of
+//! the (LMSYS-calibrated) workload — the calibration check for our
+//! dataset substitution (DESIGN.md substitution 2).
+//!
+//! Paper statistics: prompt mean 40.62 / median 11; output mean 85.32 /
+//! median 45.
+
+use kvsched::bench::{fmt, Table};
+use kvsched::prelude::*;
+use kvsched::util::cli::Args;
+use kvsched::util::stats;
+use kvsched::workload::lmsys::{LmsysGen, OUTPUT_MEAN, OUTPUT_MEDIAN, PROMPT_MEAN, PROMPT_MEDIAN};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 20_000);
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(args.u64_or("seed", 8));
+    let mut prompts = Vec::with_capacity(n);
+    let mut outputs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (s, o) = gen.sample_lengths(&mut rng);
+        prompts.push(s as f64);
+        outputs.push(o as f64);
+    }
+
+    let mut table = Table::new(
+        "Fig 7 — length distribution calibration",
+        &["marginal", "paper mean", "ours", "paper median", "ours", "p95", "max"],
+    );
+    table.row(&[
+        "prompt".into(),
+        fmt(PROMPT_MEAN),
+        fmt(stats::mean(&prompts)),
+        fmt(PROMPT_MEDIAN),
+        fmt(stats::median(&prompts)),
+        fmt(stats::percentile(&prompts, 95.0)),
+        fmt(stats::max(&prompts)),
+    ]);
+    table.row(&[
+        "output".into(),
+        fmt(OUTPUT_MEAN),
+        fmt(stats::mean(&outputs)),
+        fmt(OUTPUT_MEDIAN),
+        fmt(stats::median(&outputs)),
+        fmt(stats::percentile(&outputs, 95.0)),
+        fmt(stats::max(&outputs)),
+    ]);
+    table.print();
+    table.save_json("fig7_dataset");
+
+    for (name, xs, hi) in [("prompt", &prompts, 200.0), ("output", &outputs, 400.0)] {
+        let (edges, counts) = stats::histogram(xs, 0.0, hi, 20);
+        let maxc = counts.iter().copied().max().unwrap_or(1) as f64;
+        let mut h = Table::new(&format!("Fig 7 — {name} length histogram"), &["bin", "count", "bar"]);
+        for (e, c) in edges.iter().zip(&counts) {
+            h.row(&[
+                format!("[{:.0},{:.0})", e, e + hi / 20.0),
+                c.to_string(),
+                stats::ascii_bar(*c as f64, maxc, 40),
+            ]);
+        }
+        h.print();
+        h.save_json(&format!("fig7_{name}_hist"));
+    }
+}

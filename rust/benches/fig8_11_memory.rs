@@ -1,0 +1,77 @@
+//! Figures 8 and 11 (Appendix C): MC-SF's KV-memory usage over time in
+//! the high-demand (Fig 8) and low-demand (Fig 11) settings.
+//!
+//! Expected shape: usage always ≤ M = 16492 (the Eq-5 check prevents
+//! overflow) with high utilization; under low demand, utilization stays
+//! near-full and stable.
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::continuous;
+use kvsched::util::cli::Args;
+use kvsched::util::stats;
+use kvsched::workload::lmsys::LmsysGen;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 800);
+    let seed = args.u64_or("seed", 9);
+    let perf = Llama70bA100x2::default();
+
+    for (fig, label, lambda) in [(8, "high demand λ=50", 50.0), (11, "low demand λ=10", 10.0)] {
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(seed);
+        let inst = gen.instance(n, lambda, continuous::PAPER_M, &mut rng);
+        let out = continuous::simulate(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &perf,
+            seed,
+        );
+        assert!(out.finished);
+
+        // Downsample the memory series into ~30 buckets for display.
+        let series = &out.mem_series;
+        let t_max = series.last().map(|&(t, _)| t).unwrap_or(1.0);
+        let buckets = 30usize;
+        let mut bucket_max = vec![0u64; buckets];
+        let mut bucket_avg = vec![(0u64, 0u64); buckets];
+        for &(t, m) in series {
+            let idx = ((t / t_max * buckets as f64) as usize).min(buckets - 1);
+            bucket_max[idx] = bucket_max[idx].max(m);
+            bucket_avg[idx].0 += m;
+            bucket_avg[idx].1 += 1;
+        }
+        let mut table = Table::new(
+            &format!("Fig {fig} — MC-SF memory usage over time ({label})"),
+            &["t_s", "avg_mem", "peak_mem", "util%", "bar"],
+        );
+        for i in 0..buckets {
+            let (sum, cnt) = bucket_avg[i];
+            if cnt == 0 {
+                continue;
+            }
+            let avg = sum as f64 / cnt as f64;
+            table.row(&[
+                fmt(i as f64 / buckets as f64 * t_max),
+                fmt(avg),
+                bucket_max[i].to_string(),
+                fmt(100.0 * bucket_max[i] as f64 / inst.m as f64),
+                stats::ascii_bar(bucket_max[i] as f64, inst.m as f64, 40),
+            ]);
+        }
+        table.print();
+        table.save_json(&format!("fig{fig}_memory"));
+        let peak = out.max_mem();
+        println!(
+            "peak usage {peak} / M = {} ({:.1}%); overflows: {} \
+             (paper: always within M)",
+            inst.m,
+            100.0 * peak as f64 / inst.m as f64,
+            out.overflow_events
+        );
+        assert!(peak <= inst.m, "MC-SF exceeded the KV budget!");
+    }
+}

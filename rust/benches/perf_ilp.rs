@@ -1,0 +1,95 @@
+//! Perf: the optimization substrate. LP solve time vs size, hindsight IP
+//! end-to-end time vs instance size, and branch-and-bound node counts
+//! (the warm-start effectiveness of the MC-SF incumbent).
+
+use kvsched::bench::{fmt, time_it, Table};
+use kvsched::core::{Instance, Request};
+use kvsched::opt::{hindsight_optimal, HindsightConfig, LinProg, Sense};
+use kvsched::prelude::*;
+use kvsched::util::cli::Args;
+
+fn random_lp(nvars: usize, nrows: usize, rng: &mut Rng) -> LinProg {
+    let mut lp = LinProg::new(nvars);
+    for j in 0..nvars {
+        lp.c[j] = rng.f64_range(-2.0, 2.0);
+    }
+    for _ in 0..nrows {
+        let mut coeffs: Vec<(usize, f64)> = Vec::new();
+        for j in 0..nvars {
+            if rng.bool(0.3) {
+                coeffs.push((j, rng.f64_range(0.1, 2.0)));
+            }
+        }
+        if coeffs.is_empty() {
+            continue;
+        }
+        lp.add_row(coeffs, Sense::Le, rng.f64_range(1.0, 10.0));
+    }
+    for j in 0..nvars {
+        lp.add_row(vec![(j, 1.0)], Sense::Le, 1.0);
+    }
+    lp
+}
+
+fn model1_instance(n: usize, rng: &mut Rng) -> Instance {
+    let m = rng.i64_range(14, 22) as u64;
+    let reqs = (0..n)
+        .map(|i| {
+            let s = rng.i64_range(1, 3) as u64;
+            let o = rng.i64_range(1, (m - s).min(10) as i64) as u64;
+            Request::new(i, 0.0, s, o)
+        })
+        .collect();
+    Instance::new(m, reqs)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let trials = args.usize_or("trials", 3);
+
+    let mut table = Table::new("simplex LP solve time", &["vars", "rows", "mean_ms"]);
+    for &(nv, nr) in &[(50usize, 20usize), (200, 60), (800, 150), (2000, 300)] {
+        let mut total = 0.0;
+        for t in 0..trials {
+            let mut rng = Rng::new(nv as u64 + t as u64);
+            let lp = random_lp(nv, nr, &mut rng);
+            let (_out, secs) = time_it(|| lp.solve());
+            total += secs;
+        }
+        table.row(&[
+            nv.to_string(),
+            nr.to_string(),
+            fmt(total / trials as f64 * 1e3),
+        ]);
+    }
+    table.print();
+    table.save_json("perf_ilp_lp");
+
+    let mut table = Table::new(
+        "hindsight IP solve (B&B warm-started by MC-SF)",
+        &["n", "mean_s", "avg_nodes", "proven"],
+    );
+    for &n in &[5usize, 8, 11, 14] {
+        let mut total = 0.0;
+        let mut nodes = 0u64;
+        let mut proven = 0usize;
+        for t in 0..trials {
+            let mut rng = Rng::new(n as u64 * 100 + t as u64);
+            let inst = model1_instance(n, &mut rng);
+            let (sol, secs) = time_it(|| hindsight_optimal(&inst, &HindsightConfig::default()));
+            total += secs;
+            if let Ok(sol) = sol {
+                nodes += sol.nodes;
+                proven += sol.proven_optimal as usize;
+            }
+        }
+        table.row(&[
+            n.to_string(),
+            fmt(total / trials as f64),
+            fmt(nodes as f64 / trials as f64),
+            format!("{proven}/{trials}"),
+        ]);
+    }
+    table.print();
+    table.save_json("perf_ilp_hindsight");
+}

@@ -1,0 +1,105 @@
+//! Perf: the PJRT serving hot path. Per-iteration decode/prefill latency
+//! by batch bucket, plus the host-side gather/scatter overhead — the
+//! numbers behind EXPERIMENTS.md §Perf (L3/runtime). Self-skips when
+//! artifacts are absent.
+
+use kvsched::bench::{bench_fn, fmt, Table};
+use kvsched::runtime::kv_cache::{KvCache, RowCache};
+use kvsched::runtime::{engine::argmax, Engine};
+use kvsched::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.usize_or("iters", 20);
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping perf_runtime: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&dir).unwrap();
+    let dims = engine.dims();
+
+    // Warm rows with a prefill each.
+    let mk_row = |text: &str| -> (RowCache, i32) {
+        let mut row = RowCache::new(dims);
+        let out = engine.prefill(&[text.as_bytes()], &mut [&mut row]).unwrap();
+        let tok = argmax(&out.logits[0]);
+        (row, tok)
+    };
+
+    let mut table = Table::new(
+        "decode iteration latency by batch size (PJRT CPU)",
+        &["batch", "mean_ms", "min_ms", "ms_per_row"],
+    );
+    for &b in &[1usize, 2, 4, 8] {
+        let mut rows_data: Vec<(RowCache, i32)> =
+            (0..b).map(|i| mk_row(&format!("warm row {i}"))).collect();
+        let r = bench_fn(2, iters, || {
+            let tokens: Vec<i32> = rows_data.iter().map(|&(_, t)| t).collect();
+            let mut rows: Vec<&mut RowCache> =
+                rows_data.iter_mut().map(|(r, _)| r).collect();
+            let _ = engine.decode(&tokens, &mut rows).unwrap();
+            // Keep cache fill bounded so repeated iters don't overflow.
+            for (row, _) in rows_data.iter_mut() {
+                row.len = row.len.min(dims.c - 2);
+            }
+        });
+        table.row(&[
+            b.to_string(),
+            fmt(r.mean_s * 1e3),
+            fmt(r.min_s * 1e3),
+            fmt(r.mean_s * 1e3 / b as f64),
+        ]);
+    }
+    table.print();
+    table.save_json("perf_runtime_decode");
+
+    let mut table = Table::new(
+        "prefill latency by batch size (PJRT CPU)",
+        &["batch", "mean_ms"],
+    );
+    for &b in &[1usize, 2, 4] {
+        let prompts: Vec<Vec<u8>> = (0..b)
+            .map(|i| format!("a prompt with a bit of text number {i}").into_bytes())
+            .collect();
+        let r = bench_fn(1, iters.min(10), || {
+            let mut rows: Vec<RowCache> = (0..b).map(|_| RowCache::new(dims)).collect();
+            let prompt_refs: Vec<&[u8]> = prompts.iter().map(|p| p.as_slice()).collect();
+            let mut row_refs: Vec<&mut RowCache> = rows.iter_mut().collect();
+            let _ = engine.prefill(&prompt_refs, &mut row_refs).unwrap();
+        });
+        table.row(&[b.to_string(), fmt(r.mean_s * 1e3)]);
+    }
+    table.print();
+    table.save_json("perf_runtime_prefill");
+
+    // Host-side gather/scatter cost (the memcpy tax of row-major cache
+    // management; compared against the decode latency above to show the
+    // runtime is not host-bound).
+    let mut table = Table::new("KV gather/scatter cost", &["batch", "gather_us", "scatter_us"]);
+    for &b in &[1usize, 4, 8] {
+        let rows: Vec<RowCache> = (0..b)
+            .map(|i| {
+                let mut r = RowCache::new(dims);
+                r.len = 10 + i;
+                r
+            })
+            .collect();
+        let row_refs: Vec<&RowCache> = rows.iter().collect();
+        let mut batch = KvCache::gather(dims, &row_refs, b);
+        let g = bench_fn(3, iters, || {
+            batch = KvCache::gather(dims, &row_refs, b);
+        });
+        let mut rows2 = rows.clone();
+        let s = bench_fn(3, iters, || {
+            let mut refs: Vec<&mut RowCache> = rows2.iter_mut().collect();
+            batch.scatter_decode(&mut refs);
+            for r in rows2.iter_mut() {
+                r.len = r.len.min(dims.c - 2);
+            }
+        });
+        table.row(&[b.to_string(), fmt(g.mean_us()), fmt(s.mean_us())]);
+    }
+    table.print();
+    table.save_json("perf_runtime_gather");
+}

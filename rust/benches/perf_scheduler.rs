@@ -1,0 +1,111 @@
+//! Perf: the MC-SF hot path. Measures per-round `admit` cost vs queue
+//! length and memory budget, empirically validating Prop 4.2 (per-round
+//! complexity O(M²), independent of total request count) and tracking
+//! the feasibility-checker optimizations recorded in EXPERIMENTS.md
+//! §Perf. Also benches the prefix-vs-skip ablation.
+
+use kvsched::bench::{bench_fn, fmt, Table};
+use kvsched::core::{ActiveReq, QueuedReq};
+use kvsched::prelude::*;
+use kvsched::sched::Scheduler;
+use kvsched::util::cli::Args;
+
+fn mk_waiting(n: usize, m: u64, rng: &mut Rng) -> Vec<QueuedReq> {
+    (0..n)
+        .map(|i| QueuedReq {
+            id: i,
+            arrival: rng.f64_range(0.0, 100.0),
+            s: rng.i64_range(5, 120) as u64,
+            pred: rng.i64_range(1, (m / 16).max(2) as i64) as u64,
+        })
+        .collect()
+}
+
+fn mk_active(n: usize, m: u64, rng: &mut Rng) -> Vec<ActiveReq> {
+    (0..n)
+        .map(|i| {
+            let pred = rng.i64_range(2, (m / 32).max(3) as i64) as u64;
+            ActiveReq {
+                id: 1_000_000 + i,
+                s: rng.i64_range(5, 120) as u64,
+                done: rng.i64_range(0, pred as i64 - 1) as u64,
+                pred_total: pred,
+                started_round: 1,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.usize_or("iters", 30);
+
+    // 1. admit cost vs waiting-queue length (M fixed at the paper's).
+    let m = 16_492u64;
+    let mut table = Table::new(
+        "MC-SF admit cost vs queue length (M=16492, 64 active)",
+        &["waiting", "mean_us", "p50_us", "admitted"],
+    );
+    for &w in &[100usize, 400, 1600, 6400] {
+        let mut rng = Rng::new(w as u64);
+        let active = mk_active(64, m, &mut rng);
+        let waiting = mk_waiting(w, m, &mut rng);
+        let mut sched = McSf::default();
+        let mut admitted = 0usize;
+        let r = bench_fn(3, iters, || {
+            let mut rng2 = Rng::new(0);
+            admitted = sched.admit(1, m, &active, &waiting, &mut rng2).len();
+        });
+        table.row(&[
+            w.to_string(),
+            fmt(r.mean_us()),
+            fmt(r.p50_s * 1e6),
+            admitted.to_string(),
+        ]);
+    }
+    table.print();
+    table.save_json("perf_scheduler_queue");
+
+    // 2. admit cost vs M (Prop 4.2: O(M²) per round; batch size grows
+    //    with M so cost should scale roughly quadratically then flatten
+    //    once the queue, not memory, binds).
+    let mut table = Table::new(
+        "MC-SF admit cost vs memory budget (4096 waiting)",
+        &["M", "mean_us", "admitted"],
+    );
+    for &mm in &[1024u64, 4096, 16_492, 65_536] {
+        let mut rng = Rng::new(mm);
+        let waiting = mk_waiting(4096, mm, &mut rng);
+        let mut sched = McSf::default();
+        let mut admitted = 0usize;
+        let r = bench_fn(3, iters, || {
+            let mut rng2 = Rng::new(0);
+            admitted = sched.admit(1, mm, &[], &waiting, &mut rng2).len();
+        });
+        table.row(&[mm.to_string(), fmt(r.mean_us()), admitted.to_string()]);
+    }
+    table.print();
+    table.save_json("perf_scheduler_memory");
+
+    // 3. Ablation: prefix (paper) vs skip admission.
+    let mut table = Table::new(
+        "ablation: prefix-break (Alg 1) vs skip-scan admission",
+        &["variant", "mean_us", "admitted"],
+    );
+    let mut rng = Rng::new(77);
+    let waiting = mk_waiting(4096, m, &mut rng);
+    for (label, skip) in [("prefix (paper)", false), ("skip-scan", true)] {
+        let mut sched = McSf {
+            protect_alpha: 0.0,
+            stop_on_first_reject: !skip,
+        };
+        let mut admitted = 0usize;
+        let r = bench_fn(3, iters, || {
+            let mut rng2 = Rng::new(0);
+            admitted = sched.admit(1, m, &[], &waiting, &mut rng2).len();
+        });
+        table.row(&[label.into(), fmt(r.mean_us()), admitted.to_string()]);
+    }
+    table.print();
+    table.save_json("perf_scheduler_ablation");
+}

@@ -1,0 +1,175 @@
+//! Benchmark harness (no `criterion` in the offline build).
+//!
+//! Two facilities:
+//! * [`time_it`] / [`bench_fn`] — wall-clock micro-benchmarking with
+//!   warmup and robust aggregation, for the perf benches;
+//! * [`Table`] — aligned console tables for the paper-figure benches, so
+//!   each bench prints exactly the rows/series of the table or figure it
+//!   regenerates, plus a JSON dump under `results/`.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::Instant;
+
+/// Time a single closure invocation in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Micro-benchmark result.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Repeatedly run `f`, with `warmup` unrecorded iterations, then `iters`
+/// timed ones.
+pub fn bench_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        iters,
+        mean_s: stats::mean(&samples),
+        p50_s: stats::median(&samples),
+        min_s: stats::min(&samples),
+    }
+}
+
+/// Aligned console table with a title, for figure/table reproduction
+/// output.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Dump rows as JSON under results/<name>.json for post-processing.
+    pub fn save_json(&self, name: &str) {
+        let _ = std::fs::create_dir_all("results");
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let mut obj = Json::obj();
+                for (h, c) in self.header.iter().zip(row) {
+                    obj = match c.parse::<f64>() {
+                        Ok(x) => obj.set(h.as_str(), x),
+                        Err(_) => obj.set(h.as_str(), c.as_str()),
+                    };
+                }
+                obj
+            })
+            .collect();
+        let doc = Json::obj()
+            .set("title", self.title.as_str())
+            .set("rows", Json::Arr(rows));
+        let _ = std::fs::write(format!("results/{name}.json"), doc.pretty());
+    }
+}
+
+/// Format a float with sensible precision for tables.
+pub fn fmt(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        // round half away from zero (format!("{:.0}") rounds ties to even)
+        format!("{}", x.round() as i64)
+    } else if x.abs() >= 10.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures_something() {
+        let r = bench_fn(2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.min_s <= r.mean_s);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["algo", "latency"]);
+        t.row(&["MC-SF".into(), fmt(32.112)]);
+        t.row(&["MC-Benchmark".into(), fmt(46.472)]);
+        assert_eq!(t.rows.len(), 2);
+        t.print(); // visual only; must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_precision() {
+        assert_eq!(fmt(1234.5), "1235");
+        assert_eq!(fmt(32.112), "32.11");
+        assert_eq!(fmt(1.0047), "1.005");
+        assert_eq!(fmt(0.0), "0");
+    }
+}

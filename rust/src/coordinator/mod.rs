@@ -1,0 +1,13 @@
+//! Serving coordinator: the live (non-simulated) request path.
+//!
+//! A thread-based event loop (`tokio` is unavailable offline) drives the
+//! scheduler⇄runtime pipeline: clients enqueue [`ServeRequest`]s, the
+//! driver forms batches with any [`crate::sched::Scheduler`], executes
+//! prefill/decode steps through the PJRT [`crate::runtime::Engine`], and
+//! resolves each request's completion with its generated tokens and
+//! latency.
+
+pub mod driver;
+pub mod queue;
+
+pub use driver::{Coordinator, CoordinatorConfig, ServeReply, ServeRequest};

@@ -1,0 +1,124 @@
+//! Thread-safe intake queue for the serving coordinator (std-only: the
+//! offline build has no tokio).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// MPSC queue with blocking drain and close semantics.
+pub struct IntakeQueue<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for IntakeQueue<T> {
+    fn default() -> Self {
+        IntakeQueue {
+            state: Mutex::new(State {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl<T> IntakeQueue<T> {
+    /// Enqueue; returns false if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Take everything currently queued. If `block` and the queue is
+    /// empty and not closed, waits up to `timeout` for an item.
+    /// Returns (items, closed).
+    pub fn drain(&self, block: bool, timeout: Duration) -> (Vec<T>, bool) {
+        let mut st = self.state.lock().unwrap();
+        if block && st.items.is_empty() && !st.closed {
+            let (guard, _) = self
+                .cv
+                .wait_timeout_while(st, timeout, |s| s.items.is_empty() && !s.closed)
+                .unwrap();
+            st = guard;
+        }
+        let items: Vec<T> = st.items.drain(..).collect();
+        (items, st.closed)
+    }
+
+    /// Close the queue: pushes are rejected, drains return immediately.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    #[test]
+    fn push_drain_roundtrip() {
+        let q = IntakeQueue::default();
+        assert!(q.push(1));
+        assert!(q.push(2));
+        let (items, closed) = q.drain(false, Duration::ZERO);
+        assert_eq!(items, vec![1, 2]);
+        assert!(!closed);
+        let (items, _) = q.drain(false, Duration::ZERO);
+        assert!(items.is_empty());
+    }
+
+    #[test]
+    fn close_rejects_push_and_unblocks_drain() {
+        let q: Arc<IntakeQueue<u32>> = Arc::new(IntakeQueue::default());
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let (items, closed) = q2.drain(true, Duration::from_secs(10));
+            (items, closed, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        let (items, closed, waited) = t.join().unwrap();
+        assert!(items.is_empty());
+        assert!(closed);
+        assert!(waited < Duration::from_secs(5));
+        assert!(!q.push(9));
+    }
+
+    #[test]
+    fn blocking_drain_wakes_on_push() {
+        let q: Arc<IntakeQueue<u32>> = Arc::new(IntakeQueue::default());
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.drain(true, Duration::from_secs(10)).0);
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(7);
+        assert_eq!(t.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn timeout_returns_empty() {
+        let q: IntakeQueue<u32> = IntakeQueue::default();
+        let t0 = Instant::now();
+        let (items, closed) = q.drain(true, Duration::from_millis(30));
+        assert!(items.is_empty() && !closed);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

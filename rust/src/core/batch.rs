@@ -1,0 +1,163 @@
+//! Scheduler-facing views of running / waiting requests and the shared
+//! "feasibility item" representation used by the Eq-(5) forward memory
+//! check.
+
+use super::request::RequestId;
+
+/// View of a request currently being processed (in `S^(t)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActiveReq {
+    pub id: RequestId,
+    /// Prompt length `s_i`.
+    pub s: u64,
+    /// Output tokens generated so far (`j` index of the last produced
+    /// token; 0 right after admission before the prompt round runs).
+    pub done: u64,
+    /// Predicted total output length `õ_i` the scheduler was given.
+    pub pred_total: u64,
+    /// Round in which the request entered its first batch.
+    pub started_round: u64,
+}
+
+impl ActiveReq {
+    /// KV memory this request currently holds (after producing `done`
+    /// tokens): `s + done`.
+    pub fn current_mem(&self) -> u64 {
+        self.s + self.done
+    }
+
+    /// Memory it will use during the *next* round (producing token
+    /// `done + 1`): `s + done + 1`.
+    pub fn next_round_mem(&self) -> u64 {
+        self.s + self.done + 1
+    }
+
+    /// Predicted remaining rounds, at least 1 while still running (an
+    /// under-predicted request that outlived `õ` is assumed to finish in
+    /// the next round — the robust extension used in §5.2.2).
+    pub fn pred_remaining(&self) -> u64 {
+        self.pred_total.saturating_sub(self.done).max(1)
+    }
+
+    /// Feasibility-check item (see [`FeasItem`]).
+    pub fn feas_item(&self) -> FeasItem {
+        FeasItem {
+            base: self.current_mem(),
+            rem: self.pred_remaining(),
+        }
+    }
+}
+
+/// View of a request waiting in the queue (`R^(t)`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedReq {
+    pub id: RequestId,
+    /// Arrival time (rounds in discrete sims, seconds in continuous).
+    pub arrival: f64,
+    /// Prompt length `s_i`.
+    pub s: u64,
+    /// Predicted output length `õ_i`.
+    pub pred: u64,
+}
+
+impl QueuedReq {
+    /// Memory during its first processing round (prompt + first token):
+    /// `s + 1`.
+    pub fn next_round_mem(&self) -> u64 {
+        self.s + 1
+    }
+
+    pub fn feas_item(&self) -> FeasItem {
+        FeasItem {
+            base: self.s,
+            rem: self.pred.max(1),
+        }
+    }
+}
+
+/// Canonical item for the Eq-(5) memory-feasibility check.
+///
+/// Relative to the round `r` now being formed, the item occupies
+/// `base + (r' - r + 1)` KV slots during every round
+/// `r' ∈ [r, r + rem - 1]`, and 0 afterwards. For a running request
+/// `base = s + done`; for a candidate `base = s` (prompt enters the cache
+/// in its first round). Its *predicted* completion round is
+/// `r + rem - 1`, and `peak = base + rem` is the memory it holds during
+/// that final round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeasItem {
+    pub base: u64,
+    pub rem: u64,
+}
+
+impl FeasItem {
+    /// Memory used during round `r + dt` (dt = 0 for the round being
+    /// formed). 0 once the item has (predictedly) completed.
+    #[inline]
+    pub fn mem_at(&self, dt: u64) -> u64 {
+        if dt < self.rem {
+            self.base + dt + 1
+        } else {
+            0
+        }
+    }
+
+    /// Peak memory (used during its predicted final round).
+    #[inline]
+    pub fn peak(&self) -> u64 {
+        self.base + self.rem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_memory_accounting() {
+        let a = ActiveReq {
+            id: 0,
+            s: 10,
+            done: 3,
+            pred_total: 8,
+            started_round: 2,
+        };
+        assert_eq!(a.current_mem(), 13);
+        assert_eq!(a.next_round_mem(), 14);
+        assert_eq!(a.pred_remaining(), 5);
+        let item = a.feas_item();
+        assert_eq!(item.mem_at(0), 14); // next round
+        assert_eq!(item.mem_at(4), 18); // predicted final round: s + pred = 18
+        assert_eq!(item.mem_at(5), 0); // after completion
+        assert_eq!(item.peak(), 18);
+    }
+
+    #[test]
+    fn overdue_active_has_one_round_left() {
+        let a = ActiveReq {
+            id: 0,
+            s: 4,
+            done: 9,
+            pred_total: 6, // under-predicted: still running past õ
+            started_round: 1,
+        };
+        assert_eq!(a.pred_remaining(), 1);
+        assert_eq!(a.feas_item().mem_at(0), 14);
+        assert_eq!(a.feas_item().mem_at(1), 0);
+    }
+
+    #[test]
+    fn queued_item() {
+        let q = QueuedReq {
+            id: 1,
+            arrival: 0.0,
+            s: 5,
+            pred: 3,
+        };
+        let item = q.feas_item();
+        assert_eq!(item.mem_at(0), 6); // prompt round: s + 1
+        assert_eq!(item.mem_at(2), 8); // final round: s + o
+        assert_eq!(item.mem_at(3), 0);
+        assert_eq!(item.peak(), 8);
+    }
+}

@@ -1,0 +1,21 @@
+//! Core domain types for KV-cache-constrained LLM inference scheduling.
+//!
+//! Implements the paper's model (§2): requests `(a_i, s_i, o_i)`, the KV
+//! memory law (`s_i + j` while producing output token `j`), instances, and
+//! the batch/scheduler view types shared by the discrete- and
+//! continuous-time simulators.
+
+pub mod batch;
+pub mod instance;
+pub mod request;
+
+pub use batch::{ActiveReq, FeasItem, QueuedReq};
+pub use instance::Instance;
+pub use request::{Request, RequestId};
+
+/// Discrete round index (1-based inside simulations).
+pub type Round = u64;
+
+/// Memory is counted in tokens (1 token = 1 KV-cache slot), as in the
+/// paper where `M = 16492` for Llama2-70B on 2×A100.
+pub type Mem = u64;

@@ -1,0 +1,112 @@
+//! Request type: one prompt with its (true) output length.
+
+/// Request identifier (dense index into the instance).
+pub type RequestId = usize;
+
+/// One inference request, as in the paper's model (§2).
+///
+/// * `arrival` — arrival time. In discrete-time experiments this is an
+///   integral round (`a_i`); in the continuous serving simulation it is
+///   seconds. A request arriving at `a` may first be processed in the
+///   round/batch that starts after `a`.
+/// * `prompt_len` — `s_i`, tokens in the prompt. KV memory for the whole
+///   prompt is resident from the prompt phase until completion.
+/// * `output_len` — `o_i`, tokens the model will generate. Producing
+///   output token `j` requires `s_i + j` KV slots; the peak is
+///   `s_i + o_i`, freed at completion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub prompt_len: u64,
+    pub output_len: u64,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, prompt_len: u64, output_len: u64) -> Request {
+        assert!(prompt_len > 0, "prompt_len must be positive");
+        assert!(output_len > 0, "output_len must be positive");
+        assert!(arrival >= 0.0 && arrival.is_finite());
+        Request {
+            id,
+            arrival,
+            prompt_len,
+            output_len,
+        }
+    }
+
+    /// Arrival as a discrete round (requires integral arrival).
+    pub fn arrival_round(&self) -> u64 {
+        debug_assert!(
+            self.arrival.fract() == 0.0,
+            "discrete-time use requires integral arrivals"
+        );
+        self.arrival as u64
+    }
+
+    /// Peak KV memory this request ever occupies: `s_i + o_i`.
+    pub fn peak_mem(&self) -> u64 {
+        self.prompt_len + self.output_len
+    }
+
+    /// KV memory occupied while producing output token `j` (1-based):
+    /// `s_i + j`.
+    pub fn mem_at_token(&self, j: u64) -> u64 {
+        debug_assert!(j >= 1 && j <= self.output_len);
+        self.prompt_len + j
+    }
+
+    /// Total memory×time volume (`vol_o` in the paper's analysis):
+    /// `s·o + o(o+1)/2`.
+    pub fn volume(&self) -> u64 {
+        self.prompt_len * self.output_len + self.output_len * (self.output_len + 1) / 2
+    }
+
+    /// Minimum possible latency: the request needs `o_i` rounds of
+    /// processing regardless of scheduling.
+    pub fn service_rounds(&self) -> u64 {
+        self.output_len
+    }
+}
+
+/// `vol_o` for a generic (s, o) pair — used by the competitive-analysis
+/// lower bound (Eq 9) without materializing a Request.
+pub fn volume(s: u64, o: u64) -> u64 {
+    s * o + o * (o + 1) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_law() {
+        let r = Request::new(0, 0.0, 5, 3);
+        assert_eq!(r.mem_at_token(1), 6);
+        assert_eq!(r.mem_at_token(3), 8);
+        assert_eq!(r.peak_mem(), 8);
+    }
+
+    #[test]
+    fn volume_formula() {
+        // s=5, o=3: 5*3 + 3*4/2 = 15 + 6 = 21
+        let r = Request::new(0, 0.0, 5, 3);
+        assert_eq!(r.volume(), 21);
+        assert_eq!(volume(5, 3), 21);
+        // Sanity: volume equals sum of per-round memory.
+        let manual: u64 = (1..=3).map(|j| r.mem_at_token(j)).sum();
+        assert_eq!(r.volume(), manual);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_output_rejected() {
+        Request::new(0, 0.0, 5, 0);
+    }
+
+    #[test]
+    fn arrival_round_integral() {
+        let r = Request::new(1, 7.0, 2, 2);
+        assert_eq!(r.arrival_round(), 7);
+    }
+}

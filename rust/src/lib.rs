@@ -1,0 +1,50 @@
+//! # kvsched
+//!
+//! A production-shaped reproduction of *"Online Scheduling for LLM
+//! Inference with KV Cache Constraints"* (Jaillet et al.): the MC-SF
+//! batching/scheduling algorithm, its hindsight-optimal IP benchmark, the
+//! §5.2 baseline heuristics, discrete- and continuous-time simulators
+//! with a Vidur-like Llama2-70B/A100 performance model, and a real
+//! serving path that executes a JAX/Pallas-authored transformer through
+//! PJRT from the Rust coordinator.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): scheduling, simulation, optimization, serving.
+//! * L2/L1 (python/, build-time only): JAX model + Pallas decode-attention
+//!   kernel, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! Quick start:
+//! ```no_run
+//! use kvsched::prelude::*;
+//!
+//! let inst = kvsched::workload::synthetic::arrival_model_1(&mut Rng::new(7));
+//! let outcome = kvsched::sim::discrete::simulate(&inst, &mut McSf::default(),
+//!                                                &Predictor::exact(), 7);
+//! println!("total latency = {}", outcome.total_latency());
+//! ```
+
+pub mod core;
+pub mod metrics;
+pub mod opt;
+pub mod perf;
+pub mod predictor;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::core::{ActiveReq, Instance, Mem, QueuedReq, Request, RequestId, Round};
+    pub use crate::metrics::SimOutcome;
+    pub use crate::predictor::Predictor;
+    pub use crate::sched::{
+        by_name, paper_benchmark_suite, AlphaProtection, FcfsThreshold, McBenchmark, McSf,
+        Scheduler,
+    };
+    pub use crate::util::rng::Rng;
+}

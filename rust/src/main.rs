@@ -1,0 +1,192 @@
+//! `kvsched` — launcher CLI.
+//!
+//! Subcommands:
+//!   gen-trace   generate a workload trace (lmsys | model1 | model2)
+//!   simulate    run one scheduling policy over a trace or generated load
+//!   suite       run the paper's §5.2 benchmark suite and print the table
+//!   hindsight   solve the §3 IP on a (small) instance and report MC-SF's gap
+//!   serve       live-serve a synthetic workload through PJRT artifacts
+//!
+//! Examples:
+//!   kvsched gen-trace --workload lmsys --n 1000 --lambda 50 --out trace.json
+//!   kvsched simulate --trace trace.json --algo mcsf
+//!   kvsched simulate --workload lmsys --n 500 --lambda 10 --algo protect:alpha=0.25
+//!   kvsched suite --n 300 --lambda 50 --seed 1
+//!   kvsched hindsight --n 8 --m 16 --seed 3
+//!   kvsched serve --artifacts artifacts --n 12 --lambda 2
+
+use kvsched::core::{Instance, Request};
+use kvsched::opt::{self, HindsightConfig};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::predictor::Predictor;
+use kvsched::prelude::*;
+use kvsched::sim::{continuous, discrete, SimConfig};
+use kvsched::util::cli::Args;
+use kvsched::workload::{lmsys::LmsysGen, synthetic};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "gen-trace" => gen_trace(&args),
+        "simulate" => simulate(&args),
+        "suite" => suite(&args),
+        "hindsight" => hindsight(&args),
+        "serve" => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: kvsched <gen-trace|simulate|suite|hindsight|serve> [flags]\n\
+                 see `rust/src/main.rs` header for examples"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_or_generate(args: &Args) -> anyhow::Result<Instance> {
+    if let Some(path) = args.get("trace") {
+        return Instance::load(path);
+    }
+    let seed = args.u64_or("seed", 0);
+    let mut rng = Rng::new(seed);
+    let inst = match args.str_or("workload", "lmsys") {
+        "model1" => synthetic::arrival_model_1(&mut rng),
+        "model2" => synthetic::arrival_model_2(&mut rng),
+        "adversarial" => synthetic::adversarial_thm41(args.u64_or("m", 256), 0),
+        _ => {
+            let n = args.usize_or("n", 1000);
+            let lambda = args.f64_or("lambda", 50.0);
+            let m = args.u64_or("m", continuous::PAPER_M);
+            LmsysGen::new(m).instance(n, lambda, m, &mut rng)
+        }
+    };
+    Ok(inst)
+}
+
+fn gen_trace(args: &Args) -> anyhow::Result<()> {
+    let inst = load_or_generate(args)?;
+    let out = args.req_str("out");
+    inst.save(out)?;
+    println!("wrote {} requests (M = {}) to {out}", inst.n(), inst.m);
+    Ok(())
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let inst = load_or_generate(args)?;
+    let mut sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
+    let predictor = match args.get("eps") {
+        Some(_) => Predictor::uniform_noise(args.f64_or("eps", 0.0), args.u64_or("seed", 0)),
+        None => Predictor::exact(),
+    };
+    let seed = args.u64_or("seed", 0);
+    let out = if args.has("unit-time") {
+        discrete::simulate_cfg(&inst, sched.as_mut(), &predictor, seed, SimConfig::default())
+    } else {
+        continuous::simulate(
+            &inst,
+            sched.as_mut(),
+            &predictor,
+            &Llama70bA100x2::default(),
+            seed,
+        )
+    };
+    println!("{}", out.to_json().pretty());
+    Ok(())
+}
+
+fn suite(args: &Args) -> anyhow::Result<()> {
+    let inst = load_or_generate(args)?;
+    let perf = Llama70bA100x2::default();
+    let seed = args.u64_or("seed", 0);
+    let mut table = kvsched::bench::Table::new(
+        &format!("benchmark suite, n={} M={}", inst.n(), inst.m),
+        &["algorithm", "avg_latency_s", "p95_s", "overflows", "finished"],
+    );
+    for mut sched in kvsched::sched::paper_benchmark_suite() {
+        let out = continuous::try_simulate(
+            &inst,
+            sched.as_mut(),
+            &Predictor::exact(),
+            &perf,
+            seed,
+            SimConfig::default(),
+        )?;
+        table.row(&[
+            out.algo.clone(),
+            kvsched::bench::fmt(out.avg_latency()),
+            kvsched::bench::fmt(out.summary().p95),
+            out.overflow_events.to_string(),
+            out.finished.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn hindsight(args: &Args) -> anyhow::Result<()> {
+    // Small synthetic Model-1-style instance (the IP solve is exact; see
+    // DESIGN.md substitution 1 for scale guidance).
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let m = args.u64_or("m", 16);
+    let n = args.usize_or("n", 8);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let s = rng.i64_range(1, 3) as u64;
+            let o = rng.i64_range(1, (m - s).min(8) as i64) as u64;
+            Request::new(i, 0.0, s, o)
+        })
+        .collect();
+    let inst = Instance::new(m, reqs);
+    let sol = opt::hindsight_optimal(&inst, &HindsightConfig::default())?;
+    let mcsf = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 0);
+    println!(
+        "OPT = {} (proven: {}, nodes: {}), MC-SF = {}, ratio = {:.4}",
+        sol.total_latency,
+        sol.proven_optimal,
+        sol.nodes,
+        mcsf.total_latency(),
+        mcsf.total_latency() / sol.total_latency
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    use kvsched::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+    let dir = args.str_or("artifacts", "artifacts");
+    let engine = kvsched::runtime::Engine::load(dir)?;
+    let sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
+    let coord = Coordinator::start(engine, sched, CoordinatorConfig::default());
+
+    let n = args.usize_or("n", 12);
+    let lambda = args.f64_or("lambda", 2.0);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let o = rng.usize_range(4, 24) as u64;
+        let prompt = format!("user request {i}: please respond").into_bytes();
+        rxs.push(coord.submit(ServeRequest {
+            prompt,
+            max_new_tokens: o,
+            predicted_new_tokens: o,
+        }));
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
+    }
+    let mut latencies = Vec::new();
+    for rx in rxs {
+        let reply = rx.recv()?;
+        latencies.push(reply.latency);
+    }
+    let stats = coord.shutdown();
+    println!(
+        "served {} requests in {} rounds; avg latency {:.3}s p95 {:.3}s",
+        latencies.len(),
+        stats.rounds,
+        kvsched::util::stats::mean(&latencies),
+        kvsched::util::stats::percentile(&latencies, 95.0),
+    );
+    Ok(())
+}

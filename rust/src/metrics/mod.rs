@@ -1,0 +1,221 @@
+//! Simulation/serving outcome recording and derived metrics.
+
+use crate::core::RequestId;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Per-request lifecycle record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerRequest {
+    pub id: RequestId,
+    pub arrival: f64,
+    /// Time the request *last* entered service (after any clearings).
+    pub start: f64,
+    /// Time its final output token completed.
+    pub completion: f64,
+    /// Number of times the request was evicted and restarted.
+    pub restarts: u32,
+}
+
+impl PerRequest {
+    /// End-to-end latency `c_i − a_i`.
+    pub fn latency(&self) -> f64 {
+        self.completion - self.arrival
+    }
+
+    /// Queueing delay before the (final) start of service.
+    pub fn wait(&self) -> f64 {
+        self.start - self.arrival
+    }
+}
+
+/// Full outcome of one simulated (or served) run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    pub algo: String,
+    pub per_request: Vec<PerRequest>,
+    /// (time, KV tokens in use) sampled once per round/iteration.
+    pub mem_series: Vec<(f64, u64)>,
+    /// (time, tokens processed in that round) — prompt tokens count when
+    /// prefilled, output tokens as generated; basis for Fig-4 throughput.
+    pub tokens_series: Vec<(f64, u64)>,
+    /// Peak KV usage observed (tracked even when series recording is
+    /// disabled).
+    pub peak_mem: u64,
+    /// Clearing events (KV overflow → evictions).
+    pub overflow_events: u64,
+    /// Total requests evicted across all clearing events.
+    pub evicted_requests: u64,
+    /// Rounds / iterations executed.
+    pub rounds: u64,
+    /// False when the run hit its round cap before completing all
+    /// requests (the "infinite processing loop" regime of small α).
+    pub finished: bool,
+}
+
+impl SimOutcome {
+    pub fn new(algo: &str) -> SimOutcome {
+        SimOutcome {
+            algo: algo.to_string(),
+            per_request: Vec::new(),
+            mem_series: Vec::new(),
+            tokens_series: Vec::new(),
+            peak_mem: 0,
+            overflow_events: 0,
+            evicted_requests: 0,
+            rounds: 0,
+            finished: false,
+        }
+    }
+
+    /// Total end-to-end latency `TEL = Σ_i (c_i − a_i)`.
+    pub fn total_latency(&self) -> f64 {
+        self.per_request.iter().map(|r| r.latency()).sum()
+    }
+
+    /// Average end-to-end latency (the §5.2 headline metric).
+    pub fn avg_latency(&self) -> f64 {
+        if self.per_request.is_empty() {
+            return 0.0;
+        }
+        self.total_latency() / self.per_request.len() as f64
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        self.per_request.iter().map(|r| r.latency()).collect()
+    }
+
+    pub fn max_mem(&self) -> u64 {
+        self.mem_series
+            .iter()
+            .map(|&(_, m)| m)
+            .max()
+            .unwrap_or(0)
+            .max(self.peak_mem)
+    }
+
+    /// Makespan: completion time of the last request.
+    pub fn makespan(&self) -> f64 {
+        self.per_request
+            .iter()
+            .map(|r| r.completion)
+            .fold(0.0, f64::max)
+    }
+
+    /// Tokens-per-second throughput binned into `bin`-second buckets
+    /// (Fig 4). Returns (bin start, tokens/sec).
+    pub fn throughput_series(&self, bin: f64) -> Vec<(f64, f64)> {
+        bin_rate(&self.tokens_series, bin)
+    }
+
+    /// Compact summary for bench tables.
+    pub fn summary(&self) -> stats::Summary {
+        stats::Summary::of(&self.latencies())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("algo", self.algo.clone())
+            .set("n", self.per_request.len())
+            .set("avg_latency", self.avg_latency())
+            .set("total_latency", self.total_latency())
+            .set("makespan", self.makespan())
+            .set("max_mem", self.max_mem())
+            .set("overflow_events", self.overflow_events)
+            .set("evicted_requests", self.evicted_requests)
+            .set("rounds", self.rounds)
+            .set("finished", self.finished)
+    }
+}
+
+/// Bin (time, count) events into fixed-width buckets and convert to
+/// per-second rates. Used for throughput and arrival-workload series.
+pub fn bin_rate(events: &[(f64, u64)], bin: f64) -> Vec<(f64, f64)> {
+    assert!(bin > 0.0);
+    if events.is_empty() {
+        return Vec::new();
+    }
+    let t_max = events.iter().map(|&(t, _)| t).fold(0.0, f64::max);
+    let nbins = (t_max / bin).floor() as usize + 1;
+    let mut sums = vec![0u64; nbins];
+    for &(t, c) in events {
+        let idx = ((t / bin).floor() as usize).min(nbins - 1);
+        sums[idx] += c;
+    }
+    sums.iter()
+        .enumerate()
+        .map(|(i, &s)| (i as f64 * bin, s as f64 / bin))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome() -> SimOutcome {
+        let mut o = SimOutcome::new("test");
+        o.per_request = vec![
+            PerRequest {
+                id: 0,
+                arrival: 0.0,
+                start: 1.0,
+                completion: 5.0,
+                restarts: 0,
+            },
+            PerRequest {
+                id: 1,
+                arrival: 2.0,
+                start: 3.0,
+                completion: 11.0,
+                restarts: 1,
+            },
+        ];
+        o.mem_series = vec![(1.0, 5), (2.0, 9), (3.0, 7)];
+        o.tokens_series = vec![(0.5, 10), (1.5, 20), (2.5, 30)];
+        o.finished = true;
+        o
+    }
+
+    #[test]
+    fn latency_metrics() {
+        let o = outcome();
+        assert_eq!(o.total_latency(), 5.0 + 9.0);
+        assert_eq!(o.avg_latency(), 7.0);
+        assert_eq!(o.makespan(), 11.0);
+        assert_eq!(o.max_mem(), 9);
+    }
+
+    #[test]
+    fn per_request_derived() {
+        let o = outcome();
+        assert_eq!(o.per_request[0].latency(), 5.0);
+        assert_eq!(o.per_request[1].wait(), 1.0);
+    }
+
+    #[test]
+    fn throughput_binning() {
+        let o = outcome();
+        let tp = o.throughput_series(1.0);
+        assert_eq!(tp.len(), 3);
+        assert_eq!(tp[0], (0.0, 10.0));
+        assert_eq!(tp[2], (2.0, 30.0));
+        // Wider bin aggregates.
+        let tp2 = o.throughput_series(2.0);
+        assert_eq!(tp2[0], (0.0, 15.0)); // 30 tokens / 2 s
+    }
+
+    #[test]
+    fn empty_outcome_is_safe() {
+        let o = SimOutcome::new("x");
+        assert_eq!(o.avg_latency(), 0.0);
+        assert_eq!(o.max_mem(), 0);
+        assert!(o.throughput_series(1.0).is_empty());
+    }
+
+    #[test]
+    fn json_has_headline_fields() {
+        let j = outcome().to_json();
+        assert_eq!(j.req_f64("avg_latency").unwrap(), 7.0);
+        assert_eq!(j.req_str("algo").unwrap(), "test");
+    }
+}

@@ -1,0 +1,360 @@
+//! The hindsight-optimal benchmark (§3): the time-indexed integer
+//! program of Eq (1)–(4), built from an [`Instance`] and solved exactly
+//! with the in-repo branch-and-bound ([`crate::opt::milp`]) warm-started
+//! from MC-SF's schedule.
+//!
+//! Variables `x_{i,t}` indicate "request `i` starts at time `t`"
+//! (`t ∈ [a_i, T̄ − o_i]`); a request started at `t` occupies
+//! `s_i + (t' − t)` KV slots during rounds `t' ∈ [t+1, t+o_i]` and
+//! completes at `t + o_i` with latency `t + o_i − a_i`.
+
+use super::lp::{LinProg, Sense};
+use super::milp::{solve_milp, MilpConfig};
+use crate::core::Instance;
+use crate::predictor::Predictor;
+use crate::sched::McSf;
+use crate::sim::discrete;
+use anyhow::{bail, Context, Result};
+
+/// Exact solution of the hindsight IP.
+#[derive(Debug, Clone)]
+pub struct HindsightSolution {
+    /// Optimal total end-to-end latency (the IP objective).
+    pub total_latency: f64,
+    /// Start time `t` of each request in the optimal schedule.
+    pub starts: Vec<u64>,
+    /// Branch-and-bound nodes explored.
+    pub nodes: u64,
+    /// Whether optimality was proven within the limits.
+    pub proven_optimal: bool,
+    /// Root-LP / final lower bound.
+    pub best_bound: f64,
+    /// The incumbent objective MC-SF provided (for gap reporting).
+    pub mcsf_latency: f64,
+}
+
+/// Build the Eq (1)–(4) integer program. Returns (lp, var_of[i] →
+/// (first_t, var_range_start)) where variable `var_range_start + (t −
+/// first_t)` is `x_{i,t}`.
+pub fn build_ip(inst: &Instance, horizon: u64) -> (LinProg, Vec<(u64, usize)>) {
+    let n = inst.n();
+    // Variable layout.
+    let mut var_of: Vec<(u64, usize)> = Vec::with_capacity(n);
+    let mut nv = 0usize;
+    for r in &inst.requests {
+        let a = r.arrival_round();
+        let t_max = horizon.saturating_sub(r.output_len);
+        debug_assert!(t_max >= a, "horizon too small");
+        var_of.push((a, nv));
+        nv += (t_max - a + 1) as usize;
+    }
+
+    let mut lp = LinProg::new(nv);
+    // Objective (1): Σ_i (Σ_t t·x_{i,t} + o_i − a_i).
+    for (i, r) in inst.requests.iter().enumerate() {
+        let (a, base) = var_of[i];
+        let t_max = horizon - r.output_len;
+        for t in a..=t_max {
+            lp.c[base + (t - a) as usize] = t as f64;
+        }
+        lp.c0 += (r.output_len as f64) - r.arrival;
+    }
+    // (2): each request scheduled exactly once.
+    for (i, r) in inst.requests.iter().enumerate() {
+        let (a, base) = var_of[i];
+        let t_max = horizon - r.output_len;
+        let coeffs: Vec<(usize, f64)> = (a..=t_max)
+            .map(|t| (base + (t - a) as usize, 1.0))
+            .collect();
+        lp.add_row(coeffs, Sense::Eq, 1.0);
+    }
+    // (3): memory at each round t ∈ [1, T̄].
+    for t in 1..=horizon {
+        let mut coeffs: Vec<(usize, f64)> = Vec::new();
+        for (i, r) in inst.requests.iter().enumerate() {
+            let (a, base) = var_of[i];
+            let t_max = horizon - r.output_len;
+            // Started at k, active at t when k+1 ≤ t ≤ k+o_i.
+            let k_lo = a.max(t.saturating_sub(r.output_len));
+            let k_hi = t_max.min(t.saturating_sub(1));
+            if t == 0 || k_lo > k_hi {
+                continue;
+            }
+            for k in k_lo..=k_hi {
+                let mem = (r.prompt_len + t - k) as f64;
+                coeffs.push((base + (k - a) as usize, mem));
+            }
+        }
+        if coeffs.is_empty() {
+            continue;
+        }
+        // Skip rows that can never bind: even if everything with a
+        // coefficient ran at once the limit holds.
+        let worst: f64 = coeffs.iter().map(|&(_, c)| c).sum();
+        if worst <= inst.m as f64 {
+            continue;
+        }
+        lp.add_row(coeffs, Sense::Le, inst.m as f64);
+    }
+    (lp, var_of)
+}
+
+/// Options for the hindsight solve.
+#[derive(Debug, Clone, Copy)]
+pub struct HindsightConfig {
+    pub milp: MilpConfig,
+    /// Override the instance horizon (smaller = faster; must still admit
+    /// an optimal schedule — the MC-SF makespan + maximum o is always
+    /// safe and is the default).
+    pub horizon: Option<u64>,
+}
+
+impl Default for HindsightConfig {
+    fn default() -> Self {
+        let mut milp = MilpConfig::default();
+        milp.objective_integral = true;
+        milp.time_limit = 120.0;
+        HindsightConfig {
+            milp,
+            horizon: None,
+        }
+    }
+}
+
+/// Solve the hindsight IP for a discrete-arrival instance.
+pub fn hindsight_optimal(inst: &Instance, cfg: &HindsightConfig) -> Result<HindsightSolution> {
+    if !inst.is_feasible() {
+        bail!("instance infeasible (some request exceeds M)");
+    }
+    // Warm incumbent: simulate MC-SF with exact predictions.
+    let mcsf_out = discrete::simulate(inst, &mut McSf::default(), &Predictor::exact(), 0);
+    if !mcsf_out.finished {
+        bail!("MC-SF failed to finish — cannot warm-start");
+    }
+
+    // A valid horizon: any schedule that starts every request no later
+    // than MC-SF's last start and runs it o_i rounds fits below
+    // max completion; the true optimum starts requests no later than
+    // needed, but to be *safe* we must allow any start in [a_i, T*]
+    // where T* bounds some optimal schedule. `Instance::horizon()` is the
+    // serial bound and always safe. A much smaller empirically safe
+    // horizon is MC-SF's makespan + max_o; we take the serial bound
+    // capped by (MC-SF makespan + max o + slack) only when the caller
+    // doesn't override.
+    let serial = inst.horizon();
+    let mcsf_makespan = mcsf_out.makespan() as u64;
+    let max_o = inst
+        .requests
+        .iter()
+        .map(|r| r.output_len)
+        .max()
+        .unwrap_or(0);
+    // Some optimal schedule completes by the serial bound; but every
+    // request also has an optimal start ≤ a_i + (MC-SF total latency)
+    // because latency_i ≤ TEL(opt) ≤ TEL(MC-SF). The min of the two is
+    // valid.
+    let tel_cap = inst
+        .requests
+        .iter()
+        .map(|r| r.arrival_round())
+        .max()
+        .unwrap_or(0)
+        + mcsf_out.total_latency() as u64
+        + max_o
+        + 1;
+    let horizon = cfg.horizon.unwrap_or(serial.min(tel_cap).max(mcsf_makespan + 1));
+
+    let (lp, var_of) = build_ip(inst, horizon);
+
+    // Incumbent vector from the MC-SF schedule.
+    let mut inc_x = vec![0.0; lp.num_vars()];
+    for rec in &mcsf_out.per_request {
+        let (a, base) = var_of[rec.id];
+        let k = rec.start as u64;
+        debug_assert!(k >= a);
+        inc_x[base + (k - a) as usize] = 1.0;
+    }
+    let inc_obj = lp.objective(&inc_x);
+    debug_assert!(
+        (inc_obj - mcsf_out.total_latency()).abs() < 1e-6,
+        "incumbent objective {inc_obj} != simulated latency {}",
+        mcsf_out.total_latency()
+    );
+    debug_assert!(lp.is_feasible(&inc_x, 1e-6), "MC-SF schedule violates IP");
+
+    let binaries: Vec<usize> = (0..lp.num_vars()).collect();
+    let out = solve_milp(&lp, &binaries, Some((inc_obj, inc_x)), &cfg.milp)
+        .context("hindsight MILP had no solution")?;
+
+    // Extract start times.
+    let mut starts = vec![0u64; inst.n()];
+    for (i, r) in inst.requests.iter().enumerate() {
+        let (a, base) = var_of[i];
+        let t_max = horizon - r.output_len;
+        let mut found = false;
+        for t in a..=t_max {
+            if out.x[base + (t - a) as usize] > 0.5 {
+                starts[i] = t;
+                found = true;
+                break;
+            }
+        }
+        if !found {
+            bail!("request {i} unscheduled in MILP solution");
+        }
+    }
+    verify_schedule(inst, &starts)?;
+
+    Ok(HindsightSolution {
+        total_latency: out.obj,
+        starts,
+        nodes: out.nodes,
+        proven_optimal: out.proven_optimal,
+        best_bound: out.best_bound,
+        mcsf_latency: mcsf_out.total_latency(),
+    })
+}
+
+/// Independent feasibility verification of a start-time schedule
+/// (arrival gating + the §2 memory law at every round).
+pub fn verify_schedule(inst: &Instance, starts: &[u64]) -> Result<()> {
+    let horizon = starts
+        .iter()
+        .zip(&inst.requests)
+        .map(|(&k, r)| k + r.output_len)
+        .max()
+        .unwrap_or(0);
+    for (r, &k) in inst.requests.iter().zip(starts) {
+        if (k as f64) < r.arrival {
+            bail!("request {} starts {k} before arrival {}", r.id, r.arrival);
+        }
+    }
+    for t in 1..=horizon {
+        let mut mem = 0u64;
+        for (r, &k) in inst.requests.iter().zip(starts) {
+            if t >= k + 1 && t <= k + r.output_len {
+                mem += r.prompt_len + (t - k);
+            }
+        }
+        if mem > inst.m {
+            bail!("memory violation at t={t}: {mem} > {}", inst.m);
+        }
+    }
+    Ok(())
+}
+
+/// Total latency of a start-time schedule.
+pub fn schedule_latency(inst: &Instance, starts: &[u64]) -> f64 {
+    inst.requests
+        .iter()
+        .zip(starts)
+        .map(|(r, &k)| (k + r.output_len) as f64 - r.arrival)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+
+    fn solve(inst: &Instance) -> HindsightSolution {
+        hindsight_optimal(inst, &HindsightConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn single_request_opt_is_o() {
+        let inst = Instance::new(50, vec![Request::new(0, 0.0, 5, 7)]);
+        let sol = solve(&inst);
+        assert!(sol.proven_optimal);
+        assert_eq!(sol.total_latency, 7.0);
+        assert_eq!(sol.starts, vec![0]);
+    }
+
+    #[test]
+    fn two_parallel_requests() {
+        let inst = Instance::new(
+            50,
+            vec![Request::new(0, 0.0, 3, 4), Request::new(1, 0.0, 3, 4)],
+        );
+        let sol = solve(&inst);
+        assert_eq!(sol.total_latency, 8.0); // both run immediately
+        assert_eq!(sol.starts, vec![0, 0]);
+    }
+
+    #[test]
+    fn memory_forces_stagger() {
+        // Peak 8 each; M=10: cannot overlap peaks... but staggering lets
+        // the second start while the first is mid-flight only if memory
+        // profile fits; with M=10, s=4, o=4 joint occupancy at the
+        // later's completion would need 8 + something — check the solver
+        // agrees with the simulator's serialization (OPT may stagger
+        // smarter than MC-SF but not better than 12 here).
+        let inst = Instance::new(
+            10,
+            vec![Request::new(0, 0.0, 4, 4), Request::new(1, 0.0, 4, 4)],
+        );
+        let sol = solve(&inst);
+        assert!(sol.proven_optimal);
+        assert!((sol.total_latency - 12.0).abs() < 1e-6, "{}", sol.total_latency);
+        verify_schedule(&inst, &sol.starts).unwrap();
+    }
+
+    #[test]
+    fn opt_never_exceeds_mcsf() {
+        let mut rng = crate::util::rng::Rng::new(91);
+        for _ in 0..5 {
+            let inst = small_instance(&mut rng);
+            let sol = solve(&inst);
+            assert!(sol.total_latency <= sol.mcsf_latency + 1e-6);
+            assert!(sol.best_bound <= sol.total_latency + 1e-6);
+            verify_schedule(&inst, &sol.starts).unwrap();
+            assert!(
+                (schedule_latency(&inst, &sol.starts) - sol.total_latency).abs() < 1e-6
+            );
+        }
+    }
+
+    #[test]
+    fn shortest_first_is_optimal_for_uniform_small() {
+        // 3 equal requests that fit pairwise but not all three: OPT runs
+        // two, then the third.
+        let inst = Instance::new(
+            16,
+            vec![
+                Request::new(0, 0.0, 4, 4),
+                Request::new(1, 0.0, 4, 4),
+                Request::new(2, 0.0, 4, 4),
+            ],
+        );
+        let sol = solve(&inst);
+        assert!(sol.proven_optimal);
+        assert!((sol.total_latency - 16.0).abs() < 1e-6, "{}", sol.total_latency);
+    }
+
+    #[test]
+    fn respects_arrivals() {
+        let inst = Instance::new(
+            20,
+            vec![Request::new(0, 5.0, 2, 3), Request::new(1, 0.0, 2, 3)],
+        );
+        let sol = solve(&inst);
+        assert!(sol.starts[0] >= 5 || inst.requests[0].arrival == 0.0);
+        // id reassignment: request with arrival 0 got id 0.
+        assert_eq!(inst.requests[0].arrival, 0.0);
+        assert_eq!(sol.total_latency, 3.0 + 3.0);
+    }
+
+    fn small_instance(rng: &mut crate::util::rng::Rng) -> Instance {
+        let m = rng.i64_range(12, 20) as u64;
+        let n = rng.usize_range(5, 8);
+        let reqs = (0..n)
+            .map(|i| {
+                let s = rng.i64_range(1, 3) as u64;
+                let o = rng.i64_range(1, (m - s).min(8) as i64) as u64;
+                let a = rng.i64_range(0, 4) as f64;
+                Request::new(i, a, s, o)
+            })
+            .collect();
+        Instance::new(m, reqs)
+    }
+}

@@ -1,0 +1,502 @@
+//! Dense two-phase primal simplex LP solver.
+//!
+//! This is the substrate under the hindsight-optimal benchmark (§3): the
+//! paper solves its integer program with Gurobi; our offline environment
+//! has no solver, so we implement one. Sizes here are modest (a few
+//! hundred rows, a few thousand columns for §5.1-scale instances), so a
+//! dense tableau with Dantzig pricing and a Bland anti-cycling fallback
+//! is simple and fast enough; the branch-and-bound layer lives in
+//! [`crate::opt::milp`].
+//!
+//! Form: minimize `c·x` subject to `a_i·x {≤,=,≥} b_i`, `x ≥ 0`.
+//! (Binary upper bounds are implied by the assignment equalities in the
+//! hindsight IP, so explicit variable upper bounds are not needed.)
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// One sparse constraint row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub coeffs: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// A linear program (minimization).
+#[derive(Debug, Clone, Default)]
+pub struct LinProg {
+    /// Objective coefficients; length = number of variables.
+    pub c: Vec<f64>,
+    /// Constant added to the objective (latency offsets `o_i − a_i`).
+    pub c0: f64,
+    pub rows: Vec<Row>,
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpOutcome {
+    Optimal { obj: f64, x: Vec<f64> },
+    Infeasible,
+    Unbounded,
+}
+
+impl LinProg {
+    pub fn new(num_vars: usize) -> LinProg {
+        LinProg {
+            c: vec![0.0; num_vars],
+            c0: 0.0,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.c.len()
+    }
+
+    pub fn add_row(&mut self, coeffs: Vec<(usize, f64)>, sense: Sense, rhs: f64) {
+        debug_assert!(coeffs.iter().all(|&(j, _)| j < self.c.len()));
+        self.rows.push(Row { coeffs, sense, rhs });
+    }
+
+    /// Evaluate the objective at a point.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        self.c0 + self.c.iter().zip(x).map(|(c, v)| c * v).sum::<f64>()
+    }
+
+    /// Check primal feasibility of a point within tolerance.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        self.rows.iter().all(|row| {
+            let lhs: f64 = row.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
+            match row.sense {
+                Sense::Le => lhs <= row.rhs + tol,
+                Sense::Ge => lhs >= row.rhs - tol,
+                Sense::Eq => (lhs - row.rhs).abs() <= tol,
+            }
+        })
+    }
+
+    /// Solve with the two-phase dense simplex.
+    pub fn solve(&self) -> LpOutcome {
+        Simplex::new(self).solve()
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+struct Simplex {
+    m: usize,
+    /// Total columns: structural + slack/surplus + artificial.
+    ncols: usize,
+    n_struct: usize,
+    /// First artificial column index (artificials occupy `art0..ncols`).
+    art0: usize,
+    /// Dense tableau rows (length `ncols`) and right-hand sides (≥ 0).
+    tab: Vec<Vec<f64>>,
+    rhs: Vec<f64>,
+    basis: Vec<usize>,
+    c0: f64,
+    c_struct: Vec<f64>,
+}
+
+impl Simplex {
+    fn new(lp: &LinProg) -> Simplex {
+        let m = lp.rows.len();
+        let n = lp.num_vars();
+        let n_slack = lp.rows.iter().filter(|r| r.sense != Sense::Eq).count();
+        // Every row gets an artificial (simple and uniform); phase 1
+        // prices them out.
+        let art0 = n + n_slack;
+        let ncols = art0 + m;
+
+        let mut tab = vec![vec![0.0; ncols]; m];
+        let mut rhs = vec![0.0; m];
+        let mut basis = vec![0usize; m];
+
+        let mut slack_idx = n;
+        for (i, row) in lp.rows.iter().enumerate() {
+            // Normalize to rhs ≥ 0.
+            let flip = row.rhs < 0.0;
+            let sgn = if flip { -1.0 } else { 1.0 };
+            let sense = match (row.sense, flip) {
+                (Sense::Le, true) => Sense::Ge,
+                (Sense::Ge, true) => Sense::Le,
+                (s, _) => s,
+            };
+            for &(j, a) in &row.coeffs {
+                tab[i][j] += sgn * a;
+            }
+            rhs[i] = sgn * row.rhs;
+            match sense {
+                Sense::Le => {
+                    tab[i][slack_idx] = 1.0;
+                    slack_idx += 1;
+                }
+                Sense::Ge => {
+                    tab[i][slack_idx] = -1.0;
+                    slack_idx += 1;
+                }
+                Sense::Eq => {}
+            }
+            tab[i][art0 + i] = 1.0;
+            basis[i] = art0 + i;
+        }
+
+        Simplex {
+            m,
+            ncols,
+            n_struct: n,
+            art0,
+            tab,
+            rhs,
+            basis,
+            c0: lp.c0,
+            c_struct: lp.c.clone(),
+        }
+    }
+
+    fn solve(mut self) -> LpOutcome {
+        // ---- Phase 1: minimize sum of artificials -----------------------
+        let mut cost = vec![0.0; self.ncols];
+        for j in self.art0..self.ncols {
+            cost[j] = 1.0;
+        }
+        // Phase-1 objective starts at Σ rhs (all artificials basic).
+        let mut obj = 0.0;
+        // Eliminate the basic artificials from the cost row.
+        for i in 0..self.m {
+            for j in 0..self.ncols {
+                cost[j] -= self.tab[i][j];
+            }
+            obj += self.rhs[i];
+        }
+        // During phase 1 every column may enter.
+        if !self.iterate(&mut cost, &mut obj) {
+            return LpOutcome::Unbounded; // cannot happen in phase 1
+        }
+        if obj > 1e-7 {
+            return LpOutcome::Infeasible;
+        }
+        // Drive remaining artificials out of the basis where possible.
+        for i in 0..self.m {
+            if self.basis[i] >= self.art0 {
+                if let Some(j) = (0..self.art0).find(|&j| self.tab[i][j].abs() > 1e-7) {
+                    let mut dummy = vec![0.0; self.ncols];
+                    self.pivot(i, j, &mut dummy);
+                }
+                // else: redundant row; artificial stays basic at value 0.
+            }
+        }
+
+        // ---- Phase 2: real objective ------------------------------------
+        let mut cost2 = vec![0.0; self.ncols];
+        cost2[..self.n_struct].copy_from_slice(&self.c_struct);
+        let mut obj2 = self.c0;
+        for i in 0..self.m {
+            let b = self.basis[i];
+            let cb = if b < self.n_struct {
+                self.c_struct[b]
+            } else {
+                0.0
+            };
+            if cb != 0.0 {
+                for j in 0..self.ncols {
+                    let t = self.tab[i][j];
+                    if t != 0.0 {
+                        cost2[j] -= cb * t;
+                    }
+                }
+                obj2 += cb * self.rhs[i];
+            }
+        }
+        // Ban artificials from re-entering.
+        for j in self.art0..self.ncols {
+            cost2[j] = 1e30;
+        }
+        if !self.iterate(&mut cost2, &mut obj2) {
+            return LpOutcome::Unbounded;
+        }
+
+        // Extract solution.
+        let mut x = vec![0.0; self.n_struct];
+        for i in 0..self.m {
+            if self.basis[i] < self.n_struct {
+                x[self.basis[i]] = self.rhs[i];
+            }
+        }
+        LpOutcome::Optimal { obj: obj2, x }
+    }
+
+    /// Run simplex iterations until optimal (`true`) or unbounded
+    /// (`false`). `cost` is the maintained reduced-cost row; `obj` the
+    /// maintained objective value.
+    fn iterate(&mut self, cost: &mut [f64], obj: &mut f64) -> bool {
+        let max_iters = 200 * (self.m + 16);
+        let bland_after = 10 * (self.m + 10);
+        let mut stall = 0usize;
+        let mut last_obj = f64::INFINITY;
+
+        for _ in 0..max_iters {
+            // Entering variable.
+            let enter = if stall > bland_after {
+                // Bland's rule: first negative (anti-cycling).
+                cost.iter().position(|&cj| cj < -EPS)
+            } else {
+                // Dantzig: most negative.
+                let mut best = None;
+                let mut best_val = -1e-7;
+                for (j, &cj) in cost.iter().enumerate() {
+                    if cj < best_val {
+                        best_val = cj;
+                        best = Some(j);
+                    }
+                }
+                best
+            };
+            let Some(e) = enter else {
+                return true; // optimal
+            };
+
+            // Ratio test (ties → smallest basis index, Bland-compatible).
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..self.m {
+                let a = self.tab[i][e];
+                if a > EPS {
+                    let ratio = self.rhs[i] / a;
+                    if ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && leave.map(|l| self.basis[i] < self.basis[l]).unwrap_or(true))
+                    {
+                        best_ratio = ratio.max(0.0);
+                        leave = Some(i);
+                    }
+                }
+            }
+            let Some(l) = leave else {
+                return false; // unbounded
+            };
+
+            let delta = cost[e] * best_ratio;
+            self.pivot(l, e, cost);
+            *obj += delta;
+
+            if (*obj - last_obj).abs() < EPS {
+                stall += 1;
+            } else {
+                stall = 0;
+                last_obj = *obj;
+            }
+        }
+        // Iteration limit hit: accept the current (feasible) point as
+        // optimal-enough. Tests assert we never get here on our sizes.
+        true
+    }
+
+    /// Pivot on (row l, column e), updating the cost row too.
+    fn pivot(&mut self, l: usize, e: usize, cost: &mut [f64]) {
+        let piv = self.tab[l][e];
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for v in self.tab[l].iter_mut() {
+            *v *= inv;
+        }
+        self.rhs[l] *= inv;
+        self.tab[l][e] = 1.0;
+
+        let pivot_row = std::mem::take(&mut self.tab[l]);
+        let rhs_l = self.rhs[l];
+        for i in 0..self.m {
+            if i == l {
+                continue;
+            }
+            let f = self.tab[i][e];
+            if f.abs() > EPS {
+                let row = &mut self.tab[i];
+                for (v, p) in row.iter_mut().zip(&pivot_row) {
+                    *v -= f * p;
+                }
+                row[e] = 0.0;
+                self.rhs[i] -= f * rhs_l;
+                if self.rhs[i].abs() < 1e-12 {
+                    self.rhs[i] = 0.0;
+                }
+            }
+        }
+        let f = cost[e];
+        if f.abs() > EPS {
+            for (v, p) in cost.iter_mut().zip(&pivot_row) {
+                *v -= f * p;
+            }
+            cost[e] = 0.0;
+        }
+        self.tab[l] = pivot_row;
+        self.basis[l] = e;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve(lp: &LinProg) -> (f64, Vec<f64>) {
+        match lp.solve() {
+            LpOutcome::Optimal { obj, x } => (obj, x),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_le_problem() {
+        // min -x - 2y  s.t. x + y <= 4, x <= 3, y <= 2 -> x=2, y=2, -6.
+        let mut lp = LinProg::new(2);
+        lp.c = vec![-1.0, -2.0];
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Le, 4.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 3.0);
+        lp.add_row(vec![(1, 1.0)], Sense::Le, 2.0);
+        let (obj, x) = solve(&lp);
+        assert!((obj + 6.0).abs() < 1e-7, "obj={obj}");
+        assert!((x[0] - 2.0).abs() < 1e-7 && (x[1] - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x + y  s.t. x + y = 2, x >= 0.5 -> obj 2.
+        let mut lp = LinProg::new(2);
+        lp.c = vec![1.0, 1.0];
+        lp.add_row(vec![(0, 1.0), (1, 1.0)], Sense::Eq, 2.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 0.5);
+        let (obj, x) = solve(&lp);
+        assert!((obj - 2.0).abs() < 1e-7);
+        assert!(x[0] >= 0.5 - 1e-7);
+        assert!(lp.is_feasible(&x, 1e-7));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = LinProg::new(1);
+        lp.c = vec![1.0];
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 2.0);
+        assert_eq!(lp.solve(), LpOutcome::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, x >= 1 (no upper bound).
+        let mut lp = LinProg::new(1);
+        lp.c = vec![-1.0];
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 1.0);
+        assert_eq!(lp.solve(), LpOutcome::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // min x s.t. -x <= -3 (i.e. x >= 3)
+        let mut lp = LinProg::new(1);
+        lp.c = vec![1.0];
+        lp.add_row(vec![(0, -1.0)], Sense::Le, -3.0);
+        let (obj, x) = solve(&lp);
+        assert!((obj - 3.0).abs() < 1e-7);
+        assert!((x[0] - 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn objective_constant_carried() {
+        let mut lp = LinProg::new(1);
+        lp.c = vec![1.0];
+        lp.c0 = 10.0;
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 2.0);
+        let (obj, _) = solve(&lp);
+        assert!((obj - 12.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_assignment_lp() {
+        // Assignment-style LP (very degenerate): diagonal optimum.
+        let n = 3;
+        let mut lp = LinProg::new(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                lp.c[i * n + j] = if i == j { 1.0 } else { 10.0 };
+            }
+        }
+        for i in 0..n {
+            lp.add_row((0..n).map(|j| (i * n + j, 1.0)).collect(), Sense::Eq, 1.0);
+        }
+        for j in 0..n {
+            lp.add_row((0..n).map(|i| (i * n + j, 1.0)).collect(), Sense::Le, 1.0);
+        }
+        let (obj, x) = solve(&lp);
+        assert!((obj - 3.0).abs() < 1e-7, "obj={obj}");
+        for i in 0..n {
+            assert!((x[i * n + i] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn random_lps_against_vertex_enumeration() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(33);
+        for trial in 0..200 {
+            let mut lp = LinProg::new(2);
+            lp.c = vec![rng.f64_range(-3.0, 3.0), rng.f64_range(-3.0, 3.0)];
+            let nrows = rng.usize_range(2, 5);
+            for _ in 0..nrows {
+                lp.add_row(
+                    vec![(0, rng.f64_range(0.1, 2.0)), (1, rng.f64_range(0.1, 2.0))],
+                    Sense::Le,
+                    rng.f64_range(0.5, 4.0),
+                );
+            }
+            lp.add_row(vec![(0, 1.0)], Sense::Le, 5.0);
+            lp.add_row(vec![(1, 1.0)], Sense::Le, 5.0);
+
+            let (obj, x) = solve(&lp);
+            assert!(lp.is_feasible(&x, 1e-6), "trial {trial}");
+
+            // Brute force over all constraint-line intersections + axes.
+            let mut lines: Vec<(f64, f64, f64)> = lp
+                .rows
+                .iter()
+                .map(|r| {
+                    let mut a = [0.0; 2];
+                    for &(j, v) in &r.coeffs {
+                        a[j] += v;
+                    }
+                    (a[0], a[1], r.rhs)
+                })
+                .collect();
+            lines.push((1.0, 0.0, 0.0));
+            lines.push((0.0, 1.0, 0.0));
+            let mut best = f64::INFINITY;
+            for i in 0..lines.len() {
+                for j in (i + 1)..lines.len() {
+                    let (a1, b1, c1) = lines[i];
+                    let (a2, b2, c2) = lines[j];
+                    let det = a1 * b2 - a2 * b1;
+                    if det.abs() < 1e-9 {
+                        continue;
+                    }
+                    let px = (c1 * b2 - c2 * b1) / det;
+                    let py = (a1 * c2 - a2 * c1) / det;
+                    if lp.is_feasible(&[px, py], 1e-6) {
+                        best = best.min(lp.objective(&[px, py]));
+                    }
+                }
+            }
+            assert!(
+                (obj - best).abs() < 1e-5,
+                "trial {trial}: simplex {obj} vs brute {best}"
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! The volume-LP lower bound on OPT (Eq 9, used in Lemma 4.7).
+//!
+//! For instances where all requests arrive at t = 0, OPT's total latency
+//! is lower-bounded by the LP that fractionally assigns each request's
+//! *memory volume* `vol_o = s·o + o(o+1)/2` to integer time slots of
+//! capacity `M` each, paying cost `t` per unit assigned to slot `t`. The
+//! paper shows the greedy shortest-volume-first filling solves this LP
+//! exactly, which is what we implement (no simplex needed).
+//!
+//! Combined with the two combinatorial bounds of Lemma 4.7
+//! (`OPT ≥ (1/4M)·Σ n_o²·vol_o` and `OPT ≥ Σ n_o·o`), this gives a fast
+//! certified lower bound used by tests and by branch-and-bound root
+//! screening.
+
+use crate::core::Instance;
+
+/// Exact optimum of the Eq-(9) LP via the greedy filling argument.
+/// Requires all arrivals at 0 (asserted).
+pub fn volume_lp_bound(inst: &Instance) -> f64 {
+    assert!(
+        inst.requests.iter().all(|r| r.arrival == 0.0),
+        "volume LP bound applies to release-at-0 instances"
+    );
+    let m = inst.m as f64;
+    // Sort requests by volume ascending (the greedy order that the
+    // paper's exchange argument proves optimal; note vol is increasing
+    // in o for fixed s, and the LP groups by o).
+    let mut vols: Vec<f64> = inst.requests.iter().map(|r| r.volume() as f64).collect();
+    vols.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut cum = 0.0f64; // volume already placed
+    let mut cost = 0.0f64;
+    for v in vols {
+        // This request's volume occupies [cum, cum + v); the sliver in
+        // [(t-1)·M, t·M) is assigned to slot t at fractional weight
+        // sliver/v and cost t·sliver/v.
+        let mut lo = cum;
+        let hi = cum + v;
+        while lo < hi - 1e-12 {
+            let slot = (lo / m).floor(); // slot index-1 (t = slot+1)
+            let slot_end = (slot + 1.0) * m;
+            let sliver = hi.min(slot_end) - lo;
+            cost += (slot + 1.0) * sliver / v;
+            lo += sliver;
+        }
+        cum = hi;
+    }
+    cost
+}
+
+/// The full Lemma-4.7-style certified lower bound:
+/// `max(volume LP, (1/4M)·Σ vol_i over same-o pairs, Σ o_i)`.
+pub fn opt_lower_bound(inst: &Instance) -> f64 {
+    let lp = volume_lp_bound(inst);
+    let service: f64 = inst.requests.iter().map(|r| r.output_len as f64).sum();
+    // (1/4M) Σ_o n_o² vol_o with vol averaged within the o-group.
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<u64, (f64, f64)> = BTreeMap::new();
+    for r in &inst.requests {
+        let e = groups.entry(r.output_len).or_insert((0.0, 0.0));
+        e.0 += 1.0;
+        e.1 += r.volume() as f64;
+    }
+    let quad: f64 = groups
+        .values()
+        .map(|&(n, vol_sum)| n * vol_sum) // n_o · Σ vol = n_o² · avg vol
+        .sum::<f64>()
+        / (4.0 * inst.m as f64);
+    lp.max(service).max(quad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::opt::hindsight::{hindsight_optimal, HindsightConfig};
+    use crate::predictor::Predictor;
+    use crate::sched::McSf;
+    use crate::sim::discrete;
+
+    #[test]
+    fn single_request_bound() {
+        // One request, vol = 5·3 + 6 = 21, M = 10: volume spans slots
+        // 1,2,3 (10,10,1): cost = (10·1 + 10·2 + 1·3)/21 = 33/21 ≈ 1.57.
+        let inst = Instance::new(10, vec![Request::new(0, 0.0, 5, 3)]);
+        let lb = volume_lp_bound(&inst);
+        assert!((lb - 33.0 / 21.0).abs() < 1e-9, "lb={lb}");
+        // Lemma bound takes the max with Σo = 3.
+        assert_eq!(opt_lower_bound(&inst), 3.0);
+    }
+
+    #[test]
+    fn bound_below_simulated_policies() {
+        use crate::workload::synthetic;
+        let mut rng = crate::util::rng::Rng::new(101);
+        for _ in 0..20 {
+            let inst = synthetic::arrival_model_1(&mut rng);
+            let lb = opt_lower_bound(&inst);
+            let out = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+            assert!(
+                lb <= out.total_latency() + 1e-6,
+                "bound {lb} exceeds MC-SF latency {}",
+                out.total_latency()
+            );
+        }
+    }
+
+    #[test]
+    fn bound_below_hindsight_optimum() {
+        let mut rng = crate::util::rng::Rng::new(102);
+        for _ in 0..3 {
+            let m = rng.i64_range(12, 18) as u64;
+            let reqs: Vec<Request> = (0..6)
+                .map(|i| {
+                    let s = rng.i64_range(1, 3) as u64;
+                    let o = rng.i64_range(1, 6) as u64;
+                    Request::new(i, 0.0, s, o)
+                })
+                .collect();
+            let inst = Instance::new(m, reqs);
+            let lb = opt_lower_bound(&inst);
+            let opt = hindsight_optimal(&inst, &HindsightConfig::default()).unwrap();
+            assert!(opt.proven_optimal);
+            assert!(
+                lb <= opt.total_latency + 1e-6,
+                "lb {lb} > OPT {}",
+                opt.total_latency
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_in_volume() {
+        let small = Instance::new(20, vec![Request::new(0, 0.0, 2, 3); 4]);
+        let big = Instance::new(20, vec![Request::new(0, 0.0, 2, 8); 4]);
+        assert!(volume_lp_bound(&big) > volume_lp_bound(&small));
+    }
+
+    #[test]
+    #[should_panic(expected = "release-at-0")]
+    fn rejects_nonzero_arrivals() {
+        let inst = Instance::new(10, vec![Request::new(0, 2.0, 1, 1)]);
+        volume_lp_bound(&inst);
+    }
+}

@@ -1,0 +1,338 @@
+//! Branch-and-bound MILP solver over the simplex LP relaxation
+//! (the Gurobi role for the hindsight IP).
+//!
+//! Scope: minimization problems whose integer variables are *binary* and
+//! already bounded by the LP (true for the time-indexed hindsight IP,
+//! where assignment equalities cap every `x_{i,t}` at 1). Features:
+//! best-first search, most-fractional branching, warm incumbents (MC-SF's
+//! schedule), and integral-objective bound rounding.
+
+use super::lp::{LinProg, LpOutcome, Sense};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// Solver limits and tolerances.
+#[derive(Debug, Clone, Copy)]
+pub struct MilpConfig {
+    pub max_nodes: u64,
+    /// Wall-clock budget in seconds (proven_optimal = false if hit).
+    pub time_limit: f64,
+    pub int_tol: f64,
+    /// All objective coefficients integral ⇒ bounds can be rounded up.
+    pub objective_integral: bool,
+}
+
+impl Default for MilpConfig {
+    fn default() -> Self {
+        MilpConfig {
+            max_nodes: 10_000,
+            time_limit: 60.0,
+            int_tol: 1e-6,
+            objective_integral: false,
+        }
+    }
+}
+
+/// Result of a branch-and-bound run.
+#[derive(Debug, Clone)]
+pub struct MilpOutcome {
+    pub obj: f64,
+    pub x: Vec<f64>,
+    pub nodes: u64,
+    /// Lower bound proven at termination (equals `obj` when optimal).
+    pub best_bound: f64,
+    pub proven_optimal: bool,
+}
+
+struct Node {
+    bound: f64,
+    fixings: Vec<(usize, u8)>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on bound (BinaryHeap is a max-heap).
+        other
+            .bound
+            .partial_cmp(&self.bound)
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Apply binary fixings to an LP: fixed columns are removed from rows and
+/// objective (value folded into `c0` / rhs), and variables fixed at 1 are
+/// pinned with an explicit equality so the extracted solution is
+/// complete.
+fn apply_fixings(lp: &LinProg, fixings: &[(usize, u8)]) -> LinProg {
+    let mut fixed: Vec<Option<u8>> = vec![None; lp.num_vars()];
+    for &(j, v) in fixings {
+        fixed[j] = Some(v);
+    }
+    let mut out = LinProg::new(lp.num_vars());
+    out.c0 = lp.c0;
+    for (j, &cj) in lp.c.iter().enumerate() {
+        match fixed[j] {
+            Some(v) => out.c0 += cj * v as f64,
+            None => out.c[j] = cj,
+        }
+    }
+    for row in &lp.rows {
+        let mut rhs = row.rhs;
+        let mut coeffs = Vec::with_capacity(row.coeffs.len());
+        for &(j, a) in &row.coeffs {
+            match fixed[j] {
+                Some(v) => rhs -= a * v as f64,
+                None => coeffs.push((j, a)),
+            }
+        }
+        out.add_row(coeffs, row.sense, rhs);
+    }
+    for &(j, v) in fixings {
+        if v == 1 {
+            out.add_row(vec![(j, 1.0)], Sense::Eq, 1.0);
+        }
+    }
+    out
+}
+
+/// Solve `lp` with the listed variables restricted to {0, 1}.
+///
+/// `incumbent` optionally provides a known feasible solution
+/// (objective, x) to prune against from the start. Returns `None` only
+/// when the IP is infeasible and no incumbent was supplied.
+pub fn solve_milp(
+    lp: &LinProg,
+    binary_vars: &[usize],
+    incumbent: Option<(f64, Vec<f64>)>,
+    cfg: &MilpConfig,
+) -> Option<MilpOutcome> {
+    let t0 = Instant::now();
+    let is_binary = {
+        let mut mask = vec![false; lp.num_vars()];
+        for &j in binary_vars {
+            mask[j] = true;
+        }
+        mask
+    };
+
+    let (mut best_obj, mut best_x) = match incumbent {
+        Some((obj, x)) => (obj, Some(x)),
+        None => (f64::INFINITY, None),
+    };
+
+    // Can a node with this bound still improve on `best`?
+    let improves = |bound: f64, best: f64| -> bool {
+        if cfg.objective_integral {
+            (bound - 1e-6).ceil() < best - 1e-6
+        } else {
+            bound < best - 1e-9
+        }
+    };
+
+    let mut heap = BinaryHeap::new();
+    let mut nodes = 0u64;
+    let mut global_bound = f64::NEG_INFINITY;
+
+    heap.push(Node {
+        bound: f64::NEG_INFINITY,
+        fixings: Vec::new(),
+    });
+
+    let mut exhausted = true;
+    while let Some(node) = heap.pop() {
+        if nodes >= cfg.max_nodes || t0.elapsed().as_secs_f64() > cfg.time_limit {
+            exhausted = false;
+            global_bound = global_bound.max(node.bound);
+            break;
+        }
+        if node.bound.is_finite() {
+            global_bound = global_bound.max(node.bound);
+            if !improves(node.bound, best_obj) {
+                continue; // best-first ⇒ every remaining node prunes too
+            }
+        }
+        nodes += 1;
+
+        let sub = apply_fixings(lp, &node.fixings);
+        let (obj, x) = match sub.solve() {
+            LpOutcome::Optimal { obj, x } => (obj, x),
+            LpOutcome::Infeasible => continue,
+            LpOutcome::Unbounded => return None, // malformed model
+        };
+        if !improves(obj, best_obj) {
+            continue;
+        }
+
+        // Most fractional binary variable.
+        let mut branch_var = None;
+        let mut best_frac = cfg.int_tol;
+        for (j, &xv) in x.iter().enumerate() {
+            if is_binary[j] {
+                let frac = (xv - xv.round()).abs();
+                if frac > best_frac {
+                    best_frac = frac;
+                    branch_var = Some(j);
+                }
+            }
+        }
+
+        match branch_var {
+            None => {
+                if obj < best_obj {
+                    best_obj = obj;
+                    best_x = Some(x);
+                }
+            }
+            Some(j) => {
+                for v in [1u8, 0u8] {
+                    let mut fixings = node.fixings.clone();
+                    fixings.push((j, v));
+                    heap.push(Node {
+                        bound: obj,
+                        fixings,
+                    });
+                }
+            }
+        }
+    }
+
+    let best_x = best_x?;
+    Some(MilpOutcome {
+        obj: best_obj,
+        x: best_x,
+        nodes,
+        best_bound: if exhausted { best_obj } else { global_bound },
+        proven_optimal: exhausted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> MilpConfig {
+        MilpConfig::default()
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 10a + 6b + 4c s.t. a+b+c <= 2, binary.
+        let mut lp = LinProg::new(3);
+        lp.c = vec![-10.0, -6.0, -4.0];
+        lp.add_row(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Sense::Le, 2.0);
+        for j in 0..3 {
+            lp.add_row(vec![(j, 1.0)], Sense::Le, 1.0);
+        }
+        let out = solve_milp(&lp, &[0, 1, 2], None, &cfg()).unwrap();
+        assert!(out.proven_optimal);
+        assert!((out.obj + 16.0).abs() < 1e-6, "obj={}", out.obj);
+        assert!((out.x[0] - 1.0).abs() < 1e-6 && (out.x[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fractional_lp_integral_ip_gap() {
+        // max x1 + x2 s.t. 2x1 + 2x2 <= 3, binary: LP 1.5, IP 1.
+        let mut lp = LinProg::new(2);
+        lp.c = vec![-1.0, -1.0];
+        lp.add_row(vec![(0, 2.0), (1, 2.0)], Sense::Le, 3.0);
+        for j in 0..2 {
+            lp.add_row(vec![(j, 1.0)], Sense::Le, 1.0);
+        }
+        let out = solve_milp(&lp, &[0, 1], None, &cfg()).unwrap();
+        assert!((out.obj + 1.0).abs() < 1e-6);
+        assert!(out.proven_optimal);
+        assert!(out.nodes >= 1);
+    }
+
+    #[test]
+    fn incumbent_pruning_preserves_optimum() {
+        let mut lp = LinProg::new(2);
+        lp.c = vec![-1.0, -1.0];
+        lp.add_row(vec![(0, 2.0), (1, 2.0)], Sense::Le, 3.0);
+        for j in 0..2 {
+            lp.add_row(vec![(j, 1.0)], Sense::Le, 1.0);
+        }
+        let out = solve_milp(&lp, &[0, 1], Some((-1.0, vec![1.0, 0.0])), &cfg()).unwrap();
+        assert!((out.obj + 1.0).abs() < 1e-6);
+        assert!(out.proven_optimal);
+    }
+
+    #[test]
+    fn infeasible_ip_without_incumbent_is_none() {
+        let mut lp = LinProg::new(1);
+        lp.c = vec![1.0];
+        lp.add_row(vec![(0, 1.0)], Sense::Ge, 2.0);
+        lp.add_row(vec![(0, 1.0)], Sense::Le, 1.0);
+        assert!(solve_milp(&lp, &[0], None, &cfg()).is_none());
+    }
+
+    #[test]
+    fn random_binary_ips_vs_bruteforce() {
+        let mut rng = Rng::new(55);
+        for trial in 0..60 {
+            let n = rng.usize_range(3, 7);
+            let mut lp = LinProg::new(n);
+            for j in 0..n {
+                lp.c[j] = rng.i64_range(-8, 8) as f64;
+                lp.add_row(vec![(j, 1.0)], Sense::Le, 1.0);
+            }
+            let nrows = rng.usize_range(1, 3);
+            for _ in 0..nrows {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.i64_range(0, 5) as f64)).collect();
+                let rhs = rng.i64_range(2, 10) as f64;
+                lp.add_row(coeffs, Sense::Le, rhs);
+            }
+            let binaries: Vec<usize> = (0..n).collect();
+            let mut c = cfg();
+            c.objective_integral = true;
+            let out = solve_milp(&lp, &binaries, None, &c).unwrap();
+
+            // Brute force all 2^n assignments.
+            let mut best = f64::INFINITY;
+            for mask in 0..(1u32 << n) {
+                let x: Vec<f64> = (0..n)
+                    .map(|j| if mask >> j & 1 == 1 { 1.0 } else { 0.0 })
+                    .collect();
+                if lp.is_feasible(&x, 1e-9) {
+                    best = best.min(lp.objective(&x));
+                }
+            }
+            assert!(
+                (out.obj - best).abs() < 1e-6,
+                "trial {trial}: b&b {} vs brute {best}",
+                out.obj
+            );
+            assert!(out.proven_optimal);
+        }
+    }
+
+    #[test]
+    fn node_limit_marks_unproven() {
+        let mut lp = LinProg::new(6);
+        for j in 0..6 {
+            lp.c[j] = -(j as f64 + 1.0);
+            lp.add_row(vec![(j, 1.0)], Sense::Le, 1.0);
+        }
+        lp.add_row((0..6).map(|j| (j, 2.0)).collect(), Sense::Le, 7.0);
+        let mut c = cfg();
+        c.max_nodes = 1;
+        let out =
+            solve_milp(&lp, &(0..6).collect::<Vec<_>>(), Some((0.0, vec![0.0; 6])), &c).unwrap();
+        assert!(!out.proven_optimal);
+        assert!(out.best_bound <= out.obj + 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Optimization substrate: LP (simplex), MILP (branch & bound), the
+//! paper's hindsight-optimal IP (Eq 1–4) and the volume-LP lower bound
+//! (Eq 9). The paper used Gurobi for §5.1; this module is its offline
+//! replacement (DESIGN.md §3, substitution 1).
+
+pub mod hindsight;
+pub mod lp;
+pub mod lp_bound;
+pub mod milp;
+
+pub use hindsight::{hindsight_optimal, HindsightConfig, HindsightSolution};
+pub use lp::{LinProg, LpOutcome, Sense};
+pub use lp_bound::{opt_lower_bound, volume_lp_bound};
+pub use milp::{solve_milp, MilpConfig, MilpOutcome};

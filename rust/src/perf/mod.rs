@@ -1,0 +1,98 @@
+//! Batch execution-time models (the role Vidur plays in the paper's
+//! §5.2 simulation).
+//!
+//! A [`PerfModel`] maps a batch's composition to wall-clock seconds for
+//! one inference iteration. Two implementations:
+//!
+//! * [`UnitTime`] — 1.0 per round: the paper's §2 theoretical model,
+//!   which the discrete simulator uses implicitly.
+//! * [`llama70b::Llama70bA100x2`] — analytic roofline model of Llama2-70B
+//!   on two NVLinked A100-80GB GPUs (tensor-parallel), calibrated from
+//!   published hardware/model constants; see DESIGN.md §3 substitution 3.
+
+pub mod llama70b;
+
+pub use llama70b::Llama70bA100x2;
+
+/// What one iteration (one scheduler round) processes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct BatchComposition {
+    /// Prompt tokens prefilled this iteration (sum of `s_i` over newly
+    /// admitted requests; chunked-prefill piggybacks on the decode batch
+    /// as in the paper's Fig. 1).
+    pub prefill_tokens: u64,
+    /// Requests in decode (each produces one output token).
+    pub decode_reqs: u64,
+    /// Total KV tokens resident during the iteration (attention reads
+    /// scan this much cache).
+    pub kv_tokens: u64,
+}
+
+impl BatchComposition {
+    pub fn is_empty(&self) -> bool {
+        self.prefill_tokens == 0 && self.decode_reqs == 0
+    }
+
+    /// Tokens processed this iteration (prefill + generated).
+    pub fn tokens_processed(&self) -> u64 {
+        // Each newly admitted request also emits its first output token;
+        // that token is part of `decode_reqs` accounting in the simulator.
+        self.prefill_tokens + self.decode_reqs
+    }
+}
+
+/// Iteration-latency model.
+pub trait PerfModel: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Seconds for one iteration of the given batch.
+    fn iteration_time(&self, batch: &BatchComposition) -> f64;
+
+    /// Seconds charged for a clearing event (evicting and re-queuing);
+    /// defaults to the cost of the aborted iteration.
+    fn clearing_time(&self, batch: &BatchComposition) -> f64 {
+        self.iteration_time(batch)
+    }
+}
+
+/// The §2 abstract model: every batch takes one unit of time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UnitTime;
+
+impl PerfModel for UnitTime {
+    fn name(&self) -> String {
+        "unit-time".into()
+    }
+
+    fn iteration_time(&self, _batch: &BatchComposition) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_time_is_constant() {
+        let m = UnitTime;
+        let b1 = BatchComposition::default();
+        let b2 = BatchComposition {
+            prefill_tokens: 1000,
+            decode_reqs: 64,
+            kv_tokens: 9000,
+        };
+        assert_eq!(m.iteration_time(&b1), 1.0);
+        assert_eq!(m.iteration_time(&b2), 1.0);
+    }
+
+    #[test]
+    fn tokens_processed_counts_both_phases() {
+        let b = BatchComposition {
+            prefill_tokens: 40,
+            decode_reqs: 8,
+            kv_tokens: 500,
+        };
+        assert_eq!(b.tokens_processed(), 48);
+    }
+}

@@ -1,0 +1,159 @@
+//! Output-length predictors.
+//!
+//! The model (§2) assumes each arriving request comes with a prediction
+//! `õ_i ≥ o_i`; the theory (Thm 4.3) covers `o_i ≤ õ_i ≤ α·o_i`, and the
+//! robustness experiments (§5.2.2) use symmetric multiplicative noise
+//! `ô_i ~ U((1−ε)o_i, (1+ε)o_i)`, which can *under*-predict. All three
+//! regimes are implemented here.
+//!
+//! Predictions are a deterministic function of `(seed, request id)` so a
+//! given experiment configuration yields identical predictions across
+//! algorithms — exactly how the paper compares policies.
+
+use crate::core::Request;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Kind {
+    /// Oracle: `õ = o` (used by §5.1 and the main §5.2 experiments).
+    Exact,
+    /// Theory-style over-prediction: `õ ~ U[o, α·o]` (never below `o`).
+    Overestimate { alpha: f64 },
+    /// §5.2.2 noise: `õ ~ U[(1−ε)o, (1+ε)o]`, clamped to ≥ 1.
+    UniformNoise { eps: f64 },
+}
+
+/// A reproducible output-length predictor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Predictor {
+    kind: Kind,
+    seed: u64,
+}
+
+impl Predictor {
+    pub fn exact() -> Predictor {
+        Predictor {
+            kind: Kind::Exact,
+            seed: 0,
+        }
+    }
+
+    /// `õ ~ U[o, α·o]`, α ≥ 1 (satisfies Thm 4.3's premise).
+    pub fn overestimate(alpha: f64, seed: u64) -> Predictor {
+        assert!(alpha >= 1.0, "overestimate factor must be ≥ 1");
+        Predictor {
+            kind: Kind::Overestimate { alpha },
+            seed,
+        }
+    }
+
+    /// `õ ~ U[(1−ε)o, (1+ε)o]`, ε ∈ [0, 1) (§5.2.2).
+    pub fn uniform_noise(eps: f64, seed: u64) -> Predictor {
+        assert!((0.0..1.0).contains(&eps), "eps must be in [0,1)");
+        Predictor {
+            kind: Kind::UniformNoise { eps },
+            seed,
+        }
+    }
+
+    /// The prediction `õ_i` for a request (deterministic per id).
+    pub fn predict(&self, req: &Request) -> u64 {
+        match self.kind {
+            Kind::Exact => req.output_len,
+            Kind::Overestimate { alpha } => {
+                let mut rng = self.req_rng(req.id as u64);
+                let o = req.output_len as f64;
+                let v = rng.f64_range(o, alpha * o);
+                (v.round() as u64).max(req.output_len)
+            }
+            Kind::UniformNoise { eps } => {
+                let mut rng = self.req_rng(req.id as u64);
+                let o = req.output_len as f64;
+                let v = rng.f64_range((1.0 - eps) * o, (1.0 + eps) * o);
+                (v.round() as u64).max(1)
+            }
+        }
+    }
+
+    fn req_rng(&self, id: u64) -> Rng {
+        Rng::with_stream(self.seed ^ id.wrapping_mul(0xa076_1d64_78bd_642f), id)
+    }
+
+    pub fn name(&self) -> String {
+        match self.kind {
+            Kind::Exact => "exact".into(),
+            Kind::Overestimate { alpha } => format!("over(α={alpha})"),
+            Kind::UniformNoise { eps } => format!("noise(ε={eps})"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, o: u64) -> Request {
+        Request::new(id, 0.0, 5, o)
+    }
+
+    #[test]
+    fn exact_returns_truth() {
+        let p = Predictor::exact();
+        assert_eq!(p.predict(&req(0, 17)), 17);
+    }
+
+    #[test]
+    fn overestimate_bounds() {
+        let p = Predictor::overestimate(2.0, 42);
+        for id in 0..500 {
+            let r = req(id, 10);
+            let o = p.predict(&r);
+            assert!((10..=20).contains(&o), "prediction {o} out of [o, 2o]");
+        }
+    }
+
+    #[test]
+    fn overestimate_deterministic_per_request() {
+        let p = Predictor::overestimate(1.5, 7);
+        let r = req(3, 40);
+        assert_eq!(p.predict(&r), p.predict(&r));
+    }
+
+    #[test]
+    fn noise_bounds_and_spread() {
+        let p = Predictor::uniform_noise(0.5, 9);
+        let mut under = 0;
+        let mut over = 0;
+        for id in 0..1000 {
+            let r = req(id, 100);
+            let o = p.predict(&r);
+            assert!((50..=150).contains(&o), "{o}");
+            if o < 100 {
+                under += 1;
+            }
+            if o > 100 {
+                over += 1;
+            }
+        }
+        // Symmetric noise should under- and over-predict about equally.
+        assert!(under > 350 && over > 350, "under={under} over={over}");
+    }
+
+    #[test]
+    fn noise_never_zero() {
+        let p = Predictor::uniform_noise(0.8, 1);
+        for id in 0..200 {
+            assert!(p.predict(&req(id, 1)) >= 1);
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_predictions() {
+        let a = Predictor::uniform_noise(0.5, 1);
+        let b = Predictor::uniform_noise(0.5, 2);
+        let diffs = (0..100)
+            .filter(|&id| a.predict(&req(id, 100)) != b.predict(&req(id, 100)))
+            .count();
+        assert!(diffs > 50);
+    }
+}

@@ -1,0 +1,201 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the Rust runtime (serve time).
+
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model hyperparameters (mirror of python `ModelConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDesc {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+}
+
+/// One parameter tensor's slot in `weights.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset/size in f32 elements.
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// An AOT-compiled executable entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExeSpec {
+    pub batch: usize,
+    /// Prefill sequence length (0 for decode executables).
+    pub seq: usize,
+    pub file: String,
+}
+
+/// Parsed `manifest.json` plus loaded weights.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDesc,
+    pub params: Vec<ParamSpec>,
+    pub decode: Vec<ExeSpec>,
+    pub prefill: Vec<ExeSpec>,
+    /// All weights, flat f32, in spec order.
+    pub weights: Vec<f32>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+
+        let mj = j.req("model")?;
+        let model = ModelDesc {
+            vocab: mj.req_usize("vocab")?,
+            d_model: mj.req_usize("d_model")?,
+            n_layers: mj.req_usize("n_layers")?,
+            n_heads: mj.req_usize("n_heads")?,
+            head_dim: mj.req_usize("head_dim")?,
+            max_seq: mj.req_usize("max_seq")?,
+        };
+        ensure!(
+            model.d_model == model.n_heads * model.head_dim,
+            "inconsistent head geometry"
+        );
+
+        let mut params = Vec::new();
+        for pj in j.req_arr("params")? {
+            let shape: Vec<usize> = pj
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            params.push(ParamSpec {
+                name: pj.req_str("name")?.to_string(),
+                shape: shape.clone(),
+                offset: pj.req_usize("offset")?,
+                size: pj.req_usize("size")?,
+            });
+        }
+        let total: usize = params.iter().map(|p| p.size).sum();
+        for p in &params {
+            ensure!(
+                p.shape.iter().product::<usize>() == p.size,
+                "param {} shape/size mismatch",
+                p.name
+            );
+        }
+
+        let parse_exes = |key: &str| -> Result<Vec<ExeSpec>> {
+            let mut out = Vec::new();
+            for ej in j.req_arr(key)? {
+                out.push(ExeSpec {
+                    batch: ej.req_usize("batch")?,
+                    seq: ej.get("seq").and_then(|v| v.as_usize()).unwrap_or(0),
+                    file: ej.req_str("file")?.to_string(),
+                });
+            }
+            ensure!(!out.is_empty(), "manifest has no {key} executables");
+            Ok(out)
+        };
+        let decode = parse_exes("decode")?;
+        let prefill = parse_exes("prefill")?;
+
+        // Load weights.bin (f32 little-endian).
+        let wpath = dir.join(j.req_str("weights_file")?);
+        let blob = std::fs::read(&wpath)
+            .with_context(|| format!("reading weights {}", wpath.display()))?;
+        ensure!(
+            blob.len() == 4 * total,
+            "weights.bin is {} bytes, expected {}",
+            blob.len(),
+            4 * total
+        );
+        let weights: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+
+        Ok(Manifest {
+            dir,
+            model,
+            params,
+            decode,
+            prefill,
+            weights,
+        })
+    }
+
+    /// Slice of one parameter's data.
+    pub fn param_data(&self, spec: &ParamSpec) -> &[f32] {
+        &self.weights[spec.offset..spec.offset + spec.size]
+    }
+
+    /// Smallest decode bucket that fits `b` rows, if any.
+    pub fn decode_bucket(&self, b: usize) -> Option<&ExeSpec> {
+        self.decode
+            .iter()
+            .filter(|e| e.batch >= b)
+            .min_by_key(|e| e.batch)
+    }
+
+    /// Smallest prefill bucket that fits `b` rows.
+    pub fn prefill_bucket(&self, b: usize) -> Option<&ExeSpec> {
+        self.prefill
+            .iter()
+            .filter(|e| e.batch >= b)
+            .min_by_key(|e| e.batch)
+    }
+
+    /// Largest decode bucket (chunk size for big batches).
+    pub fn max_decode_bucket(&self) -> usize {
+        self.decode.iter().map(|e| e.batch).max().unwrap_or(1)
+    }
+
+    pub fn goldens(&self) -> Result<Json> {
+        let text = std::fs::read_to_string(self.dir.join("goldens.json"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("goldens.json: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model, m.model.n_heads * m.model.head_dim);
+        assert!(!m.decode.is_empty() && !m.prefill.is_empty());
+        let total: usize = m.params.iter().map(|p| p.size).sum();
+        assert_eq!(m.weights.len(), total);
+        // First param is the token embedding [vocab, d_model].
+        assert_eq!(m.params[0].name, "tok_emb");
+        assert_eq!(m.params[0].shape, vec![m.model.vocab, m.model.d_model]);
+        // Bucket selection.
+        assert_eq!(m.decode_bucket(1).unwrap().batch, 1);
+        assert!(m.decode_bucket(3).unwrap().batch >= 3);
+        assert!(m.decode_bucket(10_000).is_none());
+        assert!(m.max_decode_bucket() >= 4);
+    }
+
+    #[test]
+    fn missing_dir_is_clean_error() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

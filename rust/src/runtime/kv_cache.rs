@@ -1,0 +1,220 @@
+//! Host-side KV-cache management.
+//!
+//! Each live request owns a [`RowCache`] (its `[L, C, H, Dh]` K/V
+//! tensors plus fill length). For every decode iteration the coordinator
+//! gathers the active rows into a batched [`KvCache`] with layout
+//! `[L, B, C, H, Dh]` (the AOT executables' signature), executes, and
+//! scatters the updated rows back. The gather/scatter is plain memcpy by
+//! row stride — the hot-path cost the perf bench `perf_runtime` tracks.
+
+use super::artifacts::ModelDesc;
+
+/// Geometry shared by all caches of one model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheDims {
+    pub l: usize,
+    pub c: usize,
+    pub h: usize,
+    pub dh: usize,
+}
+
+impl CacheDims {
+    pub fn of(m: &ModelDesc) -> CacheDims {
+        CacheDims {
+            l: m.n_layers,
+            c: m.max_seq,
+            h: m.n_heads,
+            dh: m.head_dim,
+        }
+    }
+
+    /// Elements of one row's K (or V) tensor: `L·C·H·Dh`.
+    pub fn row_elems(&self) -> usize {
+        self.l * self.c * self.h * self.dh
+    }
+
+    /// Elements of one (layer, row) slab: `C·H·Dh`.
+    pub fn slab_elems(&self) -> usize {
+        self.c * self.h * self.dh
+    }
+}
+
+/// One request's KV cache.
+#[derive(Debug, Clone)]
+pub struct RowCache {
+    pub dims: CacheDims,
+    /// `[L, C, H, Dh]`, row-major.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid positions (tokens currently cached).
+    pub len: usize,
+}
+
+impl RowCache {
+    pub fn new(dims: CacheDims) -> RowCache {
+        RowCache {
+            dims,
+            k: vec![0.0; dims.row_elems()],
+            v: vec![0.0; dims.row_elems()],
+            len: 0,
+        }
+    }
+}
+
+/// A batched cache `[L, B, C, H, Dh]` assembled from rows.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub dims: CacheDims,
+    pub b: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub lens: Vec<i32>,
+}
+
+impl KvCache {
+    /// Zeroed batch cache for `b` rows.
+    pub fn new(dims: CacheDims, b: usize) -> KvCache {
+        KvCache {
+            dims,
+            b,
+            k: vec![0.0; dims.l * b * dims.slab_elems()],
+            v: vec![0.0; dims.l * b * dims.slab_elems()],
+            lens: vec![0; b],
+        }
+    }
+
+    /// Gather per-request rows into a batch (rows beyond `rows.len()` are
+    /// zero padding with length 0... callers pad `b` up to the bucket).
+    pub fn gather(dims: CacheDims, rows: &[&RowCache], b: usize) -> KvCache {
+        assert!(rows.len() <= b);
+        let mut out = KvCache::new(dims, b);
+        let slab = dims.slab_elems();
+        for (bi, row) in rows.iter().enumerate() {
+            debug_assert_eq!(row.dims, dims);
+            out.lens[bi] = row.len as i32;
+            for l in 0..dims.l {
+                let src = l * slab..(l + 1) * slab;
+                let dst = (l * b + bi) * slab..(l * b + bi + 1) * slab;
+                out.k[dst.clone()].copy_from_slice(&row.k[src.clone()]);
+                out.v[dst].copy_from_slice(&row.v[src]);
+            }
+        }
+        // Padding rows keep length 1 larger than 0? No: the decode HLO
+        // writes at position lens[b] and attends over lens+1 ≥ 1 — safe
+        // for zero rows, and their outputs are discarded.
+        out
+    }
+
+    /// Scatter updated batch rows back into per-request caches and bump
+    /// their lengths by one (one token appended per decode step).
+    pub fn scatter_decode(&self, rows: &mut [&mut RowCache]) {
+        let dims = self.dims;
+        let slab = dims.slab_elems();
+        for (bi, row) in rows.iter_mut().enumerate() {
+            for l in 0..dims.l {
+                let src = (l * self.b + bi) * slab..(l * self.b + bi + 1) * slab;
+                let dst = l * slab..(l + 1) * slab;
+                row.k[dst.clone()].copy_from_slice(&self.k[src.clone()]);
+                row.v[dst].copy_from_slice(&self.v[src]);
+            }
+            row.len += 1;
+            debug_assert!(row.len <= dims.c, "KV cache overflow on row {bi}");
+        }
+    }
+
+    /// Scatter prefill results into fresh per-request caches, setting
+    /// their lengths to the prompt lengths.
+    pub fn scatter_prefill(&self, rows: &mut [&mut RowCache], prompt_lens: &[usize]) {
+        let dims = self.dims;
+        let slab = dims.slab_elems();
+        for (bi, row) in rows.iter_mut().enumerate() {
+            for l in 0..dims.l {
+                let src = (l * self.b + bi) * slab..(l * self.b + bi + 1) * slab;
+                let dst = l * slab..(l + 1) * slab;
+                row.k[dst.clone()].copy_from_slice(&self.k[src.clone()]);
+                row.v[dst].copy_from_slice(&self.v[src]);
+            }
+            row.len = prompt_lens[bi];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> CacheDims {
+        CacheDims {
+            l: 2,
+            c: 8,
+            h: 2,
+            dh: 4,
+        }
+    }
+
+    fn filled_row(dims: CacheDims, seed: f32, len: usize) -> RowCache {
+        let mut row = RowCache::new(dims);
+        for (i, x) in row.k.iter_mut().enumerate() {
+            *x = seed + i as f32;
+        }
+        for (i, x) in row.v.iter_mut().enumerate() {
+            *x = -seed - i as f32;
+        }
+        row.len = len;
+        row
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let d = dims();
+        let r0 = filled_row(d, 100.0, 3);
+        let r1 = filled_row(d, 500.0, 5);
+        let batch = KvCache::gather(d, &[&r0, &r1], 4);
+        assert_eq!(batch.lens, vec![3, 5, 0, 0]);
+
+        let mut w0 = RowCache::new(d);
+        let mut w1 = RowCache::new(d);
+        w0.len = 3;
+        w1.len = 5;
+        batch.scatter_decode(&mut [&mut w0, &mut w1]);
+        assert_eq!(w0.k, r0.k);
+        assert_eq!(w1.v, r1.v);
+        assert_eq!(w0.len, 4); // bumped by one token
+        assert_eq!(w1.len, 6);
+    }
+
+    #[test]
+    fn gather_interleaves_by_layer() {
+        // Check the [L, B, C, H, Dh] layout explicitly: layer 1 of row 0
+        // must land at offset (1*b + 0)*slab.
+        let d = dims();
+        let r = filled_row(d, 0.0, 1);
+        let batch = KvCache::gather(d, &[&r], 2);
+        let slab = d.slab_elems();
+        assert_eq!(&batch.k[0..slab], &r.k[0..slab]); // (l=0, b=0)
+        assert_eq!(
+            &batch.k[2 * slab..3 * slab], // (l=1, b=0)
+            &r.k[slab..2 * slab]
+        );
+        // Padding row slots are zero.
+        assert!(batch.k[slab..2 * slab].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_prefill_sets_lengths() {
+        let d = dims();
+        let batch = KvCache::new(d, 2);
+        let mut r0 = RowCache::new(d);
+        let mut r1 = RowCache::new(d);
+        batch.scatter_prefill(&mut [&mut r0, &mut r1], &[4, 7]);
+        assert_eq!(r0.len, 4);
+        assert_eq!(r1.len, 7);
+    }
+
+    #[test]
+    fn row_elems_geometry() {
+        let d = dims();
+        assert_eq!(d.row_elems(), 2 * 8 * 2 * 4);
+        assert_eq!(d.slab_elems(), 8 * 2 * 4);
+    }
+}

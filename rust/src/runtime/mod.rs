@@ -1,0 +1,11 @@
+//! PJRT model runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes prefill/decode steps from the
+//! Rust request path (Python is never involved at serving time).
+
+pub mod artifacts;
+pub mod engine;
+pub mod kv_cache;
+
+pub use artifacts::Manifest;
+pub use engine::Engine;
+pub use kv_cache::KvCache;

@@ -1,0 +1,124 @@
+//! Ablation policies — not part of the paper's benchmark suite, but
+//! isolating MC-SF's design choices:
+//!
+//! * [`LongestFirst`] — identical to MC-SF except candidates are scanned
+//!   in *descending* predicted length: quantifies how much of MC-SF's
+//!   win comes from the shortest-first ordering (vs the Eq-5 check).
+//! * [`RandomOrder`] — same memory check, uniformly random scan order:
+//!   the ordering-free midpoint.
+
+use super::feasibility::admit_greedy;
+use super::Scheduler;
+use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::util::rng::Rng;
+
+/// MC-SF with the ordering inverted (longest predicted output first).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LongestFirst;
+
+impl Scheduler for LongestFirst {
+    fn name(&self) -> String {
+        "LongestFirst".into()
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        let mut order: Vec<QueuedReq> = waiting.to_vec();
+        order.sort_by(|a, b| {
+            b.pred
+                .cmp(&a.pred)
+                .then(a.arrival.total_cmp(&b.arrival))
+                .then(a.id.cmp(&b.id))
+        });
+        admit_greedy(m, active, &order, true)
+    }
+}
+
+/// MC-SF's memory check with a seeded-random scan order.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomOrder;
+
+impl Scheduler for RandomOrder {
+    fn name(&self) -> String {
+        "RandomOrder".into()
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        let mut order: Vec<QueuedReq> = waiting.to_vec();
+        rng.shuffle(&mut order);
+        admit_greedy(m, active, &order, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Instance, Request};
+    use crate::predictor::Predictor;
+    use crate::sched::McSf;
+    use crate::sim::discrete;
+
+    fn mixed_instance() -> Instance {
+        // Long and short requests contending for memory: ordering should
+        // matter a lot.
+        let mut reqs = Vec::new();
+        for i in 0..4 {
+            reqs.push(Request::new(i, 0.0, 2, 25));
+        }
+        for i in 4..20 {
+            reqs.push(Request::new(i, 0.0, 2, 2));
+        }
+        Instance::new(40, reqs)
+    }
+
+    #[test]
+    fn shortest_first_beats_longest_first() {
+        let inst = mixed_instance();
+        let mcsf = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+        let lf = discrete::simulate(&inst, &mut LongestFirst, &Predictor::exact(), 1);
+        assert!(mcsf.finished && lf.finished);
+        assert!(
+            mcsf.total_latency() < lf.total_latency(),
+            "MC-SF {} should beat LongestFirst {}",
+            mcsf.total_latency(),
+            lf.total_latency()
+        );
+    }
+
+    #[test]
+    fn random_order_between_extremes() {
+        let inst = mixed_instance();
+        let mcsf = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+        let lf = discrete::simulate(&inst, &mut LongestFirst, &Predictor::exact(), 1);
+        let ro = discrete::simulate(&inst, &mut RandomOrder, &Predictor::exact(), 1);
+        assert!(ro.finished);
+        assert!(mcsf.total_latency() <= ro.total_latency() + 1e-9);
+        assert!(ro.total_latency() <= lf.total_latency() + 1e-9);
+    }
+
+    #[test]
+    fn all_variants_respect_memory() {
+        let inst = mixed_instance();
+        for sched in [
+            &mut LongestFirst as &mut dyn Scheduler,
+            &mut RandomOrder,
+        ] {
+            let out = discrete::simulate(&inst, sched, &Predictor::exact(), 3);
+            assert!(out.max_mem() <= inst.m);
+            assert_eq!(out.overflow_events, 0);
+        }
+    }
+}

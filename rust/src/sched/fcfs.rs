@@ -1,0 +1,79 @@
+//! Plain vLLM-style FCFS threshold policy (no protection semantics, no
+//! forward check) — the "benchmark FCFS policy" referenced in §5.2.2's
+//! Figure 5 comparison and a useful worst-case baseline.
+//!
+//! Admits waiting requests in arrival order while projected next-round
+//! usage stays at or below `threshold · M`; overflow clears everything.
+
+use super::Scheduler;
+use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct FcfsThreshold {
+    /// Occupancy threshold as a fraction of `M` (vLLM's default-style
+    /// watermark, e.g. 0.9).
+    pub threshold: f64,
+}
+
+impl Default for FcfsThreshold {
+    fn default() -> Self {
+        FcfsThreshold { threshold: 0.9 }
+    }
+}
+
+impl Scheduler for FcfsThreshold {
+    fn name(&self) -> String {
+        format!("FCFS({})", self.threshold)
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        let cap = (self.threshold * m as f64).floor() as u64;
+        let mut usage: u64 = active.iter().map(|a| a.next_round_mem()).sum();
+        let mut order: Vec<QueuedReq> = waiting.to_vec();
+        order.sort_by(|a, b| {
+            a.arrival
+                .partial_cmp(&b.arrival)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        let mut admitted = Vec::new();
+        for cand in &order {
+            if usage + cand.next_round_mem() > cap {
+                break;
+            }
+            usage += cand.next_round_mem();
+            admitted.push(cand.id);
+        }
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_caps_admission() {
+        let waiting: Vec<QueuedReq> = (0..10)
+            .map(|i| QueuedReq {
+                id: i,
+                arrival: i as f64,
+                s: 4,
+                pred: 10,
+            })
+            .collect();
+        let mut rng = Rng::new(0);
+        // cap = 0.5 * 50 = 25; each admission costs s+1 = 5 -> 5 fit.
+        let got = FcfsThreshold { threshold: 0.5 }.admit(1, 50, &[], &waiting, &mut rng);
+        assert_eq!(got.len(), 5);
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,361 @@
+//! The Eq-(5) forward memory-feasibility check shared by MC-SF and
+//! MC-Benchmark.
+//!
+//! A set of items (running requests plus tentatively admitted candidates)
+//! is feasible at round `r` iff for every future round `r' ≥ r` the summed
+//! predicted KV usage stays within `M`:
+//!
+//! ```text
+//! Σ_j  1{r' ≤ r + rem_j − 1} · (base_j + (r' − r) + 1)  ≤  M
+//! ```
+//!
+//! Because each item's usage grows linearly until its predicted completion
+//! and then drops to zero, the maximum over `r'` is attained at a
+//! *predicted completion round* of some item — so only those checkpoints
+//! need to be evaluated (the paper's key observation; Prop 4.2 gives
+//! O(M²) per round overall).
+//!
+//! [`FeasChecker`] keeps items sorted by remaining length with suffix
+//! aggregates so each `try_add` costs `O(k)` (k = items in the batch)
+//! instead of the naive `O(k²)`. A brute-force twin
+//! ([`feasible_bruteforce`]) backs the property tests.
+
+use crate::core::{ActiveReq, FeasItem, Mem, QueuedReq};
+
+/// Incremental feasibility checker for building one batch.
+///
+/// Perf note (EXPERIMENTS.md §Perf, L3 change 1): the original
+/// implementation kept a suffix-sum array that was rebuilt on every
+/// tentative add (`O(k)` alloc-ish rebuild + `O(D log k)` peak scan with
+/// a binary search per checkpoint). The current implementation evaluates
+/// every checkpoint in **one allocation-free descending pass** with
+/// running suffix aggregates, and only mutates `items` when the
+/// candidate is accepted — same `O(k)` asymptotics, ~2–4× lower constant
+/// on the admit hot path.
+#[derive(Debug, Clone)]
+pub struct FeasChecker {
+    m: Mem,
+    /// Items sorted ascending by `rem`.
+    items: Vec<FeasItem>,
+}
+
+impl FeasChecker {
+    /// Start a batch from the currently running set. The running set is
+    /// *assumed* (not checked) to be feasible on its own: under
+    /// over-predictions MC-SF guarantees this inductively; under noisy
+    /// predictions the simulator detects real overflow separately.
+    pub fn new(m: Mem, active: &[ActiveReq]) -> FeasChecker {
+        let mut items: Vec<FeasItem> = active.iter().map(|a| a.feas_item()).collect();
+        items.sort_by_key(|it| it.rem);
+        FeasChecker { m, items }
+    }
+
+    /// Current number of items in the batch under construction.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Predicted memory in use during round `r + dt`.
+    pub fn mem_at(&self, dt: u64) -> u64 {
+        let lb = self.items.partition_point(|it| it.rem < dt + 1);
+        let cnt = (self.items.len() - lb) as u64;
+        let base: u64 = self.items[lb..].iter().map(|it| it.base).sum();
+        base + cnt * (dt + 1)
+    }
+
+    /// Max predicted memory over all checkpoints, optionally with one
+    /// extra (tentative) item virtually inserted. Single descending pass:
+    /// at the checkpoint `dt = rem − 1` of a group of items with equal
+    /// `rem`, exactly the items with `rem' ≥ rem` contribute, each with
+    /// `base + rem` — i.e. `suffix_base + suffix_cnt·rem`.
+    fn peak_with(&self, extra: Option<FeasItem>) -> u64 {
+        let mut best = 0u64;
+        let mut suffix_cnt = 0u64;
+        let mut suffix_base = 0u64;
+        let mut extra = extra;
+        let mut i = self.items.len();
+        loop {
+            // Next rem value to process (descending), merging `extra`.
+            let next_item_rem = if i > 0 { Some(self.items[i - 1].rem) } else { None };
+            let next_extra_rem = extra.map(|e| e.rem);
+            let Some(rem) = next_item_rem.max(next_extra_rem) else {
+                break;
+            };
+            // Absorb everything with this rem.
+            while i > 0 && self.items[i - 1].rem == rem {
+                suffix_cnt += 1;
+                suffix_base += self.items[i - 1].base;
+                i -= 1;
+            }
+            if extra.map(|e| e.rem == rem).unwrap_or(false) {
+                suffix_cnt += 1;
+                suffix_base += extra.take().unwrap().base;
+            }
+            // Checkpoint dt = rem − 1: mem = suffix_base + suffix_cnt·rem.
+            let mem = suffix_base + suffix_cnt * rem;
+            if mem > best {
+                best = mem;
+            }
+        }
+        best
+    }
+
+    /// Max predicted memory over all checkpoints (the batch's feasibility
+    /// margin); 0 for an empty batch.
+    pub fn peak(&self) -> u64 {
+        self.peak_with(None)
+    }
+
+    /// Whether the current item set satisfies Eq (5) at every checkpoint.
+    pub fn feasible(&self) -> bool {
+        self.peak() <= self.m
+    }
+
+    /// Tentatively add `item`; keep it if the batch stays feasible,
+    /// otherwise reject. Returns whether it was kept. Allocation-free on
+    /// the reject path.
+    pub fn try_add(&mut self, item: FeasItem) -> bool {
+        if self.peak_with(Some(item)) > self.m {
+            return false;
+        }
+        let pos = self.items.partition_point(|it| it.rem < item.rem);
+        self.items.insert(pos, item);
+        true
+    }
+
+    /// Add unconditionally (used when reconstructing a known-good batch).
+    pub fn add(&mut self, item: FeasItem) {
+        let pos = self.items.partition_point(|it| it.rem < item.rem);
+        self.items.insert(pos, item);
+    }
+}
+
+/// O(k²) reference implementation of the same predicate, used by tests.
+pub fn feasible_bruteforce(m: Mem, items: &[FeasItem]) -> bool {
+    for probe in items {
+        let dt = probe.rem - 1;
+        let total: u64 = items.iter().map(|it| it.mem_at(dt)).sum();
+        if total > m {
+            return false;
+        }
+    }
+    true
+}
+
+/// Greedily admit candidates in the given order, each guarded by the
+/// Eq-(5) check over running ∪ admitted-so-far.
+///
+/// `stop_on_first_reject` mirrors Algorithm 1/2's `break` (prefix
+/// semantics, Eq 6). With `false` the scan continues past rejections —
+/// the "skip" ablation variant benchmarked in `benches/`.
+pub fn admit_greedy(
+    m: Mem,
+    active: &[ActiveReq],
+    ordered_candidates: &[QueuedReq],
+    stop_on_first_reject: bool,
+) -> Vec<usize> {
+    let mut checker = FeasChecker::new(m, active);
+    let mut admitted = Vec::new();
+    for cand in ordered_candidates {
+        if checker.try_add(cand.feas_item()) {
+            admitted.push(cand.id);
+        } else if stop_on_first_reject {
+            break;
+        }
+    }
+    admitted
+}
+
+/// f64 wrapper with a total order, for scheduler sort keys.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OrdF64(pub f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// As [`admit_greedy`], but with **lazy candidate selection**: instead of
+/// sorting the whole waiting queue every round (`O(W log W)`), pop
+/// candidates from a min-heap in `key` order until the scan stops
+/// (`O(W + A log W)` for `A` admissions). With prefix semantics the scan
+/// usually stops long before exhausting an overloaded queue, which is
+/// where this wins (EXPERIMENTS.md §Perf, L3 change 2). Pop order equals
+/// full-sort order (keys embed the id as a final tiebreak), so results
+/// are bit-identical to the sort-based path.
+pub fn admit_greedy_lazy<K: Ord>(
+    m: Mem,
+    active: &[ActiveReq],
+    candidates: &[QueuedReq],
+    key: impl Fn(&QueuedReq) -> K,
+    stop_on_first_reject: bool,
+) -> Vec<usize> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<(Reverse<K>, usize)> = candidates
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (Reverse(key(c)), i))
+        .collect();
+    let mut checker = FeasChecker::new(m, active);
+    let mut admitted = Vec::new();
+    while let Some((_, i)) = heap.pop() {
+        if checker.try_add(candidates[i].feas_item()) {
+            admitted.push(candidates[i].id);
+        } else if stop_on_first_reject {
+            break;
+        }
+    }
+    admitted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(base: u64, rem: u64) -> FeasItem {
+        FeasItem { base, rem }
+    }
+
+    fn active(id: usize, s: u64, done: u64, pred: u64) -> ActiveReq {
+        ActiveReq {
+            id,
+            s,
+            done,
+            pred_total: pred,
+            started_round: 1,
+        }
+    }
+
+    fn queued(id: usize, s: u64, pred: u64) -> QueuedReq {
+        QueuedReq {
+            id,
+            arrival: 0.0,
+            s,
+            pred,
+        }
+    }
+
+    #[test]
+    fn empty_batch_feasible() {
+        let c = FeasChecker::new(10, &[]);
+        assert!(c.feasible());
+        assert_eq!(c.peak(), 0);
+    }
+
+    #[test]
+    fn single_item_peak_is_base_plus_rem() {
+        let mut c = FeasChecker::new(10, &[]);
+        assert!(c.try_add(item(4, 3))); // peak 7 at dt=2
+        assert_eq!(c.peak(), 7);
+        assert_eq!(c.mem_at(0), 5);
+        assert_eq!(c.mem_at(2), 7);
+        assert_eq!(c.mem_at(3), 0);
+    }
+
+    #[test]
+    fn rejects_item_exceeding_m() {
+        let mut c = FeasChecker::new(10, &[]);
+        assert!(!c.try_add(item(8, 3))); // peak 11 > 10
+        assert!(c.is_empty());
+        assert!(c.try_add(item(8, 2))); // peak 10 == M, allowed
+    }
+
+    #[test]
+    fn staggered_completions_allow_packing() {
+        // Two items with peak 8 each can coexist under M=10 only if their
+        // peaks don't coincide... they both peak at their own completion;
+        // at the later item's completion the early one is gone.
+        let mut c = FeasChecker::new(12, &[]);
+        assert!(c.try_add(item(6, 2))); // mem: dt0=7, dt1=8
+        // second: base 6 rem 4 -> at dt1: 8 + (6+2)=16 > 12 -> reject
+        assert!(!c.try_add(item(6, 4)));
+        // smaller second fits: base 2 rem 4 -> dt1: 8+4=12 ok; dt3: 0+6=6 ok
+        assert!(c.try_add(item(2, 4)));
+        assert_eq!(c.peak(), 12);
+    }
+
+    #[test]
+    fn matches_bruteforce_on_randoms() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(71);
+        for _ in 0..500 {
+            let m = rng.i64_range(10, 60) as u64;
+            let k = rng.usize_range(0, 12);
+            let items: Vec<FeasItem> = (0..k)
+                .map(|_| item(rng.i64_range(1, 10) as u64, rng.i64_range(1, 12) as u64))
+                .collect();
+            let mut c = FeasChecker::new(m, &[]);
+            for it in &items {
+                c.add(*it);
+            }
+            assert_eq!(
+                c.feasible(),
+                feasible_bruteforce(m, &items),
+                "m={m} items={items:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_try_add_equals_scratch_check() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(72);
+        for _ in 0..200 {
+            let m = rng.i64_range(10, 40) as u64;
+            let mut c = FeasChecker::new(m, &[]);
+            let mut kept: Vec<FeasItem> = Vec::new();
+            for _ in 0..10 {
+                let it = item(rng.i64_range(1, 8) as u64, rng.i64_range(1, 10) as u64);
+                let mut tentative = kept.clone();
+                tentative.push(it);
+                let expect = feasible_bruteforce(m, &tentative);
+                let got = c.try_add(it);
+                assert_eq!(got, expect);
+                if got {
+                    kept.push(it);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admit_greedy_prefix_semantics() {
+        // Candidates ordered by pred; second one infeasible blocks the rest
+        // under stop_on_first_reject even if the third would fit.
+        let cands = [queued(0, 2, 2), queued(1, 20, 5), queued(2, 1, 1)];
+        let m = 12;
+        let strict = admit_greedy(m, &[], &cands, true);
+        assert_eq!(strict, vec![0]);
+        let skip = admit_greedy(m, &[], &cands, false);
+        assert_eq!(skip, vec![0, 2]);
+    }
+
+    #[test]
+    fn admit_respects_running_requests() {
+        // One running request near its peak leaves little headroom.
+        let act = [active(9, 5, 2, 4)]; // base 7, rem 2 -> peak 9 at dt=1
+        let cands = [queued(0, 2, 1)]; // base 2 rem 1: dt0: (8)+(3)=11
+        assert_eq!(admit_greedy(11, &act, &cands, true), vec![0]);
+        assert!(admit_greedy(10, &act, &cands, true).is_empty());
+    }
+
+    #[test]
+    fn overdue_active_counts_one_round() {
+        // Active overdue vs prediction: treated as finishing next round.
+        let act = [active(3, 5, 9, 6)]; // base 14, rem 1
+        let cands = [queued(0, 4, 3)]; // base 4: dt0 = 15 + 5 = 20
+        assert_eq!(admit_greedy(20, &act, &cands, true), vec![0]);
+        assert!(admit_greedy(19, &act, &cands, true).is_empty());
+    }
+}

@@ -1,0 +1,81 @@
+//! Algorithm 2: MC-Benchmark.
+//!
+//! vLLM-style FCFS admission order combined with MC-SF's forward memory
+//! check: requests are scanned in ascending arrival time and each is
+//! admitted only if Eq (5) holds at every predicted completion
+//! checkpoint; the scan stops at the first rejection.
+
+use super::feasibility::{admit_greedy_lazy, OrdF64};
+use super::Scheduler;
+use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct McBenchmark;
+
+impl Scheduler for McBenchmark {
+    fn name(&self) -> String {
+        "MC-Benchmark".to_string()
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        admit_greedy_lazy(m, active, waiting, |c| (OrdF64(c.arrival), c.id), true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queued(id: usize, arrival: f64, s: u64, pred: u64) -> QueuedReq {
+        QueuedReq {
+            id,
+            arrival,
+            s,
+            pred,
+        }
+    }
+
+    #[test]
+    fn admits_in_arrival_order_not_length_order() {
+        // First arrival is long; MC-Benchmark admits it first even though
+        // a shorter one waits behind it.
+        let waiting = [queued(0, 1.0, 2, 10), queued(1, 2.0, 2, 1)];
+        let mut rng = Rng::new(0);
+        // M fits only the long one (peak 12): short (peak 3) would add
+        // 3... at dt0: 3+3=6; at long's completion dt9: 12 + 0 = 12. Both
+        // fit under 15 -> admits both, long first.
+        let got = McBenchmark.admit(1, 15, &[], &waiting, &mut rng);
+        assert_eq!(got, vec![0, 1]);
+        // Under M=12 the long consumes everything at its peak; the short
+        // would push dt0 to 6 and its own completion dt0 (3+3=6)... check
+        // long alone peak=12; adding short: at short's completion dt0:
+        // (2+1)+(2+1)=6; at long's dt9: 12. Still feasible! Both admitted.
+        let got = McBenchmark.admit(1, 12, &[], &waiting, &mut rng);
+        assert_eq!(got, vec![0, 1]);
+        // Under M=11 the long alone is infeasible -> blocks the queue
+        // entirely (prefix semantics).
+        let got = McBenchmark.admit(1, 11, &[], &waiting, &mut rng);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn fcfs_head_of_line_blocking_vs_mcsf() {
+        use crate::sched::mcsf::McSf;
+        // A long head request that doesn't fit blocks MC-Benchmark but not
+        // MC-SF (which sorts by length).
+        let waiting = [queued(0, 1.0, 2, 20), queued(1, 2.0, 2, 2)];
+        let mut rng = Rng::new(0);
+        let mcb = McBenchmark.admit(1, 10, &[], &waiting, &mut rng);
+        assert!(mcb.is_empty());
+        let mcsf = McSf::default().admit(1, 10, &[], &waiting, &mut rng);
+        assert_eq!(mcsf, vec![1]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Algorithm 1: Memory-Constrained Shortest-First (MC-SF).
+//!
+//! At each round, running requests keep their slots; waiting requests are
+//! scanned in ascending predicted output length `õ_i` and greedily added
+//! while the Eq-(5) forward feasibility check passes, stopping at the
+//! first rejection (largest feasible prefix, Eq 6).
+//!
+//! Two extensions used by the paper's experiments are built in:
+//!
+//! * **Protection margin (§5.2.2):** with `protect_alpha = α > 0` the
+//!   feasibility check runs against an effective budget `(1−α)·M`,
+//!   guarding against under-predicted output lengths.
+//! * **Skip ablation:** `stop_on_first_reject = false` keeps scanning past
+//!   a rejected candidate (not the paper's algorithm; used by the
+//!   ablation bench to quantify the value of prefix semantics).
+
+use super::feasibility::{admit_greedy_lazy, OrdF64};
+use super::Scheduler;
+use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct McSf {
+    /// Reserve `α·M`; schedule as if the budget were `(1−α)·M`.
+    pub protect_alpha: f64,
+    /// `true` = paper's Algorithm 1 (break at first infeasible candidate).
+    pub stop_on_first_reject: bool,
+}
+
+impl Default for McSf {
+    fn default() -> Self {
+        McSf {
+            protect_alpha: 0.0,
+            stop_on_first_reject: true,
+        }
+    }
+}
+
+impl McSf {
+    pub fn with_protection(alpha: f64) -> McSf {
+        McSf {
+            protect_alpha: alpha,
+            ..Default::default()
+        }
+    }
+
+    fn effective_m(&self, m: Mem) -> Mem {
+        ((1.0 - self.protect_alpha) * m as f64).floor() as Mem
+    }
+}
+
+impl Scheduler for McSf {
+    fn name(&self) -> String {
+        let mut n = "MC-SF".to_string();
+        if self.protect_alpha > 0.0 {
+            n = format!("{n}(α={})", self.protect_alpha);
+        }
+        if !self.stop_on_first_reject {
+            n = format!("{n}[skip]");
+        }
+        n
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        // Shortest predicted output first; ties by arrival then id for
+        // determinism (and FIFO fairness among equals). Lazy heap
+        // selection — see feasibility::admit_greedy_lazy.
+        admit_greedy_lazy(
+            self.effective_m(m),
+            active,
+            waiting,
+            |c| (c.pred, OrdF64(c.arrival), c.id),
+            self.stop_on_first_reject,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queued(id: usize, arrival: f64, s: u64, pred: u64) -> QueuedReq {
+        QueuedReq {
+            id,
+            arrival,
+            s,
+            pred,
+        }
+    }
+
+    fn run_admit(sched: &mut McSf, m: u64, active: &[ActiveReq], waiting: &[QueuedReq]) -> Vec<usize> {
+        let mut rng = Rng::new(0);
+        sched.admit(1, m, active, waiting, &mut rng)
+    }
+
+    #[test]
+    fn admits_shortest_first() {
+        let waiting = [
+            queued(0, 0.0, 2, 10),
+            queued(1, 0.0, 2, 1),
+            queued(2, 0.0, 2, 5),
+        ];
+        // M large: admits all, but order must be 1, 2, 0.
+        let got = run_admit(&mut McSf::default(), 1000, &[], &waiting);
+        assert_eq!(got, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn memory_limits_admission_count() {
+        // Each request peaks at s + o = 2 + 4 = 6. Their completion rounds
+        // coincide, so k requests need 6k at the common completion.
+        let waiting: Vec<QueuedReq> = (0..10).map(|i| queued(i, 0.0, 2, 4)).collect();
+        let got = run_admit(&mut McSf::default(), 20, &[], &waiting);
+        assert_eq!(got.len(), 3); // 3*6 = 18 ≤ 20 < 24
+    }
+
+    #[test]
+    fn prefix_break_vs_skip() {
+        let waiting = [
+            queued(0, 0.0, 1, 2),
+            queued(1, 0.0, 50, 3), // too big for M=20
+            queued(2, 0.0, 1, 4),
+        ];
+        let strict = run_admit(&mut McSf::default(), 20, &[], &waiting);
+        assert_eq!(strict, vec![0]);
+        let mut skip = McSf {
+            stop_on_first_reject: false,
+            ..Default::default()
+        };
+        let relaxed = run_admit(&mut skip, 20, &[], &waiting);
+        assert_eq!(relaxed, vec![0, 2]);
+    }
+
+    #[test]
+    fn protection_margin_shrinks_budget() {
+        let waiting: Vec<QueuedReq> = (0..10).map(|i| queued(i, 0.0, 2, 4)).collect();
+        let plain = run_admit(&mut McSf::default(), 30, &[], &waiting);
+        assert_eq!(plain.len(), 5); // 5*6 = 30
+        let mut prot = McSf::with_protection(0.2); // budget 24
+        let guarded = run_admit(&mut prot, 30, &[], &waiting);
+        assert_eq!(guarded.len(), 4);
+    }
+
+    #[test]
+    fn ties_broken_by_arrival_fifo() {
+        // Peak 6 each with coinciding completions: M=11 fits only one;
+        // the earlier arrival wins the tie on equal predictions.
+        let waiting = [queued(5, 3.0, 2, 4), queued(6, 1.0, 2, 4)];
+        let got = run_admit(&mut McSf::default(), 11, &[], &waiting);
+        assert_eq!(got, vec![6]);
+        // With M=12 both fit exactly (6+6 at the shared completion) and
+        // admission order is still FIFO.
+        let got = run_admit(&mut McSf::default(), 12, &[], &waiting);
+        assert_eq!(got, vec![6, 5]);
+    }
+
+    #[test]
+    fn respects_running_set() {
+        let active = [ActiveReq {
+            id: 99,
+            s: 10,
+            done: 2,
+            pred_total: 6,
+            started_round: 1,
+        }];
+        // Active peaks at 16 in 4 rounds. Candidate (s=2, o=4) peaks at 6
+        // in 4 rounds: combined at dt=3: 16 + 6 = 22.
+        let waiting = [queued(0, 0.0, 2, 4)];
+        assert_eq!(run_admit(&mut McSf::default(), 22, &active, &waiting), vec![0]);
+        assert!(run_admit(&mut McSf::default(), 21, &active, &waiting).is_empty());
+    }
+
+    #[test]
+    fn default_overflow_clears_all() {
+        let active = [
+            ActiveReq {
+                id: 1,
+                s: 2,
+                done: 1,
+                pred_total: 3,
+                started_round: 1,
+            },
+            ActiveReq {
+                id: 2,
+                s: 2,
+                done: 1,
+                pred_total: 3,
+                started_round: 1,
+            },
+        ];
+        let mut rng = Rng::new(0);
+        let evicted = McSf::default().on_overflow(&active, &mut rng);
+        assert_eq!(evicted, vec![1, 2]);
+    }
+}

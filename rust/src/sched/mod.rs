@@ -1,0 +1,151 @@
+//! Scheduling policies.
+//!
+//! The [`Scheduler`] trait is the single integration point between
+//! policies and both simulators (and the live coordinator): at each round
+//! the policy sees the running set `S^(t)`, the waiting queue `R^(t)` and
+//! the memory budget, and returns which waiting requests join the batch.
+//! Running requests are never preempted by `admit` (§2 non-preemption);
+//! eviction happens only through `on_overflow`, the clearing mechanism of
+//! the §5.2 baselines and of MC-SF under prediction noise (§5.2.2).
+
+pub mod ablation;
+pub mod fcfs;
+pub mod feasibility;
+pub mod mc_benchmark;
+pub mod mcsf;
+pub mod protection;
+
+pub use ablation::{LongestFirst, RandomOrder};
+pub use fcfs::FcfsThreshold;
+pub use mc_benchmark::McBenchmark;
+pub use mcsf::McSf;
+pub use protection::AlphaProtection;
+
+use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::util::rng::Rng;
+
+/// A batching/scheduling policy.
+pub trait Scheduler: Send {
+    /// Human-readable name (appears in metrics and bench output).
+    fn name(&self) -> String;
+
+    /// Choose which waiting requests to admit into the batch formed at
+    /// round `now`. Running requests always stay in the batch. The
+    /// returned ids must be a subset of `waiting`; order is the admission
+    /// order (relevant only for logging).
+    fn admit(
+        &mut self,
+        now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        rng: &mut Rng,
+    ) -> Vec<RequestId>;
+
+    /// Called by the simulator when the *actual* KV usage of the next
+    /// round would exceed `M` (possible under noisy predictions or
+    /// threshold policies without forward checks). Returns the requests
+    /// to evict; evicted requests lose all progress and re-queue
+    /// (the paper's "clearing"). Default: clear everything.
+    fn on_overflow(
+        &mut self,
+        active: &[ActiveReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        active.iter().map(|a| a.id).collect()
+    }
+}
+
+/// Build a scheduler from a spec string (CLI / config):
+///
+/// * `mcsf` — Algorithm 1; optional `mcsf:alpha=0.1` protection margin,
+///   `mcsf:skip=1` for the non-prefix ablation.
+/// * `mc-benchmark` — Algorithm 2.
+/// * `protect:alpha=0.2` — α-protection greedy (clears all on overflow).
+/// * `protect:alpha=0.2,beta=0.1` — α-protection β-clearing.
+/// * `fcfs:threshold=0.9` — vLLM-style FCFS with a plain occupancy
+///   threshold and no forward check.
+pub fn by_name(spec: &str) -> anyhow::Result<Box<dyn Scheduler>> {
+    let (name, args) = match spec.split_once(':') {
+        Some((n, a)) => (n, a),
+        None => (spec, ""),
+    };
+    let mut kv = std::collections::BTreeMap::new();
+    for part in args.split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad scheduler arg '{part}' in '{spec}'"))?;
+        kv.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    let getf = |k: &str, default: f64| -> anyhow::Result<f64> {
+        match kv.get(k) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for {k} in '{spec}'")),
+        }
+    };
+    match name {
+        "mcsf" => Ok(Box::new(McSf {
+            protect_alpha: getf("alpha", 0.0)?,
+            stop_on_first_reject: getf("skip", 0.0)? == 0.0,
+        })),
+        "mc-benchmark" | "mcbench" => Ok(Box::new(McBenchmark)),
+        "protect" => {
+            let alpha = getf("alpha", 0.2)?;
+            let beta = getf("beta", 1.0)?; // β=1 ≡ plain α-protection greedy
+            Ok(Box::new(AlphaProtection::new(alpha, beta)))
+        }
+        "fcfs" => Ok(Box::new(FcfsThreshold {
+            threshold: getf("threshold", 0.9)?,
+        })),
+        "longest" => Ok(Box::new(LongestFirst)),
+        "random" => Ok(Box::new(RandomOrder)),
+        other => anyhow::bail!("unknown scheduler '{other}' (spec '{spec}')"),
+    }
+}
+
+/// The benchmark set evaluated in §5.2 (Fig 3, Table 1), in the paper's
+/// presentation order.
+pub fn paper_benchmark_suite() -> Vec<Box<dyn Scheduler>> {
+    vec![
+        Box::new(McSf::default()),
+        Box::new(McBenchmark),
+        Box::new(AlphaProtection::new(0.3, 1.0)),
+        Box::new(AlphaProtection::new(0.25, 1.0)),
+        Box::new(AlphaProtection::new(0.2, 0.2)),
+        Box::new(AlphaProtection::new(0.2, 0.1)),
+        Box::new(AlphaProtection::new(0.1, 0.2)),
+        Box::new(AlphaProtection::new(0.1, 0.1)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_parses_specs() {
+        assert_eq!(by_name("mcsf").unwrap().name(), "MC-SF");
+        assert_eq!(by_name("mcsf:alpha=0.1").unwrap().name(), "MC-SF(α=0.1)");
+        assert_eq!(by_name("mc-benchmark").unwrap().name(), "MC-Benchmark");
+        assert_eq!(
+            by_name("protect:alpha=0.2,beta=0.1").unwrap().name(),
+            "α=0.2,β=0.1"
+        );
+        assert_eq!(by_name("protect:alpha=0.3").unwrap().name(), "α=0.3");
+        assert_eq!(by_name("fcfs:threshold=0.8").unwrap().name(), "FCFS(0.8)");
+    }
+
+    #[test]
+    fn factory_rejects_unknown() {
+        assert!(by_name("nope").is_err());
+        assert!(by_name("mcsf:alpha=x").is_err());
+        assert!(by_name("protect:junk").is_err());
+    }
+
+    #[test]
+    fn suite_has_eight_algorithms() {
+        assert_eq!(paper_benchmark_suite().len(), 8);
+    }
+}

@@ -1,0 +1,100 @@
+//! Continuous-time serving simulation (§5.2): Poisson arrivals in
+//! seconds, iteration durations from a [`PerfModel`] (the Vidur role),
+//! KV budget `M = 16492` for Llama2-70B on 2×A100.
+
+use super::engine::{self, SimConfig, SimError};
+use crate::core::Instance;
+use crate::metrics::SimOutcome;
+use crate::perf::PerfModel;
+use crate::predictor::Predictor;
+use crate::sched::Scheduler;
+
+/// The paper's §5.2 memory limit (tokens) for Llama2-70B on 2×A100.
+pub const PAPER_M: u64 = 16_492;
+
+/// Simulate serving with real-time iteration durations.
+pub fn simulate(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+) -> SimOutcome {
+    try_simulate(inst, sched, predictor, perf, seed, SimConfig::default())
+        .expect("simulation failed")
+}
+
+pub fn try_simulate(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<SimOutcome, SimError> {
+    engine::run(inst, sched, predictor, perf, seed, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::perf::Llama70bA100x2;
+    use crate::sched::McSf;
+
+    #[test]
+    fn latency_in_seconds_scale() {
+        // A single 85-token answer on idle hardware: ~85 iterations of
+        // ~72 ms -> ~6 s end-to-end.
+        let inst = Instance::new(PAPER_M, vec![Request::new(0, 0.0, 40, 85)]);
+        let out = simulate(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &Llama70bA100x2::default(),
+            1,
+        );
+        let lat = out.per_request[0].latency();
+        assert!((3.0..12.0).contains(&lat), "latency {lat}s");
+    }
+
+    #[test]
+    fn batching_amortizes_iterations() {
+        // 32 identical requests served together should take barely longer
+        // than 1 (decode is memory-bound).
+        let one = Instance::new(PAPER_M, vec![Request::new(0, 0.0, 40, 50)]);
+        let many = Instance::new(
+            PAPER_M,
+            (0..32).map(|i| Request::new(i, 0.0, 40, 50)).collect(),
+        );
+        let perf = Llama70bA100x2::default();
+        let o1 = simulate(&one, &mut McSf::default(), &Predictor::exact(), &perf, 1);
+        let o32 = simulate(&many, &mut McSf::default(), &Predictor::exact(), &perf, 1);
+        let m1 = o1.makespan();
+        let m32 = o32.makespan();
+        assert!(m32 / m1 < 1.5, "makespan 1={m1} 32={m32}");
+    }
+
+    #[test]
+    fn fractional_arrivals_supported() {
+        let inst = Instance::new(
+            PAPER_M,
+            vec![
+                Request::new(0, 0.173, 10, 5),
+                Request::new(1, 0.944, 10, 5),
+            ],
+        );
+        let out = simulate(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &Llama70bA100x2::default(),
+            1,
+        );
+        assert!(out.finished);
+        assert_eq!(out.per_request.len(), 2);
+        for r in &out.per_request {
+            assert!(r.start >= r.arrival);
+        }
+    }
+}

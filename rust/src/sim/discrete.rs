@@ -1,0 +1,106 @@
+//! Discrete-time simulation: the exact §2 model (unit-time batches).
+//!
+//! Times in the returned [`SimOutcome`] are round indices; total latency
+//! is directly comparable to the hindsight IP objective (§3).
+
+use super::engine::{self, SimConfig, SimError};
+use crate::core::Instance;
+use crate::metrics::SimOutcome;
+use crate::perf::UnitTime;
+use crate::predictor::Predictor;
+use crate::sched::Scheduler;
+
+/// Simulate with unit rounds. Arrivals must be integral.
+pub fn simulate(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    seed: u64,
+) -> SimOutcome {
+    simulate_cfg(inst, sched, predictor, seed, SimConfig::default())
+}
+
+pub fn simulate_cfg(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    seed: u64,
+    cfg: SimConfig,
+) -> SimOutcome {
+    try_simulate_cfg(inst, sched, predictor, seed, cfg).expect("simulation failed")
+}
+
+pub fn try_simulate_cfg(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<SimOutcome, SimError> {
+    debug_assert!(
+        inst.requests.iter().all(|r| r.arrival.fract() == 0.0),
+        "discrete-time simulation requires integral arrivals"
+    );
+    engine::run(inst, sched, predictor, &UnitTime, seed, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::sched::{McBenchmark, McSf};
+
+    /// The worked example from Appendix A.2: two prompts with equal s can
+    /// overlap even when their peak memories sum above M, because the
+    /// first finishes before the second peaks.
+    #[test]
+    fn appendix_a2_overlap_example() {
+        let s = 2u64;
+        let t1 = 6u64; // P1 grows to t1 (o1 = t1 - s = 4)
+        let t2 = 10u64; // P2 grows to t2 (o2 = 8)
+        let m = 2 * t1; // M = 12 = 2*t1, and t1 + t2 = 16 > M
+        let inst = Instance::new(
+            m,
+            vec![
+                Request::new(0, 0.0, s, t1 - s),
+                Request::new(1, 0.0, s, t2 - s),
+            ],
+        );
+        let out = simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+        assert!(out.finished);
+        assert!(out.max_mem() <= m);
+        // Both processed concurrently from round 1: P1 completes at o1=4,
+        // P2 at o2=8 -> total latency 12 (no serialization needed).
+        assert_eq!(out.total_latency(), (t1 - s + t2 - s) as f64);
+    }
+
+    #[test]
+    fn shortest_first_beats_fcfs_order_on_mixed_lengths() {
+        // One long request arrives just before many short ones.
+        let mut reqs = vec![Request::new(0, 0.0, 1, 30)];
+        for i in 1..9 {
+            reqs.push(Request::new(i, 1.0, 1, 2));
+        }
+        let inst = Instance::new(40, reqs);
+        let mcsf = simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+        let mcb = simulate(&inst, &mut McBenchmark, &Predictor::exact(), 1);
+        assert!(mcsf.finished && mcb.finished);
+        assert!(
+            mcsf.total_latency() <= mcb.total_latency(),
+            "MC-SF {} should beat MC-Benchmark {}",
+            mcsf.total_latency(),
+            mcb.total_latency()
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        use crate::workload::synthetic;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let a = simulate(&inst, &mut McSf::default(), &Predictor::exact(), 9);
+        let b = simulate(&inst, &mut McSf::default(), &Predictor::exact(), 9);
+        assert_eq!(a.total_latency(), b.total_latency());
+        assert_eq!(a.rounds, b.rounds);
+    }
+}

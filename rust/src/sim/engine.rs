@@ -1,0 +1,461 @@
+//! The shared simulation event loop.
+//!
+//! Time semantics (matching the hindsight IP, Eq 1–4): the batch *formed*
+//! at time `t` processes during `(t, t + Δ]`. A request arriving at `a`
+//! is eligible for batches formed at `t ≥ a`. A request entering its
+//! first batch at formation time `t` with output length `o` completes at
+//! `t + o·Δ` under unit rounds (`Δ = 1` ⇒ completion `= start_round + o`,
+//! latency `= start + o − a`, exactly the IP objective).
+//!
+//! Overflow: before executing a batch the engine checks the *actual*
+//! next-round usage `Σ (s_i + done_i + 1) ≤ M`. A violation (possible for
+//! threshold policies or under-predictions) triggers a clearing event:
+//! the scheduler's `on_overflow` picks evictees, which lose all progress
+//! and re-queue with their original arrival time; the aborted iteration's
+//! duration is still charged (`PerfModel::clearing_time`).
+
+use crate::core::{ActiveReq, Instance, QueuedReq, RequestId};
+use crate::metrics::{PerRequest, SimOutcome};
+use crate::perf::{BatchComposition, PerfModel};
+use crate::predictor::Predictor;
+use crate::sched::Scheduler;
+use crate::util::rng::Rng;
+
+/// Engine limits / options.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Abort after this many iterations (divergence guard for the
+    /// clearing-loop regime of small α). The run is marked
+    /// `finished = false`.
+    pub max_rounds: u64,
+    /// Abort early when no request completes for this many consecutive
+    /// rounds — detects the deterministic clearing livelock (§5.2's
+    /// "infinite processing loops") in O(stall) instead of O(max_rounds).
+    pub stall_rounds: u64,
+    /// Record memory / token time series (disable for big sweeps).
+    pub record_series: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            max_rounds: 2_000_000,
+            stall_rounds: 30_000,
+            record_series: true,
+        }
+    }
+}
+
+/// Hard errors (bad instance / misbehaving scheduler).
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("instance infeasible: request {id} needs {peak} > M = {m}")]
+    Infeasible { id: RequestId, peak: u64, m: u64 },
+    #[error("scheduler admitted unknown/duplicate request id {0}")]
+    BadAdmission(RequestId),
+}
+
+#[derive(Debug, Clone)]
+struct ActiveState {
+    id: RequestId,
+    s: u64,
+    o_true: u64,
+    pred: u64,
+    done: u64,
+    started_round: u64,
+    start_time: f64,
+}
+
+#[derive(Debug, Clone)]
+struct WaitState {
+    id: RequestId,
+    arrival: f64,
+    s: u64,
+    o_true: u64,
+    pred: u64,
+}
+
+/// Run one policy over one instance. Deterministic given `seed`.
+pub fn run(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<SimOutcome, SimError> {
+    for r in &inst.requests {
+        if r.peak_mem() > inst.m {
+            return Err(SimError::Infeasible {
+                id: r.id,
+                peak: r.peak_mem(),
+                m: inst.m,
+            });
+        }
+    }
+
+    let n = inst.requests.len();
+    // Predictions are clamped to what can physically fit (õ ≤ M − s):
+    // predicting beyond the whole KV budget would make a feasible
+    // request permanently unschedulable under the Eq-(5) check. Since
+    // the instance is feasible (o ≤ M − s), clamping preserves õ ≥ o
+    // for over-predictors.
+    let preds: Vec<u64> = inst
+        .requests
+        .iter()
+        .map(|r| {
+            predictor
+                .predict(r)
+                .min(inst.m - r.prompt_len)
+                .max(1)
+        })
+        .collect();
+
+    let mut rng = Rng::new(seed);
+    let mut outcome = SimOutcome::new(&sched.name());
+    let mut records: Vec<Option<PerRequest>> = vec![None; n];
+    let mut restarts: Vec<u32> = vec![0; n];
+
+    let mut waiting: Vec<WaitState> = Vec::new();
+    let mut active: Vec<ActiveState> = Vec::new();
+    let mut next_arrival = 0usize;
+    let mut completed = 0usize;
+    let mut t = 0.0f64;
+    let mut round = 0u64;
+    let mut last_completion_round = 0u64;
+    // View buffers reused across rounds (avoids ~W+A allocations per
+    // round on overloaded queues — EXPERIMENTS.md §Perf, L3 change 3).
+    let mut active_views: Vec<ActiveReq> = Vec::new();
+    let mut waiting_views: Vec<QueuedReq> = Vec::new();
+
+    while completed < n {
+        // Release arrivals up to the current formation time.
+        while next_arrival < n && inst.requests[next_arrival].arrival <= t {
+            let r = &inst.requests[next_arrival];
+            waiting.push(WaitState {
+                id: r.id,
+                arrival: r.arrival,
+                s: r.prompt_len,
+                o_true: r.output_len,
+                pred: preds[r.id],
+            });
+            next_arrival += 1;
+        }
+
+        // Idle: fast-forward to the next arrival.
+        if active.is_empty() && waiting.is_empty() {
+            debug_assert!(next_arrival < n);
+            t = inst.requests[next_arrival].arrival;
+            continue;
+        }
+
+        round += 1;
+        if round > cfg.max_rounds || round.saturating_sub(last_completion_round) > cfg.stall_rounds
+        {
+            outcome.finished = false;
+            outcome.rounds = round - 1;
+            finalize(&mut outcome, records);
+            return Ok(outcome);
+        }
+
+        // Scheduler decision.
+        active_views.clear();
+        active_views.extend(active.iter().map(|a| ActiveReq {
+            id: a.id,
+            s: a.s,
+            done: a.done,
+            pred_total: a.pred,
+            started_round: a.started_round,
+        }));
+        waiting_views.clear();
+        waiting_views.extend(waiting.iter().map(|w| QueuedReq {
+            id: w.id,
+            arrival: w.arrival,
+            s: w.s,
+            pred: w.pred,
+        }));
+        let admitted = sched.admit(round, inst.m, &active_views, &waiting_views, &mut rng);
+
+        // Validate and move admitted requests into the running set.
+        let mut prefill_tokens = 0u64;
+        let mut seen = vec![false; n];
+        for id in &admitted {
+            let pos = waiting.iter().position(|w| w.id == *id);
+            let pos = match pos {
+                Some(p) if !seen[*id] => p,
+                _ => return Err(SimError::BadAdmission(*id)),
+            };
+            seen[*id] = true;
+            let w = waiting.remove(pos);
+            prefill_tokens += w.s;
+            active.push(ActiveState {
+                id: w.id,
+                s: w.s,
+                o_true: w.o_true,
+                pred: w.pred,
+                done: 0,
+                started_round: round,
+                start_time: t,
+            });
+        }
+
+        // Actual memory needed to run this round.
+        let usage: u64 = active.iter().map(|a| a.s + a.done + 1).sum();
+        let batch = BatchComposition {
+            prefill_tokens,
+            decode_reqs: active.len() as u64,
+            kv_tokens: usage,
+        };
+
+        if usage > inst.m {
+            // KV overflow: clearing event.
+            outcome.overflow_events += 1;
+            let evicted = sched.on_overflow(
+                &active
+                    .iter()
+                    .map(|a| ActiveReq {
+                        id: a.id,
+                        s: a.s,
+                        done: a.done,
+                        pred_total: a.pred,
+                        started_round: a.started_round,
+                    })
+                    .collect::<Vec<_>>(),
+                &mut rng,
+            );
+            t += perf.clearing_time(&batch);
+            let mut post_usage = usage;
+            for id in evicted {
+                if let Some(pos) = active.iter().position(|a| a.id == id) {
+                    let a = active.remove(pos);
+                    post_usage -= a.s + a.done + 1;
+                    restarts[a.id] += 1;
+                    outcome.evicted_requests += 1;
+                    waiting.push(WaitState {
+                        id: a.id,
+                        arrival: a.arrival_of(inst),
+                        s: a.s,
+                        o_true: a.o_true,
+                        pred: a.pred,
+                    });
+                }
+            }
+            if cfg.record_series {
+                outcome.mem_series.push((t, post_usage));
+            }
+            continue;
+        }
+
+        // Execute the iteration.
+        t += perf.iteration_time(&batch);
+        outcome.peak_mem = outcome.peak_mem.max(usage);
+        if cfg.record_series {
+            outcome.mem_series.push((t, usage));
+            outcome.tokens_series.push((t, batch.tokens_processed()));
+        }
+
+        // Token production + completions.
+        let mut i = 0;
+        while i < active.len() {
+            active[i].done += 1;
+            if active[i].done >= active[i].o_true {
+                let a = active.swap_remove(i);
+                records[a.id] = Some(PerRequest {
+                    id: a.id,
+                    arrival: inst.requests[a.id].arrival,
+                    start: a.start_time,
+                    completion: t,
+                    restarts: restarts[a.id],
+                });
+                completed += 1;
+                last_completion_round = round;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    outcome.rounds = round;
+    outcome.finished = true;
+    finalize(&mut outcome, records);
+    Ok(outcome)
+}
+
+impl ActiveState {
+    fn arrival_of(&self, inst: &Instance) -> f64 {
+        inst.requests[self.id].arrival
+    }
+}
+
+fn finalize(outcome: &mut SimOutcome, records: Vec<Option<PerRequest>>) {
+    outcome.per_request = records.into_iter().flatten().collect();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::perf::UnitTime;
+    use crate::sched::{AlphaProtection, McSf};
+
+    fn run_mcsf(inst: &Instance) -> SimOutcome {
+        run(
+            inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request_latency_is_o() {
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 5, 7)]);
+        let out = run_mcsf(&inst);
+        assert!(out.finished);
+        assert_eq!(out.per_request.len(), 1);
+        // start at t=0, o=7 unit rounds -> completion 7, latency 7.
+        assert_eq!(out.per_request[0].completion, 7.0);
+        assert_eq!(out.total_latency(), 7.0);
+    }
+
+    #[test]
+    fn two_requests_batch_together_when_memory_allows() {
+        let inst = Instance::new(
+            100,
+            vec![Request::new(0, 0.0, 3, 4), Request::new(1, 0.0, 3, 4)],
+        );
+        let out = run_mcsf(&inst);
+        // Both fit (peak 7 each, combined 14 < 100): both finish at 4.
+        assert_eq!(out.total_latency(), 8.0);
+        assert_eq!(out.max_mem(), 14);
+    }
+
+    #[test]
+    fn memory_forces_serialization() {
+        // Peak per request = 8; M = 10 fits only one at a time near peaks.
+        let inst = Instance::new(
+            10,
+            vec![Request::new(0, 0.0, 4, 4), Request::new(1, 0.0, 4, 4)],
+        );
+        let out = run_mcsf(&inst);
+        assert!(out.finished);
+        // First finishes at 4; second must wait (combined would peak 16):
+        // the Eq-5 check even rejects joint scheduling at any overlap...
+        // staggered start at round 5 -> completion 8, latency 8.
+        assert_eq!(out.total_latency(), 4.0 + 8.0);
+        assert!(out.max_mem() <= 10);
+    }
+
+    #[test]
+    fn arrival_gating_respected() {
+        let inst = Instance::new(100, vec![Request::new(0, 3.0, 2, 2)]);
+        let out = run_mcsf(&inst);
+        // Arrives at 3 -> first batch formed at t=3 -> completes 5,
+        // latency 2 (no queueing).
+        assert_eq!(out.per_request[0].completion, 5.0);
+        assert_eq!(out.per_request[0].latency(), 2.0);
+    }
+
+    #[test]
+    fn mcsf_never_overflows_with_exact_predictions() {
+        use crate::workload::synthetic;
+        let mut rng = Rng::new(17);
+        for _ in 0..20 {
+            let inst = synthetic::arrival_model_1(&mut rng);
+            let out = run_mcsf(&inst);
+            assert!(out.finished);
+            assert_eq!(out.overflow_events, 0);
+            assert!(out.max_mem() <= inst.m, "{} > {}", out.max_mem(), inst.m);
+            assert_eq!(out.per_request.len(), inst.n());
+        }
+    }
+
+    #[test]
+    fn alpha_protection_greedy_can_loop_forever() {
+        // The paper's §5.2 observation: "for very small protection levels
+        // α, the α-protection heuristic may lead to repeated evictions
+        // and infinite processing loops". With β = 1 every overflow
+        // clears everything and the deterministic re-admission recreates
+        // the identical state.
+        let reqs: Vec<Request> = (0..12).map(|i| Request::new(i, 0.0, 2, 20)).collect();
+        let inst = Instance::new(60, reqs);
+        let mut sched = AlphaProtection::new(0.05, 1.0);
+        let out = run(
+            &inst,
+            &mut sched,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig {
+                max_rounds: 5000,
+                record_series: false,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(out.overflow_events > 0, "expected clearing events");
+        assert!(!out.finished, "small-α greedy should livelock");
+        assert!(out.per_request.is_empty());
+    }
+
+    #[test]
+    fn beta_clearing_overflows_and_recovers() {
+        // β < 1 breaks the deterministic clearing loop: survivors keep
+        // their progress and eventually complete.
+        let reqs: Vec<Request> = (0..18).map(|i| Request::new(i, 0.0, 2, 4)).collect();
+        let inst = Instance::new(60, reqs);
+        let mut sched = AlphaProtection::new(0.05, 0.5);
+        let out = run(
+            &inst,
+            &mut sched,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert!(out.overflow_events > 0, "expected clearing events");
+        assert!(out.finished, "β-clearing should make progress");
+        assert_eq!(out.per_request.len(), 18);
+        assert!(out.per_request.iter().any(|r| r.restarts > 0));
+    }
+
+    #[test]
+    fn max_rounds_cap_marks_unfinished() {
+        let reqs: Vec<Request> = (0..8).map(|i| Request::new(i, 0.0, 2, 20)).collect();
+        let inst = Instance::new(60, reqs);
+        let mut sched = AlphaProtection::new(0.05, 1.0);
+        let out = run(
+            &inst,
+            &mut sched,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig {
+                max_rounds: 3,
+                record_series: false,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(!out.finished);
+        assert!(out.per_request.len() < 8);
+    }
+
+    #[test]
+    fn infeasible_instance_rejected() {
+        let inst = Instance::new(5, vec![Request::new(0, 0.0, 4, 4)]);
+        let err = run(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig::default(),
+        );
+        assert!(matches!(err, Err(SimError::Infeasible { .. })));
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulation engines.
+//!
+//! A single event loop ([`engine`]) implements the paper's batch
+//! semantics — non-preemptive decode, per-round KV growth `s_i + j`,
+//! overflow clearing — parameterized by a [`crate::perf::PerfModel`]:
+//!
+//! * [`discrete::simulate`] — unit-time rounds, the exact §2 model used
+//!   against the hindsight IP in §5.1;
+//! * [`continuous::simulate`] — seconds from the Llama2-70B/A100 model,
+//!   the §5.2 serving simulation (the role Vidur plays in the paper).
+
+pub mod continuous;
+pub mod discrete;
+pub mod engine;
+
+pub use engine::{SimConfig, SimError};

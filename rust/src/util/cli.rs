@@ -1,0 +1,160 @@
+//! Minimal command-line argument parser (no `clap` in the offline build).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; typed getters with defaults and error messages that name
+//! the offending flag.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus a flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags present without a value (e.g. `--verbose`).
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.switches.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.typed_or(key, default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.typed_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.typed_or(key, default)
+    }
+
+    fn typed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: flag --{key} has invalid value '{v}'");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Required string flag; exits with a message when missing.
+    pub fn req_str(&self, key: &str) -> &str {
+        self.get(key).unwrap_or_else(|| {
+            eprintln!("error: required flag --{key} missing");
+            std::process::exit(2);
+        })
+    }
+
+    /// Parse a comma-separated list of T.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: flag --{key} has invalid list item '{s}'");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["simulate", "--n", "100", "--seed=7", "--verbose"]);
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.usize_or("n", 0), 100);
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.f64_or("lambda", 50.0), 50.0);
+        assert_eq!(a.str_or("algo", "mcsf"), "mcsf");
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--rate=2.5"]);
+        assert_eq!(a.f64_or("rate", 0.0), 2.5);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--eps", "0.2,0.5,0.8"]);
+        assert_eq!(a.list_or::<f64>("eps", &[]), vec![0.2, 0.5, 0.8]);
+        let b = parse(&[]);
+        assert_eq!(b.list_or("eps", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn switch_followed_by_positional() {
+        // `--flag sub` consumes "sub" as the flag's value by design; callers
+        // put switches last or use `--flag=1`. Verify `--flag` at end is a
+        // switch.
+        let a = parse(&["cmd", "--dry-run"]);
+        assert!(a.has("dry-run"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+}

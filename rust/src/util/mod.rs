@@ -1,0 +1,9 @@
+//! Utility substrates built in-repo (the offline environment lacks
+//! `rand`, `serde`, `clap`, `criterion` and `proptest` — see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

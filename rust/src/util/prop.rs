@@ -1,0 +1,271 @@
+//! Mini property-based testing framework (no `proptest` in the offline
+//! build).
+//!
+//! Provides seeded random-case generation with automatic shrinking for the
+//! common shapes our invariants need (integers, vectors, request lists).
+//! On failure the framework re-reports the seed so a case can be replayed
+//! exactly:
+//!
+//! ```text
+//! property failed after 37 cases (seed 0x5eed, case seed 0x1234):
+//!   <Debug of shrunk input>
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable with KVSCHED_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("KVSCHED_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator of values of type T with an attached shrinker.
+pub struct Gen<T> {
+    /// Generate a value from randomness.
+    pub gen: Box<dyn Fn(&mut Rng) -> T>,
+    /// Produce strictly "smaller" candidates (may be empty).
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    /// Map the generated value; the shrinker is lost (no inverse available).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.gen;
+        Gen {
+            gen: Box::new(move |r| f(g(r))),
+            shrink: Box::new(|_| Vec::new()),
+        }
+    }
+}
+
+/// usize in [lo, hi] with shrinking toward lo.
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen {
+        gen: Box::new(move |r| r.usize_range(lo, hi)),
+        shrink: Box::new(move |&x| {
+            let mut out = Vec::new();
+            if x > lo {
+                out.push(lo);
+                let mid = lo + (x - lo) / 2;
+                if mid != lo && mid != x {
+                    out.push(mid);
+                }
+                if x - 1 != mid {
+                    out.push(x - 1);
+                }
+            }
+            out
+        }),
+    }
+}
+
+/// f64 in [lo, hi) with shrinking toward lo.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen {
+        gen: Box::new(move |r| r.f64_range(lo, hi)),
+        shrink: Box::new(move |&x| {
+            let mut out = Vec::new();
+            if x > lo {
+                out.push(lo);
+                out.push(lo + (x - lo) / 2.0);
+            }
+            out
+        }),
+    }
+}
+
+/// Vector with length in [min_len, max_len], elementwise generator `elem`.
+/// Shrinks by halving length, dropping elements, and shrinking elements.
+pub fn vec_of<T: Clone + 'static>(
+    elem: Gen<T>,
+    min_len: usize,
+    max_len: usize,
+) -> Gen<Vec<T>> {
+    let elem_gen = elem.gen;
+    let elem_shrink = elem.shrink;
+    Gen {
+        gen: Box::new(move |r| {
+            let len = r.usize_range(min_len, max_len);
+            (0..len).map(|_| elem_gen(r)).collect()
+        }),
+        shrink: Box::new(move |v: &Vec<T>| {
+            let mut out: Vec<Vec<T>> = Vec::new();
+            // Halve.
+            if v.len() > min_len {
+                let half = (v.len() / 2).max(min_len);
+                out.push(v[..half].to_vec());
+                // Drop last.
+                out.push(v[..v.len() - 1].to_vec());
+                // Drop first.
+                out.push(v[1..].to_vec());
+            }
+            // Shrink one element (first shrinkable).
+            for i in 0..v.len() {
+                for cand in elem_shrink(&v[i]).into_iter().take(2) {
+                    let mut w = v.clone();
+                    w[i] = cand;
+                    out.push(w);
+                    break;
+                }
+            }
+            out
+        }),
+    }
+}
+
+/// Pair generator.
+pub fn pair<A: Clone + 'static, B: Clone + 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let (ga, sa) = (a.gen, a.shrink);
+    let (gb, sb) = (b.gen, b.shrink);
+    Gen {
+        gen: Box::new(move |r| (ga(r), gb(r))),
+        shrink: Box::new(move |(x, y)| {
+            let mut out = Vec::new();
+            for xs in sa(x).into_iter().take(3) {
+                out.push((xs, y.clone()));
+            }
+            for ys in sb(y).into_iter().take(3) {
+                out.push((x.clone(), ys));
+            }
+            out
+        }),
+    }
+}
+
+/// Run the property over `default_cases()` random cases; panic with the
+/// shrunk counterexample on failure. `seed` pins the whole run.
+pub fn forall<T: Clone + std::fmt::Debug + 'static>(
+    seed: u64,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    forall_cases(seed, default_cases(), gen, prop)
+}
+
+/// As `forall` with an explicit case count.
+pub fn forall_cases<T: Clone + std::fmt::Debug + 'static>(
+    seed: u64,
+    cases: usize,
+    gen: Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut r = Rng::new(case_seed);
+        let input = (gen.gen)(&mut r);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let (shrunk, shrunk_msg) = shrink_loop(&gen, &prop, input, msg);
+            panic!(
+                "property failed after {} cases (seed {:#x}, case seed {:#x}): {}\ninput: {:?}",
+                case + 1,
+                seed,
+                case_seed,
+                shrunk_msg,
+                shrunk
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone + std::fmt::Debug>(
+    gen: &Gen<T>,
+    prop: &impl Fn(&T) -> Result<(), String>,
+    mut current: T,
+    mut msg: String,
+) -> (T, String) {
+    let mut budget = 200usize;
+    'outer: while budget > 0 {
+        for cand in (gen.shrink)(&current) {
+            budget -= 1;
+            if budget == 0 {
+                break 'outer;
+            }
+            if let Err(m) = prop(&cand) {
+                current = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (current, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall_cases(1, 64, usize_in(0, 100), |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall_cases(2, 64, usize_in(0, 100), |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Capture the panic message and check the shrunk value is minimal-ish.
+        let result = std::panic::catch_unwind(|| {
+            forall_cases(3, 64, usize_in(0, 1000), |&x| {
+                if x < 77 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        // The shrinker halves toward 0; it should land well below 1000.
+        // Extract the reported input value.
+        let input: usize = msg
+            .rsplit("input: ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!((77..=200).contains(&input), "shrunk to {input}: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_length_bounds() {
+        let g = vec_of(usize_in(0, 9), 2, 5);
+        let mut r = Rng::new(4);
+        for _ in 0..100 {
+            let v = (g.gen)(&mut r);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+
+    #[test]
+    fn pair_gen_and_shrink() {
+        let g = pair(usize_in(0, 10), usize_in(5, 15));
+        let mut r = Rng::new(5);
+        let (a, b) = (g.gen)(&mut r);
+        assert!(a <= 10 && (5..=15).contains(&b));
+        let shrinks = (g.shrink)(&(10, 15));
+        assert!(!shrinks.is_empty());
+    }
+}

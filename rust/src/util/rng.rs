@@ -1,0 +1,338 @@
+//! Deterministic PRNG + sampling distributions.
+//!
+//! The offline build has no `rand`/`rand_distr`; this module provides the
+//! subset the workload generators and simulators need: a PCG-family 64-bit
+//! generator, uniform ints/floats, Box–Muller normals, lognormal,
+//! exponential and Poisson samplers, and shuffling.
+//!
+//! All simulation experiments take explicit seeds so every paper figure is
+//! exactly reproducible.
+
+/// A `pcg64`-style generator (pcg_xsl_rr_128_64): 128-bit LCG state with
+/// an xor-shift-low / random-rotate output permutation. Passes practrand
+/// at the sizes we use; streams are selected via the odd increment.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// Cached second normal from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Create a generator from a seed, using stream 0.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator from a (seed, stream) pair. Different streams are
+    /// statistically independent sequences.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            spare_normal: None,
+        };
+        rng.state = rng.inc.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator; used to give each request /
+    /// trial its own stream without coupling sequences.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        Rng::with_stream(seed, tag.wrapping_add(0x853c_49e6_748f_ea9b))
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform u64 in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in the inclusive range [lo, hi].
+    #[inline]
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.u64_below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive).
+    #[inline]
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_range(lo as i64, hi as i64) as usize
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (caching the spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal with log-space parameters (mu, sigma).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Poisson sample. Knuth's product method for small mean, normal
+    /// approximation (with continuity correction, clamped at 0) for large
+    /// mean — accurate to well under the noise floor of our experiments.
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        debug_assert!(mean >= 0.0);
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let z = self.normal();
+            let x = mean + mean.sqrt() * z + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.u64_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.u64_below(xs.len() as u64) as usize]
+    }
+}
+
+/// Solve lognormal log-space parameters from a target (mean, median):
+/// median = exp(mu)  =>  mu = ln(median)
+/// mean   = exp(mu + sigma^2/2)  =>  sigma = sqrt(2 ln(mean/median)).
+/// Requires mean > median (right-skew), which holds for both LMSYS
+/// marginals reported in the paper.
+pub fn lognormal_params_from_mean_median(mean: f64, median: f64) -> (f64, f64) {
+    assert!(
+        mean > median && median > 0.0,
+        "lognormal calibration needs mean > median > 0 (got mean={mean}, median={median})"
+    );
+    let mu = median.ln();
+    let sigma = (2.0 * (mean / median).ln()).sqrt();
+    (mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn u64_below_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.u64_below(7);
+            assert!(x < 7);
+            seen[x as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn i64_range_inclusive() {
+        let mut r = Rng::new(11);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..2000 {
+            let x = r.i64_range(-3, 3);
+            assert!((-3..=3).contains(&x));
+            lo_seen |= x == -3;
+            hi_seen |= x == 3;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut r = Rng::new(9);
+        let n = 100_000;
+        let mean_target = 3.7;
+        let sum: u64 = (0..n).map(|_| r.poisson(mean_target)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - mean_target).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_large_mean() {
+        let mut r = Rng::new(10);
+        let n = 50_000;
+        let mean_target = 120.0;
+        let sum: u64 = (0..n).map(|_| r.poisson(mean_target)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - mean_target).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(12);
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| r.exponential(2.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_calibration_roundtrip() {
+        // The paper's LMSYS output-token stats: mean 85.32, median 45.
+        let (mu, sigma) = lognormal_params_from_mean_median(85.32, 45.0);
+        let mut r = Rng::new(13);
+        let n = 400_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.lognormal(mu, sigma)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[n / 2];
+        assert!((mean - 85.32).abs() / 85.32 < 0.03, "mean={mean}");
+        assert!((median - 45.0).abs() / 45.0 < 0.03, "median={median}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(21);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(99);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

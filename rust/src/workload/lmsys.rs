@@ -1,0 +1,157 @@
+//! LMSYS-Chat-1M-calibrated workload generator (§5.2).
+//!
+//! The paper samples 10,000 conversations from the public LMSYS-Chat-1M
+//! dataset and reports the resulting length statistics (Fig 7): prompt
+//! words mean 40.62 / median 11; output words mean 85.32 / median 45.
+//! The dataset itself is not downloadable in this offline environment, so
+//! we substitute calibrated lognormal marginals — the scheduler only
+//! consumes the `(s_i, o_i)` pairs, and a lognormal matched on
+//! (mean, median) reproduces both reported statistics and the heavy
+//! right tail that drives head-of-line blocking (DESIGN.md §3,
+//! substitution 2).
+
+use crate::core::{Instance, Request};
+use crate::util::rng::{lognormal_params_from_mean_median, Rng};
+
+/// Fig-7 statistics from the paper.
+pub const PROMPT_MEAN: f64 = 40.62;
+pub const PROMPT_MEDIAN: f64 = 11.0;
+pub const OUTPUT_MEAN: f64 = 85.32;
+pub const OUTPUT_MEDIAN: f64 = 45.0;
+
+/// LMSYS-like request-length sampler.
+#[derive(Debug, Clone, Copy)]
+pub struct LmsysGen {
+    prompt_mu: f64,
+    prompt_sigma: f64,
+    output_mu: f64,
+    output_sigma: f64,
+    /// Lengths are clipped so one request never exceeds this peak
+    /// (`s + o ≤ max_peak`); infeasible requests cannot be served at all.
+    pub max_peak: u64,
+}
+
+impl Default for LmsysGen {
+    fn default() -> Self {
+        LmsysGen::new(crate::sim::continuous::PAPER_M)
+    }
+}
+
+impl LmsysGen {
+    /// Calibrate to the paper's Fig-7 statistics with peak cap `m`.
+    pub fn new(m: u64) -> LmsysGen {
+        let (pm, ps) = lognormal_params_from_mean_median(PROMPT_MEAN, PROMPT_MEDIAN);
+        let (om, os) = lognormal_params_from_mean_median(OUTPUT_MEAN, OUTPUT_MEDIAN);
+        LmsysGen {
+            prompt_mu: pm,
+            prompt_sigma: ps,
+            output_mu: om,
+            output_sigma: os,
+            max_peak: m,
+        }
+    }
+
+    /// Sample one (s, o) pair.
+    pub fn sample_lengths(&self, rng: &mut Rng) -> (u64, u64) {
+        loop {
+            let s = self.sample_one(rng, self.prompt_mu, self.prompt_sigma);
+            let o = self.sample_one(rng, self.output_mu, self.output_sigma);
+            if s + o <= self.max_peak {
+                return (s, o);
+            }
+            // Tail draw beyond the worker's whole memory: redraw (the
+            // paper's trace cannot contain unservable requests either).
+        }
+    }
+
+    fn sample_one(&self, rng: &mut Rng, mu: f64, sigma: f64) -> u64 {
+        (rng.lognormal(mu, sigma).round() as u64).max(1)
+    }
+
+    /// Generate `n` requests with Poisson(λ)-process arrivals, to be
+    /// served with memory budget `m`.
+    pub fn instance(&self, n: usize, lambda: f64, m: u64, rng: &mut Rng) -> Instance {
+        let times = super::poisson_arrival_times(n, lambda, rng);
+        let reqs = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let (s, o) = self.sample_lengths(rng);
+                Request::new(i, t, s, o)
+            })
+            .collect();
+        Instance::new(m, reqs)
+    }
+
+    /// The paper's high-demand setting: λ = 50 req/s.
+    pub fn high_demand(&self, n: usize, rng: &mut Rng) -> Instance {
+        self.instance(n, 50.0, self.max_peak, rng)
+    }
+
+    /// The paper's low-demand setting: λ = 10 req/s.
+    pub fn low_demand(&self, n: usize, rng: &mut Rng) -> Instance {
+        self.instance(n, 10.0, self.max_peak, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn marginals_match_paper_fig7() {
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(77);
+        let n = 60_000;
+        let mut prompts = Vec::with_capacity(n);
+        let mut outputs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (s, o) = gen.sample_lengths(&mut rng);
+            prompts.push(s as f64);
+            outputs.push(o as f64);
+        }
+        // Integerization + cap shift the moments slightly; 12% tolerance
+        // on means, and medians within ±2 words.
+        let pm = stats::mean(&prompts);
+        let om = stats::mean(&outputs);
+        assert!((pm - PROMPT_MEAN).abs() / PROMPT_MEAN < 0.12, "prompt mean {pm}");
+        assert!((om - OUTPUT_MEAN).abs() / OUTPUT_MEAN < 0.12, "output mean {om}");
+        let pmed = stats::median(&prompts);
+        let omed = stats::median(&outputs);
+        assert!((pmed - PROMPT_MEDIAN).abs() <= 2.0, "prompt median {pmed}");
+        assert!((omed - OUTPUT_MEDIAN).abs() <= 3.0, "output median {omed}");
+    }
+
+    #[test]
+    fn all_requests_individually_feasible() {
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(78);
+        let inst = gen.instance(2000, 50.0, gen.max_peak, &mut rng);
+        assert!(inst.is_feasible());
+        assert_eq!(inst.n(), 2000);
+    }
+
+    #[test]
+    fn arrival_rate_respected() {
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(79);
+        let inst = gen.high_demand(5000, &mut rng);
+        let span = inst.requests.last().unwrap().arrival;
+        // 5000 arrivals at 50/s ≈ 100 s.
+        assert!((span - 100.0).abs() < 10.0, "span={span}");
+    }
+
+    #[test]
+    fn heavy_tail_present() {
+        // Lognormal with these params has P[o > 400] ≈ 4%; the tail is
+        // what creates head-of-line blocking for FCFS policies.
+        let gen = LmsysGen::default();
+        let mut rng = Rng::new(80);
+        let long = (0..20_000)
+            .filter(|_| gen.sample_lengths(&mut rng).1 > 400)
+            .count();
+        let frac = long as f64 / 20_000.0;
+        assert!(frac > 0.01 && frac < 0.10, "tail fraction {frac}");
+    }
+}

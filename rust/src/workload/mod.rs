@@ -1,0 +1,61 @@
+//! Workload generation: the paper's synthetic arrival models (§5.1), the
+//! LMSYS-calibrated trace generator (§5.2), and the Thm-4.1 adversarial
+//! instance.
+
+pub mod lmsys;
+pub mod synthetic;
+
+pub use lmsys::LmsysGen;
+
+use crate::core::Instance;
+use crate::util::rng::Rng;
+
+/// `n` Poisson-process arrival times with rate `lambda` per second,
+/// starting at 0.
+pub fn poisson_arrival_times(n: usize, lambda: f64, rng: &mut Rng) -> Vec<f64> {
+    assert!(lambda > 0.0);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(lambda);
+            t
+        })
+        .collect()
+}
+
+/// Per-arrival workload series for Fig 4's light-green bars: at each
+/// request's arrival, its total token mass `s_i + o_i`.
+pub fn arrival_workload_series(inst: &Instance) -> Vec<(f64, u64)> {
+    inst.requests
+        .iter()
+        .map(|r| (r.arrival, r.prompt_len + r.output_len))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_times_increasing_with_right_rate() {
+        let mut rng = Rng::new(3);
+        let times = poisson_arrival_times(20_000, 50.0, &mut rng);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        // 20k arrivals at λ=50/s span ≈400 s.
+        let span = times.last().unwrap();
+        assert!((span - 400.0).abs() < 20.0, "span={span}");
+    }
+
+    #[test]
+    fn workload_series_shape() {
+        let inst = Instance::new(
+            100,
+            vec![
+                crate::core::Request::new(0, 1.5, 10, 20),
+                crate::core::Request::new(1, 2.5, 5, 5),
+            ],
+        );
+        let ws = arrival_workload_series(&inst);
+        assert_eq!(ws, vec![(1.5, 30), (2.5, 10)]);
+    }
+}

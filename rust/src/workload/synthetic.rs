@@ -1,0 +1,124 @@
+//! §5.1 synthetic instance generators and the Thm-4.1 adversarial family.
+
+use crate::core::{Instance, Request};
+use crate::util::rng::Rng;
+
+/// Arrival Model 1 (§5.1): all requests arrive at t = 0.
+///
+/// `M ~ U{30..50}`, `n ~ U{40..60}`, `s_i ~ U{1..5}`,
+/// `o_i ~ U{1..M−s_i}`.
+pub fn arrival_model_1(rng: &mut Rng) -> Instance {
+    let m = rng.i64_range(30, 50) as u64;
+    let n = rng.usize_range(40, 60);
+    let reqs = (0..n)
+        .map(|i| {
+            let s = rng.i64_range(1, 5) as u64;
+            let o = rng.i64_range(1, (m - s) as i64) as u64;
+            Request::new(i, 0.0, s, o)
+        })
+        .collect();
+    Instance::new(m, reqs)
+}
+
+/// Arrival Model 2 (§5.1): stationary Poisson arrivals over a discrete
+/// horizon.
+///
+/// `M ~ U{30..50}`, `T ~ U{40..60}`, rate `λ ~ U[0.5, 1.5]`; at each
+/// round `t ∈ [1, T]`, `Poisson(λ)` new requests arrive with the same
+/// size distributions as Model 1.
+pub fn arrival_model_2(rng: &mut Rng) -> Instance {
+    let m = rng.i64_range(30, 50) as u64;
+    let t_max = rng.i64_range(40, 60) as u64;
+    let lambda = rng.f64_range(0.5, 1.5);
+    let mut reqs = Vec::new();
+    for t in 1..=t_max {
+        let k = rng.poisson(lambda);
+        for _ in 0..k {
+            let s = rng.i64_range(1, 5) as u64;
+            let o = rng.i64_range(1, (m - s) as i64) as u64;
+            reqs.push(Request::new(reqs.len(), t as f64, s, o));
+        }
+    }
+    // Degenerate draw (no arrivals): retry with the same generator state.
+    if reqs.is_empty() {
+        return arrival_model_2(rng);
+    }
+    Instance::new(m, reqs)
+}
+
+/// The Thm-4.1 adversarial instance against an algorithm that starts the
+/// long request at round `b` (any work-conserving deterministic policy —
+/// MC-SF included — has `b = 0`, i.e. the first formed batch).
+///
+/// One long request (`s = 1`, `o = M − 1`) at t = 0, then `M/2` short
+/// requests (`s = 1`, `o = 1`) released at `r = b + M − √M/2`. While the
+/// long request occupies ≥ `M − √M/2` slots, only ~`M/4` short ones can
+/// squeeze in before its completion, so ~`M/4` of them wait `≈ √M/2`
+/// rounds each: total latency `Ω(M^1.5)` vs `OPT = O(M)` ⇒ ratio
+/// `Ω(√M) = Ω(√n)`.
+pub fn adversarial_thm41(m: u64, b: u64) -> Instance {
+    assert!(m >= 16, "need M ≥ 16 for the construction to bite");
+    let release = (b + m) as f64 - (m as f64).sqrt() / 2.0;
+    let release = release.floor();
+    let mut reqs = vec![Request::new(0, 0.0, 1, m - 1)];
+    for i in 0..(m / 2) {
+        reqs.push(Request::new(1 + i as usize, release, 1, 1));
+    }
+    Instance::new(m, reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_1_parameter_ranges() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let inst = arrival_model_1(&mut rng);
+            assert!((30..=50).contains(&inst.m));
+            assert!((40..=60).contains(&inst.n()));
+            assert!(inst.is_feasible());
+            for r in &inst.requests {
+                assert_eq!(r.arrival, 0.0);
+                assert!((1..=5).contains(&r.prompt_len));
+                assert!(r.output_len >= 1 && r.peak_mem() <= inst.m);
+            }
+        }
+    }
+
+    #[test]
+    fn model_2_arrivals_over_horizon() {
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            let inst = arrival_model_2(&mut rng);
+            assert!(inst.is_feasible());
+            assert!(!inst.requests.is_empty());
+            for r in &inst.requests {
+                assert!(r.arrival >= 1.0 && r.arrival <= 60.0);
+                assert_eq!(r.arrival.fract(), 0.0, "integral rounds");
+            }
+        }
+    }
+
+    #[test]
+    fn model_2_mean_arrivals_match_rate() {
+        // With λ ∈ [0.5, 1.5] and T ∈ [40, 60], E[n] = E[λ]·E[T] = 50.
+        let mut rng = Rng::new(13);
+        let total: usize = (0..300).map(|_| arrival_model_2(&mut rng).n()).sum();
+        let avg = total as f64 / 300.0;
+        assert!((40.0..60.0).contains(&avg), "avg n = {avg}");
+    }
+
+    #[test]
+    fn adversarial_structure() {
+        let inst = adversarial_thm41(100, 0);
+        assert_eq!(inst.n(), 51);
+        assert_eq!(inst.requests[0].output_len, 99);
+        let release = inst.requests[1].arrival;
+        assert_eq!(release, (100.0f64 - 5.0).floor());
+        assert!(inst.requests[1..]
+            .iter()
+            .all(|r| r.output_len == 1 && r.arrival == release));
+    }
+}

@@ -1,0 +1,214 @@
+//! Cross-module integration tests: workload generation → scheduling →
+//! simulation → metrics → hindsight optimum, exactly the pipelines the
+//! paper's experiments run.
+
+use kvsched::core::{Instance, Request};
+use kvsched::opt::{self, HindsightConfig};
+use kvsched::perf::{Llama70bA100x2, PerfModel, UnitTime};
+use kvsched::predictor::Predictor;
+use kvsched::sched::{by_name, paper_benchmark_suite, McBenchmark, McSf};
+use kvsched::sim::{continuous, discrete, SimConfig};
+use kvsched::util::rng::Rng;
+use kvsched::workload::{lmsys::LmsysGen, synthetic};
+
+#[test]
+fn synthetic_model1_mcsf_vs_hindsight_small() {
+    // The §5.1 pipeline at unit-test scale: MC-SF's ratio to the proven
+    // optimum must be ≥ 1 and typically very close to 1.
+    let mut rng = Rng::new(2024);
+    let mut ratios = Vec::new();
+    for _ in 0..4 {
+        // Down-scaled Arrival Model 1 (keeps the IP tiny).
+        let m = rng.i64_range(12, 18) as u64;
+        let n = rng.usize_range(6, 9);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let s = rng.i64_range(1, 3) as u64;
+                let o = rng.i64_range(1, (m - s).min(8) as i64) as u64;
+                Request::new(i, 0.0, s, o)
+            })
+            .collect();
+        let inst = Instance::new(m, reqs);
+        let sol = opt::hindsight_optimal(&inst, &HindsightConfig::default()).unwrap();
+        assert!(sol.proven_optimal);
+        let out = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+        let ratio = out.total_latency() / sol.total_latency;
+        assert!(ratio >= 1.0 - 1e-9, "ratio {ratio} below 1");
+        ratios.push(ratio);
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(avg < 1.35, "avg ratio {avg} too far from optimal");
+}
+
+#[test]
+fn full_benchmark_suite_runs_on_lmsys_workload() {
+    // §5.2 pipeline (scaled down): every algorithm in the paper's suite
+    // over the same LMSYS-like trace with the Llama2-70B perf model.
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(7);
+    let inst = gen.instance(120, 50.0, continuous::PAPER_M, &mut rng);
+    let perf = Llama70bA100x2::default();
+    let mut latencies = Vec::new();
+    for mut sched in paper_benchmark_suite() {
+        let out = continuous::try_simulate(
+            &inst,
+            sched.as_mut(),
+            &Predictor::exact(),
+            &perf,
+            1,
+            SimConfig {
+                max_rounds: 200_000,
+                record_series: false,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(out.finished, "{} diverged", out.algo);
+        assert_eq!(out.per_request.len(), inst.n());
+        assert!(out.max_mem() <= continuous::PAPER_M + 200); // small α can exceed transiently pre-clearing
+        latencies.push((out.algo.clone(), out.avg_latency()));
+    }
+    // MC-SF should be the best or near-best policy.
+    let mcsf = latencies[0].1;
+    let best = latencies
+        .iter()
+        .map(|&(_, l)| l)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        mcsf <= best * 1.10 + 1e-9,
+        "MC-SF {mcsf} not near best {best}: {latencies:?}"
+    );
+}
+
+#[test]
+fn trace_roundtrip_preserves_simulation() {
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(9);
+    let inst = gen.instance(40, 10.0, continuous::PAPER_M, &mut rng);
+    let path = std::env::temp_dir().join("kvsched_integration_trace.json");
+    inst.save(path.to_str().unwrap()).unwrap();
+    let back = Instance::load(path.to_str().unwrap()).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    let perf = Llama70bA100x2::default();
+    let a = continuous::simulate(&inst, &mut McSf::default(), &Predictor::exact(), &perf, 3);
+    let b = continuous::simulate(&back, &mut McSf::default(), &Predictor::exact(), &perf, 3);
+    assert_eq!(a.total_latency(), b.total_latency());
+}
+
+#[test]
+fn prediction_noise_with_protection_margin_stays_safe() {
+    // §5.2.2: with ε-noisy predictions and the α=0.1 margin, MC-SF may
+    // overflow occasionally but must recover and finish.
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(11);
+    let inst = gen.instance(80, 50.0, continuous::PAPER_M, &mut rng);
+    let perf = Llama70bA100x2::default();
+    for eps in [0.2, 0.5, 0.8] {
+        let pred = Predictor::uniform_noise(eps, 42);
+        let mut sched = McSf::with_protection(0.1);
+        let out = continuous::try_simulate(
+            &inst,
+            &mut sched,
+            &pred,
+            &perf,
+            1,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert!(out.finished, "ε={eps} diverged");
+        assert_eq!(out.per_request.len(), inst.n());
+    }
+}
+
+#[test]
+fn scheduler_factory_round_trips_through_simulation() {
+    // M is generous enough that even the no-lookahead threshold policies
+    // avoid the deterministic clearing livelock (which uniform instances
+    // trigger by design — see engine::tests::alpha_protection_greedy_
+    // can_loop_forever for that behaviour).
+    let inst = Instance::new(
+        60,
+        (0..8).map(|i| Request::new(i, 0.0, 2, 4)).collect(),
+    );
+    for spec in ["mcsf", "mcsf:alpha=0.1", "mc-benchmark", "protect:alpha=0.3", "fcfs:threshold=0.8"] {
+        let mut sched = by_name(spec).unwrap();
+        let out = discrete::simulate_cfg(
+            &inst,
+            sched.as_mut(),
+            &Predictor::exact(),
+            1,
+            SimConfig::default(),
+        );
+        assert!(out.finished, "{spec} failed");
+        assert_eq!(out.per_request.len(), 8, "{spec}");
+    }
+}
+
+#[test]
+fn thm41_adversarial_instance_hurts_online_policies() {
+    // The Ω(√n) construction: MC-SF (work-conserving, starts the long
+    // request immediately) pays ~M/4 short requests × √M/2 wait, while
+    // OPT(≤ 3.5M) stays linear. Check the *ratio grows* with M.
+    let mut ratios = Vec::new();
+    for m in [64u64, 256] {
+        let inst = synthetic::adversarial_thm41(m, 0);
+        let out = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
+        assert!(out.finished);
+        let opt_ub = 3.5 * m as f64; // paper Eq (13)
+        ratios.push(out.total_latency() / opt_ub);
+    }
+    assert!(
+        ratios[1] > ratios[0] * 1.5,
+        "adversarial ratio should grow ~√M: {ratios:?}"
+    );
+}
+
+#[test]
+fn discrete_and_continuous_agree_under_unit_time() {
+    // The continuous engine with UnitTime must reproduce the discrete
+    // semantics exactly.
+    let mut rng = Rng::new(13);
+    let inst = synthetic::arrival_model_2(&mut rng);
+    let d = discrete::simulate(&inst, &mut McSf::default(), &Predictor::exact(), 5);
+    let c = continuous::simulate(
+        &inst,
+        &mut McSf::default(),
+        &Predictor::exact(),
+        &UnitTime,
+        5,
+    );
+    assert_eq!(d.total_latency(), c.total_latency());
+    assert_eq!(d.rounds, c.rounds);
+}
+
+#[test]
+fn perf_model_monotonicity_in_load() {
+    let perf = Llama70bA100x2::default();
+    let gen = LmsysGen::default();
+    let mut rng = Rng::new(15);
+    // Same 60 requests, arriving fast vs slow: average latency must be
+    // (weakly) worse under the faster arrival rate.
+    let lens: Vec<(u64, u64)> = (0..60).map(|_| gen.sample_lengths(&mut rng)).collect();
+    let build = |lambda: f64, rng: &mut Rng| {
+        let times = kvsched::workload::poisson_arrival_times(60, lambda, rng);
+        Instance::new(
+            continuous::PAPER_M,
+            times
+                .iter()
+                .zip(&lens)
+                .enumerate()
+                .map(|(i, (&t, &(s, o)))| Request::new(i, t, s, o))
+                .collect(),
+        )
+    };
+    let mut r1 = Rng::new(99);
+    let mut r2 = Rng::new(99);
+    let fast = build(80.0, &mut r1);
+    let slow = build(2.0, &mut r2);
+    let out_fast =
+        continuous::simulate(&fast, &mut McSf::default(), &Predictor::exact(), &perf, 1);
+    let out_slow =
+        continuous::simulate(&slow, &mut McSf::default(), &Predictor::exact(), &perf, 1);
+    assert!(out_fast.avg_latency() >= out_slow.avg_latency() * 0.95);
+}

@@ -1,0 +1,220 @@
+//! Property-based invariants over the scheduling stack, using the
+//! in-repo `util::prop` mini-framework (no proptest offline).
+
+use kvsched::core::{FeasItem, Instance, Request};
+use kvsched::opt::{self, HindsightConfig, MilpConfig};
+use kvsched::predictor::Predictor;
+use kvsched::sched::feasibility::{feasible_bruteforce, FeasChecker};
+use kvsched::sched::{AlphaProtection, McBenchmark, McSf, Scheduler};
+use kvsched::sim::{discrete, SimConfig};
+use kvsched::util::prop::{forall_cases, usize_in, Gen};
+use kvsched::util::rng::Rng;
+
+/// Generator: a random small instance (all integral arrivals).
+fn gen_instance(max_n: usize, max_m: u64) -> Gen<Instance> {
+    Gen {
+        gen: Box::new(move |r: &mut Rng| {
+            let m = r.i64_range(8, max_m as i64) as u64;
+            let n = r.usize_range(1, max_n);
+            let reqs = (0..n)
+                .map(|i| {
+                    let s = r.i64_range(1, 4) as u64;
+                    let o = r.i64_range(1, (m - s).min(12) as i64) as u64;
+                    let a = r.i64_range(0, 6) as f64;
+                    Request::new(i, a, s, o)
+                })
+                .collect();
+            Instance::new(m, reqs)
+        }),
+        shrink: Box::new(move |inst: &Instance| {
+            // Shrink by dropping requests.
+            let mut out = Vec::new();
+            if inst.n() > 1 {
+                out.push(Instance::new(inst.m, inst.requests[..inst.n() / 2].to_vec()));
+                out.push(Instance::new(inst.m, inst.requests[1..].to_vec()));
+            }
+            out
+        }),
+    }
+}
+
+fn run_policy(inst: &Instance, sched: &mut dyn Scheduler, seed: u64) -> kvsched::metrics::SimOutcome {
+    discrete::simulate_cfg(inst, sched, &Predictor::exact(), seed, SimConfig::default())
+}
+
+#[test]
+fn prop_mcsf_memory_safety_and_completion() {
+    forall_cases(0xA11CE, 60, gen_instance(24, 40), |inst| {
+        let out = run_policy(inst, &mut McSf::default(), 1);
+        if !out.finished {
+            return Err("MC-SF did not finish".into());
+        }
+        if out.max_mem() > inst.m {
+            return Err(format!("memory {} > M {}", out.max_mem(), inst.m));
+        }
+        if out.overflow_events != 0 {
+            return Err("MC-SF overflowed with exact predictions".into());
+        }
+        if out.per_request.len() != inst.n() {
+            return Err("lost requests".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mcsf_memory_safety_with_overpredictions() {
+    // Thm 4.3 setting: õ ∈ [o, 2o]. Over-predictions must never overflow
+    // (the check is conservative).
+    forall_cases(0xB0B, 40, gen_instance(20, 40), |inst| {
+        let pred = Predictor::overestimate(2.0, 7);
+        let out = discrete::simulate_cfg(
+            inst,
+            &mut McSf::default(),
+            &pred,
+            1,
+            SimConfig::default(),
+        );
+        if !out.finished || out.overflow_events != 0 || out.max_mem() > inst.m {
+            return Err(format!(
+                "overflow={} max_mem={} M={}",
+                out.overflow_events,
+                out.max_mem(),
+                inst.m
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonpreemption_latency_decomposition() {
+    // Non-preemptive service: completion − start == o for every request
+    // under MC-SF/MC-Benchmark (no evictions with exact predictions).
+    forall_cases(0xC0DE, 40, gen_instance(20, 40), |inst| {
+        for sched in [&mut McSf::default() as &mut dyn Scheduler, &mut McBenchmark] {
+            let out = run_policy(inst, sched, 3);
+            for rec in &out.per_request {
+                let o = inst.requests[rec.id].output_len as f64;
+                // start is the batch-formation time of its first round;
+                // completion = start + o under unit rounds.
+                if (rec.completion - rec.start - o).abs() > 1e-9 {
+                    return Err(format!(
+                        "request {} served {} rounds, o = {o}",
+                        rec.id,
+                        rec.completion - rec.start
+                    ));
+                }
+                if rec.start + 1e-9 < inst.requests[rec.id].arrival {
+                    return Err("started before arrival".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feasibility_checker_equals_bruteforce() {
+    forall_cases(0xFEA5, 200, usize_in(0, u32::MAX as usize), |&seed| {
+        let mut r = Rng::new(seed as u64);
+        let m = r.i64_range(8, 60) as u64;
+        let k = r.usize_range(0, 12);
+        let items: Vec<FeasItem> = (0..k)
+            .map(|_| FeasItem {
+                base: r.i64_range(1, 12) as u64,
+                rem: r.i64_range(1, 12) as u64,
+            })
+            .collect();
+        let mut checker = FeasChecker::new(m, &[]);
+        for it in &items {
+            checker.add(*it);
+        }
+        if checker.feasible() != feasible_bruteforce(m, &items) {
+            return Err(format!("disagreement on m={m} items={items:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hindsight_below_all_policies_and_above_lower_bound() {
+    // OPT(IP) ≤ every online policy; volume bound ≤ OPT. (Small sizes:
+    // each MILP solve must stay fast.)
+    forall_cases(0x09F7, 8, gen_instance(7, 16), |inst| {
+        let cfg = HindsightConfig {
+            milp: MilpConfig {
+                max_nodes: 3000,
+                time_limit: 30.0,
+                int_tol: 1e-6,
+                objective_integral: true,
+            },
+            horizon: None,
+        };
+        let sol = opt::hindsight_optimal(inst, &cfg).map_err(|e| e.to_string())?;
+        if !sol.proven_optimal {
+            return Ok(()); // don't fail the property on solver limits
+        }
+        for sched in [
+            &mut McSf::default() as &mut dyn Scheduler,
+            &mut McBenchmark,
+            &mut AlphaProtection::new(0.3, 1.0),
+        ] {
+            let out = run_policy(inst, sched, 5);
+            if !out.finished {
+                continue; // clearing loops don't bound OPT
+            }
+            if sol.total_latency > out.total_latency() + 1e-6 {
+                return Err(format!(
+                    "OPT {} > {} {}",
+                    sol.total_latency,
+                    out.algo,
+                    out.total_latency()
+                ));
+            }
+        }
+        if inst.requests.iter().all(|r| r.arrival == 0.0) {
+            let lb = opt::opt_lower_bound(inst);
+            if lb > sol.total_latency + 1e-6 {
+                return Err(format!("volume bound {lb} > OPT {}", sol.total_latency));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism_across_reruns() {
+    forall_cases(0xD37, 20, gen_instance(16, 30), |inst| {
+        let a = run_policy(inst, &mut McSf::default(), 42);
+        let b = run_policy(inst, &mut McSf::default(), 42);
+        if (a.total_latency() - b.total_latency()).abs() > 1e-12 || a.rounds != b.rounds {
+            return Err("nondeterministic simulation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_work_conservation_mcsf() {
+    // Whenever requests are waiting and the machine has room for the
+    // smallest one, MC-SF admits something: total makespan ≤ max_arrival
+    // + Σ o_i (no idle rounds with feasible waiting work).
+    forall_cases(0x3417, 40, gen_instance(20, 40), |inst| {
+        let out = run_policy(inst, &mut McSf::default(), 2);
+        let max_a = inst
+            .requests
+            .iter()
+            .map(|r| r.arrival)
+            .fold(0.0f64, f64::max);
+        let serial: u64 = inst.requests.iter().map(|r| r.output_len).sum();
+        if out.makespan() > max_a + serial as f64 {
+            return Err(format!(
+                "makespan {} exceeds work-conserving bound {}",
+                out.makespan(),
+                max_a + serial as f64
+            ));
+        }
+        Ok(())
+    });
+}
