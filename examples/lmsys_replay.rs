@@ -13,7 +13,7 @@ use kvsched::sim::{continuous, SimConfig};
 use kvsched::util::cli::Args;
 use kvsched::workload::lmsys::LmsysGen;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kvsched::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n = args.usize_or("n", 1000);
     let seed = args.u64_or("seed", 3);

@@ -22,7 +22,7 @@ use kvsched::util::cli::Args;
 use kvsched::util::stats;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> kvsched::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let n = args.usize_or("n", 24);
     let lambda = args.f64_or("lambda", 4.0);

@@ -36,7 +36,7 @@ fn main() {
         .expect("sim failed")
     };
     let mcsf = run(&mut McSf::default());
-    let mcb = run(&mut McBenchmark);
+    let mcb = run(&mut McBenchmark::default());
 
     let bin = 5.0; // seconds per bucket for readable output
     let tp_mcsf = mcsf.throughput_series(bin);

@@ -1,19 +1,102 @@
-//! Perf: the PJRT serving hot path. Per-iteration decode/prefill latency
-//! by batch bucket, plus the host-side gather/scatter overhead — the
-//! numbers behind EXPERIMENTS.md §Perf (L3/runtime). Self-skips when
-//! artifacts are absent.
+//! Perf: the serving hot paths. Two parts:
+//!
+//! 1. **End-to-end sim throughput** (always runs): rounds/sec of the
+//!    whole engine round loop on an overloaded queue at
+//!    W ∈ {1600, 6400, 25600}, incremental vs legacy snapshot
+//!    scheduling — the system-level number behind the L3 change-4 entry
+//!    in EXPERIMENTS.md §Perf. Baselines land in `BENCH_sim.json` at the
+//!    repo root.
+//! 2. **PJRT kernels** (needs `make artifacts`): per-iteration
+//!    decode/prefill latency by batch bucket, plus the host-side
+//!    gather/scatter overhead. Self-skips when artifacts are absent.
 
 use kvsched::bench::{bench_fn, fmt, Table};
+use kvsched::core::{Instance, Request};
+use kvsched::prelude::*;
 use kvsched::runtime::kv_cache::{KvCache, RowCache};
 use kvsched::runtime::{engine::argmax, Engine};
+use kvsched::sim::{engine as sim_engine, SimConfig};
 use kvsched::util::cli::Args;
+use kvsched::util::json::Json;
+use std::time::Instant;
+
+/// Overloaded-queue instance: W requests, all arrived, contending for
+/// the paper's Llama2-70B budget.
+fn overloaded_instance(w: usize) -> Instance {
+    let mut rng = Rng::new(w as u64);
+    let m = kvsched::sim::continuous::PAPER_M;
+    let reqs: Vec<Request> = (0..w)
+        .map(|i| {
+            let s = rng.i64_range(5, 120) as u64;
+            let o = rng.i64_range(1, 400) as u64;
+            Request::new(i, 0.0, s, o)
+        })
+        .collect();
+    Instance::new(m, reqs)
+}
+
+fn sim_throughput(args: &Args) {
+    let cap_rounds = args.u64_or("sim-rounds", 1500);
+    let mut table = Table::new(
+        "end-to-end sim throughput, overloaded queue (MC-SF, unit time)",
+        &["waiting", "path", "rounds", "elapsed_s", "rounds_per_sec"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &w in &[1600usize, 6400, 25_600] {
+        let inst = overloaded_instance(w);
+        for (path, incremental) in [("incremental", true), ("snapshot", false)] {
+            let cfg = SimConfig {
+                max_rounds: cap_rounds,
+                record_series: false,
+                incremental,
+                ..SimConfig::default()
+            };
+            let t0 = Instant::now();
+            let out = sim_engine::run(
+                &inst,
+                &mut McSf::default(),
+                &Predictor::exact(),
+                &kvsched::perf::UnitTime,
+                1,
+                cfg,
+            )
+            .unwrap();
+            let elapsed = t0.elapsed().as_secs_f64();
+            let rps = out.rounds as f64 / elapsed.max(1e-9);
+            table.row(&[
+                w.to_string(),
+                path.into(),
+                out.rounds.to_string(),
+                fmt(elapsed),
+                fmt(rps),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("waiting", w)
+                    .set("path", path)
+                    .set("rounds", out.rounds)
+                    .set("elapsed_s", elapsed)
+                    .set("rounds_per_sec", rps),
+            );
+        }
+    }
+    table.print();
+    table.save_json("perf_sim_throughput");
+
+    let doc = Json::obj()
+        .set("bench", "perf_runtime/sim_throughput")
+        .set("max_rounds", cap_rounds)
+        .set("rows", Json::Arr(rows));
+    kvsched::bench::save_root_json("BENCH_sim.json", &doc);
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let iters = args.usize_or("iters", 20);
+    sim_throughput(&args);
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("skipping perf_runtime: run `make artifacts` first");
+        println!("skipping PJRT sections of perf_runtime: run `make artifacts` first");
         return;
     }
     let engine = Engine::load(&dir).unwrap();

@@ -3,12 +3,25 @@
 //! complexity O(M²), independent of total request count) and tracking
 //! the feasibility-checker optimizations recorded in EXPERIMENTS.md
 //! §Perf. Also benches the prefix-vs-skip ablation.
+//!
+//! The headline table measures the **incremental** interface — the
+//! engine's production hot path since L3 change 4: a steady-state
+//! treadmill of rounds (admissions, completions, re-arrivals) over a
+//! persistent waiting index, so the per-round cost is O(Δ) rather than
+//! O(W). The legacy snapshot measurement (one cold `admit` call that
+//! re-heapifies all W candidates) is kept below for before/after
+//! comparison; both land in `BENCH_scheduler.json` at the repo root.
 
 use kvsched::bench::{bench_fn, fmt, Table};
 use kvsched::core::{ActiveReq, QueuedReq};
 use kvsched::prelude::*;
 use kvsched::sched::Scheduler;
 use kvsched::util::cli::Args;
+use kvsched::util::json::Json;
+use kvsched::util::stats;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
 
 fn mk_waiting(n: usize, m: u64, rng: &mut Rng) -> Vec<QueuedReq> {
     (0..n)
@@ -36,17 +49,105 @@ fn mk_active(n: usize, m: u64, rng: &mut Rng) -> Vec<ActiveReq> {
         .collect()
 }
 
+/// Steady-state per-round cost of the incremental interface: drive
+/// rounds of admit → (scheduled) completions → re-arrival of the
+/// completed requests, keeping the waiting set at ~`w` forever (the
+/// overloaded-queue regime). One warmup segment (cold start: the first
+/// round admits a whole batch), then `segments` timed segments of
+/// `rounds_per_seg` rounds each. Returns (per-round mean µs of each
+/// timed segment, admissions/round over the timed segments).
+fn treadmill_round_cost(
+    w: usize,
+    m: u64,
+    segments: usize,
+    rounds_per_seg: u64,
+) -> (Vec<f64>, f64) {
+    let mut rng = Rng::new(w as u64);
+    let waiting = mk_waiting(w, m, &mut rng);
+    let mut sched = McSf::default();
+    sched.on_reset();
+    for q in &waiting {
+        sched.on_arrival(q);
+    }
+    let mut completions: BinaryHeap<(Reverse<u64>, usize)> = BinaryHeap::new();
+    let mut round = 0u64;
+    let mut admissions = 0u64;
+    let mut rng2 = Rng::new(0);
+    let mut seg_means = Vec::with_capacity(segments);
+    for seg in 0..=segments {
+        let t0 = Instant::now();
+        for _ in 0..rounds_per_seg {
+            round += 1;
+            while let Some(&(Reverse(due), id)) = completions.peek() {
+                if due > round {
+                    break;
+                }
+                completions.pop();
+                sched.on_complete(id);
+                // Treadmill: the finished request re-arrives immediately
+                // so the queue length stays pinned at ~w.
+                sched.on_arrival(&waiting[id]);
+            }
+            for id in sched.admit_incremental(round, m, &mut rng2) {
+                completions.push((Reverse(round + waiting[id].pred.max(1)), id));
+                admissions += 1;
+            }
+        }
+        if seg == 0 {
+            // Cold-start warmup segment: discard its time and its big
+            // initial batch admission from the steady-state stats.
+            admissions = 0;
+        } else {
+            seg_means.push(t0.elapsed().as_secs_f64() * 1e6 / rounds_per_seg as f64);
+        }
+    }
+    let timed_rounds = segments as u64 * rounds_per_seg;
+    (seg_means, admissions as f64 / timed_rounds as f64)
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let iters = args.usize_or("iters", 30);
-
-    // 1. admit cost vs waiting-queue length (M fixed at the paper's).
     let m = 16_492u64;
+    let mut bench_rows: Vec<Json> = Vec::new();
+
+    // 1. Per-round admit cost vs waiting-queue length on the engine's
+    //    incremental hot path (steady state, queue pinned at W).
     let mut table = Table::new(
-        "MC-SF admit cost vs queue length (M=16492, 64 active)",
+        "MC-SF admit cost vs queue length (incremental hot path, M=16492)",
         &["waiting", "mean_us", "p50_us", "admitted"],
     );
-    for &w in &[100usize, 400, 1600, 6400] {
+    for &w in &[100usize, 400, 1600, 6400, 25_600] {
+        let rounds_per_seg = (iters as u64 * 10).max(100);
+        let (seg_means, adm_per_round) = treadmill_round_cost(w, m, 8, rounds_per_seg);
+        let mean_us = stats::mean(&seg_means);
+        let p50_us = stats::median(&seg_means);
+        table.row(&[
+            w.to_string(),
+            fmt(mean_us),
+            fmt(p50_us),
+            fmt(adm_per_round),
+        ]);
+        bench_rows.push(
+            Json::obj()
+                .set("path", "incremental")
+                .set("waiting", w)
+                .set("mean_us", mean_us)
+                .set("p50_us", p50_us)
+                .set("admitted_per_round", adm_per_round),
+        );
+    }
+    table.print();
+    table.save_json("perf_scheduler_queue");
+
+    // 1b. Legacy snapshot path (the seed's measurement): one cold
+    //     `admit` call that rebuilds the candidate heap from all W
+    //     waiting requests and re-sorts the 64 running ones.
+    let mut table = Table::new(
+        "MC-SF admit cost vs queue length (legacy snapshot path, 64 active)",
+        &["waiting", "mean_us", "p50_us", "admitted"],
+    );
+    for &w in &[100usize, 400, 1600, 6400, 25_600] {
         let mut rng = Rng::new(w as u64);
         let active = mk_active(64, m, &mut rng);
         let waiting = mk_waiting(w, m, &mut rng);
@@ -62,9 +163,16 @@ fn main() {
             fmt(r.p50_s * 1e6),
             admitted.to_string(),
         ]);
+        bench_rows.push(
+            Json::obj()
+                .set("path", "snapshot")
+                .set("waiting", w)
+                .set("mean_us", r.mean_us())
+                .set("admitted", admitted),
+        );
     }
     table.print();
-    table.save_json("perf_scheduler_queue");
+    table.save_json("perf_scheduler_queue_snapshot");
 
     // 2. admit cost vs M (Prop 4.2: O(M²) per round; batch size grows
     //    with M so cost should scale roughly quadratically then flatten
@@ -95,10 +203,7 @@ fn main() {
     let mut rng = Rng::new(77);
     let waiting = mk_waiting(4096, m, &mut rng);
     for (label, skip) in [("prefix (paper)", false), ("skip-scan", true)] {
-        let mut sched = McSf {
-            protect_alpha: 0.0,
-            stop_on_first_reject: !skip,
-        };
+        let mut sched = McSf::new(0.0, !skip);
         let mut admitted = 0usize;
         let r = bench_fn(3, iters, || {
             let mut rng2 = Rng::new(0);
@@ -108,4 +213,12 @@ fn main() {
     }
     table.print();
     table.save_json("perf_scheduler_ablation");
+
+    // Baseline ledger at the repo root (EXPERIMENTS.md §Perf).
+    let doc = Json::obj()
+        .set("bench", "perf_scheduler")
+        .set("m", m)
+        .set("iters", iters)
+        .set("rows", Json::Arr(bench_rows));
+    kvsched::bench::save_root_json("BENCH_scheduler.json", &doc);
 }

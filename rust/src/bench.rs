@@ -122,6 +122,20 @@ impl Table {
     }
 }
 
+/// Write a baseline ledger document to `<repo root>/<file_name>` (the
+/// parent of the crate directory) — the `BENCH_*.json` files referenced
+/// by EXPERIMENTS.md §Perf.
+pub fn save_root_json(file_name: &str, doc: &Json) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join(file_name);
+    match std::fs::write(&path, doc.pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+}
+
 /// Format a float with sensible precision for tables.
 pub fn fmt(x: f64) -> String {
     if x == 0.0 {

@@ -44,6 +44,17 @@ impl<T> IntakeQueue<T> {
     /// empty and not closed, waits up to `timeout` for an item.
     /// Returns (items, closed).
     pub fn drain(&self, block: bool, timeout: Duration) -> (Vec<T>, bool) {
+        let mut items = Vec::new();
+        let closed = self.drain_into(&mut items, block, timeout);
+        (items, closed)
+    }
+
+    /// Allocation-free variant of [`drain`](Self::drain): appends
+    /// everything currently queued to `buf` (which the caller reuses
+    /// across iterations) and returns whether the queue is closed. This
+    /// is the serving loop's intake path — the queue lock is held only
+    /// for the O(Δ) element moves, never for an O(W) rebuild.
+    pub fn drain_into(&self, buf: &mut Vec<T>, block: bool, timeout: Duration) -> bool {
         let mut st = self.state.lock().unwrap();
         if block && st.items.is_empty() && !st.closed {
             let (guard, _) = self
@@ -52,8 +63,8 @@ impl<T> IntakeQueue<T> {
                 .unwrap();
             st = guard;
         }
-        let items: Vec<T> = st.items.drain(..).collect();
-        (items, st.closed)
+        buf.extend(st.items.drain(..));
+        st.closed
     }
 
     /// Close the queue: pushes are rejected, drains return immediately.
@@ -111,6 +122,22 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.push(7);
         assert_eq!(t.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn drain_into_reuses_buffer_and_appends() {
+        let q = IntakeQueue::default();
+        let mut buf: Vec<u32> = Vec::with_capacity(8);
+        assert!(q.push(1));
+        assert!(!q.drain_into(&mut buf, false, Duration::ZERO));
+        assert_eq!(buf, vec![1]);
+        assert!(q.push(2));
+        assert!(q.push(3));
+        assert!(!q.drain_into(&mut buf, false, Duration::ZERO));
+        assert_eq!(buf, vec![1, 2, 3]);
+        q.close();
+        assert!(q.drain_into(&mut buf, false, Duration::ZERO));
+        assert_eq!(buf, vec![1, 2, 3]);
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! across algorithms and languages.
 
 use super::request::{Request, RequestId};
+use crate::util::error::{anyhow, Context, Result};
 use crate::util::json::Json;
-use anyhow::{Context, Result};
 
 /// A scheduling problem instance `I` (§2): single worker with KV budget
 /// `m`, plus the request sequence sorted by arrival.
@@ -101,7 +101,7 @@ impl Instance {
     pub fn load(path: &str) -> Result<Instance> {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         Instance::from_json(&j)
     }
 }

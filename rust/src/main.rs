@@ -16,6 +16,7 @@
 //!   kvsched serve --artifacts artifacts --n 12 --lambda 2
 
 use kvsched::core::{Instance, Request};
+use kvsched::util::error::Result;
 use kvsched::opt::{self, HindsightConfig};
 use kvsched::perf::Llama70bA100x2;
 use kvsched::predictor::Predictor;
@@ -47,7 +48,7 @@ fn main() {
     }
 }
 
-fn load_or_generate(args: &Args) -> anyhow::Result<Instance> {
+fn load_or_generate(args: &Args) -> Result<Instance> {
     if let Some(path) = args.get("trace") {
         return Instance::load(path);
     }
@@ -67,7 +68,7 @@ fn load_or_generate(args: &Args) -> anyhow::Result<Instance> {
     Ok(inst)
 }
 
-fn gen_trace(args: &Args) -> anyhow::Result<()> {
+fn gen_trace(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let out = args.req_str("out");
     inst.save(out)?;
@@ -75,7 +76,7 @@ fn gen_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn simulate(args: &Args) -> anyhow::Result<()> {
+fn simulate(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let mut sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
     let predictor = match args.get("eps") {
@@ -98,7 +99,7 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn suite(args: &Args) -> anyhow::Result<()> {
+fn suite(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let perf = Llama70bA100x2::default();
     let seed = args.u64_or("seed", 0);
@@ -127,7 +128,7 @@ fn suite(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn hindsight(args: &Args) -> anyhow::Result<()> {
+fn hindsight(args: &Args) -> Result<()> {
     // Small synthetic Model-1-style instance (the IP solve is exact; see
     // DESIGN.md substitution 1 for scale guidance).
     let mut rng = Rng::new(args.u64_or("seed", 0));
@@ -154,7 +155,7 @@ fn hindsight(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(args: &Args) -> anyhow::Result<()> {
+fn serve(args: &Args) -> Result<()> {
     use kvsched::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
     let dir = args.str_or("artifacts", "artifacts");
     let engine = kvsched::runtime::Engine::load(dir)?;

@@ -14,7 +14,7 @@ use crate::core::Instance;
 use crate::predictor::Predictor;
 use crate::sched::McSf;
 use crate::sim::discrete;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Exact solution of the hindsight IP.
 #[derive(Debug, Clone)]

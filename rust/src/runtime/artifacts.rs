@@ -2,7 +2,7 @@
 //! (build time) and the Rust runtime (serve time).
 
 use crate::util::json::Json;
-use anyhow::{ensure, Context, Result};
+use crate::util::error::{anyhow, ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Model hyperparameters (mirror of python `ModelConfig`).
@@ -52,7 +52,7 @@ impl Manifest {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
 
         let mj = j.req("model")?;
         let model = ModelDesc {
@@ -159,7 +159,7 @@ impl Manifest {
 
     pub fn goldens(&self) -> Result<Json> {
         let text = std::fs::read_to_string(self.dir.join("goldens.json"))?;
-        Json::parse(&text).map_err(|e| anyhow::anyhow!("goldens.json: {e}"))
+        Json::parse(&text).map_err(|e| anyhow!("goldens.json: {e}"))
     }
 }
 

@@ -1,25 +1,12 @@
-//! PJRT execution engine: compiles the AOT HLO-text artifacts once at
-//! startup and serves prefill/decode calls from the coordinator's batch
-//! loop. Pure Rust + PJRT — Python is never on this path.
-
-use super::artifacts::{ExeSpec, Manifest, ModelDesc};
-use super::kv_cache::{CacheDims, KvCache, RowCache};
-use anyhow::{ensure, Context, Result};
-use std::collections::BTreeMap;
-use std::path::Path;
-
-/// A compiled model runtime.
-pub struct Engine {
-    manifest: Manifest,
-    dims: CacheDims,
-    /// Weight literals in spec order, cloned into each execute call.
-    weight_literals: Vec<xla::Literal>,
-    /// Decode executables by batch bucket.
-    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
-    /// Prefill executables by batch bucket (with their T).
-    prefill_exes: BTreeMap<usize, (usize, xla::PjRtLoadedExecutable)>,
-    _client: xla::PjRtClient,
-}
+//! Model runtime behind the coordinator's batch loop.
+//!
+//! With the `xla` feature the engine compiles the AOT HLO-text artifacts
+//! once at startup and serves prefill/decode through PJRT — pure Rust,
+//! Python is never on this path. Without the feature (the offline
+//! default: the `xla` crate is not vendorable) the same API is backed by
+//! a deterministic in-process stub ([`Engine::mock`]) so the
+//! coordinator/serving layers stay compilable and testable; loading real
+//! artifacts then returns a clear error.
 
 /// Result of one prefill call.
 pub struct PrefillOut {
@@ -27,186 +14,353 @@ pub struct PrefillOut {
     pub logits: Vec<Vec<f32>>,
 }
 
-impl Engine {
-    /// Load artifacts from `dir` and compile every bucket.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let dims = CacheDims::of(&manifest.model);
+#[cfg(feature = "xla")]
+pub use pjrt::Engine;
 
-        let mut weight_literals = Vec::with_capacity(manifest.params.len());
-        for spec in &manifest.params {
-            let data = manifest.param_data(spec);
-            let lit = xla::Literal::vec1(data);
-            let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            weight_literals.push(lit.reshape(&shape)?);
-        }
+#[cfg(feature = "xla")]
+mod pjrt {
+    //! PJRT execution engine: compiles every bucket at startup and
+    //! executes prefill/decode with gather/scatter KV management.
 
-        let compile = |spec: &ExeSpec| -> Result<xla::PjRtLoadedExecutable> {
-            let path = manifest.dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parsing {}", spec.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", spec.file))
-        };
+    use super::PrefillOut;
+    use crate::runtime::artifacts::{ExeSpec, Manifest, ModelDesc};
+    use crate::runtime::kv_cache::{CacheDims, KvCache, RowCache};
+    use crate::util::error::{ensure, Context, Result};
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-        let mut decode_exes = BTreeMap::new();
-        for spec in &manifest.decode {
-            decode_exes.insert(spec.batch, compile(spec)?);
-        }
-        let mut prefill_exes = BTreeMap::new();
-        for spec in &manifest.prefill {
-            prefill_exes.insert(spec.batch, (spec.seq, compile(spec)?));
-        }
-
-        Ok(Engine {
-            manifest,
-            dims,
-            weight_literals,
-            decode_exes,
-            prefill_exes,
-            _client: client,
-        })
+    /// A compiled model runtime.
+    pub struct Engine {
+        manifest: Manifest,
+        dims: CacheDims,
+        /// Weight literals in spec order, cloned into each execute call.
+        weight_literals: Vec<xla::Literal>,
+        /// Decode executables by batch bucket.
+        decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+        /// Prefill executables by batch bucket (with their T).
+        prefill_exes: BTreeMap<usize, (usize, xla::PjRtLoadedExecutable)>,
+        _client: xla::PjRtClient,
     }
 
-    pub fn model(&self) -> &ModelDesc {
-        &self.manifest.model
-    }
+    impl Engine {
+        /// Load artifacts from `dir` and compile every bucket.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let dims = CacheDims::of(&manifest.model);
 
-    pub fn dims(&self) -> CacheDims {
-        self.dims
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// Largest batch one decode execute can take.
-    pub fn max_decode_batch(&self) -> usize {
-        *self.decode_exes.keys().max().unwrap()
-    }
-
-    /// Largest batch one prefill execute can take.
-    pub fn max_prefill_batch(&self) -> usize {
-        *self.prefill_exes.keys().max().unwrap()
-    }
-
-    /// Prefill prompt length cap (prompts are truncated to this).
-    pub fn prefill_seq(&self) -> usize {
-        self.prefill_exes.values().map(|&(t, _)| t).max().unwrap()
-    }
-
-    fn bucket<'a, V>(map: &'a BTreeMap<usize, V>, b: usize) -> Option<(usize, &'a V)> {
-        map.range(b..).next().map(|(&k, v)| (k, v))
-    }
-
-    /// Prefill a group of prompts (≤ `max_prefill_batch`), filling the
-    /// given fresh row caches and returning next-token logits per row.
-    pub fn prefill(&self, prompts: &[&[u8]], rows: &mut [&mut RowCache]) -> Result<PrefillOut> {
-        ensure!(!prompts.is_empty() && prompts.len() == rows.len());
-        let (bucket, (t, exe)) = Self::bucket(&self.prefill_exes, prompts.len())
-            .with_context(|| format!("no prefill bucket ≥ {}", prompts.len()))?;
-        let t = *t;
-
-        // Tokens [bucket, T] padded, lengths [bucket] (≥ 1 for padding
-        // rows; their outputs are discarded).
-        let mut tokens = vec![0i32; bucket * t];
-        let mut lens = vec![1i32; bucket];
-        let mut true_lens = vec![1usize; bucket];
-        for (bi, p) in prompts.iter().enumerate() {
-            let l = p.len().min(t).max(1);
-            for (j, &byte) in p.iter().take(l).enumerate() {
-                tokens[bi * t + j] = byte as i32;
+            let mut weight_literals = Vec::with_capacity(manifest.params.len());
+            for spec in &manifest.params {
+                let data = manifest.param_data(spec);
+                let lit = xla::Literal::vec1(data);
+                let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                weight_literals.push(lit.reshape(&shape)?);
             }
-            lens[bi] = l as i32;
-            true_lens[bi] = l;
+
+            let compile = |spec: &ExeSpec| -> Result<xla::PjRtLoadedExecutable> {
+                let path = manifest.dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .with_context(|| format!("parsing {}", spec.file))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", spec.file))
+            };
+
+            let mut decode_exes = BTreeMap::new();
+            for spec in &manifest.decode {
+                decode_exes.insert(spec.batch, compile(spec)?);
+            }
+            let mut prefill_exes = BTreeMap::new();
+            for spec in &manifest.prefill {
+                prefill_exes.insert(spec.batch, (spec.seq, compile(spec)?));
+            }
+
+            Ok(Engine {
+                manifest,
+                dims,
+                weight_literals,
+                decode_exes,
+                prefill_exes,
+                _client: client,
+            })
         }
 
-        let tok_lit = xla::Literal::vec1(&tokens).reshape(&[bucket as i64, t as i64])?;
-        let len_lit = xla::Literal::vec1(&lens);
-        let mut args: Vec<&xla::Literal> = self.weight_literals.iter().collect();
-        args.push(&tok_lit);
-        args.push(&len_lit);
+        pub fn model(&self) -> &ModelDesc {
+            &self.manifest.model
+        }
 
-        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        ensure!(parts.len() == 3, "prefill output arity {}", parts.len());
-        let logits_flat: Vec<f32> = parts[0].to_vec()?;
-        let k_flat: Vec<f32> = parts[1].to_vec()?;
-        let v_flat: Vec<f32> = parts[2].to_vec()?;
+        pub fn dims(&self) -> CacheDims {
+            self.dims
+        }
 
-        let batch_cache = KvCache {
-            dims: self.dims,
-            b: bucket,
-            k: k_flat,
-            v: v_flat,
-            lens: lens.clone(),
-        };
-        batch_cache.scatter_prefill(rows, &true_lens[..rows.len()]);
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-        let vocab = self.manifest.model.vocab;
-        let logits = (0..prompts.len())
-            .map(|bi| logits_flat[bi * vocab..(bi + 1) * vocab].to_vec())
-            .collect();
-        Ok(PrefillOut { logits })
+        /// Largest batch one decode execute can take.
+        pub fn max_decode_batch(&self) -> usize {
+            *self.decode_exes.keys().max().unwrap()
+        }
+
+        /// Largest batch one prefill execute can take.
+        pub fn max_prefill_batch(&self) -> usize {
+            *self.prefill_exes.keys().max().unwrap()
+        }
+
+        /// Prefill prompt length cap (prompts are truncated to this).
+        pub fn prefill_seq(&self) -> usize {
+            self.prefill_exes.values().map(|&(t, _)| t).max().unwrap()
+        }
+
+        fn bucket<'a, V>(map: &'a BTreeMap<usize, V>, b: usize) -> Option<(usize, &'a V)> {
+            map.range(b..).next().map(|(&k, v)| (k, v))
+        }
+
+        /// Prefill a group of prompts (≤ `max_prefill_batch`), filling the
+        /// given fresh row caches and returning next-token logits per row.
+        pub fn prefill(
+            &self,
+            prompts: &[&[u8]],
+            rows: &mut [&mut RowCache],
+        ) -> Result<PrefillOut> {
+            ensure!(!prompts.is_empty() && prompts.len() == rows.len());
+            let (bucket, (t, exe)) = Self::bucket(&self.prefill_exes, prompts.len())
+                .with_context(|| format!("no prefill bucket ≥ {}", prompts.len()))?;
+            let t = *t;
+
+            // Tokens [bucket, T] padded, lengths [bucket] (≥ 1 for padding
+            // rows; their outputs are discarded).
+            let mut tokens = vec![0i32; bucket * t];
+            let mut lens = vec![1i32; bucket];
+            let mut true_lens = vec![1usize; bucket];
+            for (bi, p) in prompts.iter().enumerate() {
+                let l = p.len().min(t).max(1);
+                for (j, &byte) in p.iter().take(l).enumerate() {
+                    tokens[bi * t + j] = byte as i32;
+                }
+                lens[bi] = l as i32;
+                true_lens[bi] = l;
+            }
+
+            let tok_lit = xla::Literal::vec1(&tokens).reshape(&[bucket as i64, t as i64])?;
+            let len_lit = xla::Literal::vec1(&lens);
+            let mut args: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+            args.push(&tok_lit);
+            args.push(&len_lit);
+
+            let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            ensure!(parts.len() == 3, "prefill output arity {}", parts.len());
+            let logits_flat: Vec<f32> = parts[0].to_vec()?;
+            let k_flat: Vec<f32> = parts[1].to_vec()?;
+            let v_flat: Vec<f32> = parts[2].to_vec()?;
+
+            let batch_cache = KvCache {
+                dims: self.dims,
+                b: bucket,
+                k: k_flat,
+                v: v_flat,
+                lens: lens.clone(),
+            };
+            batch_cache.scatter_prefill(rows, &true_lens[..rows.len()]);
+
+            let vocab = self.manifest.model.vocab;
+            let logits = (0..prompts.len())
+                .map(|bi| logits_flat[bi * vocab..(bi + 1) * vocab].to_vec())
+                .collect();
+            Ok(PrefillOut { logits })
+        }
+
+        /// One decode iteration for ≤ `max_decode_batch` rows: appends
+        /// `tokens[i]` to each row's cache and returns next-token logits.
+        pub fn decode(
+            &self,
+            tokens: &[i32],
+            rows: &mut [&mut RowCache],
+        ) -> Result<Vec<Vec<f32>>> {
+            ensure!(!tokens.is_empty() && tokens.len() == rows.len());
+            let (bucket, exe) = Self::bucket(&self.decode_exes, tokens.len())
+                .with_context(|| format!("no decode bucket ≥ {}", tokens.len()))?;
+
+            let row_refs: Vec<&RowCache> = rows.iter().map(|r| &**r).collect();
+            let batch_in = KvCache::gather(self.dims, &row_refs, bucket);
+
+            let mut tok = vec![0i32; bucket];
+            tok[..tokens.len()].copy_from_slice(tokens);
+
+            let d = self.dims;
+            let tok_lit = xla::Literal::vec1(&tok);
+            let cache_shape = [
+                d.l as i64,
+                bucket as i64,
+                d.c as i64,
+                d.h as i64,
+                d.dh as i64,
+            ];
+            let k_lit = xla::Literal::vec1(&batch_in.k).reshape(&cache_shape)?;
+            let v_lit = xla::Literal::vec1(&batch_in.v).reshape(&cache_shape)?;
+            let len_lit = xla::Literal::vec1(&batch_in.lens);
+
+            let mut args: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+            args.push(&tok_lit);
+            args.push(&k_lit);
+            args.push(&v_lit);
+            args.push(&len_lit);
+
+            let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            ensure!(parts.len() == 3, "decode output arity {}", parts.len());
+            let logits_flat: Vec<f32> = parts[0].to_vec()?;
+            let k_flat: Vec<f32> = parts[1].to_vec()?;
+            let v_flat: Vec<f32> = parts[2].to_vec()?;
+
+            let batch_out = KvCache {
+                dims: d,
+                b: bucket,
+                k: k_flat,
+                v: v_flat,
+                lens: batch_in.lens,
+            };
+            batch_out.scatter_decode(rows);
+
+            let vocab = self.manifest.model.vocab;
+            Ok((0..tokens.len())
+                .map(|bi| logits_flat[bi * vocab..(bi + 1) * vocab].to_vec())
+                .collect())
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::Engine;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    //! Deterministic in-process stand-in for the PJRT engine: a
+    //! byte-hash pseudo-model with the same API and the same KV-length
+    //! bookkeeping, so the coordinator's scheduler → prefill → decode
+    //! pipeline runs (and is tested) in the offline build.
+
+    use super::PrefillOut;
+    use crate::runtime::artifacts::ModelDesc;
+    use crate::runtime::kv_cache::{CacheDims, RowCache};
+    use crate::util::error::{bail, ensure, Result};
+    use std::path::Path;
+
+    pub struct Engine {
+        model: ModelDesc,
+        dims: CacheDims,
+        max_prefill: usize,
+        max_decode: usize,
+        prefill_seq: usize,
     }
 
-    /// One decode iteration for ≤ `max_decode_batch` rows: appends
-    /// `tokens[i]` to each row's cache and returns next-token logits.
-    pub fn decode(&self, tokens: &[i32], rows: &mut [&mut RowCache]) -> Result<Vec<Vec<f32>>> {
-        ensure!(!tokens.is_empty() && tokens.len() == rows.len());
-        let (bucket, exe) = Self::bucket(&self.decode_exes, tokens.len())
-            .with_context(|| format!("no decode bucket ≥ {}", tokens.len()))?;
+    impl Engine {
+        /// Real artifacts need PJRT; explain instead of pretending.
+        pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+            bail!(
+                "kvsched was built without the `xla` feature; cannot execute \
+                 artifacts in {} — rebuild with `--features xla` (plus an xla \
+                 dependency) or use Engine::mock() in tests",
+                dir.as_ref().display()
+            );
+        }
 
-        let row_refs: Vec<&RowCache> = rows.iter().map(|r| &**r).collect();
-        let batch_in = KvCache::gather(self.dims, &row_refs, bucket);
+        /// A tiny deterministic engine for offline coordinator tests.
+        pub fn mock() -> Engine {
+            let model = ModelDesc {
+                vocab: 256,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                head_dim: 8,
+                max_seq: 64,
+            };
+            Engine {
+                model,
+                dims: CacheDims::of(&model),
+                max_prefill: 4,
+                max_decode: 8,
+                prefill_seq: 32,
+            }
+        }
 
-        let mut tok = vec![0i32; bucket];
-        tok[..tokens.len()].copy_from_slice(tokens);
+        pub fn model(&self) -> &ModelDesc {
+            &self.model
+        }
 
-        let d = self.dims;
-        let tok_lit = xla::Literal::vec1(&tok);
-        let cache_shape = [
-            d.l as i64,
-            bucket as i64,
-            d.c as i64,
-            d.h as i64,
-            d.dh as i64,
-        ];
-        let k_lit = xla::Literal::vec1(&batch_in.k).reshape(&cache_shape)?;
-        let v_lit = xla::Literal::vec1(&batch_in.v).reshape(&cache_shape)?;
-        let len_lit = xla::Literal::vec1(&batch_in.lens);
+        pub fn dims(&self) -> CacheDims {
+            self.dims
+        }
 
-        let mut args: Vec<&xla::Literal> = self.weight_literals.iter().collect();
-        args.push(&tok_lit);
-        args.push(&k_lit);
-        args.push(&v_lit);
-        args.push(&len_lit);
+        pub fn max_decode_batch(&self) -> usize {
+            self.max_decode
+        }
 
-        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        ensure!(parts.len() == 3, "decode output arity {}", parts.len());
-        let logits_flat: Vec<f32> = parts[0].to_vec()?;
-        let k_flat: Vec<f32> = parts[1].to_vec()?;
-        let v_flat: Vec<f32> = parts[2].to_vec()?;
+        pub fn max_prefill_batch(&self) -> usize {
+            self.max_prefill
+        }
 
-        let batch_out = KvCache {
-            dims: d,
-            b: bucket,
-            k: k_flat,
-            v: v_flat,
-            lens: batch_in.lens,
-        };
-        batch_out.scatter_decode(rows);
+        pub fn prefill_seq(&self) -> usize {
+            self.prefill_seq
+        }
 
-        let vocab = self.manifest.model.vocab;
-        Ok((0..tokens.len())
-            .map(|bi| logits_flat[bi * vocab..(bi + 1) * vocab].to_vec())
-            .collect())
+        /// FNV-style mix → peaked logits (argmax = hash % vocab).
+        fn pseudo_logits(&self, seed: u64) -> Vec<f32> {
+            let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+            h ^= h >> 33;
+            let mut logits = vec![0.0f32; self.model.vocab];
+            logits[(h % self.model.vocab as u64) as usize] = 1.0;
+            logits
+        }
+
+        pub fn prefill(
+            &self,
+            prompts: &[&[u8]],
+            rows: &mut [&mut RowCache],
+        ) -> Result<PrefillOut> {
+            ensure!(!prompts.is_empty() && prompts.len() == rows.len());
+            ensure!(
+                prompts.len() <= self.max_prefill,
+                "no prefill bucket ≥ {}",
+                prompts.len()
+            );
+            let mut logits = Vec::with_capacity(prompts.len());
+            for (p, row) in prompts.iter().zip(rows.iter_mut()) {
+                let l = p.len().min(self.prefill_seq).max(1);
+                row.len = l;
+                let seed = p
+                    .iter()
+                    .take(l)
+                    .fold(l as u64, |acc, &b| acc.wrapping_mul(31).wrapping_add(b as u64));
+                logits.push(self.pseudo_logits(seed));
+            }
+            Ok(PrefillOut { logits })
+        }
+
+        pub fn decode(
+            &self,
+            tokens: &[i32],
+            rows: &mut [&mut RowCache],
+        ) -> Result<Vec<Vec<f32>>> {
+            ensure!(!tokens.is_empty() && tokens.len() == rows.len());
+            ensure!(
+                tokens.len() <= self.max_decode,
+                "no decode bucket ≥ {}",
+                tokens.len()
+            );
+            let mut logits = Vec::with_capacity(tokens.len());
+            for (&tok, row) in tokens.iter().zip(rows.iter_mut()) {
+                row.len += 1;
+                debug_assert!(row.len <= self.dims.c, "KV cache overflow");
+                logits.push(self.pseudo_logits(((tok as u64) << 32) | row.len as u64));
+            }
+            Ok(logits)
+        }
     }
 }
 
@@ -232,5 +386,31 @@ mod tests {
         assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
         assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0]), 1);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_is_deterministic_and_tracks_lengths() {
+        use crate::runtime::kv_cache::RowCache;
+        let engine = Engine::mock();
+        let mut row_a = RowCache::new(engine.dims());
+        let mut row_b = RowCache::new(engine.dims());
+        let out = engine
+            .prefill(&[b"hello", b"hello"], &mut [&mut row_a, &mut row_b])
+            .unwrap();
+        assert_eq!(row_a.len, 5);
+        assert_eq!(out.logits[0], out.logits[1]);
+        let t = argmax(&out.logits[0]);
+        let d1 = engine.decode(&[t], &mut [&mut row_a]).unwrap();
+        let d2 = engine.decode(&[t], &mut [&mut row_b]).unwrap();
+        assert_eq!(row_a.len, 6);
+        assert_eq!(d1, d2);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_refuses_artifact_load() {
+        let err = Engine::load("/nonexistent").unwrap_err();
+        assert!(format!("{err}").contains("xla"));
     }
 }

@@ -58,6 +58,11 @@ impl Scheduler for RandomOrder {
         rng: &mut Rng,
     ) -> Vec<RequestId> {
         let mut order: Vec<QueuedReq> = waiting.to_vec();
+        // Canonicalize before shuffling: the scan order must depend only
+        // on (seed, waiting *set*), not on the engine's internal buffer
+        // order, so simulation outcomes are invariant to how the queue
+        // is stored (e.g. the swap-remove engine bookkeeping).
+        order.sort_by_key(|c| c.id);
         rng.shuffle(&mut order);
         admit_greedy(m, active, &order, true)
     }

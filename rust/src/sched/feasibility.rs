@@ -20,7 +20,8 @@
 //! instead of the naive `O(k²)`. A brute-force twin
 //! ([`feasible_bruteforce`]) backs the property tests.
 
-use crate::core::{ActiveReq, FeasItem, Mem, QueuedReq};
+use crate::core::{ActiveReq, FeasItem, Mem, QueuedReq, RequestId, Round};
+use std::collections::{BTreeMap, HashMap};
 
 /// Incremental feasibility checker for building one batch.
 ///
@@ -131,6 +132,152 @@ impl FeasChecker {
     pub fn add(&mut self, item: FeasItem) {
         let pos = self.items.partition_point(|it| it.rem < item.rem);
         self.items.insert(pos, item);
+    }
+}
+
+/// Persistent, cross-round variant of [`FeasChecker`] (EXPERIMENTS.md
+/// §Perf, L3 change 4).
+///
+/// Works in **absolute-round coordinates**: under uniform decode every
+/// batched item grows by exactly one token per round, so an item that
+/// entered the batch at round `r0` with base memory `b0` (prompt `s` for
+/// a fresh admission) and `rem0` predicted remaining rounds occupies
+///
+/// ```text
+/// mem(ρ) = ρ + c,   c = b0 + 1 − r0        (constant)
+/// ```
+///
+/// KV tokens during every absolute round `ρ` up to its predicted
+/// completion round `e = r0 + rem0 − 1` (also constant). The snapshot
+/// checker's per-round "every `rem` shrinks by one, every `base` grows by
+/// one" update is therefore a no-op here — the only state changes are
+/// O(log k) keyed insert/remove on admission, completion and eviction,
+/// instead of the O(k log k) rebuild in [`FeasChecker::new`] plus the
+/// O(k) `Vec::insert` memmove in [`FeasChecker::try_add`].
+///
+/// Items that outlive their prediction (`e < now`) are treated as
+/// completing at `now`, matching [`ActiveReq::pred_remaining`]'s
+/// `max(1)` clamp, so feasibility decisions stay bit-identical to the
+/// snapshot path (see the equivalence property tests below and
+/// `tests/incremental_diff.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct PersistentFeasChecker {
+    /// (predicted completion round `e`, id) → `c`, ordered by `e`.
+    items: BTreeMap<(u64, RequestId), i64>,
+    /// id → `e`, so removal needs no linear scan.
+    by_id: HashMap<RequestId, u64>,
+}
+
+impl PersistentFeasChecker {
+    pub fn new() -> PersistentFeasChecker {
+        PersistentFeasChecker::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.by_id.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn contains(&self, id: RequestId) -> bool {
+        self.by_id.contains_key(&id)
+    }
+
+    fn encode(now: Round, item: FeasItem) -> (u64, i64) {
+        debug_assert!(item.rem >= 1);
+        (now + item.rem - 1, item.base as i64 + 1 - now as i64)
+    }
+
+    /// Add unconditionally — `item` is the request's feasibility view *at
+    /// round `now`* ([`ActiveReq::feas_item`] / [`QueuedReq::feas_item`]).
+    pub fn insert(&mut self, id: RequestId, now: Round, item: FeasItem) {
+        let (e, c) = Self::encode(now, item);
+        debug_assert!(!self.by_id.contains_key(&id), "duplicate item {id}");
+        self.items.insert((e, id), c);
+        self.by_id.insert(id, e);
+    }
+
+    /// Remove the item (completion or eviction). Returns whether it was
+    /// present.
+    pub fn remove(&mut self, id: RequestId) -> bool {
+        match self.by_id.remove(&id) {
+            Some(e) => self.items.remove(&(e, id)).is_some(),
+            None => false,
+        }
+    }
+
+    /// Tentatively add `item` at round `now`; keep it only if the batch
+    /// stays within `m` at every Eq-(5) checkpoint. Bit-identical to
+    /// [`FeasChecker::try_add`] on the equivalent snapshot.
+    pub fn try_add(&mut self, id: RequestId, now: Round, m: Mem, item: FeasItem) -> bool {
+        let (e, c) = Self::encode(now, item);
+        if self.peak_with(now, Some((e, c))) > m as i64 {
+            return false;
+        }
+        debug_assert!(!self.by_id.contains_key(&id), "duplicate item {id}");
+        self.items.insert((e, id), c);
+        self.by_id.insert(id, e);
+        true
+    }
+
+    /// Max predicted memory over all completion checkpoints, as seen from
+    /// round `now`; 0 for an empty batch.
+    pub fn peak(&self, now: Round) -> u64 {
+        self.peak_with(now, None).max(0) as u64
+    }
+
+    pub fn feasible(&self, now: Round, m: Mem) -> bool {
+        self.peak_with(now, None) <= m as i64
+    }
+
+    /// One descending pass over the distinct (clamped) completion rounds,
+    /// with an optional virtual extra item merged in. At checkpoint `E`,
+    /// exactly the items with `max(e, now) ≥ E` are resident, each
+    /// holding `E + c` tokens — so the sum is `cnt·E + Σc` over the
+    /// suffix, mirroring [`FeasChecker::peak_with`] shifted to absolute
+    /// coordinates.
+    fn peak_with(&self, now: Round, extra: Option<(u64, i64)>) -> i64 {
+        let mut best = 0i64;
+        let mut cnt = 0i64;
+        let mut csum = 0i64;
+        let mut iter = self.items.iter().rev().peekable();
+        let mut extra = extra;
+        loop {
+            let next_item = iter.peek().map(|&(&(e, _), _)| e.max(now));
+            let next_extra = extra.map(|(e, _)| e.max(now));
+            let checkpoint = match next_item.max(next_extra) {
+                Some(e) => e,
+                None => break,
+            };
+            while let Some(&(&(e, _), &c)) = iter.peek() {
+                if e.max(now) == checkpoint {
+                    cnt += 1;
+                    csum += c;
+                    iter.next();
+                } else {
+                    break;
+                }
+            }
+            if let Some((e, c)) = extra {
+                if e.max(now) == checkpoint {
+                    cnt += 1;
+                    csum += c;
+                    extra = None;
+                }
+            }
+            let mem = cnt * checkpoint as i64 + csum;
+            if mem > best {
+                best = mem;
+            }
+        }
+        best
     }
 }
 
@@ -327,6 +474,98 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Drive a random multi-round history (admissions, early/late true
+    /// completions) through both checkers: every tentative-add decision
+    /// and every peak must agree exactly, including overdue items
+    /// (`o_true > pred`, exercising the `max(e, now)` clamp) and early
+    /// finishers (`o_true < pred`).
+    #[test]
+    fn persistent_checker_matches_snapshot_across_rounds() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x9e37);
+        for case in 0..100 {
+            let m = rng.i64_range(20, 80) as u64;
+            let mut persistent = PersistentFeasChecker::new();
+            // Running set: (id, s, o_true, pred, started_round).
+            let mut running: Vec<(usize, u64, u64, u64, u64)> = Vec::new();
+            let mut next_id = 0usize;
+            for now in 1..=30u64 {
+                let active: Vec<ActiveReq> = running
+                    .iter()
+                    .map(|&(id, s, _o, pred, r0)| ActiveReq {
+                        id,
+                        s,
+                        done: now - r0,
+                        pred_total: pred,
+                        started_round: r0,
+                    })
+                    .collect();
+                let mut snapshot = FeasChecker::new(m, &active);
+                assert_eq!(
+                    persistent.peak(now),
+                    snapshot.peak(),
+                    "case {case} round {now}: peak mismatch"
+                );
+                for _ in 0..3 {
+                    let s = rng.i64_range(1, 6) as u64;
+                    let pred = rng.i64_range(1, 10) as u64;
+                    let o_true = (pred as i64 + rng.i64_range(-2, 2)).max(1) as u64;
+                    let cand = queued(next_id, 0.0, s, pred);
+                    let a = snapshot.try_add(cand.feas_item());
+                    let b = persistent.try_add(next_id, now, m, cand.feas_item());
+                    assert_eq!(a, b, "case {case} round {now}: decision mismatch");
+                    if a {
+                        running.push((next_id, s, o_true, pred, now));
+                    }
+                    next_id += 1;
+                }
+                // Execute the round: each running item produces one token;
+                // true completions leave the batch.
+                running.retain(|&(id, _s, o, _pred, r0)| {
+                    if now - r0 + 1 >= o {
+                        assert!(persistent.remove(id), "missing item {id}");
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_checker_bookkeeping() {
+        let mut c = PersistentFeasChecker::new();
+        assert!(c.is_empty());
+        assert_eq!(c.peak(5), 0);
+        assert!(c.feasible(5, 0));
+        // Single item at round 3: base 4, rem 3 → peak 7 at its final round.
+        c.insert(9, 3, item(4, 3));
+        assert!(c.contains(9));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.peak(3), 7);
+        // Two rounds later it has grown by 2 and has 1 round left: same
+        // absolute peak, no state updates required.
+        assert_eq!(c.peak(5), 7);
+        // Overdue past its predicted completion: clamped to finish at
+        // `now`, memory keeps growing one token per round.
+        assert_eq!(c.peak(6), 8);
+        assert_eq!(c.peak(8), 10);
+        assert!(!c.remove(1));
+        assert!(c.remove(9));
+        assert!(!c.remove(9));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn persistent_try_add_rejects_without_mutating() {
+        let mut c = PersistentFeasChecker::new();
+        assert!(!c.try_add(0, 1, 10, item(8, 3))); // peak 11 > 10
+        assert!(c.is_empty());
+        assert!(c.try_add(0, 1, 10, item(8, 2))); // peak 10 == M
+        assert_eq!(c.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Shared O(Δ)-per-round machinery for the Eq-(5) scheduler family
+//! (MC-SF, MC-Benchmark).
+//!
+//! The snapshot path pays O(W) every round to rebuild a candidate heap
+//! over the whole waiting queue plus O(k log k) to re-sort the running
+//! set into a fresh [`FeasChecker`](super::feasibility::FeasChecker).
+//! [`IncrementalCore`] keeps both structures alive across rounds and
+//! updates them by deltas driven by the engine's event hooks
+//! ([`Scheduler::on_arrival`](super::Scheduler::on_arrival) and
+//! friends): a keyed ordered index over the waiting set (O(log W)
+//! insert/remove) and a [`PersistentFeasChecker`] over the running batch
+//! (O(log k) insert/remove, nothing to do on round advance thanks to the
+//! uniform-decode observation). Steady-state rounds then cost O(Δ) in
+//! the number of arrivals/admissions/completions — matching Prop 4.2's
+//! request-count-independent bound — instead of O(n + W log W).
+//!
+//! Iteration order over the waiting index equals the snapshot path's
+//! heap pop order (keys embed the id as a unique final tiebreak), and
+//! the persistent checker is decision-identical to the snapshot checker,
+//! so admission results are **bit-identical** between the two paths
+//! (enforced by `tests/incremental_diff.rs`).
+
+use super::feasibility::{OrdF64, PersistentFeasChecker};
+use crate::core::{FeasItem, Mem, QueuedReq, RequestId, Round};
+use std::collections::{BTreeMap, HashMap};
+
+/// Waiting-queue scan key: (policy primary key, arrival, id). The
+/// primary key is the predicted output length for MC-SF and 0 for the
+/// FCFS-ordered MC-Benchmark; the unique id makes the order total.
+type WaitKey = (u64, OrdF64, RequestId);
+
+/// Persistent waiting index + running-batch checker. Policies embed one
+/// and forward the [`Scheduler`](super::Scheduler) hooks to it.
+#[derive(Debug, Clone, Default)]
+pub struct IncrementalCore {
+    /// Waiting requests in admission-scan order; the value carries the
+    /// feasibility payload (prompt length, predicted output) so the scan
+    /// needs no side lookups.
+    waiting: BTreeMap<WaitKey, (u64, u64)>,
+    key_of: HashMap<RequestId, WaitKey>,
+    checker: PersistentFeasChecker,
+}
+
+impl IncrementalCore {
+    /// Drop all state (start of a run).
+    pub fn clear(&mut self) {
+        self.waiting.clear();
+        self.key_of.clear();
+        self.checker.clear();
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn batch_len(&self) -> usize {
+        self.checker.len()
+    }
+
+    /// Index a newly arrived request under the policy's primary key.
+    pub fn on_arrival(&mut self, primary: u64, req: &QueuedReq) {
+        let key = (primary, OrdF64(req.arrival), req.id);
+        debug_assert!(!self.key_of.contains_key(&req.id), "duplicate arrival {}", req.id);
+        self.waiting.insert(key, (req.s, req.pred));
+        self.key_of.insert(req.id, key);
+    }
+
+    /// A running request finished and left the batch.
+    pub fn on_complete(&mut self, id: RequestId) {
+        self.checker.remove(id);
+    }
+
+    /// A running request was evicted (overflow clearing): it leaves the
+    /// batch and re-enters the waiting index with all progress lost.
+    pub fn on_evict(&mut self, primary: u64, req: &QueuedReq) {
+        self.checker.remove(req.id);
+        self.on_arrival(primary, req);
+    }
+
+    /// Greedy admission scan in key order (Algorithms 1/2): each
+    /// candidate is checked against running ∪ admitted-so-far; with
+    /// `stop_on_first_reject` the scan breaks at the first infeasible
+    /// candidate (prefix semantics, Eq 6), otherwise it continues (the
+    /// "skip" ablation). Costs O(A log W + A·k) for A admissions — the
+    /// queue length W only enters through the O(log W) removals.
+    pub fn admit(&mut self, now: Round, m: Mem, stop_on_first_reject: bool) -> Vec<RequestId> {
+        let mut admitted = Vec::new();
+        for (&(_, _, id), &(s, pred)) in self.waiting.iter() {
+            let item = FeasItem {
+                base: s,
+                rem: pred.max(1),
+            };
+            if self.checker.try_add(id, now, m, item) {
+                admitted.push(id);
+            } else if stop_on_first_reject {
+                break;
+            }
+        }
+        for &id in &admitted {
+            let key = self.key_of.remove(&id).expect("admitted id was indexed");
+            self.waiting.remove(&key);
+        }
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ActiveReq;
+    use crate::sched::feasibility::admit_greedy_lazy;
+    use crate::util::rng::Rng;
+
+    fn queued(id: usize, arrival: f64, s: u64, pred: u64) -> QueuedReq {
+        QueuedReq {
+            id,
+            arrival,
+            s,
+            pred,
+        }
+    }
+
+    /// One-shot admission from an empty batch must match the snapshot
+    /// path's lazy-heap scan exactly — same ids, same order — for both
+    /// key schemes and both break modes.
+    #[test]
+    fn admit_matches_snapshot_scan() {
+        let mut rng = Rng::new(0xD1FF);
+        for case in 0..200 {
+            let m = rng.i64_range(10, 60) as u64;
+            let n = rng.usize_range(1, 20);
+            let waiting: Vec<QueuedReq> = (0..n)
+                .map(|i| {
+                    queued(
+                        i,
+                        rng.i64_range(0, 6) as f64,
+                        rng.i64_range(1, 5) as u64,
+                        rng.i64_range(1, 12) as u64,
+                    )
+                })
+                .collect();
+            for stop in [true, false] {
+                for fcfs in [false, true] {
+                    let snap = if fcfs {
+                        admit_greedy_lazy(m, &[], &waiting, |c| (OrdF64(c.arrival), c.id), stop)
+                    } else {
+                        admit_greedy_lazy(
+                            m,
+                            &[],
+                            &waiting,
+                            |c| (c.pred, OrdF64(c.arrival), c.id),
+                            stop,
+                        )
+                    };
+                    let mut core = IncrementalCore::default();
+                    for w in &waiting {
+                        core.on_arrival(if fcfs { 0 } else { w.pred }, w);
+                    }
+                    let inc = core.admit(1, m, stop);
+                    assert_eq!(inc, snap, "case {case} stop={stop} fcfs={fcfs}");
+                    assert_eq!(core.waiting_len(), n - inc.len());
+                    assert_eq!(core.batch_len(), inc.len());
+                }
+            }
+        }
+    }
+
+    /// Multi-round: arrivals, admissions, completions and evictions keep
+    /// the incremental scan identical to a from-scratch snapshot scan
+    /// over the same waiting/running sets.
+    #[test]
+    fn admit_matches_snapshot_across_event_history() {
+        let mut rng = Rng::new(0xE7E);
+        for case in 0..60 {
+            let m = rng.i64_range(15, 50) as u64;
+            let mut core = IncrementalCore::default();
+            // Mirror state: waiting list and running (id, s, o_true, pred, r0).
+            let mut waiting: Vec<QueuedReq> = Vec::new();
+            let mut running: Vec<(usize, u64, u64, u64, u64)> = Vec::new();
+            let mut next_id = 0;
+            for now in 1..=25u64 {
+                // A few arrivals.
+                for _ in 0..rng.usize_range(0, 2) {
+                    let q = queued(
+                        next_id,
+                        now as f64,
+                        rng.i64_range(1, 4) as u64,
+                        rng.i64_range(1, 8) as u64,
+                    );
+                    core.on_arrival(q.pred, &q);
+                    waiting.push(q);
+                    next_id += 1;
+                }
+                // Snapshot reference scan over the mirrored state.
+                let active: Vec<ActiveReq> = running
+                    .iter()
+                    .map(|&(id, s, _o, pred, r0)| ActiveReq {
+                        id,
+                        s,
+                        done: now - r0,
+                        pred_total: pred,
+                        started_round: r0,
+                    })
+                    .collect();
+                let snap = admit_greedy_lazy(
+                    m,
+                    &active,
+                    &waiting,
+                    |c| (c.pred, OrdF64(c.arrival), c.id),
+                    true,
+                );
+                let inc = core.admit(now, m, true);
+                assert_eq!(inc, snap, "case {case} round {now}");
+                for &id in &inc {
+                    let pos = waiting.iter().position(|w| w.id == id).unwrap();
+                    let w = waiting.remove(pos);
+                    let o_true = (w.pred as i64 + rng.i64_range(-2, 2)).max(1) as u64;
+                    running.push((id, w.s, o_true, w.pred, now));
+                }
+                // Execute the round; completions leave, and occasionally a
+                // victim is evicted back to the queue.
+                let mut evict_one = rng.bool(0.15) && running.len() > 1;
+                running.retain(|&(id, s, o, pred, r0)| {
+                    if now - r0 + 1 >= o {
+                        core.on_complete(id);
+                        false
+                    } else if evict_one {
+                        evict_one = false;
+                        let q = queued(id, r0 as f64, s, pred);
+                        core.on_evict(q.pred, &q);
+                        waiting.push(q);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        }
+    }
+}

@@ -6,12 +6,17 @@
 //! checkpoint; the scan stops at the first rejection.
 
 use super::feasibility::{admit_greedy_lazy, OrdF64};
+use super::incremental::IncrementalCore;
 use super::Scheduler;
 use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone, Copy, Default)]
-pub struct McBenchmark;
+#[derive(Debug, Clone, Default)]
+pub struct McBenchmark {
+    /// Event-driven waiting index + persistent batch checker; primary
+    /// key 0 makes the scan order (arrival, id), i.e. FCFS.
+    state: IncrementalCore,
+}
 
 impl Scheduler for McBenchmark {
     fn name(&self) -> String {
@@ -27,6 +32,30 @@ impl Scheduler for McBenchmark {
         _rng: &mut Rng,
     ) -> Vec<RequestId> {
         admit_greedy_lazy(m, active, waiting, |c| (OrdF64(c.arrival), c.id), true)
+    }
+
+    fn supports_incremental(&self) -> bool {
+        true
+    }
+
+    fn on_reset(&mut self) {
+        self.state.clear();
+    }
+
+    fn on_arrival(&mut self, req: &QueuedReq) {
+        self.state.on_arrival(0, req);
+    }
+
+    fn on_complete(&mut self, id: RequestId) {
+        self.state.on_complete(id);
+    }
+
+    fn on_evict(&mut self, req: &QueuedReq) {
+        self.state.on_evict(0, req);
+    }
+
+    fn admit_incremental(&mut self, now: Round, m: Mem, _rng: &mut Rng) -> Vec<RequestId> {
+        self.state.admit(now, m, true)
     }
 }
 
@@ -52,17 +81,17 @@ mod tests {
         // M fits only the long one (peak 12): short (peak 3) would add
         // 3... at dt0: 3+3=6; at long's completion dt9: 12 + 0 = 12. Both
         // fit under 15 -> admits both, long first.
-        let got = McBenchmark.admit(1, 15, &[], &waiting, &mut rng);
+        let got = McBenchmark::default().admit(1, 15, &[], &waiting, &mut rng);
         assert_eq!(got, vec![0, 1]);
         // Under M=12 the long consumes everything at its peak; the short
         // would push dt0 to 6 and its own completion dt0 (3+3=6)... check
         // long alone peak=12; adding short: at short's completion dt0:
         // (2+1)+(2+1)=6; at long's dt9: 12. Still feasible! Both admitted.
-        let got = McBenchmark.admit(1, 12, &[], &waiting, &mut rng);
+        let got = McBenchmark::default().admit(1, 12, &[], &waiting, &mut rng);
         assert_eq!(got, vec![0, 1]);
         // Under M=11 the long alone is infeasible -> blocks the queue
         // entirely (prefix semantics).
-        let got = McBenchmark.admit(1, 11, &[], &waiting, &mut rng);
+        let got = McBenchmark::default().admit(1, 11, &[], &waiting, &mut rng);
         assert!(got.is_empty());
     }
 
@@ -73,7 +102,7 @@ mod tests {
         // MC-SF (which sorts by length).
         let waiting = [queued(0, 1.0, 2, 20), queued(1, 2.0, 2, 2)];
         let mut rng = Rng::new(0);
-        let mcb = McBenchmark.admit(1, 10, &[], &waiting, &mut rng);
+        let mcb = McBenchmark::default().admit(1, 10, &[], &waiting, &mut rng);
         assert!(mcb.is_empty());
         let mcsf = McSf::default().admit(1, 10, &[], &waiting, &mut rng);
         assert_eq!(mcsf, vec![1]);

@@ -15,6 +15,7 @@
 //!   ablation bench to quantify the value of prefix semantics).
 
 use super::feasibility::{admit_greedy_lazy, OrdF64};
+use super::incremental::IncrementalCore;
 use super::Scheduler;
 use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
 use crate::util::rng::Rng;
@@ -25,6 +26,9 @@ pub struct McSf {
     pub protect_alpha: f64,
     /// `true` = paper's Algorithm 1 (break at first infeasible candidate).
     pub stop_on_first_reject: bool,
+    /// Event-driven waiting index + persistent batch checker (used only
+    /// when the engine drives the incremental hooks).
+    state: IncrementalCore,
 }
 
 impl Default for McSf {
@@ -32,11 +36,20 @@ impl Default for McSf {
         McSf {
             protect_alpha: 0.0,
             stop_on_first_reject: true,
+            state: IncrementalCore::default(),
         }
     }
 }
 
 impl McSf {
+    pub fn new(protect_alpha: f64, stop_on_first_reject: bool) -> McSf {
+        McSf {
+            protect_alpha,
+            stop_on_first_reject,
+            ..Default::default()
+        }
+    }
+
     pub fn with_protection(alpha: f64) -> McSf {
         McSf {
             protect_alpha: alpha,
@@ -79,6 +92,31 @@ impl Scheduler for McSf {
             |c| (c.pred, OrdF64(c.arrival), c.id),
             self.stop_on_first_reject,
         )
+    }
+
+    fn supports_incremental(&self) -> bool {
+        true
+    }
+
+    fn on_reset(&mut self) {
+        self.state.clear();
+    }
+
+    fn on_arrival(&mut self, req: &QueuedReq) {
+        self.state.on_arrival(req.pred, req);
+    }
+
+    fn on_complete(&mut self, id: RequestId) {
+        self.state.on_complete(id);
+    }
+
+    fn on_evict(&mut self, req: &QueuedReq) {
+        self.state.on_evict(req.pred, req);
+    }
+
+    fn admit_incremental(&mut self, now: Round, m: Mem, _rng: &mut Rng) -> Vec<RequestId> {
+        let m = self.effective_m(m);
+        self.state.admit(now, m, self.stop_on_first_reject)
     }
 }
 
@@ -132,7 +170,7 @@ mod tests {
         assert_eq!(strict, vec![0]);
         let mut skip = McSf {
             stop_on_first_reject: false,
-            ..Default::default()
+            ..McSf::default()
         };
         let relaxed = run_admit(&mut skip, 20, &[], &waiting);
         assert_eq!(relaxed, vec![0, 2]);

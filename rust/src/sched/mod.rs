@@ -11,6 +11,7 @@
 pub mod ablation;
 pub mod fcfs;
 pub mod feasibility;
+pub mod incremental;
 pub mod mc_benchmark;
 pub mod mcsf;
 pub mod protection;
@@ -22,6 +23,7 @@ pub use mcsf::McSf;
 pub use protection::AlphaProtection;
 
 use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::util::error::{anyhow, bail, Result};
 use crate::util::rng::Rng;
 
 /// A batching/scheduling policy.
@@ -54,6 +56,49 @@ pub trait Scheduler: Send {
     ) -> Vec<RequestId> {
         active.iter().map(|a| a.id).collect()
     }
+
+    // ----- incremental (event-driven) interface -------------------------
+    //
+    // Schedulers that keep persistent state over the waiting set and the
+    // running batch opt in by returning `true` from
+    // `supports_incremental` and implementing the hooks below; the
+    // simulator then drives them with O(Δ) events per round — arrivals,
+    // admissions, completions, evictions — instead of rebuilding full
+    // per-round snapshots, and calls `admit_incremental` in place of
+    // `admit`. Outcomes must be bit-identical between the two paths
+    // (same admit order, same `SimOutcome`; enforced by
+    // `tests/incremental_diff.rs`). Stateless policies keep the default
+    // no-op impls and continue to use the snapshot path.
+
+    /// Whether this policy implements the event-driven hooks.
+    fn supports_incremental(&self) -> bool {
+        false
+    }
+
+    /// Drop all incremental state (called once at the start of a run).
+    fn on_reset(&mut self) {}
+
+    /// A request joined the waiting queue.
+    fn on_arrival(&mut self, _req: &QueuedReq) {}
+
+    /// An admission returned by [`admit_incremental`] was validated and
+    /// the request entered the running batch. Scan-side state is usually
+    /// already updated inside `admit_incremental`; this hook exists for
+    /// policies that track batch composition separately.
+    fn on_admit(&mut self, _req: &QueuedReq, _now: Round) {}
+
+    /// A running request completed and left the batch.
+    fn on_complete(&mut self, _id: RequestId) {}
+
+    /// A running request was evicted by overflow clearing and re-queued
+    /// (progress lost, original arrival kept).
+    fn on_evict(&mut self, _req: &QueuedReq) {}
+
+    /// Incremental replacement for [`admit`]: same contract, with the
+    /// waiting/running sets implied by the hook event history.
+    fn admit_incremental(&mut self, _now: Round, _m: Mem, _rng: &mut Rng) -> Vec<RequestId> {
+        Vec::new()
+    }
 }
 
 /// Build a scheduler from a spec string (CLI / config):
@@ -65,7 +110,7 @@ pub trait Scheduler: Send {
 /// * `protect:alpha=0.2,beta=0.1` — α-protection β-clearing.
 /// * `fcfs:threshold=0.9` — vLLM-style FCFS with a plain occupancy
 ///   threshold and no forward check.
-pub fn by_name(spec: &str) -> anyhow::Result<Box<dyn Scheduler>> {
+pub fn by_name(spec: &str) -> Result<Box<dyn Scheduler>> {
     let (name, args) = match spec.split_once(':') {
         Some((n, a)) => (n, a),
         None => (spec, ""),
@@ -74,23 +119,23 @@ pub fn by_name(spec: &str) -> anyhow::Result<Box<dyn Scheduler>> {
     for part in args.split(',').filter(|s| !s.is_empty()) {
         let (k, v) = part
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("bad scheduler arg '{part}' in '{spec}'"))?;
+            .ok_or_else(|| anyhow!("bad scheduler arg '{part}' in '{spec}'"))?;
         kv.insert(k.trim().to_string(), v.trim().to_string());
     }
-    let getf = |k: &str, default: f64| -> anyhow::Result<f64> {
+    let getf = |k: &str, default: f64| -> Result<f64> {
         match kv.get(k) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| anyhow::anyhow!("bad value for {k} in '{spec}'")),
+                .map_err(|_| anyhow!("bad value for {k} in '{spec}'")),
         }
     };
     match name {
-        "mcsf" => Ok(Box::new(McSf {
-            protect_alpha: getf("alpha", 0.0)?,
-            stop_on_first_reject: getf("skip", 0.0)? == 0.0,
-        })),
-        "mc-benchmark" | "mcbench" => Ok(Box::new(McBenchmark)),
+        "mcsf" => Ok(Box::new(McSf::new(
+            getf("alpha", 0.0)?,
+            getf("skip", 0.0)? == 0.0,
+        ))),
+        "mc-benchmark" | "mcbench" => Ok(Box::new(McBenchmark::default())),
         "protect" => {
             let alpha = getf("alpha", 0.2)?;
             let beta = getf("beta", 1.0)?; // β=1 ≡ plain α-protection greedy
@@ -101,7 +146,7 @@ pub fn by_name(spec: &str) -> anyhow::Result<Box<dyn Scheduler>> {
         })),
         "longest" => Ok(Box::new(LongestFirst)),
         "random" => Ok(Box::new(RandomOrder)),
-        other => anyhow::bail!("unknown scheduler '{other}' (spec '{spec}')"),
+        other => bail!("unknown scheduler '{other}' (spec '{spec}')"),
     }
 }
 
@@ -110,7 +155,7 @@ pub fn by_name(spec: &str) -> anyhow::Result<Box<dyn Scheduler>> {
 pub fn paper_benchmark_suite() -> Vec<Box<dyn Scheduler>> {
     vec![
         Box::new(McSf::default()),
-        Box::new(McBenchmark),
+        Box::new(McBenchmark::default()),
         Box::new(AlphaProtection::new(0.3, 1.0)),
         Box::new(AlphaProtection::new(0.25, 1.0)),
         Box::new(AlphaProtection::new(0.2, 0.2)),

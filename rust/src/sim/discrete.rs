@@ -83,7 +83,7 @@ mod tests {
         }
         let inst = Instance::new(40, reqs);
         let mcsf = simulate(&inst, &mut McSf::default(), &Predictor::exact(), 1);
-        let mcb = simulate(&inst, &mut McBenchmark, &Predictor::exact(), 1);
+        let mcb = simulate(&inst, &mut McBenchmark::default(), &Predictor::exact(), 1);
         assert!(mcsf.finished && mcb.finished);
         assert!(
             mcsf.total_latency() <= mcb.total_latency(),

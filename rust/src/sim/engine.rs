@@ -13,6 +13,20 @@
 //! the scheduler's `on_overflow` picks evictees, which lose all progress
 //! and re-queue with their original arrival time; the aborted iteration's
 //! duration is still charged (`PerfModel::clearing_time`).
+//!
+//! ## Incremental vs snapshot scheduling
+//!
+//! Hook-aware schedulers ([`Scheduler::supports_incremental`]) are driven
+//! through per-event deltas — `on_arrival` / `on_admit` / `on_complete` /
+//! `on_evict` plus `admit_incremental` — so a steady-state round costs
+//! O(Δ) in the number of events instead of O(n + W): no per-round view
+//! rebuilds, no candidate re-heapify, no feasibility re-sort
+//! (EXPERIMENTS.md §Perf, L3 change 4). Stateless policies take the
+//! legacy snapshot path with reused view buffers. Both paths produce
+//! bit-identical outcomes (`tests/incremental_diff.rs`); admission
+//! bookkeeping is O(1) per admitted id through dense id→slot maps either
+//! way (L3 change 5 — this replaced a per-round `vec![false; n]` dedup
+//! allocation and O(W) `position`/`remove` scans).
 
 use crate::core::{ActiveReq, Instance, QueuedReq, RequestId};
 use crate::metrics::{PerRequest, SimOutcome};
@@ -20,6 +34,7 @@ use crate::perf::{BatchComposition, PerfModel};
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
 use crate::util::rng::Rng;
+use std::fmt;
 
 /// Engine limits / options.
 #[derive(Debug, Clone, Copy)]
@@ -34,6 +49,11 @@ pub struct SimConfig {
     pub stall_rounds: u64,
     /// Record memory / token time series (disable for big sweeps).
     pub record_series: bool,
+    /// Drive hook-aware schedulers through the incremental O(Δ)-per-round
+    /// interface. `false` forces the legacy per-round snapshot path for
+    /// every policy — outcomes are identical either way; the flag exists
+    /// for the differential tests and before/after perf comparisons.
+    pub incremental: bool,
 }
 
 impl Default for SimConfig {
@@ -42,18 +62,32 @@ impl Default for SimConfig {
             max_rounds: 2_000_000,
             stall_rounds: 30_000,
             record_series: true,
+            incremental: true,
         }
     }
 }
 
 /// Hard errors (bad instance / misbehaving scheduler).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("instance infeasible: request {id} needs {peak} > M = {m}")]
     Infeasible { id: RequestId, peak: u64, m: u64 },
-    #[error("scheduler admitted unknown/duplicate request id {0}")]
     BadAdmission(RequestId),
 }
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::Infeasible { id, peak, m } => {
+                write!(f, "instance infeasible: request {id} needs {peak} > M = {m}")
+            }
+            SimError::BadAdmission(id) => {
+                write!(f, "scheduler admitted unknown/duplicate request id {id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 #[derive(Debug, Clone)]
 struct ActiveState {
@@ -66,6 +100,18 @@ struct ActiveState {
     start_time: f64,
 }
 
+impl ActiveState {
+    fn view(&self) -> ActiveReq {
+        ActiveReq {
+            id: self.id,
+            s: self.s,
+            done: self.done,
+            pred_total: self.pred,
+            started_round: self.started_round,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 struct WaitState {
     id: RequestId,
@@ -74,6 +120,20 @@ struct WaitState {
     o_true: u64,
     pred: u64,
 }
+
+impl WaitState {
+    fn view(&self) -> QueuedReq {
+        QueuedReq {
+            id: self.id,
+            arrival: self.arrival,
+            s: self.s,
+            pred: self.pred,
+        }
+    }
+}
+
+/// Sentinel for "id not present" in the dense slot maps.
+const NO_SLOT: usize = usize::MAX;
 
 /// Run one policy over one instance. Deterministic given `seed`.
 pub fn run(
@@ -116,15 +176,28 @@ pub fn run(
     let mut records: Vec<Option<PerRequest>> = vec![None; n];
     let mut restarts: Vec<u32> = vec![0; n];
 
+    let incremental = cfg.incremental && sched.supports_incremental();
+    if incremental {
+        sched.on_reset();
+    }
+
     let mut waiting: Vec<WaitState> = Vec::new();
     let mut active: Vec<ActiveState> = Vec::new();
+    // Dense id → position maps for `waiting` / `active`. One allocation
+    // per run buys O(1) admission validation+removal (the cleared slot
+    // doubles as the duplicate check) where the old loop paid a
+    // `vec![false; n]` allocation plus an O(W) `position` scan per
+    // admitted id, every round.
+    let mut wait_slot: Vec<usize> = vec![NO_SLOT; n];
+    let mut act_slot: Vec<usize> = vec![NO_SLOT; n];
+
     let mut next_arrival = 0usize;
     let mut completed = 0usize;
     let mut t = 0.0f64;
     let mut round = 0u64;
     let mut last_completion_round = 0u64;
-    // View buffers reused across rounds (avoids ~W+A allocations per
-    // round on overloaded queues — EXPERIMENTS.md §Perf, L3 change 3).
+    // View buffers reused across rounds; the snapshot path refills them
+    // every round, the incremental path only on (rare) overflow events.
     let mut active_views: Vec<ActiveReq> = Vec::new();
     let mut waiting_views: Vec<QueuedReq> = Vec::new();
 
@@ -132,13 +205,18 @@ pub fn run(
         // Release arrivals up to the current formation time.
         while next_arrival < n && inst.requests[next_arrival].arrival <= t {
             let r = &inst.requests[next_arrival];
-            waiting.push(WaitState {
+            let w = WaitState {
                 id: r.id,
                 arrival: r.arrival,
                 s: r.prompt_len,
                 o_true: r.output_len,
                 pred: preds[r.id],
-            });
+            };
+            wait_slot[r.id] = waiting.len();
+            if incremental {
+                sched.on_arrival(&w.view());
+            }
+            waiting.push(w);
             next_arrival += 1;
         }
 
@@ -158,36 +236,35 @@ pub fn run(
             return Ok(outcome);
         }
 
-        // Scheduler decision.
-        active_views.clear();
-        active_views.extend(active.iter().map(|a| ActiveReq {
-            id: a.id,
-            s: a.s,
-            done: a.done,
-            pred_total: a.pred,
-            started_round: a.started_round,
-        }));
-        waiting_views.clear();
-        waiting_views.extend(waiting.iter().map(|w| QueuedReq {
-            id: w.id,
-            arrival: w.arrival,
-            s: w.s,
-            pred: w.pred,
-        }));
-        let admitted = sched.admit(round, inst.m, &active_views, &waiting_views, &mut rng);
+        // Scheduler decision: per-event state for hook-aware policies,
+        // full snapshots for the rest.
+        let admitted = if incremental {
+            sched.admit_incremental(round, inst.m, &mut rng)
+        } else {
+            active_views.clear();
+            active_views.extend(active.iter().map(ActiveState::view));
+            waiting_views.clear();
+            waiting_views.extend(waiting.iter().map(WaitState::view));
+            sched.admit(round, inst.m, &active_views, &waiting_views, &mut rng)
+        };
 
         // Validate and move admitted requests into the running set.
         let mut prefill_tokens = 0u64;
-        let mut seen = vec![false; n];
-        for id in &admitted {
-            let pos = waiting.iter().position(|w| w.id == *id);
-            let pos = match pos {
-                Some(p) if !seen[*id] => p,
-                _ => return Err(SimError::BadAdmission(*id)),
-            };
-            seen[*id] = true;
-            let w = waiting.remove(pos);
+        for &id in &admitted {
+            if id >= n || wait_slot[id] == NO_SLOT {
+                return Err(SimError::BadAdmission(id));
+            }
+            let slot = wait_slot[id];
+            wait_slot[id] = NO_SLOT;
+            let w = waiting.swap_remove(slot);
+            if let Some(moved) = waiting.get(slot) {
+                wait_slot[moved.id] = slot;
+            }
+            if incremental {
+                sched.on_admit(&w.view(), round);
+            }
             prefill_tokens += w.s;
+            act_slot[w.id] = active.len();
             active.push(ActiveState {
                 id: w.id,
                 s: w.s,
@@ -208,37 +285,42 @@ pub fn run(
         };
 
         if usage > inst.m {
-            // KV overflow: clearing event.
+            // KV overflow: clearing event (rare — views built on demand).
             outcome.overflow_events += 1;
-            let evicted = sched.on_overflow(
-                &active
-                    .iter()
-                    .map(|a| ActiveReq {
-                        id: a.id,
-                        s: a.s,
-                        done: a.done,
-                        pred_total: a.pred,
-                        started_round: a.started_round,
-                    })
-                    .collect::<Vec<_>>(),
-                &mut rng,
-            );
+            active_views.clear();
+            active_views.extend(active.iter().map(ActiveState::view));
+            let evicted = sched.on_overflow(&active_views, &mut rng);
             t += perf.clearing_time(&batch);
             let mut post_usage = usage;
             for id in evicted {
-                if let Some(pos) = active.iter().position(|a| a.id == id) {
-                    let a = active.remove(pos);
-                    post_usage -= a.s + a.done + 1;
-                    restarts[a.id] += 1;
-                    outcome.evicted_requests += 1;
-                    waiting.push(WaitState {
-                        id: a.id,
-                        arrival: a.arrival_of(inst),
-                        s: a.s,
-                        o_true: a.o_true,
-                        pred: a.pred,
-                    });
+                if id >= n || act_slot[id] == NO_SLOT {
+                    continue;
                 }
+                let pos = act_slot[id];
+                // Ordered remove: `active` stays in admission order (the
+                // clearing policies consume per-item randomness in view
+                // order, so the order is behavior-relevant); patch the
+                // slots of everything shifted down.
+                let a = active.remove(pos);
+                act_slot[a.id] = NO_SLOT;
+                for (i, rest) in active[pos..].iter().enumerate() {
+                    act_slot[rest.id] = pos + i;
+                }
+                post_usage -= a.s + a.done + 1;
+                restarts[a.id] += 1;
+                outcome.evicted_requests += 1;
+                let w = WaitState {
+                    id: a.id,
+                    arrival: a.arrival_of(inst),
+                    s: a.s,
+                    o_true: a.o_true,
+                    pred: a.pred,
+                };
+                wait_slot[w.id] = waiting.len();
+                if incremental {
+                    sched.on_evict(&w.view());
+                }
+                waiting.push(w);
             }
             if cfg.record_series {
                 outcome.mem_series.push((t, post_usage));
@@ -260,6 +342,13 @@ pub fn run(
             active[i].done += 1;
             if active[i].done >= active[i].o_true {
                 let a = active.swap_remove(i);
+                act_slot[a.id] = NO_SLOT;
+                if let Some(moved) = active.get(i) {
+                    act_slot[moved.id] = i;
+                }
+                if incremental {
+                    sched.on_complete(a.id);
+                }
                 records[a.id] = Some(PerRequest {
                     id: a.id,
                     arrival: inst.requests[a.id].arrival,
@@ -371,6 +460,107 @@ mod tests {
             assert!(out.max_mem() <= inst.m, "{} > {}", out.max_mem(), inst.m);
             assert_eq!(out.per_request.len(), inst.n());
         }
+    }
+
+    /// The same run through the incremental hooks and the forced
+    /// snapshot path must agree exactly — including under noisy
+    /// predictions, where MC-SF overflows and the evict hooks fire.
+    /// (The broad version of this check is tests/incremental_diff.rs.)
+    #[test]
+    fn incremental_path_matches_snapshot_path() {
+        use crate::workload::synthetic;
+        let mut rng = Rng::new(23);
+        for trial in 0..10 {
+            let inst = synthetic::arrival_model_2(&mut rng);
+            for pred in [Predictor::exact(), Predictor::uniform_noise(0.6, 5)] {
+                let snap_cfg = SimConfig {
+                    incremental: false,
+                    ..SimConfig::default()
+                };
+                let a = run(
+                    &inst,
+                    &mut McSf::with_protection(0.1),
+                    &pred,
+                    &UnitTime,
+                    7,
+                    SimConfig::default(),
+                )
+                .unwrap();
+                let b = run(
+                    &inst,
+                    &mut McSf::with_protection(0.1),
+                    &pred,
+                    &UnitTime,
+                    7,
+                    snap_cfg,
+                )
+                .unwrap();
+                assert_eq!(a.per_request, b.per_request, "trial {trial}");
+                assert_eq!(a.rounds, b.rounds, "trial {trial}");
+                assert_eq!(a.peak_mem, b.peak_mem, "trial {trial}");
+                assert_eq!(a.overflow_events, b.overflow_events, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_admission_rejected() {
+        struct Duplicator;
+        impl Scheduler for Duplicator {
+            fn name(&self) -> String {
+                "dup".into()
+            }
+            fn admit(
+                &mut self,
+                _now: u64,
+                _m: u64,
+                _active: &[ActiveReq],
+                waiting: &[QueuedReq],
+                _rng: &mut Rng,
+            ) -> Vec<RequestId> {
+                vec![waiting[0].id, waiting[0].id]
+            }
+        }
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 2, 2)]);
+        let err = run(
+            &inst,
+            &mut Duplicator,
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig::default(),
+        );
+        assert!(matches!(err, Err(SimError::BadAdmission(0))));
+    }
+
+    #[test]
+    fn unknown_admission_rejected() {
+        struct Phantom;
+        impl Scheduler for Phantom {
+            fn name(&self) -> String {
+                "phantom".into()
+            }
+            fn admit(
+                &mut self,
+                _now: u64,
+                _m: u64,
+                _active: &[ActiveReq],
+                _waiting: &[QueuedReq],
+                _rng: &mut Rng,
+            ) -> Vec<RequestId> {
+                vec![999]
+            }
+        }
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 2, 2)]);
+        let err = run(
+            &inst,
+            &mut Phantom,
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig::default(),
+        );
+        assert!(matches!(err, Err(SimError::BadAdmission(999))));
     }
 
     #[test]

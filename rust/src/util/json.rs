@@ -4,6 +4,7 @@
 //! configuration. Supports the full JSON grammar with f64 numbers;
 //! object key order is preserved (useful for stable golden files).
 
+use crate::util::error::anyhow;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -20,12 +21,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ----- constructors -------------------------------------------------
@@ -100,33 +108,33 @@ impl Json {
     }
 
     /// Required-field helpers that produce useful errors.
-    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+    pub fn req(&self, key: &str) -> crate::util::error::Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing json field '{key}'"))
+            .ok_or_else(|| anyhow!("missing json field '{key}'"))
     }
 
-    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn req_f64(&self, key: &str) -> crate::util::error::Result<f64> {
         self.req(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("json field '{key}' is not a number"))
+            .ok_or_else(|| anyhow!("json field '{key}' is not a number"))
     }
 
-    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+    pub fn req_usize(&self, key: &str) -> crate::util::error::Result<usize> {
         self.req(key)?
             .as_usize()
-            .ok_or_else(|| anyhow::anyhow!("json field '{key}' is not a non-negative integer"))
+            .ok_or_else(|| anyhow!("json field '{key}' is not a non-negative integer"))
     }
 
-    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn req_str(&self, key: &str) -> crate::util::error::Result<&str> {
         self.req(key)?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("json field '{key}' is not a string"))
+            .ok_or_else(|| anyhow!("json field '{key}' is not a string"))
     }
 
-    pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
+    pub fn req_arr(&self, key: &str) -> crate::util::error::Result<&[Json]> {
         self.req(key)?
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("json field '{key}' is not an array"))
+            .ok_or_else(|| anyhow!("json field '{key}' is not an array"))
     }
 
     /// Convert an object to a map (for lookups in hot paths).
@@ -154,6 +162,7 @@ impl Json {
     }
 
     /// Compact single-line rendering.
+    #[allow(clippy::inherent_to_string_shadow_display)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);

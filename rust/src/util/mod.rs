@@ -2,6 +2,7 @@
 //! `rand`, `serde`, `clap`, `criterion` and `proptest` — see DESIGN.md §3).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -1,0 +1,100 @@
+//! Offline end-to-end coordinator tests: the full scheduler → prefill →
+//! decode serving pipeline against the deterministic stub engine, so the
+//! incremental scheduling interface (`on_arrival` / `admit_incremental`
+//! / `on_complete`) is exercised through the live path without PJRT
+//! artifacts. The real-engine twin of this file is `runtime_e2e.rs`.
+#![cfg(not(feature = "xla"))]
+
+use kvsched::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+use kvsched::runtime::Engine;
+use kvsched::sched::by_name;
+
+#[test]
+fn coordinator_serves_batched_requests_incrementally() {
+    let coord = Coordinator::start(
+        Engine::mock(),
+        by_name("mcsf").unwrap(),
+        CoordinatorConfig::default(),
+    );
+
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let rx = coord.submit(ServeRequest {
+            prompt: format!("request number {i}").into_bytes(),
+            max_new_tokens: 4 + i,
+            predicted_new_tokens: 4 + i,
+        });
+        rxs.push((i, rx));
+    }
+    for (i, rx) in rxs {
+        let reply = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .expect("coordinator reply");
+        assert_eq!(reply.tokens.len() as u64, 4 + i);
+        assert!(reply.latency >= 0.0 && reply.queue_wait >= 0.0);
+        assert!(reply.latency >= reply.queue_wait);
+    }
+    let stats = coord.shutdown();
+    assert!(stats.finished);
+    assert_eq!(stats.per_request.len(), 6);
+    assert!(stats.rounds > 0);
+}
+
+#[test]
+fn coordinator_respects_memory_budget_incrementally() {
+    let engine = Engine::mock();
+    let capacity = engine.dims().c as u64;
+    // Budget for ~2 concurrent rows.
+    let coord = Coordinator::start(
+        engine,
+        by_name("mcsf").unwrap(),
+        CoordinatorConfig {
+            kv_budget: 2 * capacity,
+            seed: 0,
+        },
+    );
+    let mut rxs = Vec::new();
+    for _ in 0..5 {
+        rxs.push(coord.submit(ServeRequest {
+            prompt: b"tight memory".to_vec(),
+            max_new_tokens: 6,
+            predicted_new_tokens: 6,
+        }));
+    }
+    for rx in rxs {
+        rx.recv_timeout(std::time::Duration::from_secs(60))
+            .expect("reply under tight budget");
+    }
+    let stats = coord.shutdown();
+    // The scheduler's accounting must keep usage under the budget.
+    assert!(stats.max_mem() <= 2 * capacity);
+}
+
+#[test]
+fn fcfs_and_mc_benchmark_serve_through_both_paths() {
+    // MC-Benchmark takes the incremental path, FCFS the snapshot path;
+    // both must drain the same workload to completion.
+    for spec in ["mc-benchmark", "fcfs:threshold=0.9"] {
+        let coord = Coordinator::start(
+            Engine::mock(),
+            by_name(spec).unwrap(),
+            CoordinatorConfig::default(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..4u64 {
+            rxs.push(coord.submit(ServeRequest {
+                prompt: format!("{spec} {i}").into_bytes(),
+                max_new_tokens: 3,
+                predicted_new_tokens: 3,
+            }));
+        }
+        for rx in rxs {
+            let reply = rx
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .expect("reply");
+            assert_eq!(reply.tokens.len(), 3, "{spec}");
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.per_request.len(), 4, "{spec}");
+    }
+}

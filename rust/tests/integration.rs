@@ -6,7 +6,7 @@ use kvsched::core::{Instance, Request};
 use kvsched::opt::{self, HindsightConfig};
 use kvsched::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use kvsched::predictor::Predictor;
-use kvsched::sched::{by_name, paper_benchmark_suite, McBenchmark, McSf};
+use kvsched::sched::{by_name, paper_benchmark_suite, McSf};
 use kvsched::sim::{continuous, discrete, SimConfig};
 use kvsched::util::rng::Rng;
 use kvsched::workload::{lmsys::LmsysGen, synthetic};

@@ -92,7 +92,7 @@ fn prop_nonpreemption_latency_decomposition() {
     // Non-preemptive service: completion − start == o for every request
     // under MC-SF/MC-Benchmark (no evictions with exact predictions).
     forall_cases(0xC0DE, 40, gen_instance(20, 40), |inst| {
-        for sched in [&mut McSf::default() as &mut dyn Scheduler, &mut McBenchmark] {
+        for sched in [&mut McSf::default() as &mut dyn Scheduler, &mut McBenchmark::default()] {
             let out = run_policy(inst, sched, 3);
             for rec in &out.per_request {
                 let o = inst.requests[rec.id].output_len as f64;
@@ -157,7 +157,7 @@ fn prop_hindsight_below_all_policies_and_above_lower_bound() {
         }
         for sched in [
             &mut McSf::default() as &mut dyn Scheduler,
-            &mut McBenchmark,
+            &mut McBenchmark::default(),
             &mut AlphaProtection::new(0.3, 1.0),
         ] {
             let out = run_policy(inst, sched, 5);

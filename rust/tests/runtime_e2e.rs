@@ -4,7 +4,11 @@
 //! scheduler → prefill → decode pipeline.
 //!
 //! Requires `make artifacts`; tests self-skip when artifacts are absent
-//! (CI runs them via `make test`).
+//! (CI runs them via `make test`). The whole file needs the real PJRT
+//! engine, i.e. the `xla` feature; the offline build runs the same
+//! coordinator pipeline against the stub engine in
+//! `coordinator_offline.rs` instead.
+#![cfg(feature = "xla")]
 
 use kvsched::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
 use kvsched::runtime::kv_cache::RowCache;
