@@ -1,0 +1,131 @@
+//! Perf: fleet-scale serving. Sweeps replicas × router at matched
+//! per-worker load — each fleet size W gets its own LMSYS trace with
+//! n·W requests arriving at λ·W, so every worker sees the same offered
+//! load regardless of fleet size — and records wall-clock rounds/sec,
+//! completed requests, fleet throughput, mean/p99 latency, and the
+//! assigned-load imbalance. Results land in the repo-root baseline
+//! ledger `BENCH_cluster.json` (EXPERIMENTS.md §Cluster).
+//!
+//! The two headline comparisons the ledger tracks:
+//! * scaling — fleet throughput (completed / makespan) must grow with W
+//!   for the load-aware routers;
+//! * routing — power-of-two-choices mean latency at matched load must
+//!   be no worse than load-blind round-robin.
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::continuous::PAPER_M;
+use kvsched::sim::SimConfig;
+use kvsched::util::cli::Args;
+use kvsched::util::json::Json;
+use kvsched::workload::LmsysGen;
+use std::time::Instant;
+
+const ROUTERS: [&str; 4] = ["rr", "jsq", "least-kv", "po2"];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.usize_or("iters", 5).max(1);
+    let n_per_worker = args.usize_or("n", 250);
+    let base_lambda = args.f64_or("lambda", 50.0);
+    let seed = args.u64_or("seed", 1);
+
+    let perf = Llama70bA100x2::default();
+    let gen = LmsysGen::new(PAPER_M);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut table = Table::new(
+        &format!(
+            "fleet scaling: replicas × router, MC-SF, LMSYS λ={base_lambda}·W, n={n_per_worker}·W"
+        ),
+        &[
+            "workers",
+            "router",
+            "rounds_per_sec",
+            "completed",
+            "tput_req_s",
+            "avg_latency_s",
+            "p99_s",
+            "imbalance",
+            "finished",
+        ],
+    );
+
+    for &w in &[1usize, 2, 4, 8] {
+        // One trace per fleet size: λ·W arrivals feeding W workers keeps
+        // the per-worker offered load constant across the sweep. Routers
+        // within a fleet size share the identical trace.
+        let mut rng = Rng::new(seed);
+        let inst = gen.instance(n_per_worker * w, base_lambda * w as f64, PAPER_M, &mut rng);
+        for router in ROUTERS {
+            // Outcomes are deterministic given the seed; wall time takes
+            // the best of `iters` repetitions.
+            let mut best_wall = f64::INFINITY;
+            let mut kept: Option<FleetOutcome> = None;
+            for _ in 0..iters {
+                let mut fleet = Fleet::new(FleetSpec::replicas(w), "mcsf", router)
+                    .expect("fleet spec parses");
+                let t0 = Instant::now();
+                let out = fleet
+                    .try_simulate(
+                        &inst,
+                        &Predictor::exact(),
+                        &perf,
+                        seed,
+                        SimConfig {
+                            record_series: false,
+                            ..SimConfig::default()
+                        },
+                    )
+                    .expect("fleet simulation");
+                best_wall = best_wall.min(t0.elapsed().as_secs_f64());
+                kept = Some(out);
+            }
+            let out = kept.expect("at least one iteration");
+            let rounds_per_sec = out.total_rounds() as f64 / best_wall.max(1e-12);
+            let imb = out.imbalance();
+            table.row(&[
+                w.to_string(),
+                out.router.clone(),
+                fmt(rounds_per_sec),
+                out.completed().to_string(),
+                fmt(out.throughput()),
+                fmt(out.avg_latency()),
+                fmt(out.latency_summary().p99),
+                fmt(imb.assigned_max_over_mean),
+                out.finished().to_string(),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("workers", w)
+                    .set("router", out.router.clone())
+                    .set("rounds_per_sec", rounds_per_sec)
+                    .set("total_rounds", out.total_rounds())
+                    .set("wall_s", best_wall)
+                    .set("completed", out.completed())
+                    .set("throughput_req_per_s", out.throughput())
+                    .set("avg_latency_s", out.avg_latency())
+                    .set("p99_latency_s", out.latency_summary().p99)
+                    .set("avg_wait_s", out.wait_summary().mean)
+                    .set("imbalance_assigned", imb.assigned_max_over_mean)
+                    .set("imbalance_peak_mem", imb.peak_mem_max_over_mean)
+                    .set("finished", out.finished()),
+            );
+        }
+    }
+    table.print();
+    table.save_json("perf_cluster");
+
+    // Baseline ledger at the repo root (EXPERIMENTS.md §Cluster).
+    let doc = Json::obj()
+        .set("bench", "perf_cluster")
+        .set("algo", "MC-SF")
+        .set("workload", "lmsys")
+        .set("m_per_worker", PAPER_M)
+        .set("n_per_worker", n_per_worker)
+        .set("base_lambda", base_lambda)
+        .set("iters", iters)
+        .set("seed", seed)
+        .set("rows", Json::Arr(rows));
+    kvsched::bench::save_root_json("BENCH_cluster.json", &doc);
+}

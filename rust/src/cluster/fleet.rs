@@ -1,0 +1,144 @@
+//! The [`Fleet`]: N replica workers, each with its own KV budget and its
+//! own scheduler instance, behind a pluggable [`Router`].
+//!
+//! This is the ergonomic front door over the fleet sim engine
+//! (`sim::cluster::run_fleet`): build one from spec strings (the same
+//! grammar the CLI exposes as `--algo` / `--router` / `--workers`), then
+//! simulate instances against it. Per-worker schedulers reuse the
+//! incremental event hooks, so fleet rounds stay O(Δ) per worker.
+
+use super::router::{router_by_name, Router};
+use crate::core::{FleetSpec, Instance};
+use crate::metrics::FleetOutcome;
+use crate::perf::PerfModel;
+use crate::predictor::Predictor;
+use crate::sched::{by_name, Scheduler};
+use crate::sim::cluster::run_fleet;
+use crate::sim::{SimConfig, SimError};
+use crate::util::error::Result;
+
+/// A replica fleet: spec + per-worker schedulers + router.
+pub struct Fleet {
+    pub spec: FleetSpec,
+    scheds: Vec<Box<dyn Scheduler>>,
+    router: Box<dyn Router>,
+}
+
+impl Fleet {
+    /// `spec.workers` identical schedulers built from `sched_spec`
+    /// (see [`by_name`]) behind the router named by `router_spec`
+    /// (see [`router_by_name`]).
+    pub fn new(spec: FleetSpec, sched_spec: &str, router_spec: &str) -> Result<Fleet> {
+        spec.validate()?;
+        let scheds = (0..spec.workers)
+            .map(|_| by_name(sched_spec))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Fleet {
+            spec,
+            scheds,
+            router: router_by_name(router_spec)?,
+        })
+    }
+
+    /// Assemble from already-built parts (heterogeneous policies are
+    /// allowed; `scheds.len()` must equal `spec.workers`).
+    pub fn from_parts(
+        spec: FleetSpec,
+        scheds: Vec<Box<dyn Scheduler>>,
+        router: Box<dyn Router>,
+    ) -> Fleet {
+        assert_eq!(scheds.len(), spec.workers, "one scheduler per worker");
+        Fleet {
+            spec,
+            scheds,
+            router,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.spec.workers
+    }
+
+    /// Worker 0's policy name (fleets built by [`Fleet::new`] are
+    /// homogeneous).
+    pub fn algo(&self) -> String {
+        self.scheds[0].name()
+    }
+
+    pub fn router_name(&self) -> String {
+        self.router.name()
+    }
+
+    /// Simulate with default engine config; panics on engine errors
+    /// (mirrors `sim::continuous::simulate`).
+    pub fn simulate(
+        &mut self,
+        inst: &Instance,
+        predictor: &Predictor,
+        perf: &dyn PerfModel,
+        seed: u64,
+    ) -> FleetOutcome {
+        self.try_simulate(inst, predictor, perf, seed, SimConfig::default())
+            .expect("fleet simulation failed")
+    }
+
+    /// Simulate the fleet over `inst`: arrivals are dispatched online by
+    /// the router, every worker steps its own O(Δ) round loop, and the
+    /// per-worker outcomes come back under one [`FleetOutcome`].
+    pub fn try_simulate(
+        &mut self,
+        inst: &Instance,
+        predictor: &Predictor,
+        perf: &dyn PerfModel,
+        seed: u64,
+        cfg: SimConfig,
+    ) -> std::result::Result<FleetOutcome, SimError> {
+        run_fleet(
+            inst,
+            &mut self.scheds,
+            self.router.as_mut(),
+            self.spec.worker_m,
+            predictor,
+            perf,
+            seed,
+            cfg,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::perf::UnitTime;
+
+    #[test]
+    fn builds_from_specs() {
+        let fleet = Fleet::new(FleetSpec::replicas(4), "mcsf:alpha=0.1", "jsq").unwrap();
+        assert_eq!(fleet.workers(), 4);
+        assert_eq!(fleet.algo(), "MC-SF(α=0.1)");
+        assert_eq!(fleet.router_name(), "join-shortest-queue");
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(Fleet::new(FleetSpec::replicas(2), "nope", "rr").is_err());
+        assert!(Fleet::new(FleetSpec::replicas(2), "mcsf", "nope").is_err());
+        assert!(Fleet::new(FleetSpec::replicas(0), "mcsf", "rr").is_err());
+    }
+
+    #[test]
+    fn simulate_end_to_end() {
+        let inst = Instance::new(
+            40,
+            (0..8).map(|i| Request::new(i, i as f64, 2, 4)).collect(),
+        );
+        let mut fleet = Fleet::new(FleetSpec::replicas(2), "mcsf", "po2").unwrap();
+        let out = fleet.simulate(&inst, &Predictor::exact(), &UnitTime, 3);
+        assert!(out.finished());
+        assert_eq!(out.completed(), 8);
+        assert_eq!(out.workers(), 2);
+        assert_eq!(out.router, "power-of-two");
+        assert_eq!(out.algo(), "MC-SF");
+    }
+}

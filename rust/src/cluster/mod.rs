@@ -1,0 +1,28 @@
+//! Fleet-scale serving: the multi-replica cluster layer.
+//!
+//! The paper's model is one worker with one KV budget `M`; this module
+//! generalizes it to N replicas behind a routing layer, the shape a
+//! production deployment actually has:
+//!
+//! * [`Router`] + four policies ([`RoundRobin`], [`JoinShortestQueue`],
+//!   [`LeastKvLoad`], [`PowerOfTwo`]) — dispatch decisions made online,
+//!   per arrival, from causal [`WorkerLoad`] snapshots;
+//! * [`Fleet`] — N workers, each with its own KV budget
+//!   ([`crate::core::FleetSpec`]) and its own scheduler instance reusing
+//!   the incremental O(Δ)-per-round hooks;
+//! * the fleet sim engine lives in [`crate::sim::cluster`], the live
+//!   multi-replica serving path in [`crate::coordinator`]
+//!   (`FleetCoordinator`).
+//!
+//! A 1-worker fleet reduces bit-identically to the single-worker engine
+//! (`tests/cluster_reduction.rs`); at N > 1 the per-worker arrival rate
+//! is held comparable via λ × N workload scaling
+//! ([`crate::workload::scale_arrival_rate`]).
+
+pub mod fleet;
+pub mod router;
+
+pub use fleet::Fleet;
+pub use router::{
+    router_by_name, JoinShortestQueue, LeastKvLoad, PowerOfTwo, RoundRobin, Router, WorkerLoad,
+};

@@ -1,0 +1,293 @@
+//! Pluggable request routers: the dispatch policy in front of a fleet.
+//!
+//! A [`Router`] sees each arrival exactly once, at its arrival instant,
+//! together with a causal per-worker load snapshot ([`WorkerLoad`]) —
+//! every worker's state is current as of that instant (the fleet engine
+//! steps workers up to the arrival time before routing). Four classic
+//! policies are provided:
+//!
+//! * [`RoundRobin`] — load-blind cycling; the baseline.
+//! * [`JoinShortestQueue`] — full-information argmin over request depth.
+//! * [`LeastKvLoad`] — argmin over outstanding KV claim (resident tokens
+//!   plus queued token demand), the KV-aware analogue of JSQ.
+//! * [`PowerOfTwo`] — sample two workers, keep the shallower: the
+//!   classic "power of two choices" that gets most of JSQ's balance with
+//!   O(1) inspection.
+
+use crate::core::QueuedReq;
+use crate::util::error::{bail, Result};
+use crate::util::rng::Rng;
+
+/// Per-worker load snapshot at a routing instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerLoad {
+    /// Worker index in the fleet.
+    pub worker: usize,
+    /// Requests waiting (routed but not yet in a batch).
+    pub queued: usize,
+    /// Requests currently decoding.
+    pub running: usize,
+    /// KV tokens the running batch holds going into its next round
+    /// (Σ s + done + 1).
+    pub kv_used: u64,
+    /// The worker's KV budget `M_w`.
+    pub kv_budget: u64,
+    /// Queued token demand Σ (s + õ + 1) over the waiting requests.
+    pub queued_demand: u64,
+    /// Total requests routed to this worker so far.
+    pub assigned: usize,
+}
+
+impl WorkerLoad {
+    /// Requests on the worker (queued + running) — the JSQ / po2 key.
+    pub fn depth(&self) -> usize {
+        self.queued + self.running
+    }
+
+    /// Outstanding KV claim: resident tokens plus queued demand — the
+    /// least-KV-load key. Raw token counts (fleet budgets are uniform,
+    /// so no normalization is needed for argmin comparisons).
+    pub fn kv_claim(&self) -> u64 {
+        self.kv_used + self.queued_demand
+    }
+}
+
+/// A dispatch policy. Stateful (round-robin keeps a cursor); randomized
+/// policies draw from the fleet's dedicated router RNG stream, so router
+/// randomness never perturbs any worker's scheduler stream.
+pub trait Router: Send {
+    /// Human-readable name (appears in fleet metrics and bench output).
+    fn name(&self) -> String;
+
+    /// Pick the worker that receives `req`: return the `worker` id of
+    /// one of the `loads` entries. `loads` is never empty but may be a
+    /// subset of the fleet (the engines exclude workers that can no
+    /// longer serve), so entry position and `worker` id can differ.
+    fn route(&mut self, req: &QueuedReq, loads: &[WorkerLoad], rng: &mut Rng) -> usize;
+}
+
+/// Cycle through workers regardless of load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl Router for RoundRobin {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+
+    fn route(&mut self, _req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        let pick = self.next % loads.len();
+        self.next = (pick + 1) % loads.len();
+        loads[pick].worker
+    }
+}
+
+/// Send each arrival to the worker with the fewest requests on it
+/// (waiting + running); ties break toward the lowest index.
+#[derive(Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl Router for JoinShortestQueue {
+    fn name(&self) -> String {
+        "join-shortest-queue".into()
+    }
+
+    fn route(&mut self, _req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        loads
+            .iter()
+            .min_by_key(|l| (l.depth(), l.worker))
+            .expect("loads is non-empty")
+            .worker
+    }
+}
+
+/// Send each arrival to the worker with the smallest outstanding KV
+/// claim (resident + queued token demand); ties break toward the lowest
+/// index. Size-aware where JSQ only counts heads.
+#[derive(Debug, Default)]
+pub struct LeastKvLoad;
+
+impl Router for LeastKvLoad {
+    fn name(&self) -> String {
+        "least-kv-load".into()
+    }
+
+    fn route(&mut self, _req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        loads
+            .iter()
+            .min_by_key(|l| (l.kv_claim(), l.worker))
+            .expect("loads is non-empty")
+            .worker
+    }
+}
+
+/// Sample two distinct workers uniformly, keep the one with fewer
+/// requests (ties toward the lower index). Mitzenmacher's power of two
+/// choices: near-JSQ balance while inspecting O(1) workers per arrival.
+#[derive(Debug, Default)]
+pub struct PowerOfTwo;
+
+impl Router for PowerOfTwo {
+    fn name(&self) -> String {
+        "power-of-two".into()
+    }
+
+    fn route(&mut self, _req: &QueuedReq, loads: &[WorkerLoad], rng: &mut Rng) -> usize {
+        let w = loads.len();
+        if w == 1 {
+            return loads[0].worker;
+        }
+        let i = rng.u64_below(w as u64) as usize;
+        let mut j = rng.u64_below(w as u64 - 1) as usize;
+        if j >= i {
+            j += 1; // distinct second sample without rejection
+        }
+        let (a, b) = (loads[i], loads[j]);
+        if (b.depth(), b.worker) < (a.depth(), a.worker) {
+            b.worker
+        } else {
+            a.worker
+        }
+    }
+}
+
+/// Build a router from a spec string (CLI / config):
+/// `rr` | `round-robin`, `jsq` | `join-shortest-queue`,
+/// `least-kv` | `least-kv-load`, `po2` | `p2c` | `power-of-two`.
+pub fn router_by_name(spec: &str) -> Result<Box<dyn Router>> {
+    match spec {
+        "rr" | "round-robin" => Ok(Box::new(RoundRobin::default())),
+        "jsq" | "shortest-queue" | "join-shortest-queue" => {
+            Ok(Box::new(JoinShortestQueue))
+        }
+        "least-kv" | "kv" | "least-kv-load" => Ok(Box::new(LeastKvLoad)),
+        "po2" | "p2c" | "power-of-two" => Ok(Box::new(PowerOfTwo)),
+        other => bail!("unknown router '{other}' (try rr | jsq | least-kv | po2)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(worker: usize, queued: usize, running: usize, kv: u64) -> WorkerLoad {
+        WorkerLoad {
+            worker,
+            queued,
+            running,
+            kv_used: kv,
+            kv_budget: 1000,
+            queued_demand: queued as u64 * 10,
+            assigned: queued + running,
+        }
+    }
+
+    fn req() -> QueuedReq {
+        QueuedReq {
+            id: 0,
+            arrival: 0.0,
+            s: 4,
+            pred: 8,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let loads = [load(0, 9, 9, 900), load(1, 0, 0, 0), load(2, 0, 0, 0)];
+        let mut rt = RoundRobin::default();
+        let mut rng = Rng::new(1);
+        let picks: Vec<usize> = (0..6).map(|_| rt.route(&req(), &loads, &mut rng)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn jsq_picks_min_depth_with_low_index_ties() {
+        let loads = [load(0, 2, 3, 0), load(1, 1, 1, 500), load(2, 0, 2, 0)];
+        let mut rng = Rng::new(1);
+        assert_eq!(JoinShortestQueue.route(&req(), &loads, &mut rng), 1);
+        let tied = [load(0, 1, 1, 0), load(1, 0, 2, 0)];
+        assert_eq!(JoinShortestQueue.route(&req(), &tied, &mut rng), 0);
+    }
+
+    #[test]
+    fn least_kv_ignores_head_counts() {
+        // Worker 0: many small requests; worker 1: one huge KV claim.
+        let mut a = load(0, 4, 0, 0); // claim 40
+        a.queued_demand = 40;
+        let mut b = load(1, 1, 0, 900); // claim 910
+        b.queued_demand = 10;
+        let mut rng = Rng::new(1);
+        assert_eq!(LeastKvLoad.route(&req(), &[a, b], &mut rng), 0);
+        // JSQ would pick the huge-claim worker (depth 1 < 4).
+        assert_eq!(JoinShortestQueue.route(&req(), &[a, b], &mut rng), 1);
+    }
+
+    #[test]
+    fn po2_single_worker_and_determinism() {
+        let one = [load(0, 5, 5, 0)];
+        let mut rng = Rng::new(7);
+        assert_eq!(PowerOfTwo.route(&req(), &one, &mut rng), 0);
+
+        let loads = [load(0, 9, 0, 0), load(1, 1, 0, 0), load(2, 5, 0, 0)];
+        let a: Vec<usize> = {
+            let mut rng = Rng::new(42);
+            (0..32).map(|_| PowerOfTwo.route(&req(), &loads, &mut rng)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut rng = Rng::new(42);
+            (0..32).map(|_| PowerOfTwo.route(&req(), &loads, &mut rng)).collect()
+        };
+        assert_eq!(a, b, "same seed ⇒ same routing sequence");
+        // The deepest worker can only win when it isn't sampled against
+        // a shallower one; over 32 picks worker 1 must dominate.
+        let ones = a.iter().filter(|&&p| p == 1).count();
+        assert!(ones > 8, "worker 1 picked {ones}/32");
+    }
+
+    #[test]
+    fn po2_picks_shallower_of_two() {
+        // With W=2 both samples are always {0, 1}, so po2 ≡ JSQ.
+        let loads = [load(0, 6, 0, 0), load(1, 2, 0, 0)];
+        let mut rng = Rng::new(3);
+        for _ in 0..16 {
+            assert_eq!(PowerOfTwo.route(&req(), &loads, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn routers_return_worker_ids_on_subset_views() {
+        // A fleet view that excludes worker 1 (e.g. it hit its round
+        // cap): every policy must return a surviving worker's id, not a
+        // position in the subset slice.
+        let loads = [load(0, 5, 0, 50), load(2, 1, 0, 10), load(3, 9, 0, 90)];
+        let mut rng = Rng::new(4);
+        assert_eq!(JoinShortestQueue.route(&req(), &loads, &mut rng), 2);
+        assert_eq!(LeastKvLoad.route(&req(), &loads, &mut rng), 2);
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> = (0..6).map(|_| rr.route(&req(), &loads, &mut rng)).collect();
+        assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
+        for _ in 0..16 {
+            let p = PowerOfTwo.route(&req(), &loads, &mut rng);
+            assert!([0, 2, 3].contains(&p), "po2 returned {p}");
+        }
+        let solo = [load(7, 0, 0, 0)];
+        assert_eq!(PowerOfTwo.route(&req(), &solo, &mut rng), 7);
+    }
+
+    #[test]
+    fn factory_parses_and_rejects() {
+        for (spec, name) in [
+            ("rr", "round-robin"),
+            ("round-robin", "round-robin"),
+            ("jsq", "join-shortest-queue"),
+            ("least-kv", "least-kv-load"),
+            ("po2", "power-of-two"),
+            ("p2c", "power-of-two"),
+        ] {
+            assert_eq!(router_by_name(spec).unwrap().name(), name, "{spec}");
+        }
+        assert!(router_by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! Multi-replica live serving: a [`Router`] in front of N per-worker
+//! [`Coordinator`]s.
+//!
+//! Each worker keeps its own engine, scheduler, and serving thread — the
+//! same single-worker loop as before. The fleet layer adds dispatch:
+//! every worker publishes a [`LoadGauge`] (lock-free atomics updated
+//! once per serving round), and [`FleetCoordinator::submit`] snapshots
+//! the gauges into the router's [`WorkerLoad`] view to pick a worker, at
+//! the submit instant. Unlike the simulator's causal snapshots these are
+//! eventually-consistent (a gauge lags its worker by at most one round),
+//! which is exactly the information a production router has.
+
+use super::driver::{Coordinator, CoordinatorConfig, ServeReply, ServeRequest};
+use crate::cluster::{Router, WorkerLoad};
+use crate::metrics::FleetOutcome;
+use crate::runtime::Engine;
+use crate::sched::Scheduler;
+use crate::sim::cluster::ROUTER_STREAM;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// Live per-worker load counters, published by the worker's serving
+/// loop and read by the fleet router at submit time.
+#[derive(Debug, Default)]
+pub struct LoadGauge {
+    /// Requests waiting for admission.
+    pub queued: AtomicUsize,
+    /// Requests currently decoding.
+    pub running: AtomicUsize,
+    /// KV tokens resident in the running batch.
+    pub kv_used: AtomicU64,
+    /// Queued token demand Σ (s + õ + 1).
+    pub queued_demand: AtomicU64,
+    /// KV budget the worker schedules under (set once at startup).
+    pub kv_budget: AtomicU64,
+    /// Requests routed to this worker (incremented by the fleet).
+    pub assigned: AtomicUsize,
+}
+
+impl LoadGauge {
+    /// Snapshot into the router-facing view.
+    pub fn snapshot(&self, worker: usize) -> WorkerLoad {
+        WorkerLoad {
+            worker,
+            queued: self.queued.load(Ordering::Relaxed),
+            running: self.running.load(Ordering::Relaxed),
+            kv_used: self.kv_used.load(Ordering::Relaxed),
+            kv_budget: self.kv_budget.load(Ordering::Relaxed),
+            queued_demand: self.queued_demand.load(Ordering::Relaxed),
+            assigned: self.assigned.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Handle to a running multi-replica serving fleet.
+pub struct FleetCoordinator {
+    workers: Vec<Coordinator>,
+    gauges: Vec<Arc<LoadGauge>>,
+    /// Router + its private RNG stream, serialized across submitters.
+    router: Mutex<(Box<dyn Router>, Rng)>,
+    t0: Instant,
+}
+
+impl FleetCoordinator {
+    /// Start one serving loop per engine. `scheds` supplies one
+    /// scheduler per worker; worker `w` derives its RNG seed as
+    /// `cfg.seed + w` (mirroring the fleet simulator).
+    pub fn start(
+        engines: Vec<Engine>,
+        scheds: Vec<Box<dyn Scheduler>>,
+        router: Box<dyn Router>,
+        cfg: CoordinatorConfig,
+    ) -> FleetCoordinator {
+        assert!(!engines.is_empty(), "fleet needs at least one engine");
+        assert_eq!(engines.len(), scheds.len(), "one scheduler per engine");
+        let mut workers = Vec::with_capacity(engines.len());
+        let mut gauges = Vec::with_capacity(engines.len());
+        for (w, (engine, sched)) in engines.into_iter().zip(scheds).enumerate() {
+            let gauge = Arc::new(LoadGauge::default());
+            let wcfg = CoordinatorConfig {
+                kv_budget: cfg.kv_budget,
+                seed: cfg.seed.wrapping_add(w as u64),
+                gauge: Some(gauge.clone()),
+            };
+            workers.push(Coordinator::start(engine, sched, wcfg));
+            gauges.push(gauge);
+        }
+        let router_rng = Rng::with_stream(cfg.seed, ROUTER_STREAM);
+        FleetCoordinator {
+            workers,
+            gauges,
+            router: Mutex::new((router, router_rng)),
+            t0: Instant::now(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Route `req` and submit it to the chosen worker. Returns the
+    /// worker index (for observability) and the reply channel.
+    pub fn submit(&self, req: ServeRequest) -> (usize, mpsc::Receiver<ServeReply>) {
+        let loads: Vec<WorkerLoad> = self
+            .gauges
+            .iter()
+            .enumerate()
+            .map(|(i, g)| g.snapshot(i))
+            .collect();
+        let view = crate::core::QueuedReq {
+            id: 0, // live ids are per-worker; the router keys on load only
+            arrival: self.t0.elapsed().as_secs_f64(),
+            s: req.prompt.len().max(1) as u64,
+            pred: req.predicted_new_tokens.max(1),
+        };
+        let pick = {
+            let mut guard = self.router.lock().unwrap();
+            let (router, rng) = &mut *guard;
+            router.route(&view, &loads, rng)
+        };
+        assert!(pick < self.workers.len(), "router picked invalid worker");
+        // Optimistically bump the pick's queue gauges right away: the
+        // worker only republishes once per serving round (overwriting
+        // these with the intaken truth), so without the bump a burst of
+        // submits inside one round would all see identical stale loads
+        // and JSQ/least-kv would pile the whole burst onto one worker.
+        let g = &self.gauges[pick];
+        g.assigned.fetch_add(1, Ordering::Relaxed);
+        g.queued.fetch_add(1, Ordering::Relaxed);
+        g.queued_demand
+            .fetch_add(view.s + view.pred + 1, Ordering::Relaxed);
+        (pick, self.workers[pick].submit(req))
+    }
+
+    /// Stop accepting requests, drain every worker, and return the
+    /// per-worker serving outcomes under one [`FleetOutcome`].
+    pub fn shutdown(self) -> FleetOutcome {
+        let router_name = self.router.lock().unwrap().0.name();
+        let gauges = self.gauges;
+        let per_worker: Vec<_> = self
+            .workers
+            .into_iter()
+            .enumerate()
+            .map(|(w, c)| {
+                let mut out = c.shutdown();
+                out.assigned = gauges[w].assigned.load(Ordering::Relaxed);
+                out
+            })
+            .collect();
+        FleetOutcome::new(&router_name, per_worker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The offline end-to-end exercise of this path (stub engine, real
+    // threads, all four routers) lives in rust/tests/coordinator_offline.rs.
+}

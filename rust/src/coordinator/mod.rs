@@ -6,8 +6,13 @@
 //! prefill/decode steps through the PJRT [`crate::runtime::Engine`], and
 //! resolves each request's completion with its generated tokens and
 //! latency.
+//!
+//! Multi-replica serving runs N of these loops behind a
+//! [`crate::cluster::Router`] via [`FleetCoordinator`].
 
 pub mod driver;
+pub mod fleet;
 pub mod queue;
 
 pub use driver::{Coordinator, CoordinatorConfig, ServeReply, ServeRequest};
+pub use fleet::{FleetCoordinator, LoadGauge};

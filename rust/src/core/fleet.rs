@@ -1,0 +1,92 @@
+//! Fleet-level problem shape: how one logical [`super::Instance`] maps
+//! onto N replica workers.
+//!
+//! The paper models a single worker with one KV budget `M`; a production
+//! deployment runs many replicas behind a router. A [`FleetSpec`] is the
+//! core-layer view of that deployment: the replica count and the
+//! per-worker KV budget (defaulting to the instance's `M` on every
+//! worker, i.e. N identical copies of the paper's machine).
+
+use super::Mem;
+use crate::util::error::{bail, Result};
+
+/// Replica-fleet configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetSpec {
+    /// Number of replica workers (≥ 1).
+    pub workers: usize,
+    /// Per-worker KV budget; `None` inherits the instance's `M` on each
+    /// worker.
+    pub worker_m: Option<Mem>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec::single()
+    }
+}
+
+impl FleetSpec {
+    /// The degenerate one-worker fleet — reduces bit-identically to the
+    /// single-worker engine (`tests/cluster_reduction.rs`).
+    pub fn single() -> FleetSpec {
+        FleetSpec::replicas(1)
+    }
+
+    /// `workers` identical replicas, each with the instance's budget.
+    pub fn replicas(workers: usize) -> FleetSpec {
+        FleetSpec {
+            workers,
+            worker_m: None,
+        }
+    }
+
+    /// The KV budget each worker schedules under.
+    pub fn worker_budget(&self, inst_m: Mem) -> Mem {
+        self.worker_m.unwrap_or(inst_m)
+    }
+
+    /// Aggregate KV capacity across the fleet.
+    pub fn total_budget(&self, inst_m: Mem) -> Mem {
+        self.worker_budget(inst_m) * self.workers as Mem
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("fleet needs at least 1 worker");
+        }
+        if self.worker_m == Some(0) {
+            bail!("per-worker KV budget must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_inherit_or_override() {
+        let spec = FleetSpec::replicas(4);
+        assert_eq!(spec.worker_budget(100), 100);
+        assert_eq!(spec.total_budget(100), 400);
+        let pinned = FleetSpec {
+            workers: 2,
+            worker_m: Some(64),
+        };
+        assert_eq!(pinned.worker_budget(100), 64);
+        assert_eq!(pinned.total_budget(100), 128);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(FleetSpec::single().validate().is_ok());
+        assert!(FleetSpec::replicas(0).validate().is_err());
+        let bad = FleetSpec {
+            workers: 2,
+            worker_m: Some(0),
+        };
+        assert!(bad.validate().is_err());
+    }
+}

@@ -6,10 +6,12 @@
 //! continuous-time simulators.
 
 pub mod batch;
+pub mod fleet;
 pub mod instance;
 pub mod request;
 
 pub use batch::{ActiveReq, FeasItem, QueuedReq};
+pub use fleet::FleetSpec;
 pub use instance::Instance;
 pub use request::{Request, RequestId};
 

@@ -23,6 +23,7 @@
 //! println!("total latency = {}", outcome.total_latency());
 //! ```
 
+pub mod cluster;
 pub mod core;
 pub mod metrics;
 pub mod opt;
@@ -39,8 +40,11 @@ pub mod runtime;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::core::{ActiveReq, Instance, Mem, QueuedReq, Request, RequestId, Round};
-    pub use crate::metrics::SimOutcome;
+    pub use crate::cluster::{router_by_name, Fleet, Router};
+    pub use crate::core::{
+        ActiveReq, FleetSpec, Instance, Mem, QueuedReq, Request, RequestId, Round,
+    };
+    pub use crate::metrics::{FleetOutcome, SimOutcome};
     pub use crate::predictor::Predictor;
     pub use crate::sched::{
         by_name, paper_benchmark_suite, AlphaProtection, FcfsThreshold, McBenchmark, McSf,

@@ -11,19 +11,27 @@
 //!   kvsched gen-trace --workload lmsys --n 1000 --lambda 50 --out trace.json
 //!   kvsched simulate --trace trace.json --algo mcsf
 //!   kvsched simulate --workload lmsys --n 500 --lambda 10 --algo protect:alpha=0.25
+//!   kvsched simulate --n 800 --lambda 50 --workers 4 --router po2
 //!   kvsched suite --n 300 --lambda 50 --seed 1
+//!   kvsched suite --n 300 --lambda 50 --workers 4 --router jsq
 //!   kvsched hindsight --n 8 --m 16 --seed 3
 //!   kvsched serve --artifacts artifacts --n 12 --lambda 2
+//!   kvsched serve --artifacts artifacts --n 24 --workers 2 --router least-kv
+//!
+//! Fleet flags (`simulate` / `suite` / `serve`): `--workers N` runs N
+//! replicas behind `--router rr|jsq|least-kv|po2`; simulated arrival
+//! rates are scaled λ × N so per-worker load stays comparable with the
+//! single-worker baseline (disable with `--no-scale`).
 
 use kvsched::core::{Instance, Request};
-use kvsched::util::error::Result;
-use kvsched::opt::{self, HindsightConfig};
 use kvsched::perf::Llama70bA100x2;
 use kvsched::predictor::Predictor;
 use kvsched::prelude::*;
+use kvsched::opt::{self, HindsightConfig};
 use kvsched::sim::{continuous, discrete, SimConfig};
 use kvsched::util::cli::Args;
-use kvsched::workload::{lmsys::LmsysGen, synthetic};
+use kvsched::util::error::{anyhow, Result};
+use kvsched::workload::{self, lmsys::LmsysGen, synthetic};
 
 fn main() {
     let args = Args::from_env();
@@ -45,6 +53,21 @@ fn main() {
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Fleet flags shared by `simulate` / `suite` / `serve`.
+fn fleet_flags(args: &Args) -> (usize, &str) {
+    (args.usize_or("workers", 1).max(1), args.str_or("router", "po2"))
+}
+
+/// Apply the λ × N load scaling for a `workers`-replica fleet (skipped
+/// with `--no-scale` or for a single worker).
+fn scale_for_fleet(inst: Instance, workers: usize, args: &Args) -> Instance {
+    if workers > 1 && !args.has("no-scale") {
+        workload::scale_arrival_rate(&inst, workers as f64)
+    } else {
+        inst
     }
 }
 
@@ -78,12 +101,32 @@ fn gen_trace(args: &Args) -> Result<()> {
 
 fn simulate(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
-    let mut sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
     let predictor = match args.get("eps") {
         Some(_) => Predictor::uniform_noise(args.f64_or("eps", 0.0), args.u64_or("seed", 0)),
         None => Predictor::exact(),
     };
     let seed = args.u64_or("seed", 0);
+    let (workers, router) = fleet_flags(args);
+
+    if workers > 1 {
+        let inst = scale_for_fleet(inst, workers, args);
+        let mut fleet = Fleet::new(
+            FleetSpec::replicas(workers),
+            args.str_or("algo", "mcsf"),
+            router,
+        )?;
+        let perf = Llama70bA100x2::default();
+        let out = if args.has("unit-time") {
+            fleet.try_simulate(&inst, &predictor, &kvsched::perf::UnitTime, seed, SimConfig::default())
+        } else {
+            fleet.try_simulate(&inst, &predictor, &perf, seed, SimConfig::default())
+        }
+        .map_err(|e| anyhow!("fleet simulation failed: {e}"))?;
+        println!("{}", out.to_json().pretty());
+        return Ok(());
+    }
+
+    let mut sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
     let out = if args.has("unit-time") {
         discrete::simulate_cfg(&inst, sched.as_mut(), &predictor, seed, SimConfig::default())
     } else {
@@ -103,9 +146,49 @@ fn suite(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let perf = Llama70bA100x2::default();
     let seed = args.u64_or("seed", 0);
+    let (workers, router) = fleet_flags(args);
+
+    if workers > 1 {
+        let inst = scale_for_fleet(inst, workers, args);
+        let mut table = kvsched::bench::Table::new(
+            &format!(
+                "benchmark suite, n={} M={} × {workers} workers (router {router})",
+                inst.n(),
+                inst.m
+            ),
+            &[
+                "algorithm",
+                "avg_latency_s",
+                "p95_s",
+                "p99_s",
+                "overflows",
+                "imbalance",
+                "finished",
+            ],
+        );
+        for spec in kvsched::sched::paper_benchmark_specs() {
+            let mut fleet = Fleet::new(FleetSpec::replicas(workers), spec, router)?;
+            let out = fleet
+                .try_simulate(&inst, &Predictor::exact(), &perf, seed, SimConfig::default())
+                .map_err(|e| anyhow!("fleet suite failed for {spec}: {e}"))?;
+            let lat = out.latency_summary();
+            table.row(&[
+                out.algo().to_string(),
+                kvsched::bench::fmt(out.avg_latency()),
+                kvsched::bench::fmt(lat.p95),
+                kvsched::bench::fmt(lat.p99),
+                out.overflow_events().to_string(),
+                kvsched::bench::fmt(out.imbalance().assigned_max_over_mean),
+                out.finished().to_string(),
+            ]);
+        }
+        table.print();
+        return Ok(());
+    }
+
     let mut table = kvsched::bench::Table::new(
         &format!("benchmark suite, n={} M={}", inst.n(), inst.m),
-        &["algorithm", "avg_latency_s", "p95_s", "overflows", "finished"],
+        &["algorithm", "avg_latency_s", "p95_s", "p99_s", "overflows", "finished"],
     );
     for mut sched in kvsched::sched::paper_benchmark_suite() {
         let out = continuous::try_simulate(
@@ -116,10 +199,12 @@ fn suite(args: &Args) -> Result<()> {
             seed,
             SimConfig::default(),
         )?;
+        let lat = out.summary();
         table.row(&[
             out.algo.clone(),
             kvsched::bench::fmt(out.avg_latency()),
-            kvsched::bench::fmt(out.summary().p95),
+            kvsched::bench::fmt(lat.p95),
+            kvsched::bench::fmt(lat.p99),
             out.overflow_events.to_string(),
             out.finished.to_string(),
         ]);
@@ -156,24 +241,75 @@ fn hindsight(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use kvsched::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+    use kvsched::coordinator::{Coordinator, CoordinatorConfig, FleetCoordinator, ServeRequest};
     let dir = args.str_or("artifacts", "artifacts");
-    let engine = kvsched::runtime::Engine::load(dir)?;
-    let sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
-    let coord = Coordinator::start(engine, sched, CoordinatorConfig::default());
-
     let n = args.usize_or("n", 12);
     let lambda = args.f64_or("lambda", 2.0);
     let mut rng = Rng::new(args.u64_or("seed", 0));
-    let mut rxs = Vec::new();
-    for i in 0..n {
+    let (workers, router) = fleet_flags(args);
+    let algo = args.str_or("algo", "mcsf");
+
+    let mk_request = |i: usize, rng: &mut Rng| {
         let o = rng.usize_range(4, 24) as u64;
-        let prompt = format!("user request {i}: please respond").into_bytes();
-        rxs.push(coord.submit(ServeRequest {
-            prompt,
+        ServeRequest {
+            prompt: format!("user request {i}: please respond").into_bytes(),
             max_new_tokens: o,
             predicted_new_tokens: o,
-        }));
+        }
+    };
+
+    if workers > 1 {
+        // λ × N: the fleet absorbs a proportionally heavier arrival
+        // stream at matched per-worker load (disable with --no-scale).
+        let lambda = if args.has("no-scale") {
+            lambda
+        } else {
+            lambda * workers as f64
+        };
+        let engines = (0..workers)
+            .map(|_| kvsched::runtime::Engine::load(dir))
+            .collect::<Result<Vec<_>>>()?;
+        let scheds = (0..workers)
+            .map(|_| kvsched::sched::by_name(algo))
+            .collect::<Result<Vec<_>>>()?;
+        let fleet = FleetCoordinator::start(
+            engines,
+            scheds,
+            kvsched::cluster::router_by_name(router)?,
+            CoordinatorConfig::default(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            let req = mk_request(i, &mut rng);
+            rxs.push(fleet.submit(req).1);
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
+        }
+        let mut latencies = Vec::new();
+        for rx in rxs {
+            latencies.push(rx.recv()?.latency);
+        }
+        let out = fleet.shutdown();
+        println!(
+            "served {} requests on {} workers ({}); assigned {:?}; \
+             avg latency {:.3}s p95 {:.3}s p99 {:.3}s",
+            latencies.len(),
+            out.workers(),
+            out.router,
+            out.assigned(),
+            kvsched::util::stats::mean(&latencies),
+            kvsched::util::stats::percentile(&latencies, 95.0),
+            kvsched::util::stats::percentile(&latencies, 99.0),
+        );
+        return Ok(());
+    }
+
+    let engine = kvsched::runtime::Engine::load(dir)?;
+    let sched = kvsched::sched::by_name(algo)?;
+    let coord = Coordinator::start(engine, sched, CoordinatorConfig::default());
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let req = mk_request(i, &mut rng);
+        rxs.push(coord.submit(req));
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
     }
     let mut latencies = Vec::new();

@@ -29,10 +29,14 @@ impl PerRequest {
     }
 }
 
-/// Full outcome of one simulated (or served) run.
+/// Full outcome of one simulated (or served) run — for a fleet, one of
+/// these per worker (see [`FleetOutcome`]).
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
     pub algo: String,
+    /// Requests routed to this worker (= n for a single-worker run; in a
+    /// fleet the per-worker counts partition the instance).
+    pub assigned: usize,
     pub per_request: Vec<PerRequest>,
     /// (time, KV tokens in use) sampled once per round/iteration.
     pub mem_series: Vec<(f64, u64)>,
@@ -57,6 +61,7 @@ impl SimOutcome {
     pub fn new(algo: &str) -> SimOutcome {
         SimOutcome {
             algo: algo.to_string(),
+            assigned: 0,
             per_request: Vec::new(),
             mem_series: Vec::new(),
             tokens_series: Vec::new(),
@@ -85,6 +90,16 @@ impl SimOutcome {
         self.per_request.iter().map(|r| r.latency()).collect()
     }
 
+    /// Per-request queueing delays `start_i − a_i`.
+    pub fn waits(&self) -> Vec<f64> {
+        self.per_request.iter().map(|r| r.wait()).collect()
+    }
+
+    /// Average queueing delay before (final) start of service.
+    pub fn avg_wait(&self) -> f64 {
+        stats::mean(&self.waits())
+    }
+
     pub fn max_mem(&self) -> u64 {
         self.mem_series
             .iter()
@@ -108,23 +123,208 @@ impl SimOutcome {
         bin_rate(&self.tokens_series, bin)
     }
 
-    /// Compact summary for bench tables.
+    /// Compact latency summary for bench tables.
     pub fn summary(&self) -> stats::Summary {
         stats::Summary::of(&self.latencies())
     }
 
+    /// Queueing-delay summary (same percentile set as [`summary`](Self::summary)).
+    pub fn wait_summary(&self) -> stats::Summary {
+        stats::Summary::of(&self.waits())
+    }
+
     pub fn to_json(&self) -> Json {
+        let lat = self.summary();
+        let wait = self.wait_summary();
         Json::obj()
             .set("algo", self.algo.clone())
             .set("n", self.per_request.len())
+            .set("assigned", self.assigned)
             .set("avg_latency", self.avg_latency())
             .set("total_latency", self.total_latency())
+            .set("latency_p50", lat.p50)
+            .set("latency_p95", lat.p95)
+            .set("latency_p99", lat.p99)
+            .set("avg_wait", wait.mean)
+            .set("wait_p50", wait.p50)
+            .set("wait_p95", wait.p95)
+            .set("wait_p99", wait.p99)
             .set("makespan", self.makespan())
             .set("max_mem", self.max_mem())
             .set("overflow_events", self.overflow_events)
             .set("evicted_requests", self.evicted_requests)
             .set("rounds", self.rounds)
             .set("finished", self.finished)
+    }
+}
+
+/// Load-imbalance statistics across a fleet's workers (1.0 max/mean
+/// ratios = perfectly balanced).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Imbalance {
+    /// max / mean of per-worker assigned-request counts.
+    pub assigned_max_over_mean: f64,
+    /// Sample std-dev of per-worker assigned-request counts.
+    pub assigned_std: f64,
+    /// max / mean of per-worker peak KV usage.
+    pub peak_mem_max_over_mean: f64,
+}
+
+fn max_over_mean(xs: &[f64]) -> f64 {
+    let m = stats::mean(xs);
+    if m <= 0.0 {
+        1.0
+    } else {
+        stats::max(xs) / m
+    }
+}
+
+/// Aggregate outcome of a multi-worker fleet run: one [`SimOutcome`] per
+/// worker plus fleet-level rollups and load-imbalance stats.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    /// Router policy that dispatched the arrivals.
+    pub router: String,
+    pub per_worker: Vec<SimOutcome>,
+}
+
+impl FleetOutcome {
+    pub fn new(router: &str, per_worker: Vec<SimOutcome>) -> FleetOutcome {
+        assert!(!per_worker.is_empty(), "fleet outcome needs ≥ 1 worker");
+        FleetOutcome {
+            router: router.to_string(),
+            per_worker,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.per_worker.len()
+    }
+
+    /// The (shared) per-worker scheduling policy name.
+    pub fn algo(&self) -> &str {
+        &self.per_worker[0].algo
+    }
+
+    /// Requests completed across the whole fleet.
+    pub fn completed(&self) -> usize {
+        self.per_worker.iter().map(|w| w.per_request.len()).sum()
+    }
+
+    /// Requests routed to each worker (sums to the instance size).
+    pub fn assigned(&self) -> Vec<usize> {
+        self.per_worker.iter().map(|w| w.assigned).collect()
+    }
+
+    /// True only if every worker completed everything routed to it.
+    pub fn finished(&self) -> bool {
+        self.per_worker.iter().all(|w| w.finished)
+    }
+
+    /// Requests routed but never completed (only nonzero when a worker
+    /// hit its round/stall cap and its residual queue was truncated) —
+    /// the latency/throughput rollups cover completed requests only, so
+    /// check this before trusting them on an unfinished run.
+    pub fn unserved(&self) -> usize {
+        let assigned: usize = self.per_worker.iter().map(|w| w.assigned).sum();
+        assigned.saturating_sub(self.completed())
+    }
+
+    /// Rounds executed summed over workers (the fleet's total work).
+    pub fn total_rounds(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.rounds).sum()
+    }
+
+    pub fn overflow_events(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.overflow_events).sum()
+    }
+
+    /// All completed requests' end-to-end latencies, fleet-wide.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.per_worker.iter().flat_map(|w| w.latencies()).collect()
+    }
+
+    /// All completed requests' queueing delays, fleet-wide.
+    pub fn waits(&self) -> Vec<f64> {
+        self.per_worker.iter().flat_map(|w| w.waits()).collect()
+    }
+
+    pub fn total_latency(&self) -> f64 {
+        self.per_worker.iter().map(|w| w.total_latency()).sum()
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        let n = self.completed();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_latency() / n as f64
+        }
+    }
+
+    /// Completion time of the last request anywhere in the fleet.
+    pub fn makespan(&self) -> f64 {
+        self.per_worker.iter().map(|w| w.makespan()).fold(0.0, f64::max)
+    }
+
+    /// Completed requests per unit (simulated) time across the fleet.
+    pub fn throughput(&self) -> f64 {
+        let span = self.makespan();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / span
+        }
+    }
+
+    pub fn latency_summary(&self) -> stats::Summary {
+        stats::Summary::of(&self.latencies())
+    }
+
+    pub fn wait_summary(&self) -> stats::Summary {
+        stats::Summary::of(&self.waits())
+    }
+
+    /// How unevenly the router spread the load.
+    pub fn imbalance(&self) -> Imbalance {
+        let assigned: Vec<f64> = self.per_worker.iter().map(|w| w.assigned as f64).collect();
+        let peaks: Vec<f64> = self.per_worker.iter().map(|w| w.peak_mem as f64).collect();
+        Imbalance {
+            assigned_max_over_mean: max_over_mean(&assigned),
+            assigned_std: stats::sample_std_dev(&assigned),
+            peak_mem_max_over_mean: max_over_mean(&peaks),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let lat = self.latency_summary();
+        let wait = self.wait_summary();
+        let imb = self.imbalance();
+        let per_worker: Vec<Json> = self.per_worker.iter().map(SimOutcome::to_json).collect();
+        Json::obj()
+            .set("router", self.router.clone())
+            .set("algo", self.algo())
+            .set("workers", self.workers())
+            .set("completed", self.completed())
+            .set("unserved", self.unserved())
+            .set("finished", self.finished())
+            .set("total_rounds", self.total_rounds())
+            .set("overflow_events", self.overflow_events())
+            .set("avg_latency", self.avg_latency())
+            .set("total_latency", self.total_latency())
+            .set("latency_p50", lat.p50)
+            .set("latency_p95", lat.p95)
+            .set("latency_p99", lat.p99)
+            .set("avg_wait", wait.mean)
+            .set("wait_p50", wait.p50)
+            .set("wait_p95", wait.p95)
+            .set("wait_p99", wait.p99)
+            .set("makespan", self.makespan())
+            .set("throughput_req_per_s", self.throughput())
+            .set("imbalance_assigned", imb.assigned_max_over_mean)
+            .set("imbalance_assigned_std", imb.assigned_std)
+            .set("imbalance_peak_mem", imb.peak_mem_max_over_mean)
+            .set("per_worker", Json::Arr(per_worker))
     }
 }
 
@@ -217,5 +417,73 @@ mod tests {
         let j = outcome().to_json();
         assert_eq!(j.req_f64("avg_latency").unwrap(), 7.0);
         assert_eq!(j.req_str("algo").unwrap(), "test");
+        // Queueing-wait percentiles ride along with latency.
+        assert_eq!(j.req_f64("avg_wait").unwrap(), 1.0);
+        assert!(j.get("wait_p99").is_some());
+        assert!(j.get("latency_p99").is_some());
+    }
+
+    fn fleet() -> FleetOutcome {
+        let mut a = outcome();
+        a.assigned = 2;
+        a.peak_mem = 9;
+        let mut b = SimOutcome::new("test");
+        b.assigned = 4;
+        b.peak_mem = 3;
+        b.finished = true;
+        b.rounds = 5;
+        b.per_request = vec![PerRequest {
+            id: 2,
+            arrival: 1.0,
+            start: 1.0,
+            completion: 4.0,
+            restarts: 0,
+        }];
+        FleetOutcome::new("jsq", vec![a, b])
+    }
+
+    #[test]
+    fn fleet_aggregates() {
+        let f = fleet();
+        assert_eq!(f.workers(), 2);
+        assert_eq!(f.completed(), 3);
+        assert_eq!(f.assigned(), vec![2, 4]);
+        assert_eq!(f.unserved(), 6 - 3);
+        assert!(f.finished());
+        // Latencies: 5, 9 (worker 0) + 3 (worker 1).
+        assert_eq!(f.total_latency(), 17.0);
+        assert!((f.avg_latency() - 17.0 / 3.0).abs() < 1e-12);
+        assert_eq!(f.makespan(), 11.0);
+        assert!((f.throughput() - 3.0 / 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_imbalance() {
+        let f = fleet();
+        let imb = f.imbalance();
+        // assigned = [2, 4]: mean 3, max 4.
+        assert!((imb.assigned_max_over_mean - 4.0 / 3.0).abs() < 1e-12);
+        assert!(imb.assigned_std > 0.0);
+        // peaks = [9, 3]: mean 6, max 9.
+        assert!((imb.peak_mem_max_over_mean - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_json_shape() {
+        let j = fleet().to_json();
+        assert_eq!(j.req_str("router").unwrap(), "jsq");
+        assert_eq!(j.req_usize("workers").unwrap(), 2);
+        assert_eq!(j.req_usize("completed").unwrap(), 3);
+        assert_eq!(j.req_arr("per_worker").unwrap().len(), 2);
+        assert!(j.get("imbalance_assigned").is_some());
+    }
+
+    #[test]
+    fn single_worker_fleet_mirrors_outcome() {
+        let o = outcome();
+        let f = FleetOutcome::new("rr", vec![o.clone()]);
+        assert_eq!(f.total_latency(), o.total_latency());
+        assert_eq!(f.makespan(), o.makespan());
+        assert_eq!(f.imbalance().assigned_max_over_mean, 1.0);
     }
 }

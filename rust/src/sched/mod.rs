@@ -150,19 +150,30 @@ pub fn by_name(spec: &str) -> Result<Box<dyn Scheduler>> {
     }
 }
 
+/// Spec strings ([`by_name`] grammar) for the §5.2 benchmark set, in
+/// the paper's presentation order. Exposed separately from
+/// [`paper_benchmark_suite`] because a fleet needs one scheduler
+/// *instance per worker* — build N copies of each spec via [`by_name`].
+pub fn paper_benchmark_specs() -> Vec<&'static str> {
+    vec![
+        "mcsf",
+        "mc-benchmark",
+        "protect:alpha=0.3",
+        "protect:alpha=0.25",
+        "protect:alpha=0.2,beta=0.2",
+        "protect:alpha=0.2,beta=0.1",
+        "protect:alpha=0.1,beta=0.2",
+        "protect:alpha=0.1,beta=0.1",
+    ]
+}
+
 /// The benchmark set evaluated in §5.2 (Fig 3, Table 1), in the paper's
 /// presentation order.
 pub fn paper_benchmark_suite() -> Vec<Box<dyn Scheduler>> {
-    vec![
-        Box::new(McSf::default()),
-        Box::new(McBenchmark::default()),
-        Box::new(AlphaProtection::new(0.3, 1.0)),
-        Box::new(AlphaProtection::new(0.25, 1.0)),
-        Box::new(AlphaProtection::new(0.2, 0.2)),
-        Box::new(AlphaProtection::new(0.2, 0.1)),
-        Box::new(AlphaProtection::new(0.1, 0.2)),
-        Box::new(AlphaProtection::new(0.1, 0.1)),
-    ]
+    paper_benchmark_specs()
+        .iter()
+        .map(|spec| by_name(spec).expect("builtin spec parses"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -192,5 +203,23 @@ mod tests {
     #[test]
     fn suite_has_eight_algorithms() {
         assert_eq!(paper_benchmark_suite().len(), 8);
+    }
+
+    #[test]
+    fn suite_matches_specs_and_paper_names() {
+        let names: Vec<String> = paper_benchmark_suite().iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "MC-SF",
+                "MC-Benchmark",
+                "α=0.3",
+                "α=0.25",
+                "α=0.2,β=0.2",
+                "α=0.2,β=0.1",
+                "α=0.1,β=0.2",
+                "α=0.1,β=0.1",
+            ]
+        );
     }
 }

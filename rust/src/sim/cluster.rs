@@ -1,0 +1,330 @@
+//! Multi-worker fleet simulation: N [`WorkerSim`]s behind a
+//! [`Router`].
+//!
+//! ## Event discipline (causal routing)
+//!
+//! Two event kinds interleave on the simulated clock: global request
+//! arrivals and per-worker batch formations. The loop always handles the
+//! earliest one; an arrival that ties a formation time goes first (the
+//! single-worker engine releases `arrival ≤ t` before forming the batch
+//! at `t`, and the reduction property needs the same gating here). When
+//! an arrival is routed, every busy worker's next formation time is
+//! ≥ the arrival instant — i.e. each worker has finished all rounds
+//! formed before it — so the [`WorkerLoad`] snapshot the router sees is
+//! exactly the fleet state at that instant. Online routers (JSQ,
+//! least-KV, po2) therefore make honest online decisions, not
+//! clairvoyant ones.
+//!
+//! ## Determinism & reduction
+//!
+//! Worker `w` owns scheduler RNG stream `seed + w`; the router draws
+//! from a separate stream, so routing randomness never perturbs any
+//! worker's scheduler stream. With one worker the driver delivers every
+//! arrival to worker 0 at exactly the points the single-worker driver
+//! does and worker 0's stream is `seed` itself, so the per-worker
+//! [`SimOutcome`] is bit-identical to [`super::engine::run`] — enforced
+//! across the incremental-diff corpus by `tests/cluster_reduction.rs`.
+//!
+//! Each worker still runs the O(Δ)-per-round incremental hook path; the
+//! fleet loop adds an O(W) scan per event to find the earliest formation
+//! time (W ≤ dozens here; a formation-time heap would drop this to
+//! O(log W) if fleets ever grow past that).
+
+use super::engine::{clamped_predictions, SimConfig, SimError, WaitState, WorkerSim};
+use crate::cluster::router::{Router, WorkerLoad};
+use crate::core::{Instance, QueuedReq};
+use crate::metrics::FleetOutcome;
+use crate::perf::PerfModel;
+use crate::predictor::Predictor;
+use crate::sched::Scheduler;
+use crate::util::rng::Rng;
+
+/// RNG stream tag for router randomness (distinct from every worker's
+/// scheduler stream, which uses the default stream of `seed + w`).
+/// Shared with the live path (`coordinator::fleet`) so sim and serving
+/// derive router randomness identically.
+pub(crate) const ROUTER_STREAM: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// Run one policy-per-worker fleet over one instance. `scheds` supplies
+/// one scheduler instance per worker (they may be the same policy —
+/// build N copies via [`crate::sched::by_name`]); `worker_m` overrides
+/// the per-worker KV budget (default: the instance's `M` per worker).
+/// Deterministic given `seed`.
+pub fn run_fleet(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    router: &mut dyn Router,
+    worker_m: Option<u64>,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<FleetOutcome, SimError> {
+    let w_count = scheds.len();
+    assert!(w_count >= 1, "fleet needs at least one worker");
+    let m = worker_m.unwrap_or(inst.m);
+    for r in &inst.requests {
+        if r.peak_mem() > m {
+            return Err(SimError::Infeasible {
+                id: r.id,
+                peak: r.peak_mem(),
+                m,
+            });
+        }
+    }
+
+    let n = inst.requests.len();
+    let preds = clamped_predictions(inst, predictor, m);
+    let mut workers: Vec<WorkerSim> = scheds
+        .iter_mut()
+        .enumerate()
+        .map(|(w, sched)| {
+            let incremental = cfg.incremental && sched.supports_incremental();
+            if incremental {
+                sched.on_reset();
+            }
+            WorkerSim::new(
+                n,
+                m,
+                &sched.name(),
+                seed.wrapping_add(w as u64),
+                cfg,
+                incremental,
+            )
+        })
+        .collect();
+    let mut router_rng = Rng::with_stream(seed, ROUTER_STREAM);
+    let mut loads: Vec<WorkerLoad> = Vec::with_capacity(w_count);
+    let mut next_arrival = 0usize;
+
+    loop {
+        // Earliest next batch formation across busy workers (ties break
+        // toward the lowest worker index).
+        let mut next_step: Option<(f64, usize)> = None;
+        for (i, w) in workers.iter().enumerate() {
+            if let Some(ft) = w.next_time() {
+                if next_step.map_or(true, |(bt, _)| ft < bt) {
+                    next_step = Some((ft, i));
+                }
+            }
+        }
+
+        // Route the next arrival when it lands at or before every
+        // pending formation: the snapshot below is then causal.
+        let arrival_due = next_arrival < n
+            && next_step.map_or(true, |(bt, _)| inst.requests[next_arrival].arrival <= bt);
+        if arrival_due {
+            let r = &inst.requests[next_arrival];
+            let view = QueuedReq {
+                id: r.id,
+                arrival: r.arrival,
+                s: r.prompt_len,
+                pred: preds[r.id],
+            };
+            // Stopped workers (round/stall-cap hits) can never serve
+            // again — keep them out of the routing view so their frozen
+            // queues don't keep attracting (and black-holing) arrivals.
+            loads.clear();
+            loads.extend(
+                workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| !w.stopped())
+                    .map(|(i, w)| WorkerLoad {
+                        worker: i,
+                        queued: w.queued_len(),
+                        running: w.running_len(),
+                        kv_used: w.kv_used(),
+                        kv_budget: w.budget(),
+                        queued_demand: w.queued_demand(),
+                        assigned: w.assigned(),
+                    }),
+            );
+            let pick = if loads.is_empty() {
+                // Every worker capped out: the request is unservable;
+                // park it on worker 0 (it shows up in assigned − served).
+                0
+            } else {
+                let id = router.route(&view, &loads, &mut router_rng);
+                assert!(
+                    id < w_count && loads.iter().any(|l| l.worker == id),
+                    "router '{}' picked worker {id} outside the live view",
+                    router.name()
+                );
+                id
+            };
+            workers[pick].deliver(WaitState {
+                id: r.id,
+                arrival: r.arrival,
+                s: r.prompt_len,
+                o_true: r.output_len,
+                pred: preds[r.id],
+            });
+            next_arrival += 1;
+            continue;
+        }
+
+        let Some((_, i)) = next_step else {
+            break; // no arrivals left, no busy workers: done
+        };
+        workers[i].step(scheds[i].as_mut(), perf)?;
+    }
+
+    Ok(FleetOutcome::new(
+        &router.name(),
+        workers.into_iter().map(WorkerSim::finish).collect(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::router::{JoinShortestQueue, RoundRobin};
+    use crate::core::Request;
+    use crate::perf::UnitTime;
+    use crate::sched::{by_name, McSf};
+
+    fn scheds(n: usize) -> Vec<Box<dyn Scheduler>> {
+        (0..n).map(|_| by_name("mcsf").unwrap()).collect()
+    }
+
+    #[test]
+    fn two_workers_split_simultaneous_arrivals() {
+        // Two identical requests at t = 0 and a budget that fits only
+        // one at a time per worker: a 2-worker fleet with JSQ runs them
+        // fully in parallel (latency 4 each), where one worker must
+        // serialize (4 + 8).
+        let inst = Instance::new(
+            10,
+            vec![Request::new(0, 0.0, 4, 4), Request::new(1, 0.0, 4, 4)],
+        );
+        let mut s = scheds(2);
+        let mut router = JoinShortestQueue;
+        let out = run_fleet(
+            &inst,
+            &mut s,
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert!(out.finished());
+        assert_eq!(out.completed(), 2);
+        assert_eq!(out.assigned(), vec![1, 1]);
+        assert_eq!(out.total_latency(), 8.0);
+    }
+
+    #[test]
+    fn every_request_completes_exactly_once() {
+        use crate::workload::synthetic;
+        let mut rng = Rng::new(5);
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let mut s = scheds(3);
+        let mut router = RoundRobin::default();
+        let out = run_fleet(
+            &inst,
+            &mut s,
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert!(out.finished());
+        assert_eq!(out.completed(), inst.n());
+        assert_eq!(out.assigned().iter().sum::<usize>(), inst.n());
+        let mut seen = vec![false; inst.n()];
+        for w in &out.per_worker {
+            for r in &w.per_request {
+                assert!(!seen[r.id], "request {} completed twice", r.id);
+                seen[r.id] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn per_worker_budget_override_is_enforced() {
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 4, 4)]);
+        let mut s = scheds(2);
+        let mut router = RoundRobin::default();
+        let err = run_fleet(
+            &inst,
+            &mut s,
+            &mut router,
+            Some(6), // peak 8 > 6: infeasible on every worker
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig::default(),
+        );
+        assert!(matches!(err, Err(SimError::Infeasible { m: 6, .. })));
+    }
+
+    #[test]
+    fn capped_workers_report_unserved_requests() {
+        // The §5.2 livelock construction (β = 1 clears everything and
+        // deterministic re-admission recreates the state) on every
+        // worker: the fleet must stop at its caps, report the truncated
+        // requests as unserved, and never lose count of an assignment.
+        let reqs: Vec<Request> = (0..24).map(|i| Request::new(i, 0.0, 2, 20)).collect();
+        let inst = Instance::new(60, reqs);
+        let mut s: Vec<Box<dyn Scheduler>> = (0..2)
+            .map(|_| by_name("protect:alpha=0.05").unwrap())
+            .collect();
+        let mut router = RoundRobin::default();
+        let out = run_fleet(
+            &inst,
+            &mut s,
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig {
+                max_rounds: 4000,
+                record_series: false,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(!out.finished(), "small-α greedy should livelock per worker");
+        assert_eq!(out.assigned().iter().sum::<usize>(), inst.n());
+        assert_eq!(out.unserved(), inst.n() - out.completed());
+        assert!(out.unserved() > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        use crate::cluster::router::PowerOfTwo;
+        use crate::workload::synthetic;
+        let mut rng = Rng::new(9);
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let run_once = || {
+            let mut s: Vec<Box<dyn Scheduler>> =
+                (0..4).map(|_| Box::new(McSf::default()) as Box<dyn Scheduler>).collect();
+            let mut router = PowerOfTwo;
+            run_fleet(
+                &inst,
+                &mut s,
+                &mut router,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                7,
+                SimConfig::default(),
+            )
+            .unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.assigned(), b.assigned());
+        assert_eq!(a.total_latency().to_bits(), b.total_latency().to_bits());
+        assert_eq!(a.total_rounds(), b.total_rounds());
+    }
+}

@@ -27,6 +27,18 @@
 //! bookkeeping is O(1) per admitted id through dense id→slot maps either
 //! way (L3 change 5 — this replaced a per-round `vec![false; n]` dedup
 //! allocation and O(W) `position`/`remove` scans).
+//!
+//! ## Worker abstraction
+//!
+//! All per-worker state (clock, queue, running batch, RNG stream,
+//! outcome) lives in [`WorkerSim`], and the whole round — arrival
+//! release, admission, overflow clearing, execution, completions — is
+//! [`WorkerSim::step`]. The single-worker [`run`] below is a thin driver
+//! that delivers the instance's arrivals to one `WorkerSim`; the fleet
+//! engine ([`crate::sim::cluster`]) drives N of them behind a
+//! [`crate::cluster::Router`] with the *same* delivery discipline, which
+//! is what makes a 1-worker fleet bit-identical to this function
+//! (`tests/cluster_reduction.rs`).
 
 use crate::core::{ActiveReq, Instance, QueuedReq, RequestId};
 use crate::metrics::{PerRequest, SimOutcome};
@@ -34,6 +46,7 @@ use crate::perf::{BatchComposition, PerfModel};
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
 use crate::util::rng::Rng;
+use std::collections::VecDeque;
 use std::fmt;
 
 /// Engine limits / options.
@@ -92,6 +105,7 @@ impl std::error::Error for SimError {}
 #[derive(Debug, Clone)]
 struct ActiveState {
     id: RequestId,
+    arrival: f64,
     s: u64,
     o_true: u64,
     pred: u64,
@@ -112,13 +126,14 @@ impl ActiveState {
     }
 }
 
+/// A routed request on its way into (or back into) a worker's queue.
 #[derive(Debug, Clone)]
-struct WaitState {
-    id: RequestId,
-    arrival: f64,
-    s: u64,
-    o_true: u64,
-    pred: u64,
+pub(crate) struct WaitState {
+    pub(crate) id: RequestId,
+    pub(crate) arrival: f64,
+    pub(crate) s: u64,
+    pub(crate) o_true: u64,
+    pub(crate) pred: u64,
 }
 
 impl WaitState {
@@ -134,6 +149,347 @@ impl WaitState {
 
 /// Sentinel for "id not present" in the dense slot maps.
 const NO_SLOT: usize = usize::MAX;
+
+/// Predictions clamped to what can physically fit under budget `m`
+/// (õ ≤ m − s): predicting beyond the whole KV budget would make a
+/// feasible request permanently unschedulable under the Eq-(5) check.
+/// Since feasible instances have `o ≤ m − s`, clamping preserves `õ ≥ o`
+/// for over-predictors.
+pub(crate) fn clamped_predictions(inst: &Instance, predictor: &Predictor, m: u64) -> Vec<u64> {
+    inst.requests
+        .iter()
+        .map(|r| predictor.predict(r).min(m - r.prompt_len).max(1))
+        .collect()
+}
+
+/// One worker's complete simulation state: KV budget, clock, waiting
+/// queue, running batch, scheduler RNG stream, and outcome recording.
+///
+/// The single-worker [`run`] drives exactly one `WorkerSim`; the fleet
+/// engine (`sim::cluster::run_fleet`) drives N of them behind a router.
+/// Both deliver arrivals through [`WorkerSim::deliver`] and advance time
+/// through [`WorkerSim::step`], which performs a whole round: release
+/// delivered arrivals with `arrival ≤ t`, ask the scheduler for
+/// admissions (incremental hooks or snapshot views), validate them in
+/// O(1) via the dense slot maps, then either clear on KV overflow or
+/// execute the iteration and record completions. Steady-state cost is
+/// O(Δ) per round per worker.
+pub(crate) struct WorkerSim {
+    m: u64,
+    cfg: SimConfig,
+    incremental: bool,
+    rng: Rng,
+    outcome: SimOutcome,
+    records: Vec<Option<PerRequest>>,
+    restarts: Vec<u32>,
+    /// Routed deliveries not yet released into `waiting`. Drivers
+    /// deliver in global arrival order, so this stays arrival-sorted.
+    pending: VecDeque<WaitState>,
+    waiting: Vec<WaitState>,
+    active: Vec<ActiveState>,
+    // Dense id → position maps for `waiting` / `active`. One allocation
+    // per run buys O(1) admission validation+removal (the cleared slot
+    // doubles as the duplicate check) where the old loop paid a
+    // `vec![false; n]` allocation plus an O(W) `position` scan per
+    // admitted id, every round.
+    wait_slot: Vec<usize>,
+    act_slot: Vec<usize>,
+    /// Σ (s + õ + 1) over `pending` + `waiting`: the queued token demand
+    /// read by the least-KV-load router key.
+    queued_demand: u64,
+    t: f64,
+    round: u64,
+    last_completion_round: u64,
+    stopped: bool,
+    // View buffers reused across rounds; the snapshot path refills them
+    // every round, the incremental path only on (rare) overflow events.
+    active_views: Vec<ActiveReq>,
+    waiting_views: Vec<QueuedReq>,
+}
+
+impl WorkerSim {
+    /// `n` is the instance-wide request count (ids are global, so the
+    /// slot maps are sized for all of them even when this worker only
+    /// ever sees a routed subset).
+    pub(crate) fn new(
+        n: usize,
+        m: u64,
+        algo: &str,
+        seed: u64,
+        cfg: SimConfig,
+        incremental: bool,
+    ) -> WorkerSim {
+        WorkerSim {
+            m,
+            cfg,
+            incremental,
+            rng: Rng::new(seed),
+            outcome: SimOutcome::new(algo),
+            records: vec![None; n],
+            restarts: vec![0; n],
+            pending: VecDeque::new(),
+            waiting: Vec::new(),
+            active: Vec::new(),
+            wait_slot: vec![NO_SLOT; n],
+            act_slot: vec![NO_SLOT; n],
+            queued_demand: 0,
+            t: 0.0,
+            round: 0,
+            last_completion_round: 0,
+            stopped: false,
+            active_views: Vec::new(),
+            waiting_views: Vec::new(),
+        }
+    }
+
+    /// Hand a routed request to this worker. It joins the waiting queue
+    /// (and fires `on_arrival`) at the first round formed at `t ≥
+    /// arrival`, matching the classic single-worker release gating.
+    pub(crate) fn deliver(&mut self, w: WaitState) {
+        self.outcome.assigned += 1;
+        self.queued_demand += w.s + w.pred + 1;
+        self.pending.push_back(w);
+    }
+
+    /// Whether this worker still has anything to do (stopped workers —
+    /// round-cap / stall-cap hits — absorb deliveries but never run).
+    pub(crate) fn busy(&self) -> bool {
+        !self.stopped
+            && !(self.active.is_empty() && self.waiting.is_empty() && self.pending.is_empty())
+    }
+
+    /// Formation time of this worker's next batch: `t` while requests
+    /// are queued or running, the earliest delivered arrival when idle
+    /// (the idle fast-forward), `None` when there is nothing to do.
+    pub(crate) fn next_time(&self) -> Option<f64> {
+        if self.stopped {
+            return None;
+        }
+        if !self.active.is_empty() || !self.waiting.is_empty() {
+            Some(self.t)
+        } else {
+            self.pending.front().map(|w| self.t.max(w.arrival))
+        }
+    }
+
+    // ----- router-facing load accessors ---------------------------------
+
+    pub(crate) fn queued_len(&self) -> usize {
+        self.waiting.len() + self.pending.len()
+    }
+
+    pub(crate) fn running_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// KV tokens the running batch will hold next round (Σ s + done + 1).
+    pub(crate) fn kv_used(&self) -> u64 {
+        self.active.iter().map(|a| a.s + a.done + 1).sum()
+    }
+
+    pub(crate) fn queued_demand(&self) -> u64 {
+        self.queued_demand
+    }
+
+    pub(crate) fn budget(&self) -> u64 {
+        self.m
+    }
+
+    pub(crate) fn assigned(&self) -> usize {
+        self.outcome.assigned
+    }
+
+    /// Whether a round/stall cap permanently halted this worker.
+    pub(crate) fn stopped(&self) -> bool {
+        self.stopped
+    }
+
+    /// Execute one round at `next_time()`. No-op on a worker with
+    /// nothing to do.
+    pub(crate) fn step(
+        &mut self,
+        sched: &mut dyn Scheduler,
+        perf: &dyn PerfModel,
+    ) -> Result<(), SimError> {
+        let Some(ft) = self.next_time() else {
+            return Ok(());
+        };
+        self.t = ft;
+
+        // Release delivered arrivals up to the formation time.
+        while self.pending.front().map_or(false, |w| w.arrival <= self.t) {
+            let w = self.pending.pop_front().unwrap();
+            self.wait_slot[w.id] = self.waiting.len();
+            if self.incremental {
+                sched.on_arrival(&w.view());
+            }
+            self.waiting.push(w);
+        }
+
+        self.round += 1;
+        if self.round > self.cfg.max_rounds
+            || self
+                .round
+                .saturating_sub(self.last_completion_round)
+                > self.cfg.stall_rounds
+        {
+            self.outcome.finished = false;
+            self.outcome.rounds = self.round - 1;
+            self.stopped = true;
+            return Ok(());
+        }
+
+        // Scheduler decision: per-event state for hook-aware policies,
+        // full snapshots for the rest.
+        let admitted = if self.incremental {
+            sched.admit_incremental(self.round, self.m, &mut self.rng)
+        } else {
+            self.active_views.clear();
+            self.active_views.extend(self.active.iter().map(ActiveState::view));
+            self.waiting_views.clear();
+            self.waiting_views.extend(self.waiting.iter().map(WaitState::view));
+            sched.admit(
+                self.round,
+                self.m,
+                &self.active_views,
+                &self.waiting_views,
+                &mut self.rng,
+            )
+        };
+
+        // Validate and move admitted requests into the running set.
+        let n = self.wait_slot.len();
+        let mut prefill_tokens = 0u64;
+        for &id in &admitted {
+            if id >= n || self.wait_slot[id] == NO_SLOT {
+                return Err(SimError::BadAdmission(id));
+            }
+            let slot = self.wait_slot[id];
+            self.wait_slot[id] = NO_SLOT;
+            let w = self.waiting.swap_remove(slot);
+            if let Some(moved) = self.waiting.get(slot) {
+                self.wait_slot[moved.id] = slot;
+            }
+            if self.incremental {
+                sched.on_admit(&w.view(), self.round);
+            }
+            prefill_tokens += w.s;
+            self.queued_demand -= w.s + w.pred + 1;
+            self.act_slot[w.id] = self.active.len();
+            self.active.push(ActiveState {
+                id: w.id,
+                arrival: w.arrival,
+                s: w.s,
+                o_true: w.o_true,
+                pred: w.pred,
+                done: 0,
+                started_round: self.round,
+                start_time: self.t,
+            });
+        }
+
+        // Actual memory needed to run this round.
+        let usage: u64 = self.active.iter().map(|a| a.s + a.done + 1).sum();
+        let batch = BatchComposition {
+            prefill_tokens,
+            decode_reqs: self.active.len() as u64,
+            kv_tokens: usage,
+        };
+
+        if usage > self.m {
+            // KV overflow: clearing event (rare — views built on demand).
+            self.outcome.overflow_events += 1;
+            self.active_views.clear();
+            self.active_views.extend(self.active.iter().map(ActiveState::view));
+            let evicted = sched.on_overflow(&self.active_views, &mut self.rng);
+            self.t += perf.clearing_time(&batch);
+            let mut post_usage = usage;
+            for id in evicted {
+                if id >= n || self.act_slot[id] == NO_SLOT {
+                    continue;
+                }
+                let pos = self.act_slot[id];
+                // Ordered remove: `active` stays in admission order (the
+                // clearing policies consume per-item randomness in view
+                // order, so the order is behavior-relevant); patch the
+                // slots of everything shifted down.
+                let a = self.active.remove(pos);
+                self.act_slot[a.id] = NO_SLOT;
+                for (i, rest) in self.active[pos..].iter().enumerate() {
+                    self.act_slot[rest.id] = pos + i;
+                }
+                post_usage -= a.s + a.done + 1;
+                self.restarts[a.id] += 1;
+                self.outcome.evicted_requests += 1;
+                let w = WaitState {
+                    id: a.id,
+                    arrival: a.arrival,
+                    s: a.s,
+                    o_true: a.o_true,
+                    pred: a.pred,
+                };
+                self.wait_slot[w.id] = self.waiting.len();
+                if self.incremental {
+                    sched.on_evict(&w.view());
+                }
+                self.queued_demand += w.s + w.pred + 1;
+                self.waiting.push(w);
+            }
+            if self.cfg.record_series {
+                self.outcome.mem_series.push((self.t, post_usage));
+            }
+            return Ok(());
+        }
+
+        // Execute the iteration.
+        self.t += perf.iteration_time(&batch);
+        self.outcome.peak_mem = self.outcome.peak_mem.max(usage);
+        if self.cfg.record_series {
+            self.outcome.mem_series.push((self.t, usage));
+            self.outcome
+                .tokens_series
+                .push((self.t, batch.tokens_processed()));
+        }
+
+        // Token production + completions.
+        let mut i = 0;
+        while i < self.active.len() {
+            self.active[i].done += 1;
+            if self.active[i].done >= self.active[i].o_true {
+                let a = self.active.swap_remove(i);
+                self.act_slot[a.id] = NO_SLOT;
+                if let Some(moved) = self.active.get(i) {
+                    self.act_slot[moved.id] = i;
+                }
+                if self.incremental {
+                    sched.on_complete(a.id);
+                }
+                self.records[a.id] = Some(PerRequest {
+                    id: a.id,
+                    arrival: a.arrival,
+                    start: a.start_time,
+                    completion: self.t,
+                    restarts: self.restarts[a.id],
+                });
+                self.last_completion_round = self.round;
+            } else {
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the worker's outcome. A stopped worker keeps the
+    /// `finished = false` / truncated round count its cap hit recorded.
+    pub(crate) fn finish(mut self) -> SimOutcome {
+        if !self.stopped {
+            self.outcome.rounds = self.round;
+            self.outcome.finished = true;
+        }
+        self.outcome.per_request = self.records.into_iter().flatten().collect();
+        self.outcome
+    }
+}
 
 /// Run one policy over one instance. Deterministic given `seed`.
 pub fn run(
@@ -155,229 +511,41 @@ pub fn run(
     }
 
     let n = inst.requests.len();
-    // Predictions are clamped to what can physically fit (õ ≤ M − s):
-    // predicting beyond the whole KV budget would make a feasible
-    // request permanently unschedulable under the Eq-(5) check. Since
-    // the instance is feasible (o ≤ M − s), clamping preserves õ ≥ o
-    // for over-predictors.
-    let preds: Vec<u64> = inst
-        .requests
-        .iter()
-        .map(|r| {
-            predictor
-                .predict(r)
-                .min(inst.m - r.prompt_len)
-                .max(1)
-        })
-        .collect();
-
-    let mut rng = Rng::new(seed);
-    let mut outcome = SimOutcome::new(&sched.name());
-    let mut records: Vec<Option<PerRequest>> = vec![None; n];
-    let mut restarts: Vec<u32> = vec![0; n];
-
+    let preds = clamped_predictions(inst, predictor, inst.m);
     let incremental = cfg.incremental && sched.supports_incremental();
     if incremental {
         sched.on_reset();
     }
 
-    let mut waiting: Vec<WaitState> = Vec::new();
-    let mut active: Vec<ActiveState> = Vec::new();
-    // Dense id → position maps for `waiting` / `active`. One allocation
-    // per run buys O(1) admission validation+removal (the cleared slot
-    // doubles as the duplicate check) where the old loop paid a
-    // `vec![false; n]` allocation plus an O(W) `position` scan per
-    // admitted id, every round.
-    let mut wait_slot: Vec<usize> = vec![NO_SLOT; n];
-    let mut act_slot: Vec<usize> = vec![NO_SLOT; n];
-
+    let mut worker = WorkerSim::new(n, inst.m, &sched.name(), seed, cfg, incremental);
     let mut next_arrival = 0usize;
-    let mut completed = 0usize;
-    let mut t = 0.0f64;
-    let mut round = 0u64;
-    let mut last_completion_round = 0u64;
-    // View buffers reused across rounds; the snapshot path refills them
-    // every round, the incremental path only on (rare) overflow events.
-    let mut active_views: Vec<ActiveReq> = Vec::new();
-    let mut waiting_views: Vec<QueuedReq> = Vec::new();
-
-    while completed < n {
-        // Release arrivals up to the current formation time.
-        while next_arrival < n && inst.requests[next_arrival].arrival <= t {
+    loop {
+        // Deliver arrivals due at or before the next batch-formation
+        // time — the same `arrival ≤ t` gating as the classic loop.
+        while next_arrival < n {
+            let due = match worker.next_time() {
+                None => true,
+                Some(ft) => inst.requests[next_arrival].arrival <= ft,
+            };
+            if !due {
+                break;
+            }
             let r = &inst.requests[next_arrival];
-            let w = WaitState {
+            worker.deliver(WaitState {
                 id: r.id,
                 arrival: r.arrival,
                 s: r.prompt_len,
                 o_true: r.output_len,
                 pred: preds[r.id],
-            };
-            wait_slot[r.id] = waiting.len();
-            if incremental {
-                sched.on_arrival(&w.view());
-            }
-            waiting.push(w);
+            });
             next_arrival += 1;
         }
-
-        // Idle: fast-forward to the next arrival.
-        if active.is_empty() && waiting.is_empty() {
-            debug_assert!(next_arrival < n);
-            t = inst.requests[next_arrival].arrival;
-            continue;
+        if !worker.busy() {
+            break;
         }
-
-        round += 1;
-        if round > cfg.max_rounds || round.saturating_sub(last_completion_round) > cfg.stall_rounds
-        {
-            outcome.finished = false;
-            outcome.rounds = round - 1;
-            finalize(&mut outcome, records);
-            return Ok(outcome);
-        }
-
-        // Scheduler decision: per-event state for hook-aware policies,
-        // full snapshots for the rest.
-        let admitted = if incremental {
-            sched.admit_incremental(round, inst.m, &mut rng)
-        } else {
-            active_views.clear();
-            active_views.extend(active.iter().map(ActiveState::view));
-            waiting_views.clear();
-            waiting_views.extend(waiting.iter().map(WaitState::view));
-            sched.admit(round, inst.m, &active_views, &waiting_views, &mut rng)
-        };
-
-        // Validate and move admitted requests into the running set.
-        let mut prefill_tokens = 0u64;
-        for &id in &admitted {
-            if id >= n || wait_slot[id] == NO_SLOT {
-                return Err(SimError::BadAdmission(id));
-            }
-            let slot = wait_slot[id];
-            wait_slot[id] = NO_SLOT;
-            let w = waiting.swap_remove(slot);
-            if let Some(moved) = waiting.get(slot) {
-                wait_slot[moved.id] = slot;
-            }
-            if incremental {
-                sched.on_admit(&w.view(), round);
-            }
-            prefill_tokens += w.s;
-            act_slot[w.id] = active.len();
-            active.push(ActiveState {
-                id: w.id,
-                s: w.s,
-                o_true: w.o_true,
-                pred: w.pred,
-                done: 0,
-                started_round: round,
-                start_time: t,
-            });
-        }
-
-        // Actual memory needed to run this round.
-        let usage: u64 = active.iter().map(|a| a.s + a.done + 1).sum();
-        let batch = BatchComposition {
-            prefill_tokens,
-            decode_reqs: active.len() as u64,
-            kv_tokens: usage,
-        };
-
-        if usage > inst.m {
-            // KV overflow: clearing event (rare — views built on demand).
-            outcome.overflow_events += 1;
-            active_views.clear();
-            active_views.extend(active.iter().map(ActiveState::view));
-            let evicted = sched.on_overflow(&active_views, &mut rng);
-            t += perf.clearing_time(&batch);
-            let mut post_usage = usage;
-            for id in evicted {
-                if id >= n || act_slot[id] == NO_SLOT {
-                    continue;
-                }
-                let pos = act_slot[id];
-                // Ordered remove: `active` stays in admission order (the
-                // clearing policies consume per-item randomness in view
-                // order, so the order is behavior-relevant); patch the
-                // slots of everything shifted down.
-                let a = active.remove(pos);
-                act_slot[a.id] = NO_SLOT;
-                for (i, rest) in active[pos..].iter().enumerate() {
-                    act_slot[rest.id] = pos + i;
-                }
-                post_usage -= a.s + a.done + 1;
-                restarts[a.id] += 1;
-                outcome.evicted_requests += 1;
-                let w = WaitState {
-                    id: a.id,
-                    arrival: a.arrival_of(inst),
-                    s: a.s,
-                    o_true: a.o_true,
-                    pred: a.pred,
-                };
-                wait_slot[w.id] = waiting.len();
-                if incremental {
-                    sched.on_evict(&w.view());
-                }
-                waiting.push(w);
-            }
-            if cfg.record_series {
-                outcome.mem_series.push((t, post_usage));
-            }
-            continue;
-        }
-
-        // Execute the iteration.
-        t += perf.iteration_time(&batch);
-        outcome.peak_mem = outcome.peak_mem.max(usage);
-        if cfg.record_series {
-            outcome.mem_series.push((t, usage));
-            outcome.tokens_series.push((t, batch.tokens_processed()));
-        }
-
-        // Token production + completions.
-        let mut i = 0;
-        while i < active.len() {
-            active[i].done += 1;
-            if active[i].done >= active[i].o_true {
-                let a = active.swap_remove(i);
-                act_slot[a.id] = NO_SLOT;
-                if let Some(moved) = active.get(i) {
-                    act_slot[moved.id] = i;
-                }
-                if incremental {
-                    sched.on_complete(a.id);
-                }
-                records[a.id] = Some(PerRequest {
-                    id: a.id,
-                    arrival: inst.requests[a.id].arrival,
-                    start: a.start_time,
-                    completion: t,
-                    restarts: restarts[a.id],
-                });
-                completed += 1;
-                last_completion_round = round;
-            } else {
-                i += 1;
-            }
-        }
+        worker.step(sched, perf)?;
     }
-
-    outcome.rounds = round;
-    outcome.finished = true;
-    finalize(&mut outcome, records);
-    Ok(outcome)
-}
-
-impl ActiveState {
-    fn arrival_of(&self, inst: &Instance) -> f64 {
-        inst.requests[self.id].arrival
-    }
-}
-
-fn finalize(outcome: &mut SimOutcome, records: Vec<Option<PerRequest>>) {
-    outcome.per_request = records.into_iter().flatten().collect();
+    Ok(worker.finish())
 }
 
 #[cfg(test)]

@@ -7,8 +7,12 @@
 //! * [`discrete::simulate`] — unit-time rounds, the exact §2 model used
 //!   against the hindsight IP in §5.1;
 //! * [`continuous::simulate`] — seconds from the Llama2-70B/A100 model,
-//!   the §5.2 serving simulation (the role Vidur plays in the paper).
+//!   the §5.2 serving simulation (the role Vidur plays in the paper);
+//! * [`cluster::run_fleet`] — N workers behind a pluggable
+//!   [`crate::cluster::Router`], each worker running the same per-round
+//!   loop as the single-worker engines.
 
+pub mod cluster;
 pub mod continuous;
 pub mod discrete;
 pub mod engine;

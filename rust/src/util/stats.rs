@@ -107,6 +107,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -119,6 +120,7 @@ impl Summary {
             min: if xs.is_empty() { 0.0 } else { min(xs) },
             p50: median(xs),
             p95: percentile(xs, 95.0),
+            p99: percentile(xs, 99.0),
             max: if xs.is_empty() { 0.0 } else { max(xs) },
         }
     }
@@ -172,6 +174,15 @@ mod tests {
         assert_eq!(edges, vec![0.0, 0.5]);
         assert_eq!(counts, vec![3, 3]); // -5 clamps low, 5 clamps high
         assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn summary_tail_percentiles_ordered() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.p99 - 990.01).abs() < 1e-9, "p99 = {}", s.p99);
+        assert_eq!(Summary::of(&[]).p99, 0.0);
     }
 
     #[test]

@@ -7,8 +7,25 @@ pub mod synthetic;
 
 pub use lmsys::LmsysGen;
 
-use crate::core::Instance;
+use crate::core::{Instance, Request};
 use crate::util::rng::Rng;
+
+/// Speed up an instance's arrival process by `factor` (or slow it down
+/// for `factor < 1`): every arrival time is divided by `factor`, which
+/// turns a Poisson(λ) process into Poisson(λ·factor) while keeping the
+/// request bodies `(s_i, o_i)` identical. This is the λ × N scaling the
+/// cluster layer uses so a W-worker fleet run is load-comparable *per
+/// worker* with the single-worker baseline: same trace, W× the offered
+/// rate, W workers to absorb it.
+pub fn scale_arrival_rate(inst: &Instance, factor: f64) -> Instance {
+    assert!(factor > 0.0 && factor.is_finite(), "bad rate factor {factor}");
+    let reqs = inst
+        .requests
+        .iter()
+        .map(|r| Request::new(r.id, r.arrival / factor, r.prompt_len, r.output_len))
+        .collect();
+    Instance::new(inst.m, reqs)
+}
 
 /// `n` Poisson-process arrival times with rate `lambda` per second,
 /// starting at 0.
@@ -44,6 +61,24 @@ mod tests {
         // 20k arrivals at λ=50/s span ≈400 s.
         let span = times.last().unwrap();
         assert!((span - 400.0).abs() < 20.0, "span={span}");
+    }
+
+    #[test]
+    fn rate_scaling_compresses_arrivals_only() {
+        let mut rng = Rng::new(4);
+        let inst = lmsys::LmsysGen::default().instance(200, 10.0, 500, &mut rng);
+        let scaled = scale_arrival_rate(&inst, 4.0);
+        assert_eq!(scaled.n(), inst.n());
+        assert_eq!(scaled.m, inst.m);
+        for (a, b) in inst.requests.iter().zip(&scaled.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert!((b.arrival - a.arrival / 4.0).abs() < 1e-12);
+        }
+        // 4× the rate ⇒ the same arrivals span a quarter of the time.
+        let span = |i: &Instance| i.requests.last().unwrap().arrival;
+        assert!((span(&scaled) - span(&inst) / 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Reduction differential test for the fleet engine: a [`Fleet`] with
+//! **one** worker — behind *any* router — must produce a `SimOutcome`
+//! **bit-identical** to the single-worker engine (same admit order, same
+//! per-request records, same memory/overflow/eviction counters and
+//! series, same round count) across the same instance corpus as
+//! `tests/incremental_diff.rs`: random small instances, the §5.1
+//! arrival models, and the Thm-4.1 adversarial family, with exact and
+//! noisy predictions.
+//!
+//! With N > 1 workers the fleet must still be conservative: every
+//! request is routed exactly once, completes exactly once, and the
+//! per-worker assigned counts partition the instance.
+
+use kvsched::cluster::Fleet;
+use kvsched::core::{FleetSpec, Instance, Request};
+use kvsched::metrics::SimOutcome;
+use kvsched::perf::UnitTime;
+use kvsched::predictor::Predictor;
+use kvsched::sched::by_name;
+use kvsched::sim::engine::run;
+use kvsched::sim::SimConfig;
+use kvsched::util::prop::{forall_cases, usize_in};
+use kvsched::util::rng::Rng;
+use kvsched::workload::synthetic;
+
+const ROUTERS: [&str; 4] = ["rr", "jsq", "least-kv", "po2"];
+
+/// Incremental implementations plus snapshot-only baselines — same mix
+/// as the incremental_diff corpus, trimmed for the extra router axis.
+const SPECS: [&str; 4] = [
+    "mcsf",
+    "mc-benchmark",
+    "protect:alpha=0.1,beta=0.5",
+    "fcfs:threshold=0.9",
+];
+
+fn cfg() -> SimConfig {
+    SimConfig {
+        // Bounded caps so clearing livelocks terminate quickly; both
+        // engines share the caps, so truncated runs must match too.
+        max_rounds: 10_000,
+        stall_rounds: 1_500,
+        record_series: true,
+        incremental: true,
+    }
+}
+
+fn assert_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.algo, b.algo, "{ctx}: algo");
+    assert_eq!(a.assigned, b.assigned, "{ctx}: assigned");
+    assert_eq!(a.finished, b.finished, "{ctx}: finished");
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.peak_mem, b.peak_mem, "{ctx}: peak_mem");
+    assert_eq!(a.overflow_events, b.overflow_events, "{ctx}: overflows");
+    assert_eq!(a.evicted_requests, b.evicted_requests, "{ctx}: evictions");
+    assert_eq!(a.per_request, b.per_request, "{ctx}: per-request records");
+    assert_eq!(a.mem_series, b.mem_series, "{ctx}: memory series");
+    assert_eq!(a.tokens_series, b.tokens_series, "{ctx}: token series");
+    assert_eq!(
+        a.total_latency().to_bits(),
+        b.total_latency().to_bits(),
+        "{ctx}: total latency bits"
+    );
+}
+
+fn check_reduction(inst: &Instance, case: &str) -> Result<(), String> {
+    for spec in SPECS {
+        for (pname, pred) in [
+            ("exact", Predictor::exact()),
+            ("noisy", Predictor::uniform_noise(0.5, 11)),
+        ] {
+            let mut single = by_name(spec).unwrap();
+            let base = run(inst, single.as_mut(), &pred, &UnitTime, 9, cfg())
+                .map_err(|e| format!("{case} spec={spec} pred={pname}: single failed: {e}"))?;
+            for router in ROUTERS {
+                let ctx = format!("{case} spec={spec} pred={pname} router={router}");
+                let mut fleet = Fleet::new(FleetSpec::single(), spec, router).unwrap();
+                let out = fleet
+                    .try_simulate(inst, &pred, &UnitTime, 9, cfg())
+                    .map_err(|e| format!("{ctx}: fleet failed: {e}"))?;
+                assert_eq!(out.workers(), 1, "{ctx}");
+                assert_identical(&base, &out.per_worker[0], &ctx);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// 60 fully random small instances via the in-repo property framework.
+#[test]
+fn one_worker_fleet_equals_engine_on_random_instances() {
+    forall_cases(0xF1EE7, 60, usize_in(0, u32::MAX as usize), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let m = rng.i64_range(8, 50) as u64;
+        let n = rng.usize_range(1, 30);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let s = rng.i64_range(1, 5) as u64;
+                let o = rng.i64_range(1, (m - s).min(14) as i64) as u64;
+                let a = rng.i64_range(0, 8) as f64;
+                Request::new(i, a, s, o)
+            })
+            .collect();
+        check_reduction(&Instance::new(m, reqs), &format!("seed={seed:#x}"))
+    });
+}
+
+/// Instances from the paper's §5.1 synthetic arrival models.
+#[test]
+fn one_worker_fleet_equals_engine_on_paper_arrival_models() {
+    let mut rng = Rng::new(0xC1A2);
+    for trial in 0..15 {
+        let inst = synthetic::arrival_model_1(&mut rng);
+        check_reduction(&inst, &format!("model1 trial={trial}")).unwrap();
+    }
+    for trial in 0..15 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        check_reduction(&inst, &format!("model2 trial={trial}")).unwrap();
+    }
+}
+
+/// The Thm-4.1 adversarial construction: long-request head-of-line
+/// pressure with a burst release.
+#[test]
+fn one_worker_fleet_equals_engine_on_adversarial_instances() {
+    for m in [16u64, 64] {
+        let inst = synthetic::adversarial_thm41(m, 0);
+        check_reduction(&inst, &format!("thm41 m={m}")).unwrap();
+    }
+}
+
+/// N > 1: the fleet partitions the instance — every request is assigned
+/// to exactly one worker and completes exactly once, under every router.
+#[test]
+fn multi_worker_fleet_partitions_requests() {
+    let mut rng = Rng::new(0xBEEF);
+    for trial in 0..6 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        for workers in [2usize, 3, 8] {
+            for router in ROUTERS {
+                let ctx = format!("trial={trial} workers={workers} router={router}");
+                let mut fleet =
+                    Fleet::new(FleetSpec::replicas(workers), "mcsf", router).unwrap();
+                let out = fleet
+                    .try_simulate(&inst, &Predictor::exact(), &UnitTime, 5, cfg())
+                    .unwrap();
+                assert!(out.finished(), "{ctx}");
+                assert_eq!(out.completed(), inst.n(), "{ctx}");
+                assert_eq!(
+                    out.assigned().iter().sum::<usize>(),
+                    inst.n(),
+                    "{ctx}: assigned must partition"
+                );
+                let mut seen = vec![false; inst.n()];
+                for w in &out.per_worker {
+                    assert!(w.per_request.len() <= w.assigned, "{ctx}");
+                    for r in &w.per_request {
+                        assert!(!seen[r.id], "{ctx}: request {} completed twice", r.id);
+                        seen[r.id] = true;
+                    }
+                    // Per-worker KV safety: MC-SF with exact predictions
+                    // never exceeds its replica budget.
+                    assert!(w.max_mem() <= inst.m, "{ctx}: worker over budget");
+                }
+                assert!(seen.iter().all(|&s| s), "{ctx}: some request never completed");
+            }
+        }
+    }
+}
+
+/// Fleet runs are deterministic functions of the seed, including the
+/// randomized router.
+#[test]
+fn fleet_runs_are_reproducible() {
+    let mut rng = Rng::new(0x5EED);
+    let inst = synthetic::arrival_model_2(&mut rng);
+    for router in ROUTERS {
+        let run_once = || {
+            let mut fleet = Fleet::new(FleetSpec::replicas(4), "mcsf", router).unwrap();
+            fleet
+                .try_simulate(&inst, &Predictor::exact(), &UnitTime, 17, cfg())
+                .unwrap()
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.assigned(), b.assigned(), "{router}");
+        assert_eq!(
+            a.total_latency().to_bits(),
+            b.total_latency().to_bits(),
+            "{router}"
+        );
+        assert_eq!(a.total_rounds(), b.total_rounds(), "{router}");
+    }
+}

@@ -5,7 +5,8 @@
 //! artifacts. The real-engine twin of this file is `runtime_e2e.rs`.
 #![cfg(not(feature = "xla"))]
 
-use kvsched::coordinator::{Coordinator, CoordinatorConfig, ServeRequest};
+use kvsched::cluster::router_by_name;
+use kvsched::coordinator::{Coordinator, CoordinatorConfig, FleetCoordinator, ServeRequest};
 use kvsched::runtime::Engine;
 use kvsched::sched::by_name;
 
@@ -51,6 +52,7 @@ fn coordinator_respects_memory_budget_incrementally() {
         CoordinatorConfig {
             kv_budget: 2 * capacity,
             seed: 0,
+            ..CoordinatorConfig::default()
         },
     );
     let mut rxs = Vec::new();
@@ -96,5 +98,47 @@ fn fcfs_and_mc_benchmark_serve_through_both_paths() {
         }
         let stats = coord.shutdown();
         assert_eq!(stats.per_request.len(), 4, "{spec}");
+    }
+}
+
+#[test]
+fn fleet_coordinator_serves_across_replicas() {
+    // Every router must drain a 2-replica fleet end to end; the routed
+    // requests partition across workers and each reply arrives once.
+    for router in ["rr", "jsq", "least-kv", "po2"] {
+        let engines = vec![Engine::mock(), Engine::mock()];
+        let scheds = vec![by_name("mcsf").unwrap(), by_name("mcsf").unwrap()];
+        let fleet = FleetCoordinator::start(
+            engines,
+            scheds,
+            router_by_name(router).unwrap(),
+            CoordinatorConfig::default(),
+        );
+        assert_eq!(fleet.workers(), 2);
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            let (worker, rx) = fleet.submit(ServeRequest {
+                prompt: format!("fleet {router} {i}").into_bytes(),
+                max_new_tokens: 3,
+                predicted_new_tokens: 3,
+            });
+            assert!(worker < 2, "{router}");
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let reply = rx
+                .recv_timeout(std::time::Duration::from_secs(60))
+                .expect("fleet reply");
+            assert_eq!(reply.tokens.len(), 3, "{router}");
+        }
+        let out = fleet.shutdown();
+        assert_eq!(out.workers(), 2, "{router}");
+        assert_eq!(out.completed(), 8, "{router}");
+        assert_eq!(out.assigned().iter().sum::<usize>(), 8, "{router}");
+        assert!(out.finished(), "{router}");
+        // Round-robin must split 8 submissions exactly 4 / 4.
+        if router == "rr" {
+            assert_eq!(out.assigned(), vec![4, 4]);
+        }
     }
 }

@@ -178,6 +178,7 @@ fn coordinator_respects_memory_budget() {
         CoordinatorConfig {
             kv_budget: 2 * capacity,
             seed: 0,
+            ..CoordinatorConfig::default()
         },
     );
     let mut rxs = Vec::new();

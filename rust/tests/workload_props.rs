@@ -1,0 +1,72 @@
+//! Workload generator properties: determinism (same seed ⇒ identical
+//! `Instance`), per-request feasibility, and arrival-sortedness, for the
+//! §5.1 synthetic arrival models and the LMSYS-calibrated generator.
+
+use kvsched::core::Instance;
+use kvsched::util::rng::Rng;
+use kvsched::workload::{scale_arrival_rate, synthetic, LmsysGen};
+
+fn assert_well_formed(inst: &Instance, ctx: &str) {
+    assert!(inst.n() > 0, "{ctx}: empty instance");
+    assert!(inst.is_feasible(), "{ctx}: generated an infeasible request");
+    assert!(
+        inst.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival),
+        "{ctx}: arrivals not sorted"
+    );
+    for (i, r) in inst.requests.iter().enumerate() {
+        assert_eq!(r.id, i, "{ctx}: ids not dense in arrival order");
+        assert!(r.prompt_len >= 1 && r.output_len >= 1, "{ctx}: empty request");
+    }
+}
+
+#[test]
+fn arrival_model_1_deterministic_feasible_sorted() {
+    for seed in 0..25u64 {
+        let a = synthetic::arrival_model_1(&mut Rng::new(seed));
+        let b = synthetic::arrival_model_1(&mut Rng::new(seed));
+        assert_eq!(a, b, "seed {seed}: same seed must give identical instances");
+        assert_well_formed(&a, &format!("model1 seed={seed}"));
+    }
+}
+
+#[test]
+fn arrival_model_2_deterministic_feasible_sorted() {
+    for seed in 0..25u64 {
+        let a = synthetic::arrival_model_2(&mut Rng::new(seed));
+        let b = synthetic::arrival_model_2(&mut Rng::new(seed));
+        assert_eq!(a, b, "seed {seed}: same seed must give identical instances");
+        assert_well_formed(&a, &format!("model2 seed={seed}"));
+    }
+}
+
+#[test]
+fn lmsys_generator_deterministic_feasible_sorted() {
+    let gen = LmsysGen::default();
+    for seed in 0..10u64 {
+        let a = gen.instance(400, 50.0, gen.max_peak, &mut Rng::new(seed));
+        let b = gen.instance(400, 50.0, gen.max_peak, &mut Rng::new(seed));
+        assert_eq!(a, b, "seed {seed}: same seed must give identical instances");
+        assert_well_formed(&a, &format!("lmsys seed={seed}"));
+    }
+}
+
+#[test]
+fn adversarial_thm41_feasible_sorted() {
+    for m in [16u64, 64, 256] {
+        let inst = synthetic::adversarial_thm41(m, 0);
+        assert_well_formed(&inst, &format!("thm41 m={m}"));
+    }
+}
+
+#[test]
+fn rate_scaling_preserves_well_formedness() {
+    // The cluster layer's λ × N scaling must hand the fleet engine an
+    // instance with the same guarantees the generators provide.
+    let gen = LmsysGen::default();
+    let inst = gen.instance(300, 10.0, gen.max_peak, &mut Rng::new(3));
+    for factor in [2.0, 4.0, 8.0] {
+        let scaled = scale_arrival_rate(&inst, factor);
+        assert_eq!(scaled.n(), inst.n());
+        assert_well_formed(&scaled, &format!("scaled ×{factor}"));
+    }
+}
