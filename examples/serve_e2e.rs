@@ -65,6 +65,7 @@ fn main() -> kvsched::util::error::Result<()> {
             prompt,
             max_new_tokens: o,
             predicted_new_tokens: o,
+            class: 0,
         })));
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
     }

@@ -30,6 +30,7 @@ fn mk_waiting(n: usize, m: u64, rng: &mut Rng) -> Vec<QueuedReq> {
             arrival: rng.f64_range(0.0, 100.0),
             s: rng.i64_range(5, 120) as u64,
             pred: rng.i64_range(1, (m / 16).max(2) as i64) as u64,
+            class: 0,
         })
         .collect()
 }

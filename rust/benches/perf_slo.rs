@@ -1,0 +1,147 @@
+//! Perf/quality: SLO-tiered serving. Sweeps class mix × scheduling
+//! policy on the continuous-time Llama2-70B model and records per-class
+//! latency percentiles, TTFT, and goodput — the ledger behind the
+//! priority-inversion / starvation / goodput-vs-latency experiments.
+//! Results land in the repo-root baseline ledger `BENCH_slo.json`
+//! (EXPERIMENTS.md §SLO).
+//!
+//! The headline comparisons the ledger tracks:
+//! * goodput — the priority-weighted P-MC-SF must hold interactive
+//!   goodput at least as high as plain MC-SF on every mixed workload
+//!   (that is the whole point of priority admission);
+//! * no starvation — P-MC-SF's batch-class goodput must stay above 0
+//!   (weighted priority is a scan order, not a hard partition: batch
+//!   requests still admit whenever the urgent tier leaves KV room).
+
+use kvsched::bench::{fmt, Table};
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::continuous::PAPER_M;
+use kvsched::sim::SimConfig;
+use kvsched::util::cli::Args;
+use kvsched::util::json::Json;
+use std::time::Instant;
+
+const MIXES: [(&str, &str); 4] = [
+    ("interactive-only", "interactive:1.0"),
+    ("mixed-80-20", "interactive:0.8,batch:0.2"),
+    ("balanced-50-50", "interactive:0.5,batch:0.5"),
+    ("batch-heavy-20-80", "interactive:0.2,batch:0.8"),
+];
+
+const POLICIES: [&str; 4] = ["priority", "mcsf", "mc-benchmark", "edf:threshold=0.9"];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.usize_or("n", 300);
+    let lambda = args.f64_or("lambda", 30.0);
+    let seed = args.u64_or("seed", 1);
+
+    let perf = Llama70bA100x2::default();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut table = Table::new(
+        &format!("SLO sweep: class mix × policy, LMSYS-classed, n={n} λ={lambda} M={PAPER_M}"),
+        &[
+            "mix",
+            "policy",
+            "goodput",
+            "interactive_goodput",
+            "batch_goodput",
+            "interactive_p99_s",
+            "batch_p99_s",
+            "avg_latency_s",
+            "overflows",
+            "finished",
+        ],
+    );
+
+    for (mix_name, mix_spec) in MIXES {
+        let classes = ClassSet::parse(mix_spec).expect("mix spec parses");
+        // One trace per mix, shared by every policy.
+        let mut rng = Rng::new(seed);
+        let inst =
+            ClassMixGen::new(classes.clone(), PAPER_M).instance(n, lambda, PAPER_M, &mut rng);
+        let batch_class = classes.classes.iter().position(|c| c.name == "batch");
+        for policy in POLICIES {
+            let mut sched =
+                kvsched::sched::by_name_classed(policy, &classes).expect("policy spec parses");
+            let t0 = Instant::now();
+            let out = kvsched::sim::continuous::try_simulate(
+                &inst,
+                sched.as_mut(),
+                &Predictor::exact(),
+                &perf,
+                seed,
+                SimConfig {
+                    record_series: false,
+                    ..SimConfig::default()
+                },
+            )
+            .expect("simulation");
+            let wall = t0.elapsed().as_secs_f64();
+            let ilat = kvsched::util::stats::Summary::of(&out.class_latencies(0));
+            let (bgood, bp99) = match batch_class {
+                Some(b) => (
+                    out.class_goodput(b),
+                    kvsched::util::stats::Summary::of(&out.class_latencies(b)).p99,
+                ),
+                None => (f64::NAN, f64::NAN),
+            };
+            table.row(&[
+                mix_name.to_string(),
+                out.algo.clone(),
+                fmt(out.goodput()),
+                fmt(out.class_goodput(0)),
+                if bgood.is_nan() { "-".into() } else { fmt(bgood) },
+                fmt(ilat.p99),
+                if bp99.is_nan() { "-".into() } else { fmt(bp99) },
+                fmt(out.avg_latency()),
+                out.overflow_events.to_string(),
+                out.finished.to_string(),
+            ]);
+            let mut row = Json::obj()
+                .set("mix", mix_name)
+                .set("classes", classes.to_json())
+                .set("policy", out.algo.clone())
+                .set("goodput", out.goodput())
+                .set("interactive_goodput", out.class_goodput(0))
+                .set("interactive_avg_latency_s", ilat.mean)
+                .set("interactive_p99_s", ilat.p99)
+                .set(
+                    "interactive_ttft_p95_s",
+                    kvsched::util::stats::Summary::of(&out.class_ttfts(0)).p95,
+                )
+                .set("avg_latency_s", out.avg_latency())
+                .set("overflow_events", out.overflow_events)
+                .set("finished", out.finished)
+                .set("wall_s", wall);
+            if let Some(b) = batch_class {
+                row = row
+                    .set("batch_goodput", out.class_goodput(b))
+                    .set(
+                        "batch_p99_s",
+                        kvsched::util::stats::Summary::of(&out.class_latencies(b)).p99,
+                    );
+            }
+            rows.push(row);
+        }
+    }
+    table.print();
+    table.save_json("perf_slo");
+
+    // Baseline ledger at the repo root (EXPERIMENTS.md §SLO).
+    let doc = Json::obj()
+        .set("bench", "perf_slo")
+        .set("workload", "lmsys-classed")
+        .set("m", PAPER_M)
+        .set("n", n)
+        .set("lambda", lambda)
+        .set("seed", seed)
+        .set(
+            "note",
+            "acceptance: P-MC-SF interactive_goodput >= MC-SF interactive_goodput \
+             on every mixed row, and P-MC-SF batch_goodput > 0 (no starvation)",
+        )
+        .set("rows", Json::Arr(rows));
+    kvsched::bench::save_root_json("BENCH_slo.json", &doc);
+}

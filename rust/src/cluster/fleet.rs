@@ -7,12 +7,12 @@
 //! simulate instances against it. Per-worker schedulers reuse the
 //! incremental event hooks, so fleet rounds stay O(Δ) per worker.
 
-use super::router::{router_by_name, Router};
-use crate::core::{FleetSpec, Instance};
+use super::router::{router_by_name_classed, Router};
+use crate::core::{ClassSet, FleetSpec, Instance};
 use crate::metrics::FleetOutcome;
 use crate::perf::PerfModel;
 use crate::predictor::Predictor;
-use crate::sched::{by_name, Scheduler};
+use crate::sched::{by_name_classed, Scheduler};
 use crate::sim::cluster::run_fleet;
 use crate::sim::{SimConfig, SimError};
 use crate::util::error::Result;
@@ -26,17 +26,29 @@ pub struct Fleet {
 
 impl Fleet {
     /// `spec.workers` identical schedulers built from `sched_spec`
-    /// (see [`by_name`]) behind the router named by `router_spec`
-    /// (see [`router_by_name`]).
+    /// (see [`crate::sched::by_name`]) behind the router named by
+    /// `router_spec` (see [`crate::cluster::router_by_name`]).
     pub fn new(spec: FleetSpec, sched_spec: &str, router_spec: &str) -> Result<Fleet> {
+        Fleet::new_classed(spec, sched_spec, router_spec, &ClassSet::default())
+    }
+
+    /// [`Fleet::new`] with a traffic-class table attached to the
+    /// SLO-tier-aware scheduler and router policies (`priority`, `edf`,
+    /// `slo-aware`); class-blind specs parse identically.
+    pub fn new_classed(
+        spec: FleetSpec,
+        sched_spec: &str,
+        router_spec: &str,
+        classes: &ClassSet,
+    ) -> Result<Fleet> {
         spec.validate()?;
         let scheds = (0..spec.workers)
-            .map(|_| by_name(sched_spec))
+            .map(|_| by_name_classed(sched_spec, classes))
             .collect::<Result<Vec<_>>>()?;
         Ok(Fleet {
             spec,
             scheds,
-            router: router_by_name(router_spec)?,
+            router: router_by_name_classed(router_spec, classes)?,
         })
     }
 

@@ -13,8 +13,12 @@
 //! * [`PowerOfTwo`] — sample two workers, keep the shallower: the
 //!   classic "power of two choices" that gets most of JSQ's balance with
 //!   O(1) inspection.
+//! * [`SloAware`] — class-aware dispatch: urgent (deadline-carrying)
+//!   classes go where they will be served soonest, lax classes are
+//!   spread by cumulative count so they don't crowd the low-claim
+//!   workers the urgent tiers depend on.
 
-use crate::core::QueuedReq;
+use crate::core::{ClassSet, QueuedReq};
 use crate::util::error::{bail, Result};
 use crate::util::rng::Rng;
 
@@ -153,10 +157,68 @@ impl Router for PowerOfTwo {
     }
 }
 
+/// Class-aware dispatch: keep the tightest-deadline classes feasible.
+///
+/// An **urgent** arrival (its class carries a finite TTFT or e2e target,
+/// [`crate::core::SloSpec::is_urgent`]) goes to the worker with the
+/// smallest outstanding KV claim — the best proxy for "served soonest"
+/// under token-rate service, which is what a deadline needs. A **lax**
+/// arrival (no deadline) is spread by cumulative assigned count instead:
+/// counting heads rather than tokens means big batch jobs keep piling
+/// onto the same few workers once those run deep, leaving the low-claim
+/// workers for the traffic that has a deadline to meet.
+///
+/// With no class table every class is lax and the policy degenerates to
+/// least-assigned balancing (a deterministic, router-only change — the
+/// 1-worker reduction in `tests/cluster_reduction.rs` covers it like any
+/// other router).
+#[derive(Debug, Default)]
+pub struct SloAware {
+    classes: ClassSet,
+}
+
+impl SloAware {
+    /// Build with the class table the request tags index into.
+    pub fn new(classes: ClassSet) -> SloAware {
+        SloAware { classes }
+    }
+}
+
+impl Router for SloAware {
+    fn name(&self) -> String {
+        "slo-aware".into()
+    }
+
+    fn route(&mut self, req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        if self.classes.slo(req.class).is_urgent() {
+            loads
+                .iter()
+                .min_by_key(|l| (l.kv_claim(), l.worker))
+                .expect("loads is non-empty")
+                .worker
+        } else {
+            loads
+                .iter()
+                .min_by_key(|l| (l.assigned, l.worker))
+                .expect("loads is non-empty")
+                .worker
+        }
+    }
+}
+
 /// Build a router from a spec string (CLI / config):
 /// `rr` | `round-robin`, `jsq` | `join-shortest-queue`,
-/// `least-kv` | `least-kv-load`, `po2` | `p2c` | `power-of-two`.
+/// `least-kv` | `least-kv-load`, `po2` | `p2c` | `power-of-two`,
+/// `slo` | `slo-aware` (use [`router_by_name_classed`] to give the
+/// SLO-aware policy its class table).
 pub fn router_by_name(spec: &str) -> Result<Box<dyn Router>> {
+    router_by_name_classed(spec, &ClassSet::default())
+}
+
+/// [`router_by_name`] with a traffic-class table attached to the
+/// class-aware policies (currently [`SloAware`]); class-blind routers
+/// parse identically.
+pub fn router_by_name_classed(spec: &str, classes: &ClassSet) -> Result<Box<dyn Router>> {
     match spec {
         "rr" | "round-robin" => Ok(Box::new(RoundRobin::default())),
         "jsq" | "shortest-queue" | "join-shortest-queue" => {
@@ -164,7 +226,8 @@ pub fn router_by_name(spec: &str) -> Result<Box<dyn Router>> {
         }
         "least-kv" | "kv" | "least-kv-load" => Ok(Box::new(LeastKvLoad)),
         "po2" | "p2c" | "power-of-two" => Ok(Box::new(PowerOfTwo)),
-        other => bail!("unknown router '{other}' (try rr | jsq | least-kv | po2)"),
+        "slo" | "slo-aware" => Ok(Box::new(SloAware::new(classes.clone()))),
+        other => bail!("unknown router '{other}' (try rr | jsq | least-kv | po2 | slo-aware)"),
     }
 }
 
@@ -190,6 +253,7 @@ mod tests {
             arrival: 0.0,
             s: 4,
             pred: 8,
+            class: 0,
         }
     }
 
@@ -285,9 +349,35 @@ mod tests {
             ("least-kv", "least-kv-load"),
             ("po2", "power-of-two"),
             ("p2c", "power-of-two"),
+            ("slo", "slo-aware"),
+            ("slo-aware", "slo-aware"),
         ] {
             assert_eq!(router_by_name(spec).unwrap().name(), name, "{spec}");
         }
         assert!(router_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn slo_aware_splits_urgent_and_lax() {
+        let classes = ClassSet::parse("interactive:0.5,batch:0.5").unwrap();
+        let mut rt = SloAware::new(classes);
+        let mut rng = Rng::new(1);
+        // Worker 0: few requests but a huge KV claim; worker 1: many
+        // small ones (low claim, high count).
+        let mut heavy = load(0, 1, 1, 900);
+        heavy.queued_demand = 100;
+        heavy.assigned = 2;
+        let mut light = load(1, 6, 0, 10);
+        light.queued_demand = 30;
+        light.assigned = 9;
+        // Urgent (interactive, class 0): picks the low-claim worker.
+        let urgent = QueuedReq { class: 0, ..req() };
+        assert_eq!(rt.route(&urgent, &[heavy, light], &mut rng), 1);
+        // Lax (batch, class 1): spread by assigned count.
+        let lax = QueuedReq { class: 1, ..req() };
+        assert_eq!(rt.route(&lax, &[heavy, light], &mut rng), 0);
+        // Without a class table everything is lax.
+        let mut blind = SloAware::default();
+        assert_eq!(blind.route(&urgent, &[heavy, light], &mut rng), 0);
     }
 }

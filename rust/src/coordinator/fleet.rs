@@ -83,6 +83,7 @@ impl FleetCoordinator {
                 kv_budget: cfg.kv_budget,
                 seed: cfg.seed.wrapping_add(w as u64),
                 gauge: Some(gauge.clone()),
+                classes: cfg.classes.clone(),
             };
             workers.push(Coordinator::start(engine, sched, wcfg));
             gauges.push(gauge);
@@ -114,6 +115,7 @@ impl FleetCoordinator {
             arrival: self.t0.elapsed().as_secs_f64(),
             s: req.prompt.len().max(1) as u64,
             pred: req.predicted_new_tokens.max(1),
+            class: req.class,
         };
         let pick = {
             let mut guard = self.router.lock().unwrap();

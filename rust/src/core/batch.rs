@@ -3,6 +3,7 @@
 //! check.
 
 use super::request::RequestId;
+use super::slo::ClassId;
 
 /// View of a request currently being processed (in `S^(t)`).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -51,6 +52,7 @@ impl ActiveReq {
 /// View of a request waiting in the queue (`R^(t)`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QueuedReq {
+    /// Request identifier.
     pub id: RequestId,
     /// Arrival time (rounds in discrete sims, seconds in continuous).
     pub arrival: f64,
@@ -58,6 +60,9 @@ pub struct QueuedReq {
     pub s: u64,
     /// Predicted output length `õ_i`.
     pub pred: u64,
+    /// Traffic class (0 = default); consumed by priority-aware
+    /// schedulers and the SLO-aware router.
+    pub class: ClassId,
 }
 
 impl QueuedReq {
@@ -153,6 +158,7 @@ mod tests {
             arrival: 0.0,
             s: 5,
             pred: 3,
+            class: 0,
         };
         let item = q.feas_item();
         assert_eq!(item.mem_at(0), 6); // prompt round: s + 1

@@ -3,6 +3,7 @@
 //! across algorithms and languages.
 
 use super::request::{Request, RequestId};
+use super::slo::ClassSet;
 use crate::util::error::{anyhow, Context, Result};
 use crate::util::json::Json;
 
@@ -12,10 +13,16 @@ use crate::util::json::Json;
 pub struct Instance {
     /// KV-cache budget `M` in tokens.
     pub m: u64,
+    /// Requests sorted by arrival, with dense ids.
     pub requests: Vec<Request>,
+    /// Traffic classes the requests' [`Request::class`] tags index into;
+    /// empty for the classic single-class model.
+    pub classes: ClassSet,
 }
 
 impl Instance {
+    /// Build a single-class instance (requests sorted and re-indexed by
+    /// arrival).
     pub fn new(m: u64, mut requests: Vec<Request>) -> Instance {
         requests.sort_by(|a, b| {
             a.arrival
@@ -27,7 +34,18 @@ impl Instance {
         for (i, r) in requests.iter_mut().enumerate() {
             r.id = i as RequestId;
         }
-        Instance { m, requests }
+        Instance {
+            m,
+            requests,
+            classes: ClassSet::default(),
+        }
+    }
+
+    /// Attach the traffic-class table the requests' tags refer to
+    /// (builder style; used by the class-mixture generators).
+    pub fn with_classes(mut self, classes: ClassSet) -> Instance {
+        self.classes = classes;
+        self
     }
 
     pub fn n(&self) -> usize {
@@ -63,34 +81,64 @@ impl Instance {
 
     // ---- JSON trace format ------------------------------------------------
 
+    /// Serialize to the JSON trace format. Untagged requests and the
+    /// empty class table are omitted, so single-class traces keep the
+    /// original schema.
     pub fn to_json(&self) -> Json {
         let reqs: Vec<Json> = self
             .requests
             .iter()
             .map(|r| {
-                Json::obj()
+                let mut j = Json::obj()
                     .set("id", r.id)
                     .set("arrival", r.arrival)
                     .set("s", r.prompt_len)
-                    .set("o", r.output_len)
+                    .set("o", r.output_len);
+                if r.class != 0 {
+                    j = j.set("class", r.class);
+                }
+                j
             })
             .collect();
-        Json::obj().set("m", self.m).set("requests", Json::Arr(reqs))
+        let mut j = Json::obj().set("m", self.m).set("requests", Json::Arr(reqs));
+        if !self.classes.is_empty() {
+            j = j.set("classes", self.classes.to_json());
+        }
+        j
     }
 
+    /// Parse the [`Self::to_json`] trace format (missing `class` /
+    /// `classes` fields read back as the single-class default). Class
+    /// tags must index into the trace's class table — a tag at or past
+    /// `classes.len()` (or any nonzero tag without a table) is a malformed
+    /// trace, not a silent default: downstream consumers size per-class
+    /// vectors by the tag and rank unknown classes most-urgent.
     pub fn from_json(j: &Json) -> Result<Instance> {
         let m = j.req_usize("m")? as u64;
+        let classes = match j.get("classes") {
+            Some(cj) => ClassSet::from_json(cj)?,
+            None => ClassSet::default(),
+        };
+        let class_bound = classes.len().max(1);
         let mut requests = Vec::new();
         for (i, rj) in j.req_arr("requests")?.iter().enumerate() {
+            let class = rj.get("class").and_then(|v| v.as_usize()).unwrap_or(0);
+            if class >= class_bound {
+                return Err(anyhow!(
+                    "request {i}: class tag {class} outside the trace's {} class(es)",
+                    classes.len()
+                ));
+            }
             let r = Request::new(
                 rj.get("id").and_then(|v| v.as_usize()).unwrap_or(i),
                 rj.req_f64("arrival")?,
                 rj.req_usize("s")? as u64,
                 rj.req_usize("o")? as u64,
-            );
+            )
+            .with_class(class);
             requests.push(r);
         }
-        Ok(Instance::new(m, requests))
+        Ok(Instance::new(m, requests).with_classes(classes))
     }
 
     pub fn save(&self, path: &str) -> Result<()> {
@@ -156,6 +204,46 @@ mod tests {
         let j = inst.to_json();
         let back = Instance::from_json(&j).unwrap();
         assert_eq!(back, inst);
+    }
+
+    #[test]
+    fn classed_json_roundtrip() {
+        use crate::core::slo::ClassSet;
+        let classes = ClassSet::parse("interactive:0.8,batch:0.2").unwrap();
+        let inst = Instance::new(
+            50,
+            vec![
+                Request::new(0, 0.0, 2, 4).with_class(1),
+                Request::new(1, 1.0, 3, 3),
+            ],
+        )
+        .with_classes(classes.clone());
+        let back = Instance::from_json(&inst.to_json()).unwrap();
+        assert_eq!(back, inst);
+        assert_eq!(back.requests[0].class, 1);
+        assert_eq!(back.classes, classes);
+        // Single-class traces keep the legacy schema (no class keys).
+        let plain = tiny();
+        let text = plain.to_json().pretty();
+        assert!(!text.contains("class"));
+    }
+
+    #[test]
+    fn out_of_range_class_tags_rejected() {
+        // A tag with no class table at all.
+        let j = Json::parse(
+            r#"{"m": 50, "requests": [{"id":0,"arrival":0,"s":2,"o":2,"class":3}]}"#,
+        )
+        .unwrap();
+        assert!(Instance::from_json(&j).is_err());
+        // A tag past the declared table (also guards the huge-tag case
+        // that would otherwise size per-class vectors by the raw value).
+        let classed = Instance::new(50, vec![Request::new(0, 0.0, 2, 2).with_class(1)])
+            .with_classes(crate::core::slo::ClassSet::parse("interactive:0.5,batch:0.5").unwrap());
+        let mut j = classed.to_json().to_map();
+        j.remove("classes");
+        let stripped = Json::Obj(j.into_iter().collect());
+        assert!(Instance::from_json(&stripped).is_err());
     }
 
     #[test]

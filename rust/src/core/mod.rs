@@ -9,11 +9,13 @@ pub mod batch;
 pub mod fleet;
 pub mod instance;
 pub mod request;
+pub mod slo;
 
 pub use batch::{ActiveReq, FeasItem, QueuedReq};
 pub use fleet::FleetSpec;
 pub use instance::Instance;
 pub use request::{Request, RequestId};
+pub use slo::{ClassId, ClassSet, RequestClass, SloSpec};
 
 /// Discrete round index (1-based inside simulations).
 pub type Round = u64;

@@ -1,5 +1,7 @@
 //! Request type: one prompt with its (true) output length.
 
+use super::slo::ClassId;
+
 /// Request identifier (dense index into the instance).
 pub type RequestId = usize;
 
@@ -14,15 +16,24 @@ pub type RequestId = usize;
 /// * `output_len` — `o_i`, tokens the model will generate. Producing
 ///   output token `j` requires `s_i + j` KV slots; the peak is
 ///   `s_i + o_i`, freed at completion.
+/// * `class` — traffic class ([`ClassId`] into the instance's
+///   [`super::ClassSet`]); 0 for untagged single-class workloads.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
+    /// Dense identifier (assigned in arrival order by the instance).
     pub id: RequestId,
+    /// Arrival time (rounds in discrete sims, seconds in continuous).
     pub arrival: f64,
+    /// Prompt length `s_i` in tokens.
     pub prompt_len: u64,
+    /// True output length `o_i` in tokens.
     pub output_len: u64,
+    /// Traffic class; 0 = default class.
+    pub class: ClassId,
 }
 
 impl Request {
+    /// Build a default-class request (the classic paper model).
     pub fn new(id: RequestId, arrival: f64, prompt_len: u64, output_len: u64) -> Request {
         assert!(prompt_len > 0, "prompt_len must be positive");
         assert!(output_len > 0, "output_len must be positive");
@@ -32,7 +43,21 @@ impl Request {
             arrival,
             prompt_len,
             output_len,
+            class: 0,
         }
+    }
+
+    /// Tag this request with a traffic class (builder style).
+    pub fn with_class(mut self, class: ClassId) -> Request {
+        self.class = class;
+        self
+    }
+
+    /// Copy of this request re-timed to `arrival` (all other fields —
+    /// lengths, id, class — preserved; used by arrival-rate scaling).
+    pub fn retimed(&self, arrival: f64) -> Request {
+        assert!(arrival >= 0.0 && arrival.is_finite());
+        Request { arrival, ..*self }
     }
 
     /// Arrival as a discrete round (requires integral arrival).
@@ -108,5 +133,19 @@ mod tests {
     fn arrival_round_integral() {
         let r = Request::new(1, 7.0, 2, 2);
         assert_eq!(r.arrival_round(), 7);
+    }
+
+    #[test]
+    fn class_tagging_and_retiming() {
+        let r = Request::new(0, 4.0, 3, 5);
+        assert_eq!(r.class, 0);
+        let tagged = r.with_class(2);
+        assert_eq!(tagged.class, 2);
+        let moved = tagged.retimed(1.0);
+        assert_eq!(moved.arrival, 1.0);
+        assert_eq!(moved.class, 2);
+        assert_eq!(moved.prompt_len, 3);
+        assert_eq!(moved.output_len, 5);
+        assert_eq!(moved.id, 0);
     }
 }

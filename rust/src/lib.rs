@@ -40,15 +40,17 @@ pub mod runtime;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
-    pub use crate::cluster::{router_by_name, Fleet, Router};
+    pub use crate::cluster::{router_by_name, router_by_name_classed, Fleet, Router, SloAware};
     pub use crate::core::{
-        ActiveReq, FleetSpec, Instance, Mem, QueuedReq, Request, RequestId, Round,
+        ActiveReq, ClassId, ClassSet, FleetSpec, Instance, Mem, QueuedReq, Request, RequestClass,
+        RequestId, Round, SloSpec,
     };
     pub use crate::metrics::{FleetOutcome, SimOutcome};
     pub use crate::predictor::Predictor;
     pub use crate::sched::{
-        by_name, paper_benchmark_suite, AlphaProtection, FcfsThreshold, McBenchmark, McSf,
-        Scheduler,
+        by_name, by_name_classed, paper_benchmark_suite, AlphaProtection, EdfThreshold,
+        FcfsThreshold, McBenchmark, McSf, PrioritySf, Scheduler,
     };
+    pub use crate::workload::ClassMixGen;
     pub use crate::util::rng::Rng;
 }

@@ -12,18 +12,28 @@
 //!   kvsched simulate --trace trace.json --algo mcsf
 //!   kvsched simulate --workload lmsys --n 500 --lambda 10 --algo protect:alpha=0.25
 //!   kvsched simulate --n 800 --lambda 50 --workers 4 --router po2
+//!   kvsched simulate --n 500 --lambda 30 --classes interactive:0.8,batch:0.2 --slo
+//!   kvsched simulate --n 500 --classes interactive:0.8,batch:0.2 --algo priority --slo
 //!   kvsched suite --n 300 --lambda 50 --seed 1
 //!   kvsched suite --n 300 --lambda 50 --workers 4 --router jsq
+//!   kvsched suite --n 300 --classes interactive:0.5,batch:0.5 --slo
 //!   kvsched hindsight --n 8 --m 16 --seed 3
 //!   kvsched serve --artifacts artifacts --n 12 --lambda 2
 //!   kvsched serve --artifacts artifacts --n 24 --workers 2 --router least-kv
+//!   kvsched serve --artifacts artifacts --n 24 --classes interactive:0.8,batch:0.2 --slo
 //!
 //! Fleet flags (`simulate` / `suite` / `serve`): `--workers N` runs N
-//! replicas behind `--router rr|jsq|least-kv|po2`; simulated arrival
-//! rates are scaled λ × N so per-worker load stays comparable with the
-//! single-worker baseline (disable with `--no-scale`).
+//! replicas behind `--router rr|jsq|least-kv|po2|slo-aware`; simulated
+//! arrival rates are scaled λ × N so per-worker load stays comparable
+//! with the single-worker baseline (disable with `--no-scale`).
+//!
+//! SLO flags: `--classes <spec>` generates an SLO-tiered mixture (see
+//! `ClassSet::parse` for the grammar, e.g. `interactive:0.8,batch:0.2`)
+//! and hands the class table to class-aware schedulers/routers
+//! (`--algo priority`, `--algo edf`, `--router slo-aware`); `--slo`
+//! prints the per-class latency/TTFT percentiles and goodput table.
 
-use kvsched::core::{Instance, Request};
+use kvsched::core::{ClassSet, Instance, Request};
 use kvsched::perf::Llama70bA100x2;
 use kvsched::predictor::Predictor;
 use kvsched::prelude::*;
@@ -31,7 +41,7 @@ use kvsched::opt::{self, HindsightConfig};
 use kvsched::sim::{continuous, discrete, SimConfig};
 use kvsched::util::cli::Args;
 use kvsched::util::error::{anyhow, Result};
-use kvsched::workload::{self, lmsys::LmsysGen, synthetic};
+use kvsched::workload::{self, synthetic};
 
 fn main() {
     let args = Args::from_env();
@@ -71,9 +81,32 @@ fn scale_for_fleet(inst: Instance, workers: usize, args: &Args) -> Instance {
     }
 }
 
+/// Parse the `--classes` spec, if present.
+fn class_set(args: &Args) -> Result<ClassSet> {
+    match args.get("classes") {
+        Some(spec) => ClassSet::parse(spec),
+        None => Ok(ClassSet::default()),
+    }
+}
+
 fn load_or_generate(args: &Args) -> Result<Instance> {
+    let classes = class_set(args)?;
     if let Some(path) = args.get("trace") {
-        return Instance::load(path);
+        let mut inst = Instance::load(path)?;
+        if !classes.is_empty() {
+            // Re-score a trace against an explicit class table (request
+            // tags come from the trace itself, so they must fit it).
+            if let Some(r) = inst.requests.iter().find(|r| r.class >= classes.len()) {
+                return Err(anyhow!(
+                    "trace request {} has class tag {} outside --classes ({} classes)",
+                    r.id,
+                    r.class,
+                    classes.len()
+                ));
+            }
+            inst.classes = classes;
+        }
+        return Ok(inst);
     }
     let seed = args.u64_or("seed", 0);
     let mut rng = Rng::new(seed);
@@ -81,14 +114,74 @@ fn load_or_generate(args: &Args) -> Result<Instance> {
         "model1" => synthetic::arrival_model_1(&mut rng),
         "model2" => synthetic::arrival_model_2(&mut rng),
         "adversarial" => synthetic::adversarial_thm41(args.u64_or("m", 256), 0),
-        _ => {
+        w => {
+            if w != "lmsys" {
+                return Err(anyhow!("unknown workload '{w}'"));
+            }
             let n = args.usize_or("n", 1000);
             let lambda = args.f64_or("lambda", 50.0);
             let m = args.u64_or("m", continuous::PAPER_M);
-            LmsysGen::new(m).instance(n, lambda, m, &mut rng)
+            // --classes routes through the mixture generator; without it
+            // this is the plain LMSYS trace (ClassMixGen reduces to it
+            // bit-identically for ≤ 1 default class).
+            return Ok(workload::ClassMixGen::new(classes, m).instance(n, lambda, m, &mut rng));
         }
     };
+    if !classes.is_empty() {
+        return Err(anyhow!(
+            "--classes requires the lmsys workload or a --trace (got --workload {})",
+            args.str_or("workload", "lmsys")
+        ));
+    }
     Ok(inst)
+}
+
+/// Print the per-class goodput / latency / TTFT table (`--slo`).
+fn print_slo_table(
+    title: &str,
+    goodput: f64,
+    rows: Vec<[String; 9]>,
+) {
+    let mut table = kvsched::bench::Table::new(
+        &format!("{title} — goodput {:.4}", goodput),
+        &[
+            "class",
+            "assigned",
+            "completed",
+            "goodput",
+            "avg_latency_s",
+            "p95_s",
+            "p99_s",
+            "avg_ttft_s",
+            "ttft_p95_s",
+        ],
+    );
+    for row in rows {
+        table.row(&row);
+    }
+    table.print();
+}
+
+/// Table rows from the shared per-class rollups
+/// ([`kvsched::metrics::ClassStats`] — the same records the outcome
+/// JSON embeds, so table and ledger cannot drift).
+fn slo_rows(stats: &[kvsched::metrics::ClassStats]) -> Vec<[String; 9]> {
+    stats
+        .iter()
+        .map(|s| {
+            [
+                s.name.clone(),
+                s.assigned.to_string(),
+                s.completed.to_string(),
+                kvsched::bench::fmt(s.goodput),
+                kvsched::bench::fmt(s.latency.mean),
+                kvsched::bench::fmt(s.latency.p95),
+                kvsched::bench::fmt(s.latency.p99),
+                kvsched::bench::fmt(s.ttft.mean),
+                kvsched::bench::fmt(s.ttft.p95),
+            ]
+        })
+        .collect()
 }
 
 fn gen_trace(args: &Args) -> Result<()> {
@@ -110,10 +203,11 @@ fn simulate(args: &Args) -> Result<()> {
 
     if workers > 1 {
         let inst = scale_for_fleet(inst, workers, args);
-        let mut fleet = Fleet::new(
+        let mut fleet = Fleet::new_classed(
             FleetSpec::replicas(workers),
             args.str_or("algo", "mcsf"),
             router,
+            &inst.classes,
         )?;
         let perf = Llama70bA100x2::default();
         let out = if args.has("unit-time") {
@@ -123,10 +217,13 @@ fn simulate(args: &Args) -> Result<()> {
         }
         .map_err(|e| anyhow!("fleet simulation failed: {e}"))?;
         println!("{}", out.to_json().pretty());
+        if args.has("slo") {
+            print_slo_table("per-class SLO report", out.goodput(), slo_rows(&out.class_stats()));
+        }
         return Ok(());
     }
 
-    let mut sched = kvsched::sched::by_name(args.str_or("algo", "mcsf"))?;
+    let mut sched = kvsched::sched::by_name_classed(args.str_or("algo", "mcsf"), &inst.classes)?;
     let out = if args.has("unit-time") {
         discrete::simulate_cfg(&inst, sched.as_mut(), &predictor, seed, SimConfig::default())
     } else {
@@ -139,6 +236,9 @@ fn simulate(args: &Args) -> Result<()> {
         )
     };
     println!("{}", out.to_json().pretty());
+    if args.has("slo") {
+        print_slo_table("per-class SLO report", out.goodput(), slo_rows(&out.class_stats()));
+    }
     Ok(())
 }
 
@@ -147,32 +247,44 @@ fn suite(args: &Args) -> Result<()> {
     let perf = Llama70bA100x2::default();
     let seed = args.u64_or("seed", 0);
     let (workers, router) = fleet_flags(args);
+    let slo = args.has("slo");
+    // Classed runs add the SLO-tier policies to the paper's suite.
+    let mut specs = kvsched::sched::paper_benchmark_specs();
+    if !inst.classes.is_empty() {
+        specs.insert(0, "priority");
+        specs.push("edf:threshold=0.9");
+    }
 
     if workers > 1 {
         let inst = scale_for_fleet(inst, workers, args);
+        let mut header = vec![
+            "algorithm",
+            "avg_latency_s",
+            "p95_s",
+            "p99_s",
+            "overflows",
+            "imbalance",
+            "finished",
+        ];
+        if slo {
+            header.insert(1, "goodput");
+        }
         let mut table = kvsched::bench::Table::new(
             &format!(
                 "benchmark suite, n={} M={} × {workers} workers (router {router})",
                 inst.n(),
                 inst.m
             ),
-            &[
-                "algorithm",
-                "avg_latency_s",
-                "p95_s",
-                "p99_s",
-                "overflows",
-                "imbalance",
-                "finished",
-            ],
+            &header,
         );
-        for spec in kvsched::sched::paper_benchmark_specs() {
-            let mut fleet = Fleet::new(FleetSpec::replicas(workers), spec, router)?;
+        for spec in specs {
+            let mut fleet =
+                Fleet::new_classed(FleetSpec::replicas(workers), spec, router, &inst.classes)?;
             let out = fleet
                 .try_simulate(&inst, &Predictor::exact(), &perf, seed, SimConfig::default())
                 .map_err(|e| anyhow!("fleet suite failed for {spec}: {e}"))?;
             let lat = out.latency_summary();
-            table.row(&[
+            let mut row = vec![
                 out.algo().to_string(),
                 kvsched::bench::fmt(out.avg_latency()),
                 kvsched::bench::fmt(lat.p95),
@@ -180,17 +292,26 @@ fn suite(args: &Args) -> Result<()> {
                 out.overflow_events().to_string(),
                 kvsched::bench::fmt(out.imbalance().assigned_max_over_mean),
                 out.finished().to_string(),
-            ]);
+            ];
+            if slo {
+                row.insert(1, kvsched::bench::fmt(out.goodput()));
+            }
+            table.row(&row);
         }
         table.print();
         return Ok(());
     }
 
+    let mut header = vec!["algorithm", "avg_latency_s", "p95_s", "p99_s", "overflows", "finished"];
+    if slo {
+        header.insert(1, "goodput");
+    }
     let mut table = kvsched::bench::Table::new(
         &format!("benchmark suite, n={} M={}", inst.n(), inst.m),
-        &["algorithm", "avg_latency_s", "p95_s", "p99_s", "overflows", "finished"],
+        &header,
     );
-    for mut sched in kvsched::sched::paper_benchmark_suite() {
+    for spec in specs {
+        let mut sched = kvsched::sched::by_name_classed(spec, &inst.classes)?;
         let out = continuous::try_simulate(
             &inst,
             sched.as_mut(),
@@ -200,14 +321,18 @@ fn suite(args: &Args) -> Result<()> {
             SimConfig::default(),
         )?;
         let lat = out.summary();
-        table.row(&[
+        let mut row = vec![
             out.algo.clone(),
             kvsched::bench::fmt(out.avg_latency()),
             kvsched::bench::fmt(lat.p95),
             kvsched::bench::fmt(lat.p99),
             out.overflow_events.to_string(),
             out.finished.to_string(),
-        ]);
+        ];
+        if slo {
+            row.insert(1, kvsched::bench::fmt(out.goodput()));
+        }
+        table.row(&row);
     }
     table.print();
     Ok(())
@@ -248,13 +373,27 @@ fn serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.u64_or("seed", 0));
     let (workers, router) = fleet_flags(args);
     let algo = args.str_or("algo", "mcsf");
+    let classes = class_set(args)?;
+    let cfg = CoordinatorConfig {
+        classes: classes.clone(),
+        ..CoordinatorConfig::default()
+    };
 
-    let mk_request = |i: usize, rng: &mut Rng| {
-        let o = rng.usize_range(4, 24) as u64;
+    let mk_request = |i: usize, rng: &mut Rng, classes: &ClassSet| {
+        // The same mixture draw the simulated workload uses
+        // (ClassSet::draw_class), so served and simulated traffic
+        // sample classes identically.
+        let class = classes.draw_class(rng);
+        let scale = classes
+            .get(class)
+            .map(|c| c.output_scale)
+            .unwrap_or(1.0);
+        let o = ((rng.usize_range(4, 24) as f64 * scale).round() as u64).max(1);
         ServeRequest {
             prompt: format!("user request {i}: please respond").into_bytes(),
             max_new_tokens: o,
             predicted_new_tokens: o,
+            class,
         }
     };
 
@@ -270,17 +409,17 @@ fn serve(args: &Args) -> Result<()> {
             .map(|_| kvsched::runtime::Engine::load(dir))
             .collect::<Result<Vec<_>>>()?;
         let scheds = (0..workers)
-            .map(|_| kvsched::sched::by_name(algo))
+            .map(|_| kvsched::sched::by_name_classed(algo, &classes))
             .collect::<Result<Vec<_>>>()?;
         let fleet = FleetCoordinator::start(
             engines,
             scheds,
-            kvsched::cluster::router_by_name(router)?,
-            CoordinatorConfig::default(),
+            kvsched::cluster::router_by_name_classed(router, &classes)?,
+            cfg,
         );
         let mut rxs = Vec::new();
         for i in 0..n {
-            let req = mk_request(i, &mut rng);
+            let req = mk_request(i, &mut rng, &classes);
             rxs.push(fleet.submit(req).1);
             std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
         }
@@ -300,15 +439,19 @@ fn serve(args: &Args) -> Result<()> {
             kvsched::util::stats::percentile(&latencies, 95.0),
             kvsched::util::stats::percentile(&latencies, 99.0),
         );
+        if args.has("slo") {
+            let rows = slo_rows(&out.class_stats());
+            print_slo_table("served per-class SLO report", out.goodput(), rows);
+        }
         return Ok(());
     }
 
     let engine = kvsched::runtime::Engine::load(dir)?;
-    let sched = kvsched::sched::by_name(algo)?;
-    let coord = Coordinator::start(engine, sched, CoordinatorConfig::default());
+    let sched = kvsched::sched::by_name_classed(algo, &classes)?;
+    let coord = Coordinator::start(engine, sched, cfg);
     let mut rxs = Vec::new();
     for i in 0..n {
-        let req = mk_request(i, &mut rng);
+        let req = mk_request(i, &mut rng, &classes);
         rxs.push(coord.submit(req));
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
     }
@@ -325,5 +468,9 @@ fn serve(args: &Args) -> Result<()> {
         kvsched::util::stats::mean(&latencies),
         kvsched::util::stats::percentile(&latencies, 95.0),
     );
+    if args.has("slo") {
+        let rows = slo_rows(&stats.class_stats());
+        print_slo_table("served per-class SLO report", stats.goodput(), rows);
+    }
     Ok(())
 }

@@ -1,16 +1,27 @@
-//! Simulation/serving outcome recording and derived metrics.
+//! Simulation/serving outcome recording and derived metrics: per-request
+//! lifecycle records (latency, queueing wait, TTFT), per-worker
+//! [`SimOutcome`]s, fleet-level [`FleetOutcome`] rollups, and the
+//! SLO-tier views — per-class latency summaries and **goodput**, the
+//! fraction of requests that met their class's [`SloSpec`].
 
-use crate::core::RequestId;
+use crate::core::{ClassId, ClassSet, RequestId, SloSpec};
 use crate::util::json::Json;
 use crate::util::stats;
 
 /// Per-request lifecycle record.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PerRequest {
+    /// Request identifier.
     pub id: RequestId,
+    /// Traffic class ([`ClassId`] into the outcome's class table).
+    pub class: ClassId,
+    /// Arrival time.
     pub arrival: f64,
     /// Time the request *last* entered service (after any clearings).
     pub start: f64,
+    /// Time its *first* output token completed (never reset by
+    /// evictions — the token was already produced and streamed).
+    pub first_token: f64,
     /// Time its final output token completed.
     pub completion: f64,
     /// Number of times the request was evicted and restarted.
@@ -27,16 +38,35 @@ impl PerRequest {
     pub fn wait(&self) -> f64 {
         self.start - self.arrival
     }
+
+    /// Time-to-first-token: first output token time minus arrival.
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// Whether this request met the given SLO (TTFT and e2e latency).
+    pub fn met(&self, slo: &SloSpec) -> bool {
+        slo.met(self.ttft(), self.latency())
+    }
 }
 
 /// Full outcome of one simulated (or served) run — for a fleet, one of
 /// these per worker (see [`FleetOutcome`]).
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
+    /// Scheduling-policy name.
     pub algo: String,
     /// Requests routed to this worker (= n for a single-worker run; in a
     /// fleet the per-worker counts partition the instance).
     pub assigned: usize,
+    /// Per-class breakdown of [`Self::assigned`] (indexed by
+    /// [`ClassId`]; may be shorter than the class table when a tail
+    /// class was never routed here).
+    pub assigned_by_class: Vec<usize>,
+    /// Traffic classes (and their SLOs) this run was scored against;
+    /// empty for single-class runs.
+    pub classes: ClassSet,
+    /// Lifecycle record per completed request.
     pub per_request: Vec<PerRequest>,
     /// (time, KV tokens in use) sampled once per round/iteration.
     pub mem_series: Vec<(f64, u64)>,
@@ -62,6 +92,8 @@ impl SimOutcome {
         SimOutcome {
             algo: algo.to_string(),
             assigned: 0,
+            assigned_by_class: Vec::new(),
+            classes: ClassSet::default(),
             per_request: Vec::new(),
             mem_series: Vec::new(),
             tokens_series: Vec::new(),
@@ -133,6 +165,129 @@ impl SimOutcome {
         stats::Summary::of(&self.waits())
     }
 
+    // ----- SLO-tier views ----------------------------------------------
+
+    /// Number of classes to report on (≥ 1: untagged runs report one
+    /// default class).
+    pub fn class_count(&self) -> usize {
+        self.classes.len().max(1)
+    }
+
+    /// Per-request TTFTs (first output token minus arrival).
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.per_request.iter().map(|r| r.ttft()).collect()
+    }
+
+    /// TTFT summary over all completed requests.
+    pub fn ttft_summary(&self) -> stats::Summary {
+        stats::Summary::of(&self.ttfts())
+    }
+
+    /// Completed requests that met their class SLO. Untagged classes
+    /// have no objective, so every completed request counts.
+    pub fn met_count(&self) -> usize {
+        self.per_request
+            .iter()
+            .filter(|r| r.met(&self.classes.slo(r.class)))
+            .count()
+    }
+
+    /// Requests this worker is accountable for when scoring goodput:
+    /// everything routed to it (unserved requests count as misses), or
+    /// the completed count for hand-built outcomes that never set
+    /// `assigned`.
+    pub fn slo_denominator(&self) -> usize {
+        self.assigned.max(self.per_request.len())
+    }
+
+    /// **Goodput**: fraction of requests that met their class SLO, over
+    /// everything routed here (an unserved request is a miss, not a
+    /// skip). 0.0 for an empty run.
+    pub fn goodput(&self) -> f64 {
+        let d = self.slo_denominator();
+        if d == 0 {
+            0.0
+        } else {
+            self.met_count() as f64 / d as f64
+        }
+    }
+
+    /// Requests routed to this worker in class `c`.
+    pub fn class_assigned(&self, c: ClassId) -> usize {
+        self.assigned_by_class.get(c).copied().unwrap_or(0)
+    }
+
+    /// Completed-request latencies for class `c`.
+    pub fn class_latencies(&self, c: ClassId) -> Vec<f64> {
+        self.per_request
+            .iter()
+            .filter(|r| r.class == c)
+            .map(|r| r.latency())
+            .collect()
+    }
+
+    /// Completed-request TTFTs for class `c`.
+    pub fn class_ttfts(&self, c: ClassId) -> Vec<f64> {
+        self.per_request
+            .iter()
+            .filter(|r| r.class == c)
+            .map(|r| r.ttft())
+            .collect()
+    }
+
+    /// Per-class goodput: SLO-met requests of class `c` over everything
+    /// of class `c` routed here.
+    pub fn class_goodput(&self, c: ClassId) -> f64 {
+        let slo = self.classes.slo(c);
+        let met = self
+            .per_request
+            .iter()
+            .filter(|r| r.class == c && r.met(&slo))
+            .count();
+        let completed = self.per_request.iter().filter(|r| r.class == c).count();
+        let d = if self.classes.is_empty() && c == 0 {
+            // Untagged runs: class 0 is the whole run.
+            self.slo_denominator()
+        } else {
+            self.class_assigned(c).max(completed)
+        };
+        if d == 0 {
+            0.0
+        } else {
+            met as f64 / d as f64
+        }
+    }
+
+    /// Per-class rollups (one [`ClassStats`] per class; untagged runs
+    /// report one `default` class) — the single source for the JSON
+    /// ledgers and the CLI `--slo` table.
+    pub fn class_stats(&self) -> Vec<ClassStats> {
+        (0..self.class_count())
+            .map(|c| {
+                let latency = stats::Summary::of(&self.class_latencies(c));
+                let assigned = if self.classes.is_empty() {
+                    self.assigned
+                } else {
+                    self.class_assigned(c)
+                };
+                ClassStats {
+                    class: c,
+                    name: self.classes.name(c).to_string(),
+                    assigned: assigned.max(latency.n),
+                    completed: latency.n,
+                    goodput: self.class_goodput(c),
+                    latency,
+                    ttft: stats::Summary::of(&self.class_ttfts(c)),
+                }
+            })
+            .collect()
+    }
+
+    /// JSON array with one entry per class ([`ClassStats::to_json`]).
+    pub fn per_class_json(&self) -> Json {
+        Json::Arr(self.class_stats().iter().map(ClassStats::to_json).collect())
+    }
+
     pub fn to_json(&self) -> Json {
         let lat = self.summary();
         let wait = self.wait_summary();
@@ -140,6 +295,8 @@ impl SimOutcome {
             .set("algo", self.algo.clone())
             .set("n", self.per_request.len())
             .set("assigned", self.assigned)
+            .set("goodput", self.goodput())
+            .set("per_class", self.per_class_json())
             .set("avg_latency", self.avg_latency())
             .set("total_latency", self.total_latency())
             .set("latency_p50", lat.p50)
@@ -155,6 +312,48 @@ impl SimOutcome {
             .set("evicted_requests", self.evicted_requests)
             .set("rounds", self.rounds)
             .set("finished", self.finished)
+    }
+}
+
+/// One traffic class's rollup: volumes, goodput, latency and TTFT
+/// summaries. Produced by [`SimOutcome::class_stats`] /
+/// [`FleetOutcome::class_stats`] and shared by the JSON ledgers and the
+/// CLI `--slo` table so the two can't drift.
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    /// Class id this entry describes.
+    pub class: ClassId,
+    /// Display name from the class table (`default` when untagged).
+    pub name: String,
+    /// Requests routed (at least the completed count).
+    pub assigned: usize,
+    /// Requests completed.
+    pub completed: usize,
+    /// SLO-met fraction over the class's routed requests.
+    pub goodput: f64,
+    /// End-to-end latency summary over completed requests.
+    pub latency: stats::Summary,
+    /// Time-to-first-token summary over completed requests.
+    pub ttft: stats::Summary,
+}
+
+impl ClassStats {
+    /// The per-class ledger entry embedded in outcome JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("class", self.class)
+            .set("name", self.name.clone())
+            .set("assigned", self.assigned)
+            .set("completed", self.completed)
+            .set("goodput", self.goodput)
+            .set("avg_latency", self.latency.mean)
+            .set("latency_p50", self.latency.p50)
+            .set("latency_p95", self.latency.p95)
+            .set("latency_p99", self.latency.p99)
+            .set("avg_ttft", self.ttft.mean)
+            .set("ttft_p50", self.ttft.p50)
+            .set("ttft_p95", self.ttft.p95)
+            .set("ttft_p99", self.ttft.p99)
     }
 }
 
@@ -285,6 +484,97 @@ impl FleetOutcome {
         stats::Summary::of(&self.waits())
     }
 
+    // ----- SLO-tier views ----------------------------------------------
+
+    /// The (shared) class table the fleet was scored against.
+    pub fn classes(&self) -> &ClassSet {
+        &self.per_worker[0].classes
+    }
+
+    /// SLO-met requests across the fleet.
+    pub fn met_count(&self) -> usize {
+        self.per_worker.iter().map(|w| w.met_count()).sum()
+    }
+
+    /// Fleet-wide goodput: SLO-met requests over everything routed
+    /// anywhere (unserved requests are misses — goodput composes with
+    /// the imbalance stats precisely because a router that black-holes a
+    /// queue pays for it here).
+    pub fn goodput(&self) -> f64 {
+        let d: usize = self.per_worker.iter().map(|w| w.slo_denominator()).sum();
+        if d == 0 {
+            0.0
+        } else {
+            self.met_count() as f64 / d as f64
+        }
+    }
+
+    /// Fleet-wide per-class goodput (met over routed, all workers).
+    pub fn class_goodput(&self, c: ClassId) -> f64 {
+        let slo = self.classes().slo(c);
+        let mut met = 0usize;
+        let mut completed = 0usize;
+        let mut assigned = 0usize;
+        for w in &self.per_worker {
+            met += w
+                .per_request
+                .iter()
+                .filter(|r| r.class == c && r.met(&slo))
+                .count();
+            completed += w.per_request.iter().filter(|r| r.class == c).count();
+            assigned += w.class_assigned(c);
+        }
+        let d = assigned.max(completed);
+        if d == 0 {
+            0.0
+        } else {
+            met as f64 / d as f64
+        }
+    }
+
+    /// Fleet-wide latencies of class `c`'s completed requests.
+    pub fn class_latencies(&self, c: ClassId) -> Vec<f64> {
+        self.per_worker
+            .iter()
+            .flat_map(|w| w.class_latencies(c))
+            .collect()
+    }
+
+    /// Fleet-wide TTFTs of class `c`'s completed requests.
+    pub fn class_ttfts(&self, c: ClassId) -> Vec<f64> {
+        self.per_worker
+            .iter()
+            .flat_map(|w| w.class_ttfts(c))
+            .collect()
+    }
+
+    /// Fleet-level per-class rollups (mirrors
+    /// [`SimOutcome::class_stats`], summed over workers).
+    pub fn class_stats(&self) -> Vec<ClassStats> {
+        let classes = self.classes();
+        (0..classes.len().max(1))
+            .map(|c| {
+                let latency = stats::Summary::of(&self.class_latencies(c));
+                let assigned: usize =
+                    self.per_worker.iter().map(|w| w.class_assigned(c)).sum();
+                ClassStats {
+                    class: c,
+                    name: classes.name(c).to_string(),
+                    assigned: assigned.max(latency.n),
+                    completed: latency.n,
+                    goodput: self.class_goodput(c),
+                    latency,
+                    ttft: stats::Summary::of(&self.class_ttfts(c)),
+                }
+            })
+            .collect()
+    }
+
+    /// JSON array with one entry per class ([`ClassStats::to_json`]).
+    pub fn per_class_json(&self) -> Json {
+        Json::Arr(self.class_stats().iter().map(ClassStats::to_json).collect())
+    }
+
     /// How unevenly the router spread the load.
     pub fn imbalance(&self) -> Imbalance {
         let assigned: Vec<f64> = self.per_worker.iter().map(|w| w.assigned as f64).collect();
@@ -310,6 +600,8 @@ impl FleetOutcome {
             .set("finished", self.finished())
             .set("total_rounds", self.total_rounds())
             .set("overflow_events", self.overflow_events())
+            .set("goodput", self.goodput())
+            .set("per_class", self.per_class_json())
             .set("avg_latency", self.avg_latency())
             .set("total_latency", self.total_latency())
             .set("latency_p50", lat.p50)
@@ -357,15 +649,19 @@ mod tests {
         o.per_request = vec![
             PerRequest {
                 id: 0,
+                class: 0,
                 arrival: 0.0,
                 start: 1.0,
+                first_token: 2.0,
                 completion: 5.0,
                 restarts: 0,
             },
             PerRequest {
                 id: 1,
+                class: 0,
                 arrival: 2.0,
                 start: 3.0,
+                first_token: 4.0,
                 completion: 11.0,
                 restarts: 1,
             },
@@ -434,8 +730,10 @@ mod tests {
         b.rounds = 5;
         b.per_request = vec![PerRequest {
             id: 2,
+            class: 0,
             arrival: 1.0,
             start: 1.0,
+            first_token: 2.0,
             completion: 4.0,
             restarts: 0,
         }];
@@ -476,6 +774,129 @@ mod tests {
         assert_eq!(j.req_usize("completed").unwrap(), 3);
         assert_eq!(j.req_arr("per_worker").unwrap().len(), 2);
         assert!(j.get("imbalance_assigned").is_some());
+    }
+
+    fn tiered() -> ClassSet {
+        // interactive: ttft ≤ 2, e2e ≤ 30; batch: e2e ≤ 300.
+        ClassSet::parse("interactive:0.5,batch:0.5").unwrap()
+    }
+
+    fn classed_outcome() -> SimOutcome {
+        let mut o = SimOutcome::new("test");
+        o.classes = tiered();
+        o.assigned = 4;
+        o.assigned_by_class = vec![2, 2];
+        o.per_request = vec![
+            // interactive, meets both targets (ttft 1, latency 5).
+            PerRequest {
+                id: 0,
+                class: 0,
+                arrival: 0.0,
+                start: 0.0,
+                first_token: 1.0,
+                completion: 5.0,
+                restarts: 0,
+            },
+            // interactive, misses TTFT (3 > 2).
+            PerRequest {
+                id: 1,
+                class: 0,
+                arrival: 0.0,
+                start: 2.0,
+                first_token: 3.0,
+                completion: 6.0,
+                restarts: 0,
+            },
+            // batch, meets its loose e2e target.
+            PerRequest {
+                id: 2,
+                class: 1,
+                arrival: 0.0,
+                start: 5.0,
+                first_token: 9.0,
+                completion: 120.0,
+                restarts: 0,
+            },
+        ];
+        // The 4th assigned (batch) request never completed: a miss.
+        o.finished = false;
+        o
+    }
+
+    #[test]
+    fn ttft_and_met() {
+        let o = outcome();
+        assert_eq!(o.per_request[0].ttft(), 2.0);
+        assert_eq!(o.per_request[1].ttft(), 2.0);
+        // No-objective SLO: everything completed counts as met.
+        assert!(o.per_request[0].met(&SloSpec::default()));
+        let tight = SloSpec {
+            ttft_target: 1.0,
+            e2e_target: 100.0,
+            weight: 1.0,
+        };
+        assert!(!o.per_request[0].met(&tight));
+    }
+
+    #[test]
+    fn goodput_counts_unserved_as_misses() {
+        let o = classed_outcome();
+        // met: request 0 (interactive) + request 2 (batch) = 2 of 4 routed.
+        assert_eq!(o.met_count(), 2);
+        assert!((o.goodput() - 0.5).abs() < 1e-12);
+        // Interactive: 1 of 2 assigned met; batch: 1 of 2 (one unserved).
+        assert!((o.class_goodput(0) - 0.5).abs() < 1e-12);
+        assert!((o.class_goodput(1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_breakdowns() {
+        let o = classed_outcome();
+        assert_eq!(o.class_count(), 2);
+        assert_eq!(o.class_latencies(0), vec![5.0, 6.0]);
+        assert_eq!(o.class_ttfts(1), vec![9.0]);
+        assert_eq!(o.class_assigned(1), 2);
+        let j = o.to_json();
+        assert!((j.req_f64("goodput").unwrap() - 0.5).abs() < 1e-12);
+        let pc = j.req_arr("per_class").unwrap();
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc[0].req_str("name").unwrap(), "interactive");
+        assert_eq!(pc[1].req_usize("completed").unwrap(), 1);
+        assert!(pc[0].get("latency_p99").is_some());
+        assert!(pc[0].get("ttft_p95").is_some());
+    }
+
+    #[test]
+    fn untagged_outcome_reports_one_default_class() {
+        let o = outcome();
+        assert_eq!(o.class_count(), 1);
+        // No SLO: both completed requests are "met"; assigned was never
+        // set on this hand-built outcome, so completed is the base.
+        assert!((o.goodput() - 1.0).abs() < 1e-12);
+        let pc = o.to_json();
+        let pc = pc.req_arr("per_class").unwrap();
+        assert_eq!(pc.len(), 1);
+        assert_eq!(pc[0].req_str("name").unwrap(), "default");
+    }
+
+    #[test]
+    fn fleet_goodput_and_classes() {
+        let f = fleet();
+        // Untagged fleet: denominators are per-worker assigned (2 + 4),
+        // met = completed = 3.
+        assert_eq!(f.met_count(), 3);
+        assert!((f.goodput() - 0.5).abs() < 1e-12);
+        let j = f.to_json();
+        assert!(j.get("goodput").is_some());
+        assert_eq!(j.req_arr("per_class").unwrap().len(), 1);
+        // Classed workers roll up per class.
+        let mut w = classed_outcome();
+        w.finished = true;
+        let cf = FleetOutcome::new("rr", vec![w.clone(), w]);
+        assert_eq!(cf.classes().len(), 2);
+        assert_eq!(cf.class_latencies(0).len(), 4);
+        assert!((cf.class_goodput(0) - 0.5).abs() < 1e-12);
+        assert!((cf.goodput() - 0.5).abs() < 1e-12);
     }
 
     #[test]

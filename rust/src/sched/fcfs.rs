@@ -68,6 +68,7 @@ mod tests {
                 arrival: i as f64,
                 s: 4,
                 pred: 10,
+                class: 0,
             })
             .collect();
         let mut rng = Rng::new(0);

@@ -390,6 +390,7 @@ mod tests {
             arrival: 0.0,
             s,
             pred,
+            class: 0,
         }
     }
 

@@ -24,10 +24,14 @@ use super::feasibility::{OrdF64, PersistentFeasChecker};
 use crate::core::{FeasItem, Mem, QueuedReq, RequestId, Round};
 use std::collections::{BTreeMap, HashMap};
 
-/// Waiting-queue scan key: (policy primary key, arrival, id). The
-/// primary key is the predicted output length for MC-SF and 0 for the
-/// FCFS-ordered MC-Benchmark; the unique id makes the order total.
-type WaitKey = (u64, OrdF64, RequestId);
+/// Waiting-queue scan key: (priority group, policy primary key, arrival,
+/// id). The group is the class-priority rank for the SLO-aware
+/// [`PrioritySf`](super::PrioritySf) and 0 for single-class policies;
+/// the primary key is the predicted output length for MC-SF and 0 for
+/// the FCFS-ordered MC-Benchmark; the unique id makes the order total.
+/// A group of 0 everywhere leaves the legacy (primary, arrival, id)
+/// order untouched, which is what keeps single-class runs bit-identical.
+type WaitKey = (u64, u64, OrdF64, RequestId);
 
 /// Persistent waiting index + running-batch checker. Policies embed one
 /// and forward the [`Scheduler`](super::Scheduler) hooks to it.
@@ -57,9 +61,11 @@ impl IncrementalCore {
         self.checker.len()
     }
 
-    /// Index a newly arrived request under the policy's primary key.
-    pub fn on_arrival(&mut self, primary: u64, req: &QueuedReq) {
-        let key = (primary, OrdF64(req.arrival), req.id);
+    /// Index a newly arrived request under `(group, primary)` — the
+    /// policy's priority group (0 for single-class policies) and primary
+    /// scan key.
+    pub fn on_arrival(&mut self, group: u64, primary: u64, req: &QueuedReq) {
+        let key = (group, primary, OrdF64(req.arrival), req.id);
         debug_assert!(!self.key_of.contains_key(&req.id), "duplicate arrival {}", req.id);
         self.waiting.insert(key, (req.s, req.pred));
         self.key_of.insert(req.id, key);
@@ -72,9 +78,9 @@ impl IncrementalCore {
 
     /// A running request was evicted (overflow clearing): it leaves the
     /// batch and re-enters the waiting index with all progress lost.
-    pub fn on_evict(&mut self, primary: u64, req: &QueuedReq) {
+    pub fn on_evict(&mut self, group: u64, primary: u64, req: &QueuedReq) {
         self.checker.remove(req.id);
-        self.on_arrival(primary, req);
+        self.on_arrival(group, primary, req);
     }
 
     /// Greedy admission scan in key order (Algorithms 1/2): each
@@ -85,7 +91,7 @@ impl IncrementalCore {
     /// queue length W only enters through the O(log W) removals.
     pub fn admit(&mut self, now: Round, m: Mem, stop_on_first_reject: bool) -> Vec<RequestId> {
         let mut admitted = Vec::new();
-        for (&(_, _, id), &(s, pred)) in self.waiting.iter() {
+        for (&(_, _, _, id), &(s, pred)) in self.waiting.iter() {
             let item = FeasItem {
                 base: s,
                 rem: pred.max(1),
@@ -117,6 +123,7 @@ mod tests {
             arrival,
             s,
             pred,
+            class: 0,
         }
     }
 
@@ -154,7 +161,7 @@ mod tests {
                     };
                     let mut core = IncrementalCore::default();
                     for w in &waiting {
-                        core.on_arrival(if fcfs { 0 } else { w.pred }, w);
+                        core.on_arrival(0, if fcfs { 0 } else { w.pred }, w);
                     }
                     let inc = core.admit(1, m, stop);
                     assert_eq!(inc, snap, "case {case} stop={stop} fcfs={fcfs}");
@@ -163,6 +170,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The leading group component dominates the scan order: a group-0
+    /// (urgent) candidate is scanned before any group-1 candidate, even
+    /// when its primary key is larger — the weighted-admission order the
+    /// SLO-tier policies rely on.
+    #[test]
+    fn priority_group_orders_before_primary() {
+        let mut core = IncrementalCore::default();
+        let urgent = queued(0, 5.0, 1, 9);
+        let lax = queued(1, 0.0, 1, 1);
+        core.on_arrival(0, urgent.pred, &urgent);
+        core.on_arrival(1, lax.pred, &lax);
+        let got = core.admit(1, 1000, true);
+        assert_eq!(got, vec![0, 1]);
     }
 
     /// Multi-round: arrivals, admissions, completions and evictions keep
@@ -187,7 +209,7 @@ mod tests {
                         rng.i64_range(1, 4) as u64,
                         rng.i64_range(1, 8) as u64,
                     );
-                    core.on_arrival(q.pred, &q);
+                    core.on_arrival(0, q.pred, &q);
                     waiting.push(q);
                     next_id += 1;
                 }
@@ -227,7 +249,7 @@ mod tests {
                     } else if evict_one {
                         evict_one = false;
                         let q = queued(id, r0 as f64, s, pred);
-                        core.on_evict(q.pred, &q);
+                        core.on_evict(0, q.pred, &q);
                         waiting.push(q);
                         false
                     } else {

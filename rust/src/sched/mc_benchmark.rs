@@ -43,7 +43,7 @@ impl Scheduler for McBenchmark {
     }
 
     fn on_arrival(&mut self, req: &QueuedReq) {
-        self.state.on_arrival(0, req);
+        self.state.on_arrival(0, 0, req);
     }
 
     fn on_complete(&mut self, id: RequestId) {
@@ -51,7 +51,7 @@ impl Scheduler for McBenchmark {
     }
 
     fn on_evict(&mut self, req: &QueuedReq) {
-        self.state.on_evict(0, req);
+        self.state.on_evict(0, 0, req);
     }
 
     fn admit_incremental(&mut self, now: Round, m: Mem, _rng: &mut Rng) -> Vec<RequestId> {
@@ -69,6 +69,7 @@ mod tests {
             arrival,
             s,
             pred,
+            class: 0,
         }
     }
 

@@ -103,7 +103,7 @@ impl Scheduler for McSf {
     }
 
     fn on_arrival(&mut self, req: &QueuedReq) {
-        self.state.on_arrival(req.pred, req);
+        self.state.on_arrival(0, req.pred, req);
     }
 
     fn on_complete(&mut self, id: RequestId) {
@@ -111,7 +111,7 @@ impl Scheduler for McSf {
     }
 
     fn on_evict(&mut self, req: &QueuedReq) {
-        self.state.on_evict(req.pred, req);
+        self.state.on_evict(0, req.pred, req);
     }
 
     fn admit_incremental(&mut self, now: Round, m: Mem, _rng: &mut Rng) -> Vec<RequestId> {
@@ -130,6 +130,7 @@ mod tests {
             arrival,
             s,
             pred,
+            class: 0,
         }
     }
 

@@ -14,15 +14,17 @@ pub mod feasibility;
 pub mod incremental;
 pub mod mc_benchmark;
 pub mod mcsf;
+pub mod priority;
 pub mod protection;
 
 pub use ablation::{LongestFirst, RandomOrder};
 pub use fcfs::FcfsThreshold;
 pub use mc_benchmark::McBenchmark;
 pub use mcsf::McSf;
+pub use priority::{EdfThreshold, PrioritySf};
 pub use protection::AlphaProtection;
 
-use crate::core::{ActiveReq, Mem, QueuedReq, RequestId, Round};
+use crate::core::{ActiveReq, ClassSet, Mem, QueuedReq, RequestId, Round};
 use crate::util::error::{anyhow, bail, Result};
 use crate::util::rng::Rng;
 
@@ -110,7 +112,23 @@ pub trait Scheduler: Send {
 /// * `protect:alpha=0.2,beta=0.1` — α-protection β-clearing.
 /// * `fcfs:threshold=0.9` — vLLM-style FCFS with a plain occupancy
 ///   threshold and no forward check.
+/// * `priority` — the class-priority-weighted MC-SF ([`PrioritySf`]);
+///   optional `priority:alpha=0.1` protection margin.
+/// * `edf:threshold=0.9` — earliest-SLO-deadline threshold baseline
+///   ([`EdfThreshold`]).
+///
+/// The SLO-tier policies (`priority`, `edf`) built here carry no class
+/// table (every class ranks equal / has no deadline) — use
+/// [`by_name_classed`] to attach one.
 pub fn by_name(spec: &str) -> Result<Box<dyn Scheduler>> {
+    by_name_classed(spec, &ClassSet::default())
+}
+
+/// [`by_name`] with a traffic-class table attached to the SLO-tier-aware
+/// policies (`priority` ranks classes by weight; `edf` reads per-class
+/// e2e deadlines). Policies that ignore classes parse exactly as
+/// [`by_name`].
+pub fn by_name_classed(spec: &str, classes: &ClassSet) -> Result<Box<dyn Scheduler>> {
     let (name, args) = match spec.split_once(':') {
         Some((n, a)) => (n, a),
         None => (spec, ""),
@@ -144,6 +162,11 @@ pub fn by_name(spec: &str) -> Result<Box<dyn Scheduler>> {
         "fcfs" => Ok(Box::new(FcfsThreshold {
             threshold: getf("threshold", 0.9)?,
         })),
+        "priority" | "prio" => Ok(Box::new(PrioritySf::new(classes, getf("alpha", 0.0)?))),
+        "edf" => Ok(Box::new(EdfThreshold::new(
+            classes,
+            getf("threshold", 0.9)?,
+        ))),
         "longest" => Ok(Box::new(LongestFirst)),
         "random" => Ok(Box::new(RandomOrder)),
         other => bail!("unknown scheduler '{other}' (spec '{spec}')"),
@@ -198,6 +221,19 @@ mod tests {
         assert!(by_name("nope").is_err());
         assert!(by_name("mcsf:alpha=x").is_err());
         assert!(by_name("protect:junk").is_err());
+    }
+
+    #[test]
+    fn factory_builds_slo_tier_policies() {
+        assert_eq!(by_name("priority").unwrap().name(), "P-MC-SF");
+        assert_eq!(
+            by_name("priority:alpha=0.1").unwrap().name(),
+            "P-MC-SF(α=0.1)"
+        );
+        assert_eq!(by_name("edf:threshold=0.8").unwrap().name(), "EDF(0.8)");
+        let classes = ClassSet::parse("interactive:0.8,batch:0.2").unwrap();
+        assert_eq!(by_name_classed("priority", &classes).unwrap().name(), "P-MC-SF");
+        assert_eq!(by_name_classed("edf", &classes).unwrap().name(), "EDF(0.9)");
     }
 
     #[test]

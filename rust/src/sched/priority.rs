@@ -1,0 +1,385 @@
+//! SLO-tier-aware scheduling policies.
+//!
+//! Two policies consume the per-class priority structure of a
+//! [`ClassSet`](crate::core::ClassSet):
+//!
+//! * [`PrioritySf`] — the weighted MC-SF variant: the waiting queue is
+//!   scanned in `(priority rank, predicted output length, arrival, id)`
+//!   order, each candidate guarded by the same Eq-(5) forward
+//!   feasibility check as MC-SF, stopping at the first rejection. With a
+//!   uniform class table every rank is 0 and the policy is
+//!   **decision-identical to MC-SF** (`tests/slo_reduction.rs`); the
+//!   incremental O(Δ)-per-round path is preserved by pushing the rank
+//!   into the leading component of the persistent waiting index's key.
+//!   On KV overflow it evicts lowest-priority / least-progress requests
+//!   first, and only as many as needed to fit the next round — instead
+//!   of MC-SF's clear-everything default — so urgent requests keep their
+//!   progress under prediction noise.
+//!
+//! * [`EdfThreshold`] — the SLO-deadline counterpart of the
+//!   [`FcfsThreshold`](super::FcfsThreshold) baseline: admission in
+//!   earliest-deadline-first order (`deadline = arrival + e2e target`)
+//!   under a plain occupancy threshold, no forward check. With default
+//!   SLOs every deadline is infinite and the order degenerates to
+//!   `(arrival, id)` — bit-identical admissions to FCFS.
+
+use super::feasibility::{admit_greedy_lazy, OrdF64};
+use super::incremental::IncrementalCore;
+use super::Scheduler;
+use crate::core::{ActiveReq, ClassId, ClassSet, Mem, QueuedReq, RequestId, Round};
+use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::HashMap;
+
+/// Weighted MC-SF: class-priority-first, then shortest-predicted-first.
+#[derive(Debug, Clone, Default)]
+pub struct PrioritySf {
+    /// Class → priority rank (0 = most urgent); empty = uniform.
+    ranks: Vec<u64>,
+    /// Reserve `α·M`; schedule as if the budget were `(1−α)·M`.
+    pub protect_alpha: f64,
+    /// Event-driven waiting index + persistent batch checker.
+    state: IncrementalCore,
+    /// id → class, accumulated from every request this policy has seen
+    /// (classes are immutable per request, so stale entries stay
+    /// correct); consulted by the class-aware overflow clearing.
+    class_of: HashMap<RequestId, ClassId>,
+    /// Budget from the most recent admit call — overflow clearing needs
+    /// it and the `on_overflow` hook does not carry it.
+    seen_m: Mem,
+}
+
+impl PrioritySf {
+    /// Build from a class table; `alpha` is MC-SF's protection margin.
+    pub fn new(classes: &ClassSet, alpha: f64) -> PrioritySf {
+        PrioritySf {
+            ranks: classes.ranks(),
+            protect_alpha: alpha,
+            ..Default::default()
+        }
+    }
+
+    /// Uniform-priority instance (rank 0 for every class) — the
+    /// MC-SF-equivalent degenerate form the factory builds when no class
+    /// table is supplied.
+    pub fn uniform() -> PrioritySf {
+        PrioritySf::default()
+    }
+
+    fn rank(&self, class: ClassId) -> u64 {
+        self.ranks.get(class).copied().unwrap_or(0)
+    }
+
+    fn effective_m(&self, m: Mem) -> Mem {
+        ((1.0 - self.protect_alpha) * m as f64).floor() as Mem
+    }
+}
+
+impl Scheduler for PrioritySf {
+    fn name(&self) -> String {
+        let mut n = "P-MC-SF".to_string();
+        if self.protect_alpha > 0.0 {
+            n = format!("{n}(α={})", self.protect_alpha);
+        }
+        n
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        self.seen_m = m;
+        // The snapshot path never fires on_arrival, so harvest classes
+        // here for the class-aware overflow clearing.
+        for w in waiting {
+            self.class_of.insert(w.id, w.class);
+        }
+        let ranks = &self.ranks;
+        admit_greedy_lazy(
+            self.effective_m(m),
+            active,
+            waiting,
+            |c| {
+                (
+                    ranks.get(c.class).copied().unwrap_or(0),
+                    c.pred,
+                    OrdF64(c.arrival),
+                    c.id,
+                )
+            },
+            true,
+        )
+    }
+
+    /// Class-aware clearing: evict lowest-priority, least-progress
+    /// requests first, and only until the next round fits the budget —
+    /// urgent requests keep their KV residency and progress.
+    fn on_overflow(&mut self, active: &[ActiveReq], _rng: &mut Rng) -> Vec<RequestId> {
+        let m = self.seen_m;
+        let mut usage: u64 = active.iter().map(|a| a.next_round_mem()).sum();
+        if m == 0 {
+            return active.iter().map(|a| a.id).collect();
+        }
+        let mut order: Vec<&ActiveReq> = active.iter().collect();
+        order.sort_by_key(|a| {
+            (
+                Reverse(self.rank(self.class_of.get(&a.id).copied().unwrap_or(0))),
+                a.done,
+                Reverse(a.id),
+            )
+        });
+        let mut evicted = Vec::new();
+        for a in order {
+            if usage <= m {
+                break;
+            }
+            usage -= a.next_round_mem();
+            evicted.push(a.id);
+        }
+        evicted
+    }
+
+    fn supports_incremental(&self) -> bool {
+        true
+    }
+
+    fn on_reset(&mut self) {
+        self.state.clear();
+        self.class_of.clear();
+        self.seen_m = 0;
+    }
+
+    fn on_arrival(&mut self, req: &QueuedReq) {
+        self.class_of.insert(req.id, req.class);
+        self.state.on_arrival(self.rank(req.class), req.pred, req);
+    }
+
+    fn on_complete(&mut self, id: RequestId) {
+        self.state.on_complete(id);
+        // A completed id never reappears (evictions re-enter through
+        // on_evict/on_arrival, re-inserting their entry), so pruning
+        // here bounds the map by the live set on the long-running
+        // serving path.
+        self.class_of.remove(&id);
+    }
+
+    fn on_evict(&mut self, req: &QueuedReq) {
+        self.state.on_evict(self.rank(req.class), req.pred, req);
+    }
+
+    fn admit_incremental(&mut self, now: Round, m: Mem, _rng: &mut Rng) -> Vec<RequestId> {
+        self.seen_m = m;
+        let m_eff = self.effective_m(m);
+        self.state.admit(now, m_eff, true)
+    }
+}
+
+/// Earliest-deadline-first occupancy-threshold baseline (the SLO-aware
+/// twin of [`FcfsThreshold`](super::FcfsThreshold)): admit in ascending
+/// `arrival + e2e-target` order while projected next-round usage stays
+/// at or below `threshold · M`; overflow clears everything (the default
+/// hook). Snapshot-only, like the baseline it mirrors.
+#[derive(Debug, Clone)]
+pub struct EdfThreshold {
+    /// Occupancy threshold as a fraction of `M`.
+    pub threshold: f64,
+    /// Class → e2e latency target (deadline offset); missing classes
+    /// have an infinite target.
+    e2e: Vec<f64>,
+}
+
+impl EdfThreshold {
+    /// Build from a class table.
+    pub fn new(classes: &ClassSet, threshold: f64) -> EdfThreshold {
+        EdfThreshold {
+            threshold,
+            e2e: classes.classes.iter().map(|c| c.slo.e2e_target).collect(),
+        }
+    }
+
+    /// No class table: every deadline is infinite, so admissions are
+    /// bit-identical to [`FcfsThreshold`](super::FcfsThreshold).
+    pub fn untiered(threshold: f64) -> EdfThreshold {
+        EdfThreshold::new(&ClassSet::default(), threshold)
+    }
+
+    fn deadline(&self, q: &QueuedReq) -> f64 {
+        q.arrival + self.e2e.get(q.class).copied().unwrap_or(f64::INFINITY)
+    }
+}
+
+impl Scheduler for EdfThreshold {
+    fn name(&self) -> String {
+        format!("EDF({})", self.threshold)
+    }
+
+    fn admit(
+        &mut self,
+        _now: Round,
+        m: Mem,
+        active: &[ActiveReq],
+        waiting: &[QueuedReq],
+        _rng: &mut Rng,
+    ) -> Vec<RequestId> {
+        let cap = (self.threshold * m as f64).floor() as u64;
+        let mut usage: u64 = active.iter().map(|a| a.next_round_mem()).sum();
+        let mut order: Vec<QueuedReq> = waiting.to_vec();
+        order.sort_by(|a, b| {
+            self.deadline(a)
+                .total_cmp(&self.deadline(b))
+                .then(a.arrival.total_cmp(&b.arrival))
+                .then(a.id.cmp(&b.id))
+        });
+        let mut admitted = Vec::new();
+        for cand in &order {
+            if usage + cand.next_round_mem() > cap {
+                break;
+            }
+            usage += cand.next_round_mem();
+            admitted.push(cand.id);
+        }
+        admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::McSf;
+
+    fn queued(id: usize, arrival: f64, s: u64, pred: u64, class: ClassId) -> QueuedReq {
+        QueuedReq {
+            id,
+            arrival,
+            s,
+            pred,
+            class,
+        }
+    }
+
+    fn tiered() -> ClassSet {
+        // interactive (weight 4) outranks batch (weight 1).
+        ClassSet::parse("interactive:0.5,batch:0.5").unwrap()
+    }
+
+    #[test]
+    fn priority_outranks_length() {
+        let classes = tiered();
+        let mut sched = PrioritySf::new(&classes, 0.0);
+        // Batch request is much shorter but interactive goes first.
+        let waiting = [
+            queued(0, 0.0, 2, 20, 1), // batch, short queue position by pred
+            queued(1, 0.0, 2, 40, 0), // interactive, longer
+        ];
+        let mut rng = Rng::new(0);
+        let got = sched.admit(1, 10_000, &[], &waiting, &mut rng);
+        assert_eq!(got, vec![1, 0]);
+        // Within a class, shortest-predicted-first still applies.
+        let waiting = [
+            queued(0, 0.0, 2, 9, 0),
+            queued(1, 0.0, 2, 3, 0),
+            queued(2, 0.0, 2, 6, 1),
+        ];
+        let got = sched.admit(1, 10_000, &[], &waiting, &mut rng);
+        assert_eq!(got, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn uniform_ranks_match_mcsf_order() {
+        let mut prio = PrioritySf::uniform();
+        let mut mcsf = McSf::default();
+        let waiting = [
+            queued(0, 0.0, 2, 10, 0),
+            queued(1, 0.0, 2, 1, 1),
+            queued(2, 0.0, 2, 5, 0),
+        ];
+        let mut rng = Rng::new(0);
+        let a = prio.admit(1, 25, &[], &waiting, &mut rng);
+        let b = mcsf.admit(1, 25, &[], &waiting, &mut rng);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn incremental_matches_snapshot_admission() {
+        let classes = tiered();
+        let waiting = [
+            queued(0, 0.0, 2, 12, 1),
+            queued(1, 1.0, 3, 4, 0),
+            queued(2, 2.0, 1, 4, 1),
+            queued(3, 3.0, 2, 2, 0),
+        ];
+        let mut rng = Rng::new(0);
+        for m in [8u64, 14, 20, 40, 200] {
+            let mut snap = PrioritySf::new(&classes, 0.0);
+            let a = snap.admit(1, m, &[], &waiting, &mut rng);
+            let mut inc = PrioritySf::new(&classes, 0.0);
+            inc.on_reset();
+            for w in &waiting {
+                Scheduler::on_arrival(&mut inc, w);
+            }
+            let b = inc.admit_incremental(1, m, &mut rng);
+            assert_eq!(a, b, "m={m}");
+        }
+    }
+
+    #[test]
+    fn overflow_evicts_low_priority_first_and_only_enough() {
+        let classes = tiered();
+        let mut sched = PrioritySf::new(&classes, 0.0);
+        let waiting = [
+            queued(0, 0.0, 4, 10, 0), // interactive
+            queued(1, 0.0, 4, 10, 1), // batch
+            queued(2, 0.0, 4, 10, 1), // batch
+        ];
+        let mut rng = Rng::new(0);
+        // Record classes + budget through a snapshot admit.
+        let _ = sched.admit(1, 24, &[], &waiting, &mut rng);
+        // All three are running; next round needs 3·(4+2+1) = 21 > 20.
+        let active: Vec<ActiveReq> = (0..3)
+            .map(|id| ActiveReq {
+                id,
+                s: 4,
+                done: 2,
+                pred_total: 10,
+                started_round: 1,
+            })
+            .collect();
+        sched.seen_m = 20;
+        let evicted = sched.on_overflow(&active, &mut rng);
+        // One batch eviction (7 tokens) brings usage to 14 ≤ 20: the
+        // interactive request survives, and the higher batch id goes
+        // first on the least-progress tie.
+        assert_eq!(evicted, vec![2]);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline() {
+        let classes = tiered(); // interactive e2e 30, batch e2e 300
+        let mut sched = EdfThreshold::new(&classes, 1.0);
+        let waiting = [
+            queued(0, 0.0, 4, 10, 1), // deadline 300
+            queued(1, 5.0, 4, 10, 0), // deadline 35
+        ];
+        let mut rng = Rng::new(0);
+        let got = sched.admit(1, 1000, &[], &waiting, &mut rng);
+        assert_eq!(got, vec![1, 0]);
+    }
+
+    #[test]
+    fn edf_untiered_matches_fcfs() {
+        use crate::sched::FcfsThreshold;
+        let waiting: Vec<QueuedReq> = (0..10)
+            .map(|i| queued(i, (10 - i) as f64, 4, 10, 0))
+            .collect();
+        let mut rng = Rng::new(0);
+        for m in [20u64, 50, 200] {
+            let a = EdfThreshold::untiered(0.9).admit(1, m, &[], &waiting, &mut rng);
+            let b = FcfsThreshold { threshold: 0.9 }.admit(1, m, &[], &waiting, &mut rng);
+            assert_eq!(a, b, "m={m}");
+        }
+    }
+}

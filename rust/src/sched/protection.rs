@@ -94,6 +94,7 @@ mod tests {
             arrival,
             s,
             pred,
+            class: 0,
         }
     }
 

@@ -1,5 +1,5 @@
-//! Multi-worker fleet simulation: N [`WorkerSim`]s behind a
-//! [`Router`].
+//! Multi-worker fleet simulation: N crate-internal `WorkerSim`s behind
+//! a [`Router`].
 //!
 //! ## Event discipline (causal routing)
 //!
@@ -120,6 +120,7 @@ pub fn run_fleet(
                 arrival: r.arrival,
                 s: r.prompt_len,
                 pred: preds[r.id],
+                class: r.class,
             };
             // Stopped workers (round/stall-cap hits) can never serve
             // again — keep them out of the routing view so their frozen
@@ -159,6 +160,7 @@ pub fn run_fleet(
                 s: r.prompt_len,
                 o_true: r.output_len,
                 pred: preds[r.id],
+                class: r.class,
             });
             next_arrival += 1;
             continue;
@@ -172,7 +174,14 @@ pub fn run_fleet(
 
     Ok(FleetOutcome::new(
         &router.name(),
-        workers.into_iter().map(WorkerSim::finish).collect(),
+        workers
+            .into_iter()
+            .map(|w| {
+                let mut out = w.finish();
+                out.classes = inst.classes.clone();
+                out
+            })
+            .collect(),
     ))
 }
 

@@ -31,16 +31,16 @@
 //! ## Worker abstraction
 //!
 //! All per-worker state (clock, queue, running batch, RNG stream,
-//! outcome) lives in [`WorkerSim`], and the whole round — arrival
-//! release, admission, overflow clearing, execution, completions — is
-//! [`WorkerSim::step`]. The single-worker [`run`] below is a thin driver
-//! that delivers the instance's arrivals to one `WorkerSim`; the fleet
-//! engine ([`crate::sim::cluster`]) drives N of them behind a
-//! [`crate::cluster::Router`] with the *same* delivery discipline, which
-//! is what makes a 1-worker fleet bit-identical to this function
-//! (`tests/cluster_reduction.rs`).
+//! outcome) lives in the crate-internal `WorkerSim`, and the whole round
+//! — arrival release, admission, overflow clearing, execution,
+//! completions — is `WorkerSim::step`. The single-worker [`run`] below
+//! is a thin driver that delivers the instance's arrivals to one
+//! `WorkerSim`; the fleet engine ([`crate::sim::cluster`]) drives N of
+//! them behind a [`crate::cluster::Router`] with the *same* delivery
+//! discipline, which is what makes a 1-worker fleet bit-identical to
+//! this function (`tests/cluster_reduction.rs`).
 
-use crate::core::{ActiveReq, Instance, QueuedReq, RequestId};
+use crate::core::{ActiveReq, ClassId, Instance, QueuedReq, RequestId};
 use crate::metrics::{PerRequest, SimOutcome};
 use crate::perf::{BatchComposition, PerfModel};
 use crate::predictor::Predictor;
@@ -109,6 +109,7 @@ struct ActiveState {
     s: u64,
     o_true: u64,
     pred: u64,
+    class: ClassId,
     done: u64,
     started_round: u64,
     start_time: f64,
@@ -134,6 +135,7 @@ pub(crate) struct WaitState {
     pub(crate) s: u64,
     pub(crate) o_true: u64,
     pub(crate) pred: u64,
+    pub(crate) class: ClassId,
 }
 
 impl WaitState {
@@ -143,6 +145,7 @@ impl WaitState {
             arrival: self.arrival,
             s: self.s,
             pred: self.pred,
+            class: self.class,
         }
     }
 }
@@ -182,6 +185,10 @@ pub(crate) struct WorkerSim {
     outcome: SimOutcome,
     records: Vec<Option<PerRequest>>,
     restarts: Vec<u32>,
+    /// Time each request's *first* output token completed (NaN until it
+    /// happens; evictions do not reset it — the token was produced).
+    /// Basis for the per-request TTFT the SLO metrics score against.
+    first_token: Vec<f64>,
     /// Routed deliveries not yet released into `waiting`. Drivers
     /// deliver in global arrival order, so this stays arrival-sorted.
     pending: VecDeque<WaitState>,
@@ -227,6 +234,7 @@ impl WorkerSim {
             outcome: SimOutcome::new(algo),
             records: vec![None; n],
             restarts: vec![0; n],
+            first_token: vec![f64::NAN; n],
             pending: VecDeque::new(),
             waiting: Vec::new(),
             active: Vec::new(),
@@ -247,6 +255,10 @@ impl WorkerSim {
     /// arrival`, matching the classic single-worker release gating.
     pub(crate) fn deliver(&mut self, w: WaitState) {
         self.outcome.assigned += 1;
+        if w.class >= self.outcome.assigned_by_class.len() {
+            self.outcome.assigned_by_class.resize(w.class + 1, 0);
+        }
+        self.outcome.assigned_by_class[w.class] += 1;
         self.queued_demand += w.s + w.pred + 1;
         self.pending.push_back(w);
     }
@@ -382,6 +394,7 @@ impl WorkerSim {
                 s: w.s,
                 o_true: w.o_true,
                 pred: w.pred,
+                class: w.class,
                 done: 0,
                 started_round: self.round,
                 start_time: self.t,
@@ -427,6 +440,7 @@ impl WorkerSim {
                     s: a.s,
                     o_true: a.o_true,
                     pred: a.pred,
+                    class: a.class,
                 };
                 self.wait_slot[w.id] = self.waiting.len();
                 if self.incremental {
@@ -455,6 +469,11 @@ impl WorkerSim {
         let mut i = 0;
         while i < self.active.len() {
             self.active[i].done += 1;
+            if self.active[i].done == 1 && self.first_token[self.active[i].id].is_nan() {
+                // First output token ever produced for this request
+                // (evictions reset `done` but not this timestamp).
+                self.first_token[self.active[i].id] = self.t;
+            }
             if self.active[i].done >= self.active[i].o_true {
                 let a = self.active.swap_remove(i);
                 self.act_slot[a.id] = NO_SLOT;
@@ -466,8 +485,10 @@ impl WorkerSim {
                 }
                 self.records[a.id] = Some(PerRequest {
                     id: a.id,
+                    class: a.class,
                     arrival: a.arrival,
                     start: a.start_time,
+                    first_token: self.first_token[a.id],
                     completion: self.t,
                     restarts: self.restarts[a.id],
                 });
@@ -537,6 +558,7 @@ pub fn run(
                 s: r.prompt_len,
                 o_true: r.output_len,
                 pred: preds[r.id],
+                class: r.class,
             });
             next_arrival += 1;
         }
@@ -545,7 +567,9 @@ pub fn run(
         }
         worker.step(sched, perf)?;
     }
-    Ok(worker.finish())
+    let mut out = worker.finish();
+    out.classes = inst.classes.clone();
+    Ok(out)
 }
 
 #[cfg(test)]

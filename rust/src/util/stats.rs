@@ -32,6 +32,17 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `p` in [0, 100].
+///
+/// **Interpolation rule** (the "linear" / type-7 convention, the same
+/// one NumPy defaults to): the sorted sample is indexed 0..n−1, the
+/// fractional rank is `r = (p/100)·(n−1)`, and the result interpolates
+/// linearly between the neighboring order statistics:
+/// `x[⌊r⌋]·(1−frac) + x[⌈r⌉]·frac`. So `p = 0` / `p = 100` are the
+/// sample min/max exactly, and small samples never extrapolate. This is
+/// the rule behind every `p50`/`p95`/`p99` field in [`Summary`] and the
+/// bench ledgers — a p99 over fewer than ~100 samples leans on
+/// interpolation, so treat tail percentiles of small runs as smoothed
+/// estimates, not observed order statistics.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -98,20 +109,34 @@ pub fn ascii_bar(value: f64, max_value: f64, width: usize) -> String {
     "#".repeat(n.min(width))
 }
 
-/// Summary block used across bench outputs.
+/// Summary block used across bench outputs and the metrics layer.
+///
+/// All percentile fields follow [`percentile`]'s linear-interpolation
+/// rule; `std` is the sample (n−1) standard deviation, matching how
+/// Table 1 reports spread.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean (0.0 for an empty sample).
     pub mean: f64,
+    /// Sample standard deviation (n−1 denominator).
     pub std: f64,
+    /// Smallest observation (0.0 for an empty sample).
     pub min: f64,
+    /// Median ([`percentile`] at 50).
     pub p50: f64,
+    /// 95th percentile (linear interpolation).
     pub p95: f64,
+    /// 99th percentile (linear interpolation; over < ~100 samples this
+    /// is a smoothed estimate between the two largest observations).
     pub p99: f64,
+    /// Largest observation (0.0 for an empty sample).
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (empty input yields an all-zero block).
     pub fn of(xs: &[f64]) -> Summary {
         Summary {
             n: xs.len(),

@@ -1,0 +1,174 @@
+//! SLO-tiered workload generation: a per-class mixture over the
+//! LMSYS-calibrated base distributions.
+//!
+//! Each arrival of a Poisson(λ) process is assigned a traffic class by
+//! its mixture share (thinning a Poisson process yields independent
+//! per-class Poisson processes), then draws its `(s, o)` lengths from
+//! the base lognormal marginals scaled by the class's length profile —
+//! e.g. `interactive` keeps chat-like short answers while `batch` draws
+//! long prompts and long outputs. Classes with `burst > 1` coalesce
+//! consecutive arrivals into geometric bursts of that mean size (job
+//! queues flush in groups), anchored at the burst's first arrival.
+//!
+//! **Reduction invariant:** with zero or one class carrying the default
+//! length profile, the generator consumes exactly the same RNG draws as
+//! [`LmsysGen::instance`] and produces a bit-identical request sequence
+//! — no class draw, no burst draw, identity length scaling. This is the
+//! generator half of the single-class reduction pinned by
+//! `tests/slo_reduction.rs`.
+
+use super::lmsys::LmsysGen;
+use super::poisson_arrival_times;
+use crate::core::{ClassSet, Instance, Request};
+use crate::util::rng::Rng;
+
+/// Class-mixture workload generator over an [`LmsysGen`] base.
+#[derive(Debug, Clone)]
+pub struct ClassMixGen {
+    /// The traffic classes (shares, SLOs, length profiles).
+    pub classes: ClassSet,
+    base: LmsysGen,
+}
+
+impl ClassMixGen {
+    /// Build a generator for `classes` with peak cap `m` (one request
+    /// must fit in a worker's KV budget).
+    pub fn new(classes: ClassSet, m: u64) -> ClassMixGen {
+        ClassMixGen {
+            classes,
+            base: LmsysGen::new(m),
+        }
+    }
+
+    /// Generate `n` requests with Poisson(λ)-process arrivals to be
+    /// served under budget `m`, classes drawn by mixture share. The
+    /// returned instance carries the class table
+    /// ([`Instance::classes`]) so schedulers and metrics can read the
+    /// SLOs.
+    pub fn instance(&self, n: usize, lambda: f64, m: u64, rng: &mut Rng) -> Instance {
+        if self.classes.len() <= 1 && self.is_default_profile() {
+            // Single default-profile class: bit-identical to the base
+            // generator (same draws in the same order).
+            return self
+                .base
+                .instance(n, lambda, m, rng)
+                .with_classes(self.classes.clone());
+        }
+        let k = self.classes.len();
+        let times = poisson_arrival_times(n, lambda, rng);
+        let mut burst_anchor: Vec<Option<f64>> = vec![None; k];
+        let reqs = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let c = self.classes.draw_class(rng);
+                let p = &self.classes.classes[c];
+                // Geometric burst coalescing: continue the class's
+                // current burst (anchored at its first arrival) with
+                // probability 1 − 1/burst, else start a new one at `t`.
+                let arrival = match burst_anchor[c] {
+                    Some(prev) if p.burst > 1.0 && rng.bool(1.0 - 1.0 / p.burst) => prev,
+                    _ => t,
+                };
+                burst_anchor[c] = Some(arrival);
+                let (s, o) =
+                    self.base
+                        .sample_lengths_scaled(rng, p.prompt_scale, p.output_scale);
+                Request::new(i, arrival, s, o).with_class(c)
+            })
+            .collect();
+        Instance::new(m, reqs).with_classes(self.classes.clone())
+    }
+
+    /// Whether every class keeps the base length distribution and plain
+    /// Poisson arrivals (the draw-identical reduction precondition).
+    fn is_default_profile(&self) -> bool {
+        self.classes.classes.iter().all(|c| {
+            c.prompt_scale == 1.0 && c.output_scale == 1.0 && c.burst <= 1.0
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestClass;
+
+    fn tiered() -> ClassSet {
+        ClassSet::parse("interactive:0.8,batch:0.2").unwrap()
+    }
+
+    #[test]
+    fn single_class_reduces_to_lmsys_base() {
+        for classes in [
+            ClassSet::default(),
+            ClassSet {
+                classes: vec![RequestClass::new("default", 1.0)],
+            },
+        ] {
+            let gen = ClassMixGen::new(classes.clone(), 500);
+            let mut ra = Rng::new(42);
+            let mut rb = Rng::new(42);
+            let a = gen.instance(200, 10.0, 500, &mut ra);
+            let b = LmsysGen::new(500).instance(200, 10.0, 500, &mut rb);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.m, b.m);
+            assert_eq!(a.classes, classes);
+        }
+    }
+
+    #[test]
+    fn mixture_respects_shares_and_ranges() {
+        let gen = ClassMixGen::new(tiered(), 2000);
+        let mut rng = Rng::new(7);
+        let inst = gen.instance(4000, 25.0, 2000, &mut rng);
+        assert_eq!(inst.n(), 4000);
+        assert!(inst.is_feasible());
+        assert_eq!(inst.classes.len(), 2);
+        let interactive = inst.requests.iter().filter(|r| r.class == 0).count();
+        let frac = interactive as f64 / 4000.0;
+        assert!((frac - 0.8).abs() < 0.03, "interactive share {frac}");
+        assert!(inst.requests.iter().all(|r| r.class < 2));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = ClassMixGen::new(tiered(), 800);
+        let a = gen.instance(300, 20.0, 800, &mut Rng::new(3));
+        let b = gen.instance(300, 20.0, 800, &mut Rng::new(3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_outputs_longer_and_bursty() {
+        let gen = ClassMixGen::new(tiered(), 4000);
+        let mut rng = Rng::new(11);
+        let inst = gen.instance(3000, 25.0, 4000, &mut rng);
+        let mean_o = |class: usize| {
+            let os: Vec<f64> = inst
+                .requests
+                .iter()
+                .filter(|r| r.class == class)
+                .map(|r| r.output_len as f64)
+                .collect();
+            assert!(!os.is_empty());
+            crate::util::stats::mean(&os)
+        };
+        // batch scales outputs ×3 while interactive scales ×0.6.
+        assert!(mean_o(1) > 2.0 * mean_o(0), "batch {} vs interactive {}", mean_o(1), mean_o(0));
+        // Bursts: many batch arrivals share their burst anchor time.
+        let mut batch_times: Vec<f64> = inst
+            .requests
+            .iter()
+            .filter(|r| r.class == 1)
+            .map(|r| r.arrival)
+            .collect();
+        batch_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let coalesced = batch_times.windows(2).filter(|w| w[0] == w[1]).count();
+        assert!(
+            coalesced as f64 > 0.5 * batch_times.len() as f64,
+            "only {coalesced} of {} batch arrivals coalesced",
+            batch_times.len()
+        );
+    }
+}

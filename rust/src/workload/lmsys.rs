@@ -53,9 +53,25 @@ impl LmsysGen {
 
     /// Sample one (s, o) pair.
     pub fn sample_lengths(&self, rng: &mut Rng) -> (u64, u64) {
+        self.sample_lengths_scaled(rng, 1.0, 1.0)
+    }
+
+    /// Sample one (s, o) pair with the lognormal medians scaled by
+    /// `prompt_scale` / `output_scale` (shifting μ by `ln scale` keeps
+    /// the shape and consumes exactly the same RNG draws as
+    /// [`Self::sample_lengths`], so scale 1.0 is draw-identical). Used
+    /// by the per-class length profiles of
+    /// [`super::ClassMixGen`].
+    pub fn sample_lengths_scaled(
+        &self,
+        rng: &mut Rng,
+        prompt_scale: f64,
+        output_scale: f64,
+    ) -> (u64, u64) {
+        debug_assert!(prompt_scale > 0.0 && output_scale > 0.0);
         loop {
-            let s = self.sample_one(rng, self.prompt_mu, self.prompt_sigma);
-            let o = self.sample_one(rng, self.output_mu, self.output_sigma);
+            let s = self.sample_one(rng, self.prompt_mu + prompt_scale.ln(), self.prompt_sigma);
+            let o = self.sample_one(rng, self.output_mu + output_scale.ln(), self.output_sigma);
             if s + o <= self.max_peak {
                 return (s, o);
             }

@@ -1,30 +1,39 @@
 //! Workload generation: the paper's synthetic arrival models (§5.1), the
-//! LMSYS-calibrated trace generator (§5.2), and the Thm-4.1 adversarial
-//! instance.
+//! LMSYS-calibrated trace generator (§5.2), the SLO-tiered class-mixture
+//! generator ([`ClassMixGen`]), and the Thm-4.1 adversarial instance.
 
+pub mod classes;
 pub mod lmsys;
 pub mod synthetic;
 
+pub use classes::ClassMixGen;
 pub use lmsys::LmsysGen;
 
-use crate::core::{Instance, Request};
+use crate::core::Instance;
 use crate::util::rng::Rng;
 
 /// Speed up an instance's arrival process by `factor` (or slow it down
 /// for `factor < 1`): every arrival time is divided by `factor`, which
-/// turns a Poisson(λ) process into Poisson(λ·factor) while keeping the
-/// request bodies `(s_i, o_i)` identical. This is the λ × N scaling the
-/// cluster layer uses so a W-worker fleet run is load-comparable *per
-/// worker* with the single-worker baseline: same trace, W× the offered
-/// rate, W workers to absorb it.
+/// turns a Poisson(λ) process into a Poisson(λ·factor) process while
+/// keeping the request bodies `(s_i, o_i)` — and their class tags and
+/// the instance's class table — identical.
+///
+/// **Why λ × N:** this is the scaling the cluster layer applies so a
+/// W-worker fleet run is load-comparable *per worker* with the
+/// single-worker baseline. Offered load per worker is λ·E[service] / W;
+/// multiplying the arrival rate by `factor = W` while adding W workers
+/// holds that ratio constant, so latency differences across fleet sizes
+/// measure routing/scheduling quality rather than utilization shifts.
+/// The same trace body (lengths, classes, relative arrival order) is
+/// reused, only the clock is compressed.
 pub fn scale_arrival_rate(inst: &Instance, factor: f64) -> Instance {
     assert!(factor > 0.0 && factor.is_finite(), "bad rate factor {factor}");
     let reqs = inst
         .requests
         .iter()
-        .map(|r| Request::new(r.id, r.arrival / factor, r.prompt_len, r.output_len))
+        .map(|r| r.retimed(r.arrival / factor))
         .collect();
-    Instance::new(inst.m, reqs)
+    Instance::new(inst.m, reqs).with_classes(inst.classes.clone())
 }
 
 /// `n` Poisson-process arrival times with rate `lambda` per second,
@@ -79,6 +88,20 @@ mod tests {
         // 4× the rate ⇒ the same arrivals span a quarter of the time.
         let span = |i: &Instance| i.requests.last().unwrap().arrival;
         assert!((span(&scaled) - span(&inst) / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_scaling_preserves_classes() {
+        use crate::core::ClassSet;
+        let classes = ClassSet::parse("interactive:0.8,batch:0.2").unwrap();
+        let mut rng = Rng::new(6);
+        let inst = ClassMixGen::new(classes.clone(), 500)
+            .instance(100, 10.0, 500, &mut rng);
+        let scaled = scale_arrival_rate(&inst, 3.0);
+        assert_eq!(scaled.classes, classes);
+        for (a, b) in inst.requests.iter().zip(&scaled.requests) {
+            assert_eq!(a.class, b.class);
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ use kvsched::util::prop::{forall_cases, usize_in};
 use kvsched::util::rng::Rng;
 use kvsched::workload::synthetic;
 
-const ROUTERS: [&str; 4] = ["rr", "jsq", "least-kv", "po2"];
+const ROUTERS: [&str; 5] = ["rr", "jsq", "least-kv", "po2", "slo-aware"];
 
 /// Incremental implementations plus snapshot-only baselines — same mix
 /// as the incremental_diff corpus, trimmed for the extra router axis.

@@ -24,6 +24,7 @@ fn coordinator_serves_batched_requests_incrementally() {
             prompt: format!("request number {i}").into_bytes(),
             max_new_tokens: 4 + i,
             predicted_new_tokens: 4 + i,
+            class: 0,
         });
         rxs.push((i, rx));
     }
@@ -61,6 +62,7 @@ fn coordinator_respects_memory_budget_incrementally() {
             prompt: b"tight memory".to_vec(),
             max_new_tokens: 6,
             predicted_new_tokens: 6,
+            class: 0,
         }));
     }
     for rx in rxs {
@@ -88,6 +90,7 @@ fn fcfs_and_mc_benchmark_serve_through_both_paths() {
                 prompt: format!("{spec} {i}").into_bytes(),
                 max_new_tokens: 3,
                 predicted_new_tokens: 3,
+                class: 0,
             }));
         }
         for rx in rxs {
@@ -121,6 +124,7 @@ fn fleet_coordinator_serves_across_replicas() {
                 prompt: format!("fleet {router} {i}").into_bytes(),
                 max_new_tokens: 3,
                 predicted_new_tokens: 3,
+                class: 0,
             });
             assert!(worker < 2, "{router}");
             rxs.push(rx);

@@ -17,10 +17,12 @@ use kvsched::util::prop::{forall_cases, usize_in};
 use kvsched::util::rng::Rng;
 use kvsched::workload::synthetic;
 
-/// Policies under test: incremental implementations (MC-SF variants and
-/// MC-Benchmark) plus snapshot-only baselines, which must be unaffected
-/// by the engine flag.
-const SPECS: [&str; 7] = [
+/// Policies under test: incremental implementations (MC-SF variants,
+/// MC-Benchmark, and the priority-weighted P-MC-SF) plus snapshot-only
+/// baselines, which must be unaffected by the engine flag. `priority` /
+/// `edf` run untiered here (uniform ranks / no deadlines) — the classed
+/// differential lives in tests/slo_reduction.rs.
+const SPECS: [&str; 9] = [
     "mcsf",
     "mcsf:alpha=0.15",
     "mcsf:skip=1",
@@ -28,6 +30,8 @@ const SPECS: [&str; 7] = [
     "protect:alpha=0.2",
     "protect:alpha=0.1,beta=0.5",
     "fcfs:threshold=0.9",
+    "priority",
+    "edf:threshold=0.9",
 ];
 
 fn cfg(incremental: bool) -> SimConfig {

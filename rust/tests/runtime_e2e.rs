@@ -149,6 +149,7 @@ fn coordinator_serves_batched_requests() {
             prompt: format!("request number {i}").into_bytes(),
             max_new_tokens: 4 + i,
             predicted_new_tokens: 4 + i,
+            class: 0,
         });
         rxs.push((i, rx));
     }
@@ -187,6 +188,7 @@ fn coordinator_respects_memory_budget() {
             prompt: b"tight memory".to_vec(),
             max_new_tokens: 6,
             predicted_new_tokens: 6,
+            class: 0,
         }));
     }
     for rx in rxs {
