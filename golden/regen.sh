@@ -1,0 +1,8 @@
+#!/bin/sh
+# Regenerate the committed golden traces from the current engine.
+# Run from anywhere; commits are left to you (review the diff first).
+set -eu
+cd "$(dirname "$0")/.."
+UPDATE_GOLDEN=1 cargo test --release --test trace_replay golden -- --nocapture
+git --no-pager diff --stat -- golden || true
+echo "golden fixtures regenerated; review 'git diff golden/' before committing"

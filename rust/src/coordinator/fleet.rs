@@ -16,6 +16,7 @@ use crate::metrics::FleetOutcome;
 use crate::runtime::Engine;
 use crate::sched::Scheduler;
 use crate::sim::cluster::ROUTER_STREAM;
+use crate::trace::{TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -61,6 +62,12 @@ pub struct FleetCoordinator {
     /// Router + its private RNG stream, serialized across submitters.
     router: Mutex<(Box<dyn Router>, Rng)>,
     t0: Instant,
+    /// Shared recording sink (the same one every worker writes through);
+    /// `submit` adds the fleet-level routing decisions.
+    trace: Option<TraceSink>,
+    /// Fleet-wide submission counter tagging recorded `route` events
+    /// (worker-local request ids are not unique across the fleet).
+    submitted: AtomicUsize,
 }
 
 impl FleetCoordinator {
@@ -84,6 +91,8 @@ impl FleetCoordinator {
                 seed: cfg.seed.wrapping_add(w as u64),
                 gauge: Some(gauge.clone()),
                 classes: cfg.classes.clone(),
+                trace: cfg.trace.clone(),
+                worker_index: w,
             };
             workers.push(Coordinator::start(engine, sched, wcfg));
             gauges.push(gauge);
@@ -94,6 +103,8 @@ impl FleetCoordinator {
             gauges,
             router: Mutex::new((router, router_rng)),
             t0: Instant::now(),
+            trace: cfg.trace,
+            submitted: AtomicUsize::new(0),
         }
     }
 
@@ -123,6 +134,17 @@ impl FleetCoordinator {
             router.route(&view, &loads, rng)
         };
         assert!(pick < self.workers.len(), "router picked invalid worker");
+        if let Some(sink) = &self.trace {
+            // Observability only: serve-trace replay reconstructs
+            // placements from the arrival events' worker tags (worker
+            // ids are authoritative there; this fleet-level counter is
+            // not the per-worker id space).
+            sink.record(TraceEvent::Route {
+                t: view.arrival,
+                worker: pick,
+                id: self.submitted.fetch_add(1, Ordering::Relaxed),
+            });
+        }
         // Optimistically bump the pick's queue gauges right away: the
         // worker only republishes once per serving round (overwriting
         // these with the intaken truth), so without the bump a burst of

@@ -31,6 +31,7 @@ pub mod perf;
 pub mod predictor;
 pub mod sched;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -6,6 +6,8 @@
 //!   suite       run the paper's §5.2 benchmark suite and print the table
 //!   hindsight   solve the §3 IP on a (small) instance and report MC-SF's gap
 //!   serve       live-serve a synthetic workload through PJRT artifacts
+//!   record      run `simulate` while recording an event trace to disk
+//!   replay      re-execute a recorded trace and verify bit-identity
 //!
 //! Examples:
 //!   kvsched gen-trace --workload lmsys --n 1000 --lambda 50 --out trace.json
@@ -21,6 +23,10 @@
 //!   kvsched serve --artifacts artifacts --n 12 --lambda 2
 //!   kvsched serve --artifacts artifacts --n 24 --workers 2 --router least-kv
 //!   kvsched serve --artifacts artifacts --n 24 --classes interactive:0.8,batch:0.2 --slo
+//!   kvsched serve --artifacts artifacts --n 24 --record served.trace.json
+//!   kvsched record --workload model2 --algo mcsf --out run.trace.json
+//!   kvsched record --n 400 --workers 3 --router po2 --out fleet.trace.json
+//!   kvsched replay --trace run.trace.json
 //!
 //! Fleet flags (`simulate` / `suite` / `serve`): `--workers N` runs N
 //! replicas behind `--router rr|jsq|least-kv|po2|slo-aware`; simulated
@@ -32,13 +38,24 @@
 //! and hands the class table to class-aware schedulers/routers
 //! (`--algo priority`, `--algo edf`, `--router slo-aware`); `--slo`
 //! prints the per-class latency/TTFT percentiles and goodput table.
+//!
+//! Record/replay: `record` takes the same flags as `simulate` plus
+//! `--out <path>` and writes a versioned event trace (arrivals, routing
+//! picks, admissions, overflow clearings, evictions, completions);
+//! `replay --trace <path>` rebuilds the instance from the trace,
+//! re-runs the engine, and fails with the first diverging event if the
+//! execution no longer matches. `serve --record <path>` captures a live
+//! serving run as a replayable offline benchmark.
 
 use kvsched::core::{ClassSet, Instance, Request};
-use kvsched::perf::Llama70bA100x2;
+use kvsched::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use kvsched::predictor::Predictor;
 use kvsched::prelude::*;
 use kvsched::opt::{self, HindsightConfig};
 use kvsched::sim::{continuous, discrete, SimConfig};
+use kvsched::trace::{
+    perf_by_name, record_fleet, record_sim, replay_fleet, replay_sim, Trace, TraceMeta, TraceSink,
+};
 use kvsched::util::cli::Args;
 use kvsched::util::error::{anyhow, Result};
 use kvsched::workload::{self, synthetic};
@@ -52,9 +69,11 @@ fn main() {
         "suite" => suite(&args),
         "hindsight" => hindsight(&args),
         "serve" => serve(&args),
+        "record" => record(&args),
+        "replay" => replay(&args),
         _ => {
             eprintln!(
-                "usage: kvsched <gen-trace|simulate|suite|hindsight|serve> [flags]\n\
+                "usage: kvsched <gen-trace|simulate|suite|hindsight|serve|record|replay> [flags]\n\
                  see `rust/src/main.rs` header for examples"
             );
             std::process::exit(2);
@@ -242,6 +261,89 @@ fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `simulate`, but through the recording engine wrappers: same flags,
+/// plus `--out <path>` for the trace file. Prints the outcome JSON so a
+/// recorded run doubles as a normal simulation.
+fn record(args: &Args) -> Result<()> {
+    let inst = load_or_generate(args)?;
+    let predictor = match args.get("eps") {
+        Some(_) => Predictor::uniform_noise(args.f64_or("eps", 0.0), args.u64_or("seed", 0)),
+        None => Predictor::exact(),
+    };
+    let seed = args.u64_or("seed", 0);
+    let (workers, router) = fleet_flags(args);
+    let algo = args.str_or("algo", "mcsf");
+    let out_path = args.req_str("out");
+    // The trace names its perf model so `replay` can rebuild it without
+    // extra flags; `--unit-time` picks the discrete-time model.
+    let (perf_name, perf): (&str, Box<dyn PerfModel>) = if args.has("unit-time") {
+        ("unit", Box::new(UnitTime))
+    } else {
+        ("llama", Box::new(Llama70bA100x2::default()))
+    };
+
+    if workers > 1 {
+        let inst = scale_for_fleet(inst, workers, args);
+        let (out, trace) = record_fleet(
+            &inst,
+            algo,
+            router,
+            workers,
+            None,
+            &predictor,
+            perf.as_ref(),
+            perf_name,
+            seed,
+            SimConfig::default(),
+        )?;
+        trace.save(out_path)?;
+        println!("wrote {trace} to {out_path}");
+        println!("{}", out.to_json().pretty());
+        return Ok(());
+    }
+
+    let (out, trace) = record_sim(
+        &inst,
+        algo,
+        &predictor,
+        perf.as_ref(),
+        perf_name,
+        seed,
+        SimConfig::default(),
+    )?;
+    trace.save(out_path)?;
+    println!("wrote {trace} to {out_path}");
+    println!("{}", out.to_json().pretty());
+    Ok(())
+}
+
+/// Re-execute a recorded trace (`--trace <path>`) and verify the
+/// engine reproduces it event-for-event; exits non-zero with the first
+/// diverging event otherwise. `--unit-time` overrides the recorded
+/// perf model (the run then only checks the event stream, which is
+/// perf-independent for sim traces only if the model matches — an
+/// override on a sim trace will typically report a divergence, which is
+/// itself a useful smoke test of the checker).
+fn replay(args: &Args) -> Result<()> {
+    let path = args.req_str("trace");
+    let trace = Trace::load(path)?;
+    let perf: Box<dyn PerfModel> = if args.has("unit-time") {
+        Box::new(UnitTime)
+    } else {
+        perf_by_name(&trace.meta.perf)?
+    };
+    println!("{trace}");
+    if trace.meta.router.is_some() {
+        let out = replay_fleet(&trace, perf.as_ref()).map_err(|e| anyhow!("{e}"))?;
+        println!("{}", out.to_json().pretty());
+    } else {
+        let out = replay_sim(&trace, perf.as_ref()).map_err(|e| anyhow!("{e}"))?;
+        println!("{}", out.to_json().pretty());
+    }
+    println!("replay ok: {} events verified", trace.events.len());
+    Ok(())
+}
+
 fn suite(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let perf = Llama70bA100x2::default();
@@ -370,13 +472,31 @@ fn serve(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let n = args.usize_or("n", 12);
     let lambda = args.f64_or("lambda", 2.0);
-    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let seed = args.u64_or("seed", 0);
+    let mut rng = Rng::new(seed);
     let (workers, router) = fleet_flags(args);
     let algo = args.str_or("algo", "mcsf");
     let classes = class_set(args)?;
+    // `--record <path>` captures the serve run as a replayable trace;
+    // the sink is shared by every worker loop (and the fleet router).
+    let record_path = args.get("record");
+    let sink = TraceSink::new();
     let cfg = CoordinatorConfig {
         classes: classes.clone(),
+        seed,
+        trace: record_path.map(|_| sink.clone()),
         ..CoordinatorConfig::default()
+    };
+    let save_trace = |router: Option<&str>, workers: usize| -> Result<()> {
+        let Some(path) = record_path else {
+            return Ok(());
+        };
+        let meta =
+            TraceMeta::serve(algo, router, workers, sink.budget(), n, seed, classes.clone());
+        let trace = Trace { meta, events: sink.take() };
+        trace.save(path)?;
+        println!("wrote {trace} to {path}");
+        Ok(())
     };
 
     let mk_request = |i: usize, rng: &mut Rng, classes: &ClassSet| {
@@ -443,6 +563,7 @@ fn serve(args: &Args) -> Result<()> {
             let rows = slo_rows(&out.class_stats());
             print_slo_table("served per-class SLO report", out.goodput(), rows);
         }
+        save_trace(Some(router), workers)?;
         return Ok(());
     }
 
@@ -472,5 +593,6 @@ fn serve(args: &Args) -> Result<()> {
         let rows = slo_rows(&stats.class_stats());
         print_slo_table("served per-class SLO report", stats.goodput(), rows);
     }
+    save_trace(None, 1)?;
     Ok(())
 }

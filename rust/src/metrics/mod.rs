@@ -80,7 +80,12 @@ pub struct SimOutcome {
     pub overflow_events: u64,
     /// Total requests evicted across all clearing events.
     pub evicted_requests: u64,
-    /// Rounds / iterations executed.
+    /// Fully executed rounds / iterations. A round-cap or stall-cap hit
+    /// stops the run *before* the capped round has any side effects
+    /// (no arrivals released, no scheduler hooks fired, nothing
+    /// recorded), so this always equals the number of per-round samples:
+    /// `rounds == mem_series.len() == tokens_series.len()` whenever
+    /// series recording is on — finished and truncated runs alike.
     pub rounds: u64,
     /// False when the run hit its round cap before completing all
     /// requests (the "infinite processing loop" regime of small α).

@@ -37,6 +37,7 @@ use crate::metrics::FleetOutcome;
 use crate::perf::PerfModel;
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
+use crate::trace::{TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 
 /// RNG stream tag for router randomness (distinct from every worker's
@@ -60,21 +61,30 @@ pub fn run_fleet(
     seed: u64,
     cfg: SimConfig,
 ) -> Result<FleetOutcome, SimError> {
+    let m = worker_m.unwrap_or(inst.m);
+    let preds = clamped_predictions(inst, predictor, m)?;
+    run_fleet_inner(inst, scheds, router, m, &preds, perf, seed, cfg, None)
+}
+
+/// [`run_fleet`] with a resolved budget, pre-clamped predictions and an
+/// optional recording sink — the shared driver behind fleet recording
+/// and replay (`crate::trace`), where the predictions come from the
+/// trace rather than a predictor.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_fleet_inner(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    router: &mut dyn Router,
+    m: u64,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    sink: Option<TraceSink>,
+) -> Result<FleetOutcome, SimError> {
     let w_count = scheds.len();
     assert!(w_count >= 1, "fleet needs at least one worker");
-    let m = worker_m.unwrap_or(inst.m);
-    for r in &inst.requests {
-        if r.peak_mem() > m {
-            return Err(SimError::Infeasible {
-                id: r.id,
-                peak: r.peak_mem(),
-                m,
-            });
-        }
-    }
-
     let n = inst.requests.len();
-    let preds = clamped_predictions(inst, predictor, m);
     let mut workers: Vec<WorkerSim> = scheds
         .iter_mut()
         .enumerate()
@@ -93,6 +103,11 @@ pub fn run_fleet(
             )
         })
         .collect();
+    if let Some(sink) = &sink {
+        for (w, worker) in workers.iter_mut().enumerate() {
+            worker.set_trace(sink.clone(), w);
+        }
+    }
     let mut router_rng = Rng::with_stream(seed, ROUTER_STREAM);
     let mut loads: Vec<WorkerLoad> = Vec::with_capacity(w_count);
     let mut next_arrival = 0usize;
@@ -154,6 +169,13 @@ pub fn run_fleet(
                 );
                 id
             };
+            if let Some(sink) = &sink {
+                sink.record(TraceEvent::Route {
+                    t: r.arrival,
+                    worker: pick,
+                    id: r.id,
+                });
+            }
             workers[pick].deliver(WaitState {
                 id: r.id,
                 arrival: r.arrival,

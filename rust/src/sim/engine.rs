@@ -45,6 +45,7 @@ use crate::metrics::{PerRequest, SimOutcome};
 use crate::perf::{BatchComposition, PerfModel};
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
+use crate::trace::{TraceEvent, TraceSink};
 use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::fmt;
@@ -158,10 +159,29 @@ const NO_SLOT: usize = usize::MAX;
 /// feasible request permanently unschedulable under the Eq-(5) check.
 /// Since feasible instances have `o ≤ m − s`, clamping preserves `õ ≥ o`
 /// for over-predictors.
-pub(crate) fn clamped_predictions(inst: &Instance, predictor: &Predictor, m: u64) -> Vec<u64> {
+///
+/// A request whose peak exceeds `m` makes the clamp itself meaningless
+/// (`m − s` would wrap below zero for `s ≥ m`), so infeasibility is
+/// rejected *here*, on every call path — single-worker, fleet (where a
+/// `worker_m` override can shrink the budget below the instance's), and
+/// the replay reconstruction.
+pub(crate) fn clamped_predictions(
+    inst: &Instance,
+    predictor: &Predictor,
+    m: u64,
+) -> Result<Vec<u64>, SimError> {
     inst.requests
         .iter()
-        .map(|r| predictor.predict(r).min(m - r.prompt_len).max(1))
+        .map(|r| {
+            if r.peak_mem() > m {
+                return Err(SimError::Infeasible {
+                    id: r.id,
+                    peak: r.peak_mem(),
+                    m,
+                });
+            }
+            Ok(predictor.predict(r).min(m.saturating_sub(r.prompt_len)).max(1))
+        })
         .collect()
 }
 
@@ -212,6 +232,11 @@ pub(crate) struct WorkerSim {
     // every round, the incremental path only on (rare) overflow events.
     active_views: Vec<ActiveReq>,
     waiting_views: Vec<QueuedReq>,
+    /// Recording sink (write-only observability — the run never reads
+    /// it back, so tracing cannot perturb scheduling) and this worker's
+    /// fleet index for the recorded events.
+    sink: Option<TraceSink>,
+    worker_id: usize,
 }
 
 impl WorkerSim {
@@ -247,7 +272,16 @@ impl WorkerSim {
             stopped: false,
             active_views: Vec::new(),
             waiting_views: Vec::new(),
+            sink: None,
+            worker_id: 0,
         }
+    }
+
+    /// Attach a recording sink; every subsequent delivery, admission,
+    /// overflow, eviction and completion is recorded tagged `worker`.
+    pub(crate) fn set_trace(&mut self, sink: TraceSink, worker: usize) {
+        self.sink = Some(sink);
+        self.worker_id = worker;
     }
 
     /// Hand a routed request to this worker. It joins the waiting queue
@@ -260,6 +294,17 @@ impl WorkerSim {
         }
         self.outcome.assigned_by_class[w.class] += 1;
         self.queued_demand += w.s + w.pred + 1;
+        if let Some(sink) = &self.sink {
+            sink.record(TraceEvent::Arrival {
+                t: w.arrival,
+                worker: self.worker_id,
+                id: w.id,
+                s: w.s,
+                o: w.o_true,
+                pred: w.pred,
+                class: w.class,
+            });
+        }
         self.pending.push_back(w);
     }
 
@@ -328,16 +373,11 @@ impl WorkerSim {
         };
         self.t = ft;
 
-        // Release delivered arrivals up to the formation time.
-        while self.pending.front().map_or(false, |w| w.arrival <= self.t) {
-            let w = self.pending.pop_front().unwrap();
-            self.wait_slot[w.id] = self.waiting.len();
-            if self.incremental {
-                sched.on_arrival(&w.view());
-            }
-            self.waiting.push(w);
-        }
-
+        // Cap / stall check first, so a capped round is entirely
+        // side-effect-free — no arrivals released, no `on_arrival`
+        // hooks fired, nothing recorded. `rounds` then always counts
+        // *fully executed* rounds, matching the per-round series
+        // lengths (see [`SimOutcome::rounds`]).
         self.round += 1;
         if self.round > self.cfg.max_rounds
             || self
@@ -349,6 +389,16 @@ impl WorkerSim {
             self.outcome.rounds = self.round - 1;
             self.stopped = true;
             return Ok(());
+        }
+
+        // Release delivered arrivals up to the formation time.
+        while self.pending.front().map_or(false, |w| w.arrival <= self.t) {
+            let w = self.pending.pop_front().unwrap();
+            self.wait_slot[w.id] = self.waiting.len();
+            if self.incremental {
+                sched.on_arrival(&w.view());
+            }
+            self.waiting.push(w);
         }
 
         // Scheduler decision: per-event state for hook-aware policies,
@@ -385,6 +435,14 @@ impl WorkerSim {
             if self.incremental {
                 sched.on_admit(&w.view(), self.round);
             }
+            if let Some(sink) = &self.sink {
+                sink.record(TraceEvent::Admit {
+                    t: self.t,
+                    round: self.round,
+                    worker: self.worker_id,
+                    id: w.id,
+                });
+            }
             prefill_tokens += w.s;
             self.queued_demand -= w.s + w.pred + 1;
             self.act_slot[w.id] = self.active.len();
@@ -416,6 +474,14 @@ impl WorkerSim {
             self.active_views.extend(self.active.iter().map(ActiveState::view));
             let evicted = sched.on_overflow(&self.active_views, &mut self.rng);
             self.t += perf.clearing_time(&batch);
+            if let Some(sink) = &self.sink {
+                sink.record(TraceEvent::Overflow {
+                    t: self.t,
+                    round: self.round,
+                    worker: self.worker_id,
+                    usage,
+                });
+            }
             let mut post_usage = usage;
             for id in evicted {
                 if id >= n || self.act_slot[id] == NO_SLOT {
@@ -434,6 +500,14 @@ impl WorkerSim {
                 post_usage -= a.s + a.done + 1;
                 self.restarts[a.id] += 1;
                 self.outcome.evicted_requests += 1;
+                if let Some(sink) = &self.sink {
+                    sink.record(TraceEvent::Evict {
+                        t: self.t,
+                        round: self.round,
+                        worker: self.worker_id,
+                        id: a.id,
+                    });
+                }
                 let w = WaitState {
                     id: a.id,
                     arrival: a.arrival,
@@ -451,6 +525,9 @@ impl WorkerSim {
             }
             if self.cfg.record_series {
                 self.outcome.mem_series.push((self.t, post_usage));
+                // An aborted iteration produces no tokens; recording the
+                // zero keeps the two series index-aligned round-for-round.
+                self.outcome.tokens_series.push((self.t, 0));
             }
             return Ok(());
         }
@@ -482,6 +559,14 @@ impl WorkerSim {
                 }
                 if self.incremental {
                     sched.on_complete(a.id);
+                }
+                if let Some(sink) = &self.sink {
+                    sink.record(TraceEvent::Complete {
+                        t: self.t,
+                        round: self.round,
+                        worker: self.worker_id,
+                        id: a.id,
+                    });
                 }
                 self.records[a.id] = Some(PerRequest {
                     id: a.id,
@@ -521,24 +606,32 @@ pub fn run(
     seed: u64,
     cfg: SimConfig,
 ) -> Result<SimOutcome, SimError> {
-    for r in &inst.requests {
-        if r.peak_mem() > inst.m {
-            return Err(SimError::Infeasible {
-                id: r.id,
-                peak: r.peak_mem(),
-                m: inst.m,
-            });
-        }
-    }
+    let preds = clamped_predictions(inst, predictor, inst.m)?;
+    run_with_preds(inst, sched, &preds, perf, seed, cfg, None)
+}
 
+/// [`run`] with pre-resolved (clamped) predictions and an optional
+/// recording sink — the shared driver behind recording and replay,
+/// where the predictions come from the trace rather than a predictor.
+pub(crate) fn run_with_preds(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    sink: Option<TraceSink>,
+) -> Result<SimOutcome, SimError> {
     let n = inst.requests.len();
-    let preds = clamped_predictions(inst, predictor, inst.m);
     let incremental = cfg.incremental && sched.supports_incremental();
     if incremental {
         sched.on_reset();
     }
 
     let mut worker = WorkerSim::new(n, inst.m, &sched.name(), seed, cfg, incremental);
+    if let Some(sink) = sink {
+        worker.set_trace(sink, 0);
+    }
     let mut next_arrival = 0usize;
     loop {
         // Deliver arrivals due at or before the next batch-formation
@@ -839,5 +932,80 @@ mod tests {
             SimConfig::default(),
         );
         assert!(matches!(err, Err(SimError::Infeasible { .. })));
+    }
+
+    /// Regression: `m − prompt_len` used to wrap around u64::MAX when a
+    /// prompt alone exceeded the budget — reachable unguarded through
+    /// the fleet's `worker_m` override and the live coordinator. The
+    /// clamp now rejects such requests as `Infeasible` on every path.
+    #[test]
+    fn clamped_predictions_reject_oversized_prompts() {
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 10, 4)]);
+        let err = clamped_predictions(&inst, &Predictor::exact(), 8);
+        assert!(matches!(
+            err,
+            Err(SimError::Infeasible {
+                id: 0,
+                peak: 14,
+                m: 8
+            })
+        ));
+        // Under the instance's own (feasible) budget the clamp passes
+        // the exact prediction through.
+        let ok = clamped_predictions(&inst, &Predictor::exact(), 100).unwrap();
+        assert_eq!(ok, vec![4]);
+    }
+
+    /// Regression: clearing rounds used to push a memory sample but no
+    /// token sample, desynchronizing the two series after any overflow.
+    #[test]
+    fn overflow_rounds_keep_series_aligned() {
+        let reqs: Vec<Request> = (0..18).map(|i| Request::new(i, 0.0, 2, 4)).collect();
+        let inst = Instance::new(60, reqs);
+        let mut sched = AlphaProtection::new(0.05, 0.5);
+        let out = run(
+            &inst,
+            &mut sched,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert!(out.overflow_events > 0, "expected clearing events");
+        assert_eq!(out.mem_series.len(), out.tokens_series.len());
+        assert!(
+            out.tokens_series.iter().any(|&(_, tok)| tok == 0),
+            "aborted iterations must record zero-token samples"
+        );
+        assert_eq!(out.rounds as usize, out.mem_series.len());
+    }
+
+    /// Regression: the cap-stop path recorded `round − 1` while a normal
+    /// finish recorded `round`, even though the capped round had already
+    /// released arrivals. The capped round is now side-effect-free, so
+    /// `rounds` counts fully executed rounds on both paths — equal to
+    /// the series lengths whenever recording is on.
+    #[test]
+    fn rounds_count_matches_series_on_capped_runs() {
+        let reqs: Vec<Request> = (0..12).map(|i| Request::new(i, 0.0, 2, 20)).collect();
+        let inst = Instance::new(60, reqs);
+        let mut sched = AlphaProtection::new(0.05, 1.0);
+        let out = run(
+            &inst,
+            &mut sched,
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig {
+                max_rounds: 500,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(!out.finished);
+        assert_eq!(out.rounds, 500);
+        assert_eq!(out.mem_series.len(), 500);
+        assert_eq!(out.tokens_series.len(), 500);
     }
 }

@@ -1,0 +1,736 @@
+//! The versioned on-disk trace format and the in-memory recording sink.
+//!
+//! A [`Trace`] is a [`TraceMeta`] header (everything needed to rebuild
+//! the run: policy/router specs, seeds and RNG stream ids, budgets,
+//! engine config, class table) plus a flat, causally ordered list of
+//! [`TraceEvent`]s. Events serialize as compact JSON arrays, one per
+//! line, so fixtures diff cleanly under git and a million-event trace
+//! stays greppable:
+//!
+//! ```text
+//! ["arr",   t, worker, id, s, o, pred, class]   request delivery
+//! ["route", t, worker, id]                      router pick
+//! ["admit", t, round, worker, id]               admission into the batch
+//! ["ovf",   t, round, worker, usage]            KV overflow (clearing)
+//! ["evict", t, round, worker, id]               eviction during clearing
+//! ["done",  t, round, worker, id]               completion
+//! ```
+//!
+//! Bit-exactness across a disk round-trip is load-bearing: replay
+//! verification compares event streams with `PartialEq` over `f64`
+//! times. The crate's JSON emitter prints floats with Rust's
+//! shortest-representation `Display`, which is guaranteed to parse back
+//! to the identical bits, so `Trace::from_text(trace.to_text()) ==
+//! trace` exactly. The two full-width `u64` fields (`seed`,
+//! `router_stream`) are stored as decimal *strings* because an `f64`
+//! JSON number cannot represent every `u64` above 2⁵³.
+
+use crate::core::{ClassId, ClassSet, RequestId};
+use crate::sim::cluster::ROUTER_STREAM;
+use crate::sim::SimConfig;
+use crate::util::error::{anyhow, bail, Context, Result};
+use crate::util::json::Json;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Current trace-format version; bumped on any schema change so stale
+/// goldens fail loudly instead of replaying garbage.
+pub const TRACE_VERSION: u64 = 1;
+
+/// One recorded scheduling event. Times are rounds (unit-time runs),
+/// seconds (continuous perf models), or wall-clock seconds since serve
+/// start (live recordings); `worker` is the fleet index (0 for
+/// single-worker runs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request delivered to `worker`'s queue, with everything replay
+    /// needs to rebuild it: true lengths, the (clamped) prediction the
+    /// scheduler saw, and the class tag. `t` is the request's arrival
+    /// time.
+    Arrival {
+        t: f64,
+        worker: usize,
+        id: RequestId,
+        s: u64,
+        o: u64,
+        pred: u64,
+        class: ClassId,
+    },
+    /// The router picked `worker` for request `id` at time `t`.
+    Route { t: f64, worker: usize, id: RequestId },
+    /// `id` entered `worker`'s running batch in round `round`, formed at
+    /// time `t`.
+    Admit {
+        t: f64,
+        round: u64,
+        worker: usize,
+        id: RequestId,
+    },
+    /// KV overflow on `worker`: the round's batch needed `usage > M`
+    /// tokens and was aborted (a clearing event). `t` is the
+    /// post-clearing clock, matching the memory-series sample.
+    Overflow {
+        t: f64,
+        round: u64,
+        worker: usize,
+        usage: u64,
+    },
+    /// `id` was evicted (lost all progress, re-queued) during the
+    /// clearing event of `round`.
+    Evict {
+        t: f64,
+        round: u64,
+        worker: usize,
+        id: RequestId,
+    },
+    /// `id` produced its final output token at time `t`.
+    Complete {
+        t: f64,
+        round: u64,
+        worker: usize,
+        id: RequestId,
+    },
+}
+
+impl TraceEvent {
+    /// Compact array form (see the module docs for the schema).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            TraceEvent::Arrival {
+                t,
+                worker,
+                id,
+                s,
+                o,
+                pred,
+                class,
+            } => Json::Arr(vec![
+                Json::from("arr"),
+                Json::from(t),
+                Json::from(worker),
+                Json::from(id),
+                Json::from(s),
+                Json::from(o),
+                Json::from(pred),
+                Json::from(class),
+            ]),
+            TraceEvent::Route { t, worker, id } => Json::Arr(vec![
+                Json::from("route"),
+                Json::from(t),
+                Json::from(worker),
+                Json::from(id),
+            ]),
+            TraceEvent::Admit {
+                t,
+                round,
+                worker,
+                id,
+            } => Json::Arr(vec![
+                Json::from("admit"),
+                Json::from(t),
+                Json::from(round),
+                Json::from(worker),
+                Json::from(id),
+            ]),
+            TraceEvent::Overflow {
+                t,
+                round,
+                worker,
+                usage,
+            } => Json::Arr(vec![
+                Json::from("ovf"),
+                Json::from(t),
+                Json::from(round),
+                Json::from(worker),
+                Json::from(usage),
+            ]),
+            TraceEvent::Evict {
+                t,
+                round,
+                worker,
+                id,
+            } => Json::Arr(vec![
+                Json::from("evict"),
+                Json::from(t),
+                Json::from(round),
+                Json::from(worker),
+                Json::from(id),
+            ]),
+            TraceEvent::Complete {
+                t,
+                round,
+                worker,
+                id,
+            } => Json::Arr(vec![
+                Json::from("done"),
+                Json::from(t),
+                Json::from(round),
+                Json::from(worker),
+                Json::from(id),
+            ]),
+        }
+    }
+
+    /// Parse the [`Self::to_json`] array form.
+    pub fn from_json(j: &Json) -> Result<TraceEvent> {
+        let a = j.as_arr().context("trace event is not an array")?;
+        let tag = a
+            .first()
+            .and_then(Json::as_str)
+            .context("trace event has no tag")?;
+        let num = |i: usize| -> Result<f64> {
+            a.get(i)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("trace event '{tag}': field {i} is not a number"))
+        };
+        let int = |i: usize| -> Result<usize> {
+            a.get(i)
+                .and_then(Json::as_usize)
+                .with_context(|| {
+                    format!("trace event '{tag}': field {i} is not a non-negative integer")
+                })
+        };
+        let want = |n: usize| -> Result<()> {
+            if a.len() != n {
+                bail!("trace event '{tag}': expected {n} fields, got {}", a.len());
+            }
+            Ok(())
+        };
+        match tag {
+            "arr" => {
+                want(8)?;
+                Ok(TraceEvent::Arrival {
+                    t: num(1)?,
+                    worker: int(2)?,
+                    id: int(3)?,
+                    s: int(4)? as u64,
+                    o: int(5)? as u64,
+                    pred: int(6)? as u64,
+                    class: int(7)?,
+                })
+            }
+            "route" => {
+                want(4)?;
+                Ok(TraceEvent::Route {
+                    t: num(1)?,
+                    worker: int(2)?,
+                    id: int(3)?,
+                })
+            }
+            "admit" => {
+                want(5)?;
+                Ok(TraceEvent::Admit {
+                    t: num(1)?,
+                    round: int(2)? as u64,
+                    worker: int(3)?,
+                    id: int(4)?,
+                })
+            }
+            "ovf" => {
+                want(5)?;
+                Ok(TraceEvent::Overflow {
+                    t: num(1)?,
+                    round: int(2)? as u64,
+                    worker: int(3)?,
+                    usage: int(4)? as u64,
+                })
+            }
+            "evict" => {
+                want(5)?;
+                Ok(TraceEvent::Evict {
+                    t: num(1)?,
+                    round: int(2)? as u64,
+                    worker: int(3)?,
+                    id: int(4)?,
+                })
+            }
+            "done" => {
+                want(5)?;
+                Ok(TraceEvent::Complete {
+                    t: num(1)?,
+                    round: int(2)? as u64,
+                    worker: int(3)?,
+                    id: int(4)?,
+                })
+            }
+            other => Err(anyhow!("unknown trace event tag '{other}'")),
+        }
+    }
+}
+
+/// Where a trace came from — this decides how strictly replay verifies.
+///
+/// `Sim` traces are fully deterministic functions of the meta block, so
+/// the replayer re-runs the engine (re-deriving all RNG streams from the
+/// recorded seeds) and diffs the regenerated event stream against the
+/// recorded one. `Serve` traces carry wall-clock times and live router
+/// picks; the replayer treats arrivals and routing as data (the
+/// wasm-rr-style record-nondeterminism-replay-it idiom) and drives the
+/// simulator as a reproducible offline benchmark instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Recorded from the simulation engines; replay is bit-verified.
+    Sim,
+    /// Recorded from the live coordinator; replay re-simulates.
+    Serve,
+}
+
+impl TraceKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceKind::Sim => "sim",
+            TraceKind::Serve => "serve",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TraceKind> {
+        match s {
+            "sim" => Ok(TraceKind::Sim),
+            "serve" => Ok(TraceKind::Serve),
+            other => Err(anyhow!("unknown trace kind '{other}' (sim | serve)")),
+        }
+    }
+}
+
+/// Everything replay needs to rebuild the run the events came from.
+///
+/// RNG streams: worker `w`'s scheduler draws from the default stream of
+/// `seed + w`; fleet routing draws from the dedicated
+/// [`router_stream`](Self::router_stream) of `seed` (recorded so trace
+/// consumers outside this crate can re-derive picks too).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    /// Recording source; see [`TraceKind`].
+    pub kind: TraceKind,
+    /// Scheduler *spec* string ([`crate::sched::by_name`] grammar, not
+    /// the display name) — replay rebuilds the policy from it.
+    pub algo: String,
+    /// Router spec for fleet traces ([`crate::cluster::router_by_name`]
+    /// grammar); `None` for single-worker runs.
+    pub router: Option<String>,
+    /// Perf-model tag ([`crate::trace::perf_by_name`]): `unit` | `llama`.
+    pub perf: String,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Fleet width (1 for the single-worker engine).
+    pub workers: usize,
+    /// Per-worker KV budget `M` the run scheduled under (the resolved
+    /// value, after any fleet `worker_m` override).
+    pub m: u64,
+    /// Request count — must equal the number of arrival events.
+    pub n: usize,
+    /// Traffic-class table the requests' tags index into.
+    pub classes: ClassSet,
+    /// RNG stream id of the router's dedicated stream (fleet traces).
+    pub router_stream: Option<u64>,
+    /// Engine cap: see [`SimConfig::max_rounds`].
+    pub max_rounds: u64,
+    /// Engine cap: see [`SimConfig::stall_rounds`].
+    pub stall_rounds: u64,
+    /// Whether the run recorded memory/token series.
+    pub record_series: bool,
+    /// Whether hook-aware schedulers took the incremental path.
+    pub incremental: bool,
+}
+
+impl TraceMeta {
+    /// Meta block for a live `serve` recording: engine-config fields take
+    /// the simulator defaults (a serve loop has no round caps of its
+    /// own), and fleet recordings pin the shared router stream id.
+    pub fn serve(
+        algo: &str,
+        router: Option<&str>,
+        workers: usize,
+        m: u64,
+        n: usize,
+        seed: u64,
+        classes: ClassSet,
+    ) -> TraceMeta {
+        let cfg = SimConfig::default();
+        TraceMeta {
+            kind: TraceKind::Serve,
+            algo: algo.to_string(),
+            router: router.map(str::to_string),
+            perf: "llama".to_string(),
+            seed,
+            workers,
+            m,
+            n,
+            classes,
+            router_stream: router.map(|_| ROUTER_STREAM),
+            max_rounds: cfg.max_rounds,
+            stall_rounds: cfg.stall_rounds,
+            record_series: cfg.record_series,
+            incremental: cfg.incremental,
+        }
+    }
+
+    /// The engine config the run used (and replay must reuse — the caps
+    /// shape truncated outcomes).
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            max_rounds: self.max_rounds,
+            stall_rounds: self.stall_rounds,
+            record_series: self.record_series,
+            incremental: self.incremental,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("kind", self.kind.as_str())
+            .set("algo", self.algo.as_str());
+        if let Some(r) = &self.router {
+            j = j.set("router", r.as_str());
+        }
+        j = j
+            .set("perf", self.perf.as_str())
+            .set("seed", self.seed.to_string())
+            .set("workers", self.workers)
+            .set("m", self.m)
+            .set("n", self.n);
+        if !self.classes.is_empty() {
+            j = j.set("classes", self.classes.to_json());
+        }
+        if let Some(rs) = self.router_stream {
+            j = j.set("router_stream", rs.to_string());
+        }
+        j.set("max_rounds", self.max_rounds)
+            .set("stall_rounds", self.stall_rounds)
+            .set("record_series", self.record_series)
+            .set("incremental", self.incremental)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TraceMeta> {
+        let parse_u64 = |key: &str| -> Result<u64> {
+            let s = j.req_str(key)?;
+            s.parse::<u64>()
+                .with_context(|| format!("trace meta '{key}' = '{s}' is not a u64"))
+        };
+        let req_bool = |key: &str| -> Result<bool> {
+            j.req(key)?
+                .as_bool()
+                .with_context(|| format!("trace meta '{key}' is not a bool"))
+        };
+        Ok(TraceMeta {
+            kind: TraceKind::parse(j.req_str("kind")?)?,
+            algo: j.req_str("algo")?.to_string(),
+            router: j.get("router").and_then(Json::as_str).map(str::to_string),
+            perf: j.req_str("perf")?.to_string(),
+            seed: parse_u64("seed")?,
+            workers: j.req_usize("workers")?,
+            m: j.req_usize("m")? as u64,
+            n: j.req_usize("n")?,
+            classes: match j.get("classes") {
+                Some(cj) => ClassSet::from_json(cj)?,
+                None => ClassSet::default(),
+            },
+            router_stream: match j.get("router_stream") {
+                Some(_) => Some(parse_u64("router_stream")?),
+                None => None,
+            },
+            max_rounds: j.req_usize("max_rounds")? as u64,
+            stall_rounds: j.req_usize("stall_rounds")? as u64,
+            record_series: req_bool("record_series")?,
+            incremental: req_bool("incremental")?,
+        })
+    }
+}
+
+/// A complete recorded run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    /// Events in causal recording order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("version", TRACE_VERSION)
+            .set("meta", self.meta.to_json())
+            .set(
+                "events",
+                Json::Arr(self.events.iter().map(TraceEvent::to_json).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let version = j.req_usize("version")? as u64;
+        if version != TRACE_VERSION {
+            bail!("trace version {version} unsupported (this build reads {TRACE_VERSION})");
+        }
+        let meta = TraceMeta::from_json(j.req("meta")?)?;
+        let events = j
+            .req_arr("events")?
+            .iter()
+            .enumerate()
+            .map(|(i, ev)| TraceEvent::from_json(ev).with_context(|| format!("event {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trace { meta, events })
+    }
+
+    /// Git-friendly rendering: header fields on their own lines, then
+    /// one compact event per line.
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"version\":");
+        s.push_str(&TRACE_VERSION.to_string());
+        s.push_str(",\n\"meta\":");
+        s.push_str(&self.meta.to_json().to_string());
+        s.push_str(",\n\"events\":[");
+        for (i, ev) in self.events.iter().enumerate() {
+            s.push_str(if i == 0 { "\n" } else { ",\n" });
+            s.push_str(&ev.to_json().to_string());
+        }
+        s.push_str("\n]}\n");
+        s
+    }
+
+    /// Parse anything [`Self::to_text`] (or a generic JSON emitter)
+    /// produced.
+    pub fn from_text(text: &str) -> Result<Trace> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Trace::from_json(&j)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing trace to {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Trace> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+        Trace::from_text(&text).with_context(|| format!("parsing trace {path}"))
+    }
+}
+
+impl fmt::Display for Trace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} trace: {} over {} worker(s), n = {}, {} events",
+            self.meta.kind.as_str(),
+            self.meta.algo,
+            self.meta.workers,
+            self.meta.n,
+            self.events.len()
+        )
+    }
+}
+
+/// Shared, thread-safe event collector the recording hooks write into.
+///
+/// Cloning is shallow (an `Arc` handle): the engine, every fleet worker,
+/// and the live coordinator threads all append to the same buffer. Sim
+/// recordings are single-threaded so the order is exactly causal; live
+/// recordings interleave worker threads, which is why serve-kind replay
+/// re-sorts arrivals instead of trusting buffer order.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+    /// Resolved KV budget published by the serving loop (the budget is
+    /// computed engine-side, after the recorder set the sink up).
+    budget: Arc<AtomicU64>,
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    pub fn record(&self, ev: TraceEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Drain everything recorded so far.
+    pub fn take(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Publish the resolved per-worker KV budget (live serving computes
+    /// it from the engine dims when `kv_budget = 0`).
+    pub fn publish_budget(&self, m: u64) {
+        self.budget.store(m, Ordering::Relaxed);
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Arrival {
+                t: 0.0,
+                worker: 0,
+                id: 0,
+                s: 3,
+                o: 7,
+                pred: 9,
+                class: 1,
+            },
+            TraceEvent::Route {
+                t: 0.125,
+                worker: 2,
+                id: 1,
+            },
+            TraceEvent::Admit {
+                t: 1.0,
+                round: 1,
+                worker: 0,
+                id: 0,
+            },
+            TraceEvent::Overflow {
+                t: 2.5,
+                round: 2,
+                worker: 0,
+                usage: 61,
+            },
+            TraceEvent::Evict {
+                t: 2.5,
+                round: 2,
+                worker: 0,
+                id: 0,
+            },
+            TraceEvent::Complete {
+                t: 9.0,
+                round: 9,
+                worker: 0,
+                id: 0,
+            },
+        ]
+    }
+
+    fn sample_meta() -> TraceMeta {
+        TraceMeta {
+            kind: TraceKind::Sim,
+            algo: "protect:alpha=0.1,beta=0.5".into(),
+            router: Some("po2".into()),
+            perf: "unit".into(),
+            // Full-width u64s must survive the string encoding.
+            seed: u64::MAX - 12345,
+            workers: 3,
+            m: 60,
+            n: 2,
+            classes: ClassSet::default(),
+            router_stream: Some(0x9e37_79b9_7f4a_7c15),
+            max_rounds: 10_000,
+            stall_rounds: 1_500,
+            record_series: true,
+            incremental: false,
+        }
+    }
+
+    #[test]
+    fn events_roundtrip_through_json() {
+        for ev in sample_events() {
+            let back = TraceEvent::from_json(&ev.to_json()).unwrap();
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn event_parse_rejects_malformed() {
+        assert!(TraceEvent::from_json(&Json::Num(3.0)).is_err());
+        assert!(TraceEvent::from_json(&Json::Arr(vec![])).is_err());
+        let bad_tag = Json::parse(r#"["nope", 1, 2, 3]"#).unwrap();
+        assert!(TraceEvent::from_json(&bad_tag).is_err());
+        let short = Json::parse(r#"["arr", 0, 0]"#).unwrap();
+        assert!(TraceEvent::from_json(&short).is_err());
+        let negative = Json::parse(r#"["route", 0, -1, 0]"#).unwrap();
+        assert!(TraceEvent::from_json(&negative).is_err());
+    }
+
+    #[test]
+    fn meta_roundtrips_full_width_seeds() {
+        let meta = sample_meta();
+        let back = TraceMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(back, meta);
+        // The single-worker shape (no router fields, classed).
+        let meta = TraceMeta {
+            router: None,
+            router_stream: None,
+            classes: ClassSet::parse("interactive:0.7,batch:0.3").unwrap(),
+            kind: TraceKind::Serve,
+            ..meta
+        };
+        let back = TraceMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn trace_text_roundtrip_is_exact() {
+        let trace = Trace {
+            meta: sample_meta(),
+            events: sample_events(),
+        };
+        let text = trace.to_text();
+        // One event per line between the events brackets.
+        assert_eq!(text.lines().count(), 3 + trace.events.len());
+        let back = Trace::from_text(&text).unwrap();
+        assert_eq!(back, trace);
+        // Irrational times survive the shortest-repr float printing.
+        let mut trace = trace;
+        trace.events.push(TraceEvent::Complete {
+            t: 1.0 / 3.0 + 1e-13,
+            round: 10,
+            worker: 1,
+            id: 1,
+        });
+        let back = Trace::from_text(&trace.to_text()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn empty_trace_roundtrips() {
+        let trace = Trace {
+            meta: sample_meta(),
+            events: Vec::new(),
+        };
+        let back = Trace::from_text(&trace.to_text()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let trace = Trace {
+            meta: sample_meta(),
+            events: Vec::new(),
+        };
+        let j = trace.to_json().set("version", 99u64);
+        let err = Trace::from_json(&j).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+    }
+
+    #[test]
+    fn sink_collects_and_drains() {
+        let sink = TraceSink::new();
+        assert!(sink.is_empty());
+        let clone = sink.clone();
+        for ev in sample_events() {
+            clone.record(ev);
+        }
+        assert_eq!(sink.len(), 6);
+        sink.publish_budget(1234);
+        assert_eq!(sink.budget(), 1234);
+        let drained = sink.take();
+        assert_eq!(drained, sample_events());
+        assert!(sink.is_empty());
+    }
+}

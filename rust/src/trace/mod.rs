@@ -1,0 +1,35 @@
+//! Deterministic record/replay for simulated and live scheduling runs.
+//!
+//! The paper's hindsight-optimal benchmark (§3) is defined over the
+//! *full record* of an arrival process — which is exactly what a
+//! recorded trace is. This subsystem closes that loop:
+//!
+//! * [`TraceSink`] hooks inside the engines collect every scheduling
+//!   event (arrivals, router picks, admissions, overflow clearings,
+//!   evictions, completions) with times and RNG stream ids;
+//! * [`record_sim`] / [`record_fleet`] wrap a run's events in a
+//!   versioned, self-describing [`Trace`] (compact JSON, one event per
+//!   line — small enough to commit as golden fixtures under `golden/`);
+//! * [`replay_sim`] / [`replay_fleet`] rebuild the instance from the
+//!   trace and re-drive the engines **bit-identically**, with a
+//!   [`TraceDivergence`] error pinpointing the first mismatching event
+//!   when behavior drifts;
+//! * live serve runs ([`crate::coordinator`]) record through the same
+//!   sink, turning production traffic into reproducible offline
+//!   benchmarks (serve-kind traces replay through the simulator with
+//!   recorded arrivals and placements treated as data).
+//!
+//! The differential guarantee — `record → replay` reproduces the exact
+//! `SimOutcome`/`FleetOutcome` across the incremental and snapshot
+//! scheduler paths and across single-worker vs fleet engines — is
+//! enforced by `tests/trace_replay.rs`; CI replays the committed goldens
+//! and fails on any divergence, making every future engine refactor
+//! verifiable against frozen behavior.
+
+pub mod event;
+pub mod record;
+pub mod replay;
+
+pub use event::{Trace, TraceEvent, TraceKind, TraceMeta, TraceSink, TRACE_VERSION};
+pub use record::{perf_by_name, record_fleet, record_sim};
+pub use replay::{replay_fleet, replay_sim, ReplayError, TraceDivergence};

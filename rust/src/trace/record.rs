@@ -1,0 +1,160 @@
+//! Recording: run a simulation with a [`TraceSink`] attached and wrap
+//! the collected events in a self-describing [`Trace`].
+//!
+//! The recorders return *both* the outcome and the trace so callers can
+//! assert replay fidelity (`replay(record(x)) == x`) without running the
+//! instance a third time — exactly what `tests/trace_replay.rs` and the
+//! golden-corpus CI step do.
+
+use super::event::{Trace, TraceKind, TraceMeta, TraceSink};
+use crate::cluster::router_by_name_classed;
+use crate::core::Instance;
+use crate::metrics::{FleetOutcome, SimOutcome};
+use crate::perf::{Llama70bA100x2, PerfModel, UnitTime};
+use crate::predictor::Predictor;
+use crate::sched::{by_name_classed, Scheduler};
+use crate::sim::cluster::{run_fleet_inner, ROUTER_STREAM};
+use crate::sim::engine::{clamped_predictions, run_with_preds};
+use crate::sim::SimConfig;
+use crate::util::error::{anyhow, Result};
+
+/// Resolve a trace meta `perf` tag to its model. Two canonical tags keep
+/// fixtures portable: `unit` (the paper's unit-round abstraction) and
+/// `llama` (the Llama-70B/2×A100 latency model).
+pub fn perf_by_name(name: &str) -> Result<Box<dyn PerfModel>> {
+    match name {
+        "unit" | "unit-time" => Ok(Box::new(UnitTime)),
+        "llama" | "llama70b" => Ok(Box::new(Llama70bA100x2::default())),
+        other => Err(anyhow!("unknown perf model '{other}' (unit | llama)")),
+    }
+}
+
+fn meta_from_cfg(
+    kind: TraceKind,
+    algo: &str,
+    router: Option<&str>,
+    perf_name: &str,
+    seed: u64,
+    workers: usize,
+    m: u64,
+    inst: &Instance,
+    cfg: SimConfig,
+) -> TraceMeta {
+    TraceMeta {
+        kind,
+        algo: algo.to_string(),
+        router: router.map(str::to_string),
+        perf: perf_name.to_string(),
+        seed,
+        workers,
+        m,
+        n: inst.n(),
+        classes: inst.classes.clone(),
+        router_stream: router.map(|_| ROUTER_STREAM),
+        max_rounds: cfg.max_rounds,
+        stall_rounds: cfg.stall_rounds,
+        record_series: cfg.record_series,
+        incremental: cfg.incremental,
+    }
+}
+
+/// Run the single-worker engine over `inst` while recording every
+/// scheduling event. `algo` is a [`crate::sched::by_name`] spec;
+/// `perf_name` is the [`perf_by_name`] tag matching `perf` (stored in
+/// the meta so replay rebuilds the same clock).
+pub fn record_sim(
+    inst: &Instance,
+    algo: &str,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    perf_name: &str,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<(SimOutcome, Trace)> {
+    let mut sched = by_name_classed(algo, &inst.classes)?;
+    let preds = clamped_predictions(inst, predictor, inst.m)?;
+    let sink = TraceSink::new();
+    let out = run_with_preds(
+        inst,
+        sched.as_mut(),
+        &preds,
+        perf,
+        seed,
+        cfg,
+        Some(sink.clone()),
+    )?;
+    let meta = meta_from_cfg(
+        TraceKind::Sim,
+        algo,
+        None,
+        perf_name,
+        seed,
+        1,
+        inst.m,
+        inst,
+        cfg,
+    );
+    Ok((
+        out,
+        Trace {
+            meta,
+            events: sink.take(),
+        },
+    ))
+}
+
+/// Run an N-worker fleet (one `algo` scheduler per worker behind
+/// `router_spec`) while recording, including the router's pick for every
+/// arrival. `worker_m` overrides the per-worker KV budget exactly as in
+/// [`crate::sim::cluster::run_fleet`]; the meta stores the *resolved*
+/// budget.
+#[allow(clippy::too_many_arguments)]
+pub fn record_fleet(
+    inst: &Instance,
+    algo: &str,
+    router_spec: &str,
+    workers: usize,
+    worker_m: Option<u64>,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    perf_name: &str,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<(FleetOutcome, Trace)> {
+    let mut scheds: Vec<Box<dyn Scheduler>> = (0..workers.max(1))
+        .map(|_| by_name_classed(algo, &inst.classes))
+        .collect::<Result<_>>()?;
+    let mut router = router_by_name_classed(router_spec, &inst.classes)?;
+    let m = worker_m.unwrap_or(inst.m);
+    let preds = clamped_predictions(inst, predictor, m)?;
+    let sink = TraceSink::new();
+    let out = run_fleet_inner(
+        inst,
+        &mut scheds,
+        router.as_mut(),
+        m,
+        &preds,
+        perf,
+        seed,
+        cfg,
+        Some(sink.clone()),
+    )?;
+    let meta = meta_from_cfg(
+        TraceKind::Sim,
+        algo,
+        Some(router_spec),
+        perf_name,
+        seed,
+        workers.max(1),
+        m,
+        inst,
+        cfg,
+    );
+    Ok((
+        out,
+        Trace {
+            meta,
+            events: sink.take(),
+        },
+    ))
+}

@@ -1,0 +1,371 @@
+//! Replay: rebuild the instance a trace was recorded from and re-drive
+//! the engines, verifying bit-identical behavior.
+//!
+//! Verification strength depends on [`TraceKind`]:
+//!
+//! * **Sim traces** are deterministic functions of their meta block, so
+//!   replay re-records the run (same seeds, same RNG streams) and diffs
+//!   the regenerated event stream against the recorded one
+//!   position-by-position. Any mismatch — a different admission order, a
+//!   shifted completion time, a router pick gone elsewhere — surfaces as
+//!   a [`TraceDivergence`] naming the first offending event.
+//! * **Serve traces** carry wall-clock arrival times and live routing
+//!   decisions that no simulator can re-derive. Replay treats both as
+//!   data: arrivals become the reconstructed instance, recorded picks
+//!   drive a [`ReplayRouter`], and the simulator turns the live run into
+//!   a reproducible offline benchmark (no event diff — the sim clock is
+//!   not the wall clock).
+
+use super::event::{Trace, TraceEvent, TraceKind, TraceSink};
+use crate::cluster::router::{Router, WorkerLoad};
+use crate::cluster::router_by_name_classed;
+use crate::core::{Instance, QueuedReq, Request};
+use crate::metrics::{FleetOutcome, SimOutcome};
+use crate::perf::PerfModel;
+use crate::sched::{by_name_classed, Scheduler};
+use crate::sim::cluster::run_fleet_inner;
+use crate::sim::engine::run_with_preds;
+use crate::sim::SimError;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// The first point where a replayed run stopped matching its recording.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceDivergence {
+    /// Index into the event stream (0-based).
+    pub index: usize,
+    /// What the trace recorded at that index (`None`: the replay
+    /// produced more events than were recorded).
+    pub expected: Option<TraceEvent>,
+    /// What the replay produced (`None`: the replay ended early).
+    pub got: Option<TraceEvent>,
+}
+
+impl fmt::Display for TraceDivergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let show = |ev: &Option<TraceEvent>| match ev {
+            Some(ev) => ev.to_json().to_string(),
+            None => "<end of stream>".to_string(),
+        };
+        write!(
+            f,
+            "trace diverges at event {}: expected {}, got {}",
+            self.index,
+            show(&self.expected),
+            show(&self.got)
+        )
+    }
+}
+
+/// Replay failures.
+#[derive(Debug)]
+pub enum ReplayError {
+    /// The replayed run produced a different event stream (sim traces
+    /// only — the bit-identity check failed).
+    Divergence(TraceDivergence),
+    /// The reconstructed instance crashed the engine.
+    Sim(SimError),
+    /// The trace is internally inconsistent (wrong arrival count,
+    /// infeasible lengths, unknown policy, kind/shape mismatch, …).
+    Malformed(String),
+}
+
+impl fmt::Display for ReplayError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplayError::Divergence(d) => write!(f, "{d}"),
+            ReplayError::Sim(e) => write!(f, "replayed instance failed: {e}"),
+            ReplayError::Malformed(msg) => write!(f, "malformed trace: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReplayError {}
+
+impl From<SimError> for ReplayError {
+    fn from(e: SimError) -> ReplayError {
+        ReplayError::Sim(e)
+    }
+}
+
+fn malformed(msg: String) -> ReplayError {
+    ReplayError::Malformed(msg)
+}
+
+/// Everything replay extracts from a trace's arrival events.
+pub(crate) struct ReplaySetup {
+    /// The instance the run scheduled (dense ids, arrival-sorted).
+    pub inst: Instance,
+    /// The clamped predictions the scheduler saw, indexed by id.
+    pub preds: Vec<u64>,
+    /// The worker each request landed on, indexed by id (drives the
+    /// [`ReplayRouter`] for serve-kind fleet traces).
+    pub routing: Vec<usize>,
+}
+
+/// Rebuild the [`ReplaySetup`] from a trace's arrival events.
+///
+/// Sim recordings deliver arrivals in global `(arrival, id)` order with
+/// dense ids, so sorting by id must already be arrival-sorted — verified
+/// here, which makes `Instance::new`'s re-sort the identity and keeps
+/// recorded ids aligned with reconstructed ones. Serve recordings
+/// interleave worker threads and use per-worker id spaces, so arrivals
+/// are re-sorted by `(t, worker, id)` and re-densified instead.
+pub(crate) fn reconstruct(trace: &Trace) -> Result<ReplaySetup, ReplayError> {
+    struct Arr {
+        t: f64,
+        worker: usize,
+        id: usize,
+        s: u64,
+        o: u64,
+        pred: u64,
+        class: usize,
+    }
+    let meta = &trace.meta;
+    let mut arrivals: Vec<Arr> = Vec::new();
+    for ev in &trace.events {
+        if let TraceEvent::Arrival {
+            t,
+            worker,
+            id,
+            s,
+            o,
+            pred,
+            class,
+        } = *ev
+        {
+            arrivals.push(Arr {
+                t,
+                worker,
+                id,
+                s,
+                o,
+                pred,
+                class,
+            });
+        }
+    }
+    if arrivals.len() != meta.n {
+        return Err(malformed(format!(
+            "meta says n = {} but the trace has {} arrival events",
+            meta.n,
+            arrivals.len()
+        )));
+    }
+    match meta.kind {
+        TraceKind::Sim => {
+            arrivals.sort_by_key(|a| a.id);
+            for (i, a) in arrivals.iter().enumerate() {
+                if a.id != i {
+                    return Err(malformed(format!(
+                        "sim-trace arrival ids are not dense: expected {i}, found {}",
+                        a.id
+                    )));
+                }
+                if i > 0 && a.t < arrivals[i - 1].t {
+                    return Err(malformed(format!(
+                        "sim-trace arrivals out of order at id {i}: t = {} after {}",
+                        a.t,
+                        arrivals[i - 1].t
+                    )));
+                }
+            }
+        }
+        TraceKind::Serve => {
+            // Per-worker id spaces collide; key on (t, worker, local id)
+            // and re-densify. Ids then increase with arrival time, so
+            // the instance's (arrival, id) sort preserves this order.
+            arrivals.sort_by(|a, b| {
+                a.t.total_cmp(&b.t)
+                    .then(a.worker.cmp(&b.worker))
+                    .then(a.id.cmp(&b.id))
+            });
+            for (i, a) in arrivals.iter_mut().enumerate() {
+                a.id = i;
+            }
+        }
+    }
+    let n_classes = meta.classes.len().max(1);
+    let mut requests = Vec::with_capacity(arrivals.len());
+    let mut preds = Vec::with_capacity(arrivals.len());
+    let mut routing = Vec::with_capacity(arrivals.len());
+    for a in &arrivals {
+        if !(a.t.is_finite() && a.t >= 0.0) {
+            return Err(malformed(format!("arrival {}: bad time {}", a.id, a.t)));
+        }
+        if a.s == 0 || a.o == 0 {
+            return Err(malformed(format!(
+                "arrival {}: lengths must be positive (s = {}, o = {})",
+                a.id, a.s, a.o
+            )));
+        }
+        if a.s + a.o > meta.m {
+            return Err(malformed(format!(
+                "arrival {}: peak {} exceeds the recorded budget M = {}",
+                a.id,
+                a.s + a.o,
+                meta.m
+            )));
+        }
+        if a.pred == 0 || a.pred > meta.m - a.s {
+            return Err(malformed(format!(
+                "arrival {}: prediction {} outside [1, M − s] = [1, {}]",
+                a.id,
+                a.pred,
+                meta.m - a.s
+            )));
+        }
+        if a.class >= n_classes {
+            return Err(malformed(format!(
+                "arrival {}: class {} outside the {}-class table",
+                a.id, a.class, n_classes
+            )));
+        }
+        if a.worker >= meta.workers {
+            return Err(malformed(format!(
+                "arrival {}: worker {} outside the {}-worker fleet",
+                a.id, a.worker, meta.workers
+            )));
+        }
+        requests.push(Request::new(a.id, a.t, a.s, a.o).with_class(a.class));
+        preds.push(a.pred);
+        routing.push(a.worker);
+    }
+    let inst = Instance::new(meta.m, requests).with_classes(meta.classes.clone());
+    Ok(ReplaySetup {
+        inst,
+        preds,
+        routing,
+    })
+}
+
+/// Position-wise event-stream comparison; the first mismatch (including
+/// a length mismatch) becomes a [`TraceDivergence`].
+pub(crate) fn diff_events(
+    expected: &[TraceEvent],
+    got: &[TraceEvent],
+) -> Result<(), ReplayError> {
+    for i in 0..expected.len().max(got.len()) {
+        let e = expected.get(i);
+        let g = got.get(i);
+        if e != g {
+            return Err(ReplayError::Divergence(TraceDivergence {
+                index: i,
+                expected: e.cloned(),
+                got: g.cloned(),
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// Replay a single-worker trace through [`crate::sim::engine`]. Sim
+/// traces are additionally bit-verified: the regenerated event stream
+/// must equal the recording exactly.
+pub fn replay_sim(trace: &Trace, perf: &dyn PerfModel) -> Result<SimOutcome, ReplayError> {
+    let meta = &trace.meta;
+    if meta.workers != 1 || meta.router.is_some() {
+        return Err(malformed(format!(
+            "trace records a {}-worker fleet (router {:?}); use replay_fleet",
+            meta.workers, meta.router
+        )));
+    }
+    let setup = reconstruct(trace)?;
+    let mut sched = by_name_classed(&meta.algo, &meta.classes)
+        .map_err(|e| malformed(format!("unknown scheduler '{}': {e}", meta.algo)))?;
+    let sink = TraceSink::new();
+    let out = run_with_preds(
+        &setup.inst,
+        sched.as_mut(),
+        &setup.preds,
+        perf,
+        meta.seed,
+        meta.sim_config(),
+        Some(sink.clone()),
+    )?;
+    if meta.kind == TraceKind::Sim {
+        diff_events(&trace.events, &sink.take())?;
+    }
+    Ok(out)
+}
+
+/// Replay a fleet trace through [`crate::sim::cluster`].
+///
+/// Sim traces rebuild the recorded router spec — the seed re-derives
+/// every pick, and the event diff verifies the recorded `route` events
+/// along with everything else. Serve traces instead feed the recorded
+/// picks through a [`ReplayRouter`], preserving the live run's placement
+/// decisions verbatim.
+pub fn replay_fleet(trace: &Trace, perf: &dyn PerfModel) -> Result<FleetOutcome, ReplayError> {
+    let meta = &trace.meta;
+    let Some(router_spec) = &meta.router else {
+        return Err(malformed(
+            "trace records a single-worker run (no router); use replay_sim".to_string(),
+        ));
+    };
+    let setup = reconstruct(trace)?;
+    let mut scheds: Vec<Box<dyn Scheduler>> = (0..meta.workers)
+        .map(|_| by_name_classed(&meta.algo, &meta.classes))
+        .collect::<crate::util::error::Result<_>>()
+        .map_err(|e| malformed(format!("unknown scheduler '{}': {e}", meta.algo)))?;
+    match meta.kind {
+        TraceKind::Sim => {
+            let mut router = router_by_name_classed(router_spec, &meta.classes)
+                .map_err(|e| malformed(format!("unknown router '{router_spec}': {e}")))?;
+            let sink = TraceSink::new();
+            let out = run_fleet_inner(
+                &setup.inst,
+                &mut scheds,
+                router.as_mut(),
+                meta.m,
+                &setup.preds,
+                perf,
+                meta.seed,
+                meta.sim_config(),
+                Some(sink.clone()),
+            )?;
+            diff_events(&trace.events, &sink.take())?;
+            Ok(out)
+        }
+        TraceKind::Serve => {
+            let mut router = ReplayRouter {
+                picks: setup.routing.clone(),
+            };
+            let out = run_fleet_inner(
+                &setup.inst,
+                &mut scheds,
+                &mut router,
+                meta.m,
+                &setup.preds,
+                perf,
+                meta.seed,
+                meta.sim_config(),
+                None,
+            )?;
+            Ok(out)
+        }
+    }
+}
+
+/// A router that replays recorded placement decisions: request `id`
+/// goes to `picks[id]`. Falls back to the first live worker when the
+/// recorded one is absent from the view (sim round-caps can stop a
+/// worker at a point the live run never reached).
+struct ReplayRouter {
+    picks: Vec<usize>,
+}
+
+impl Router for ReplayRouter {
+    fn name(&self) -> String {
+        "replay".into()
+    }
+
+    fn route(&mut self, req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        let want = self.picks.get(req.id).copied().unwrap_or(0);
+        if loads.iter().any(|l| l.worker == want) {
+            want
+        } else {
+            loads.first().expect("loads is non-empty").worker
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Differential test for the record/replay subsystem: a trace recorded
+//! from any engine run must (a) survive the text serialization
+//! round-trip exactly and (b) replay to a **bit-identical**
+//! `SimOutcome` / `FleetOutcome` — same admit order, same per-request
+//! records, same memory/overflow/eviction counters and series, same
+//! round count — over the same instance corpus as
+//! `tests/incremental_diff.rs`, on both the incremental and snapshot
+//! engine paths. Tampered traces must fail with the first diverging
+//! event, and the committed golden traces under `golden/` must keep
+//! replaying clean (CI diffs them against fresh recordings).
+
+use kvsched::core::{ClassSet, Instance, Request};
+use kvsched::metrics::SimOutcome;
+use kvsched::perf::UnitTime;
+use kvsched::predictor::Predictor;
+use kvsched::sim::SimConfig;
+use kvsched::trace::{
+    record_fleet, record_sim, replay_fleet, replay_sim, ReplayError, Trace, TraceEvent,
+};
+use kvsched::util::prop::{forall_cases, usize_in};
+use kvsched::util::rng::Rng;
+use kvsched::workload::{synthetic, ClassMixGen};
+use std::path::PathBuf;
+
+/// Incremental implementations plus snapshot-only baselines — same mix
+/// as the cluster_reduction corpus.
+const SPECS: [&str; 4] = [
+    "mcsf",
+    "mc-benchmark",
+    "protect:alpha=0.1,beta=0.5",
+    "fcfs:threshold=0.9",
+];
+
+fn cfg(incremental: bool) -> SimConfig {
+    SimConfig {
+        // Bounded caps so clearing livelocks terminate quickly; record
+        // and replay share the caps, so truncated runs must match too.
+        max_rounds: 10_000,
+        stall_rounds: 1_500,
+        record_series: true,
+        incremental,
+    }
+}
+
+fn assert_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.algo, b.algo, "{ctx}: algo");
+    assert_eq!(a.assigned, b.assigned, "{ctx}: assigned");
+    assert_eq!(a.finished, b.finished, "{ctx}: finished");
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.peak_mem, b.peak_mem, "{ctx}: peak_mem");
+    assert_eq!(a.overflow_events, b.overflow_events, "{ctx}: overflows");
+    assert_eq!(a.evicted_requests, b.evicted_requests, "{ctx}: evictions");
+    assert_eq!(a.per_request, b.per_request, "{ctx}: per-request records");
+    assert_eq!(a.mem_series, b.mem_series, "{ctx}: memory series");
+    assert_eq!(a.tokens_series, b.tokens_series, "{ctx}: token series");
+    assert_eq!(
+        a.total_latency().to_bits(),
+        b.total_latency().to_bits(),
+        "{ctx}: total latency bits"
+    );
+}
+
+/// Record on both engine paths, replay, and push the trace through the
+/// text format once — the replayed outcome must match bit-for-bit in
+/// every combination.
+fn check_roundtrip(inst: &Instance, case: &str) -> Result<(), String> {
+    for spec in SPECS {
+        for (pname, pred) in [
+            ("exact", Predictor::exact()),
+            ("noisy", Predictor::uniform_noise(0.5, 11)),
+        ] {
+            for inc in [true, false] {
+                let ctx = format!("{case} spec={spec} pred={pname} inc={inc}");
+                let (out, trace) = record_sim(inst, spec, &pred, &UnitTime, "unit", 9, cfg(inc))
+                    .map_err(|e| format!("{ctx}: record failed: {e:#}"))?;
+                let replayed = replay_sim(&trace, &UnitTime)
+                    .map_err(|e| format!("{ctx}: replay failed: {e}"))?;
+                assert_identical(&out, &replayed, &ctx);
+                let reparsed = Trace::from_text(&trace.to_text())
+                    .map_err(|e| format!("{ctx}: reparse failed: {e:#}"))?;
+                assert_eq!(trace, reparsed, "{ctx}: text round-trip must be exact");
+                let replayed2 = replay_sim(&reparsed, &UnitTime)
+                    .map_err(|e| format!("{ctx}: reparsed replay failed: {e}"))?;
+                assert_identical(&out, &replayed2, &ctx);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// 60 fully random small instances via the in-repo property framework.
+#[test]
+fn record_replay_roundtrips_on_random_instances() {
+    forall_cases(0x7E1A7, 60, usize_in(0, u32::MAX as usize), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let m = rng.i64_range(8, 50) as u64;
+        let n = rng.usize_range(1, 30);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let s = rng.i64_range(1, 5) as u64;
+                let o = rng.i64_range(1, (m - s).min(14) as i64) as u64;
+                let a = rng.i64_range(0, 8) as f64;
+                Request::new(i, a, s, o)
+            })
+            .collect();
+        check_roundtrip(&Instance::new(m, reqs), &format!("seed={seed:#x}"))
+    });
+}
+
+/// Instances from the paper's §5.1 synthetic arrival models.
+#[test]
+fn record_replay_roundtrips_on_paper_arrival_models() {
+    let mut rng = Rng::new(0x7A0E);
+    for trial in 0..10 {
+        let inst = synthetic::arrival_model_1(&mut rng);
+        check_roundtrip(&inst, &format!("model1 trial={trial}")).unwrap();
+    }
+    for trial in 0..10 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        check_roundtrip(&inst, &format!("model2 trial={trial}")).unwrap();
+    }
+}
+
+/// The Thm-4.1 adversarial construction: long-request head-of-line
+/// pressure with a burst release.
+#[test]
+fn record_replay_roundtrips_on_adversarial_instances() {
+    for m in [16u64, 64] {
+        let inst = synthetic::adversarial_thm41(m, 0);
+        check_roundtrip(&inst, &format!("thm41 m={m}")).unwrap();
+    }
+}
+
+/// A 1-worker fleet trace is the single-worker trace plus `route`
+/// events, and its replay reduces to the single-worker outcome — the
+/// trace-level form of `tests/cluster_reduction.rs`.
+#[test]
+fn one_worker_fleet_trace_reduces_to_single_worker_trace() {
+    let mut rng = Rng::new(0x7A11);
+    for trial in 0..4 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let (base, strace) = record_sim(
+            &inst,
+            "mcsf",
+            &Predictor::exact(),
+            &UnitTime,
+            "unit",
+            9,
+            cfg(true),
+        )
+        .unwrap();
+        for router in ["rr", "po2"] {
+            let ctx = format!("trial={trial} router={router}");
+            let (fout, ftrace) = record_fleet(
+                &inst,
+                "mcsf",
+                router,
+                1,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                "unit",
+                9,
+                cfg(true),
+            )
+            .unwrap();
+            assert_identical(&base, &fout.per_worker[0], &ctx);
+            let stripped: Vec<TraceEvent> = ftrace
+                .events
+                .iter()
+                .filter(|e| !matches!(e, TraceEvent::Route { .. }))
+                .cloned()
+                .collect();
+            assert_eq!(
+                strace.events, stripped,
+                "{ctx}: fleet trace minus route events must equal the single-worker trace"
+            );
+            let replayed = replay_fleet(&ftrace, &UnitTime)
+                .unwrap_or_else(|e| panic!("{ctx}: fleet replay failed: {e}"));
+            assert_identical(&base, &replayed.per_worker[0], &ctx);
+        }
+    }
+}
+
+/// Multi-worker fleet traces replay every worker bit-identically, and
+/// survive the on-disk round-trip.
+#[test]
+fn multi_worker_fleet_records_replay_bit_identically() {
+    let mut rng = Rng::new(0xFA57);
+    for trial in 0..3 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        for router in ["po2", "rr"] {
+            let ctx = format!("trial={trial} router={router}");
+            let (out, trace) = record_fleet(
+                &inst,
+                "mcsf",
+                router,
+                3,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                "unit",
+                9,
+                cfg(true),
+            )
+            .unwrap();
+            let replayed = replay_fleet(&trace, &UnitTime)
+                .unwrap_or_else(|e| panic!("{ctx}: replay failed: {e}"));
+            assert_eq!(out.assigned(), replayed.assigned(), "{ctx}: assigned");
+            for w in 0..3 {
+                assert_identical(
+                    &out.per_worker[w],
+                    &replayed.per_worker[w],
+                    &format!("{ctx} worker={w}"),
+                );
+            }
+            let path = std::env::temp_dir().join(format!("kvsched_rt_{trial}_{router}.trace"));
+            let path = path.to_str().unwrap();
+            trace.save(path).unwrap();
+            let loaded = Trace::load(path).unwrap();
+            let _ = std::fs::remove_file(path);
+            assert_eq!(trace, loaded, "{ctx}: disk round-trip");
+            let replayed2 = replay_fleet(&loaded, &UnitTime)
+                .unwrap_or_else(|e| panic!("{ctx}: loaded replay failed: {e}"));
+            assert_eq!(out.assigned(), replayed2.assigned(), "{ctx}: loaded assigned");
+        }
+    }
+}
+
+/// A tampered trace must fail with a divergence pinpointing the exact
+/// event that no longer matches.
+#[test]
+fn tampered_trace_reports_first_diverging_event() {
+    let mut rng = Rng::new(0xBAD);
+    let inst = synthetic::arrival_model_2(&mut rng);
+    let (_, mut trace) = record_sim(
+        &inst,
+        "mcsf",
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+    )
+    .unwrap();
+    let pos = trace
+        .events
+        .iter()
+        .rposition(|e| matches!(e, TraceEvent::Complete { .. }))
+        .expect("a finished run records completions");
+    if let TraceEvent::Complete { round, .. } = &mut trace.events[pos] {
+        *round += 1;
+    }
+    match replay_sim(&trace, &UnitTime) {
+        Err(ReplayError::Divergence(d)) => {
+            assert_eq!(d.index, pos, "divergence must point at the tampered event");
+            assert!(format!("{d}").contains("diverges"), "diagnostic: {d}");
+        }
+        Err(other) => panic!("expected a divergence, got: {other}"),
+        Ok(_) => panic!("tampered trace must not replay clean"),
+    }
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the workspace root")
+        .join("golden")
+}
+
+/// Compare a freshly recorded trace against the committed fixture,
+/// bootstrapping the fixture when it doesn't exist yet (first run / a
+/// fresh checkout without goldens) and regenerating it under
+/// `UPDATE_GOLDEN=1`. CI follows this test with
+/// `git diff --exit-code -- golden` so a drifted committed fixture
+/// fails the build even if the bootstrap path rewrote it.
+fn check_golden(name: &str, fresh: &Trace) {
+    let dir = golden_dir();
+    let path = dir.join(name);
+    if std::env::var_os("UPDATE_GOLDEN").is_some() || !path.exists() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, fresh.to_text()).unwrap();
+    }
+    let committed = Trace::load(path.to_str().unwrap()).unwrap();
+    assert_eq!(
+        &committed, fresh,
+        "golden {name} drifted — regenerate with golden/regen.sh if the change is intended"
+    );
+}
+
+/// The golden corpus: one single-worker discrete run, one fleet×router
+/// run, one SLO class-mix run. Each must match its committed fixture
+/// byte-for-byte (via the parsed form) and replay bit-identically.
+#[test]
+fn golden_traces_replay_bit_identically() {
+    let mut rng = Rng::new(0x601D);
+
+    let inst = synthetic::arrival_model_2(&mut rng);
+    let (out, trace) = record_sim(
+        &inst,
+        "mcsf",
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+    )
+    .unwrap();
+    check_golden("single_mcsf.trace", &trace);
+    let replayed = replay_sim(&trace, &UnitTime).unwrap();
+    assert_identical(&out, &replayed, "golden single_mcsf");
+
+    let inst = synthetic::arrival_model_2(&mut rng);
+    let (fout, ftrace) = record_fleet(
+        &inst,
+        "mcsf",
+        "po2",
+        3,
+        None,
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+    )
+    .unwrap();
+    check_golden("fleet_po2.trace", &ftrace);
+    let freplayed = replay_fleet(&ftrace, &UnitTime).unwrap();
+    for w in 0..3 {
+        assert_identical(
+            &fout.per_worker[w],
+            &freplayed.per_worker[w],
+            &format!("golden fleet_po2 worker={w}"),
+        );
+    }
+
+    let classes = ClassSet::parse("interactive:0.7,batch:0.3").unwrap();
+    let inst = ClassMixGen::new(classes, 200).instance(40, 10.0, 200, &mut rng);
+    let (sout, strace) = record_sim(
+        &inst,
+        "priority",
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+    )
+    .unwrap();
+    check_golden("slo_priority.trace", &strace);
+    let sreplayed = replay_sim(&strace, &UnitTime).unwrap();
+    assert_identical(&sout, &sreplayed, "golden slo_priority");
+}
