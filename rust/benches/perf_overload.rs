@@ -1,0 +1,179 @@
+//! Perf: overload survival. Sweeps flash-crowd spike multiplier ×
+//! admission policy on the continuous Llama clock and records, per
+//! cell, the stability verdict, peak/final queue depth, time to
+//! recover, shed fractions (overall and interactive), goodput, and
+//! wall-clock throughput of the simulator itself. Results land in the
+//! repo-root baseline ledger `BENCH_overload.json`
+//! (EXPERIMENTS.md §Overload).
+//!
+//! The two headline comparisons the ledger tracks:
+//! * survival — at spike multipliers past capacity, both admission
+//!   policies must stay `Stable` where `none` diverges or piles up
+//!   unbounded queues;
+//! * protection — queue-threshold's interactive goodput must dominate
+//!   `none`'s on every overloaded row (class-aware shedding spends the
+//!   drop budget on background, not chat).
+
+use kvsched::bench::{fmt, Table};
+use kvsched::metrics::stability::analyze_outcome;
+use kvsched::perf::Llama70bA100x2;
+use kvsched::prelude::*;
+use kvsched::sim::continuous::PAPER_M;
+use kvsched::sim::engine::run_flow;
+use kvsched::sim::SimConfig;
+use kvsched::util::cli::Args;
+use kvsched::util::json::Json;
+use kvsched::workload::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
+use kvsched::workload::overload::{capacity_per_sec, OverloadGen, RateProfile, PRESET_CLASSES};
+use std::time::Instant;
+
+const MULTS: [f64; 4] = [1.0, 2.0, 5.0, 10.0];
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.usize_or("iters", 3).max(1);
+    let n = args.usize_or("n", 400);
+    let m = args.u64_or("m", PAPER_M);
+    let seed = args.u64_or("seed", 1);
+
+    let perf = Llama70bA100x2::default();
+    let cap = capacity_per_sec(m, &perf, PROMPT_MEAN, OUTPUT_MEAN);
+    let base = 0.6 * cap;
+    // Token-bucket refill matched to capacity in admission-cost units
+    // (cost = s + õ + 1 per request).
+    let tb_rate = cap * (PROMPT_MEAN + OUTPUT_MEAN + 1.0);
+    let admissions = [
+        "none".to_string(),
+        format!("token-bucket:rate={tb_rate:.0}"),
+        "queue-threshold:threshold=1".to_string(),
+    ];
+    let classes = ClassSet::parse(PRESET_CLASSES).expect("preset classes parse");
+    let interactive = 0usize;
+    assert_eq!(classes.name(interactive), "interactive");
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut table = Table::new(
+        &format!(
+            "overload survival: flash-crowd mult × admission, MC-SF, llama, cap={cap:.1}/s, n={n}"
+        ),
+        &[
+            "mult",
+            "admission",
+            "verdict",
+            "terminated",
+            "peak_queue",
+            "recover_s",
+            "shed_frac",
+            "shed_interactive",
+            "goodput",
+            "goodput_interactive",
+            "rounds_per_sec",
+        ],
+    );
+
+    for mult in MULTS {
+        // One trace per spike size, shared by every admission policy, so
+        // rows within a mult compare the identical arrival stream.
+        let t0 = n as f64 / base;
+        let profile = RateProfile::Flash {
+            base,
+            mult,
+            start: 0.3 * t0,
+            duration: 0.1 * t0,
+        };
+        let gen = OverloadGen::new(classes.clone(), profile, m);
+        let inst = gen.instance(n, m, &mut Rng::new(seed));
+        for admission in &admissions {
+            let spec = FlowSpec::new(admission);
+            let mut best_wall = f64::INFINITY;
+            let mut kept = None;
+            for _ in 0..iters {
+                let mut flow = FlowControl::from_spec(&spec, &inst.classes, seed)
+                    .expect("admission spec parses");
+                let mut sched = by_name("mcsf").expect("mcsf parses");
+                let t = Instant::now();
+                let out = run_flow(
+                    &inst,
+                    sched.as_mut(),
+                    &Predictor::exact(),
+                    &perf,
+                    seed,
+                    SimConfig::default(),
+                    &mut flow,
+                )
+                .expect("overload simulation");
+                best_wall = best_wall.min(t.elapsed().as_secs_f64());
+                kept = Some((out, flow.stats));
+            }
+            let (out, stats) = kept.expect("at least one iteration");
+            let report = analyze_outcome(&out);
+            let rounds_per_sec = out.rounds as f64 / best_wall.max(1e-12);
+            table.row(&[
+                fmt(mult),
+                stats_name(admission),
+                report.verdict.as_str().to_string(),
+                report.terminated.as_str().to_string(),
+                report.peak_queue.to_string(),
+                report
+                    .time_to_recover
+                    .map(fmt)
+                    .unwrap_or_else(|| "-".to_string()),
+                fmt(stats.shed_fraction()),
+                fmt(stats.class_shed_fraction(interactive)),
+                fmt(out.goodput()),
+                fmt(out.class_goodput(interactive)),
+                fmt(rounds_per_sec),
+            ]);
+            rows.push(
+                Json::obj()
+                    .set("mult", mult)
+                    .set("admission", stats_name(admission))
+                    .set("verdict", report.verdict.as_str())
+                    .set("terminated", report.terminated.as_str())
+                    .set("peak_queue", report.peak_queue)
+                    .set("final_queue", report.final_queue)
+                    .set(
+                        "time_to_recover_s",
+                        report.time_to_recover.map(Json::from).unwrap_or(Json::Null),
+                    )
+                    .set("offered", stats.offered)
+                    .set("admitted", stats.admitted)
+                    .set("shed", stats.shed())
+                    .set("shed_fraction", stats.shed_fraction())
+                    .set(
+                        "shed_interactive",
+                        stats.class_shed_fraction(interactive),
+                    )
+                    .set("retries", stats.retries)
+                    .set("goodput", out.goodput())
+                    .set("goodput_interactive", out.class_goodput(interactive))
+                    .set("rounds", out.rounds)
+                    .set("rounds_per_sec", rounds_per_sec)
+                    .set("wall_s", best_wall)
+                    .set("finished", out.finished),
+            );
+        }
+    }
+    table.print();
+    table.save_json("perf_overload");
+
+    // Baseline ledger at the repo root (EXPERIMENTS.md §Overload).
+    let doc = Json::obj()
+        .set("bench", "perf_overload")
+        .set("algo", "MC-SF")
+        .set("workload", "overload-flash-crowd")
+        .set("perf", "llama")
+        .set("m", m)
+        .set("n", n)
+        .set("capacity_req_per_s", cap)
+        .set("base_lambda", base)
+        .set("iters", iters)
+        .set("seed", seed)
+        .set("rows", Json::Arr(rows));
+    kvsched::bench::save_root_json("BENCH_overload.json", &doc);
+}
+
+/// Short display name for an admission spec (strip the option tail).
+fn stats_name(spec: &str) -> String {
+    spec.split(':').next().unwrap_or(spec).to_string()
+}

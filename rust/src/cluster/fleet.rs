@@ -13,7 +13,8 @@ use crate::metrics::FleetOutcome;
 use crate::perf::PerfModel;
 use crate::predictor::Predictor;
 use crate::sched::{by_name_classed, Scheduler};
-use crate::sim::cluster::run_fleet;
+use crate::flow::FlowControl;
+use crate::sim::cluster::{run_fleet, run_fleet_flow};
 use crate::sim::{SimConfig, SimError};
 use crate::util::error::Result;
 
@@ -114,6 +115,32 @@ impl Fleet {
             perf,
             seed,
             cfg,
+        )
+    }
+
+    /// [`Fleet::try_simulate`] with a flow-control layer ahead of the
+    /// router: every submission (original or retry) passes through
+    /// `flow` before it can be routed, and rejected requests back off or
+    /// shed without ever reaching a worker.
+    pub fn try_simulate_flow(
+        &mut self,
+        inst: &Instance,
+        predictor: &Predictor,
+        perf: &dyn PerfModel,
+        seed: u64,
+        cfg: SimConfig,
+        flow: &mut FlowControl,
+    ) -> std::result::Result<FleetOutcome, SimError> {
+        run_fleet_flow(
+            inst,
+            &mut self.scheds,
+            self.router.as_mut(),
+            self.spec.worker_m,
+            predictor,
+            perf,
+            seed,
+            cfg,
+            flow,
         )
     }
 }

@@ -112,6 +112,30 @@ impl FleetCoordinator {
         self.workers.len()
     }
 
+    /// Seconds since the fleet started — the live clock recorded
+    /// arrivals and flow-control decisions are timed against.
+    pub fn elapsed(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Fleet-wide load for admission control: summed queued token demand
+    /// and KV budget across every worker's gauge. Like the router view
+    /// this is eventually consistent (each gauge lags its worker by at
+    /// most one serving round) — exactly the information a production
+    /// admission layer has.
+    pub fn flow_load(&self) -> crate::flow::FlowLoad {
+        let mut queued_demand = 0u64;
+        let mut kv_budget = 0u64;
+        for g in &self.gauges {
+            queued_demand += g.queued_demand.load(Ordering::Relaxed);
+            kv_budget += g.kv_budget.load(Ordering::Relaxed);
+        }
+        crate::flow::FlowLoad {
+            queued_demand,
+            kv_budget,
+        }
+    }
+
     /// Route `req` and submit it to the chosen worker. Returns the
     /// worker index (for observability) and the reply channel.
     pub fn submit(&self, req: ServeRequest) -> (usize, mpsc::Receiver<ServeReply>) {

@@ -1,0 +1,801 @@
+//! Flow control ahead of the engines: admission policies, class-aware
+//! load shedding, and the retry-with-backoff client model.
+//!
+//! Under sustained overload (λ > capacity) the engines' queues diverge —
+//! every arrival is eventually admitted, so backlog grows without bound
+//! and tail latency with it. This module puts an admission layer *ahead*
+//! of both simulation engines and the live coordinator, following the
+//! flow-controlled-scheduling line (PAPERS.md): a request is either
+//! **admitted** into the (routed) worker queue, or **rejected**, in
+//! which case the modeled client retries after exponential backoff with
+//! jitter, up to a retry budget — after which the request is **shed**
+//! (permanently dropped).
+//!
+//! Class-aware shedding: with [`ShedMode::Priority`] (the default) each
+//! admission policy reserves headroom per priority rank (from
+//! [`ClassSet::ranks`], 0 = most urgent), so `background` traffic is
+//! rejected *before* `interactive` feels any pressure. With
+//! [`ShedMode::Uniform`] every class competes for the same headroom —
+//! the rank-blind ablation baseline.
+//!
+//! ## Determinism & replay
+//!
+//! Backoff delays come from a dedicated RNG stream ([`FLOW_STREAM`]) and
+//! are a *pure function* of `(seed, request id, attempt)` — independent
+//! of call order, engine interleaving, or how many other requests were
+//! rejected first. Admission decisions depend only on the decision time,
+//! the request's token cost/rank, and the (deterministic) queue state.
+//! A recorded overload run therefore replays bit-exactly: the replayer
+//! rebuilds a [`FlowControl`] from the trace meta's `admission` /
+//! `shed` / `retry` specs and regenerates the identical
+//! `Reject`/`Retry`/`Shed` event stream (`tests/trace_replay.rs`).
+//!
+//! With no flow control configured (the default everywhere), none of
+//! this code runs: no RNG draws, no events, no behavior change — the
+//! flow-off reduction pinned by `tests/flow_reduction.rs`.
+
+use crate::core::{ClassId, ClassSet, RequestId};
+use crate::util::error::{anyhow, bail, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::fmt;
+
+/// RNG stream tag for flow-control randomness (backoff jitter).
+/// Distinct from every worker's scheduler stream (default stream of
+/// `seed + w`) and the router stream, so admission never perturbs
+/// scheduling or routing randomness.
+pub const FLOW_STREAM: u64 = 0xa076_1d64_78bd_642f;
+
+/// Queue state an admission policy decides against: the aggregate
+/// queued token demand (Σ s + õ + 1 over undispatched requests) and the
+/// aggregate KV budget of the live workers it would be queued behind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowLoad {
+    /// Queued token demand across live workers.
+    pub queued_demand: u64,
+    /// Total KV budget across live workers.
+    pub kv_budget: u64,
+}
+
+/// An admission policy's decision for one submission attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Let the request through to routing / the worker queue.
+    Admit,
+    /// Refuse this attempt (the client may retry).
+    Reject,
+}
+
+/// An admission policy: decides per submission attempt whether a
+/// request enters the system. `rank` is the request's priority rank
+/// (0 = most urgent; see [`ClassSet::ranks`]) — policies reserve
+/// headroom for lower ranks so shedding is class-aware.
+pub trait Admission: Send {
+    fn name(&self) -> String;
+
+    /// Decide on a request of `cost` tokens (s + õ + 1) and priority
+    /// `rank` arriving at time `t` against the current `load`.
+    /// Decision times are non-decreasing within a run.
+    fn decide(&mut self, t: f64, cost: u64, rank: u64, load: &FlowLoad) -> Verdict;
+}
+
+/// Headroom fraction reserved from classes of the given rank:
+/// rank 0 keeps the full capacity, rank 1 only the top half, rank 2 the
+/// top quarter, … — so under pressure the lowest-priority class is
+/// starved (and shed) first.
+fn reserve_frac(rank: u64) -> f64 {
+    1.0 - 0.5f64.powi(rank.min(60) as i32)
+}
+
+/// Token-bucket admission: the bucket holds up to `burst` tokens and
+/// refills at `rate` tokens/sec; admitting a request drains its token
+/// cost. Rank `r` may only draw from the top `2^-r` fraction of the
+/// bucket, so background traffic sheds first as the bucket drains.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    level: f64,
+    last: f64,
+}
+
+impl TokenBucket {
+    pub fn new(rate: f64, burst: f64) -> TokenBucket {
+        assert!(rate > 0.0 && burst > 0.0, "token bucket needs rate, burst > 0");
+        TokenBucket {
+            rate,
+            burst,
+            level: burst,
+            last: 0.0,
+        }
+    }
+}
+
+impl Admission for TokenBucket {
+    fn name(&self) -> String {
+        format!("token-bucket:rate={},burst={}", self.rate, self.burst)
+    }
+
+    fn decide(&mut self, t: f64, cost: u64, rank: u64, _load: &FlowLoad) -> Verdict {
+        let dt = (t - self.last).max(0.0);
+        self.level = (self.level + dt * self.rate).min(self.burst);
+        self.last = self.last.max(t);
+        let reserve = self.burst * reserve_frac(rank);
+        if self.level - cost as f64 >= reserve {
+            self.level -= cost as f64;
+            Verdict::Admit
+        } else {
+            Verdict::Reject
+        }
+    }
+}
+
+/// Queue-threshold admission: admit while the queued token demand
+/// (including this request) stays under `threshold ×` the fleet KV
+/// budget, scaled down by `2^-rank` — rank 0 may fill the whole
+/// threshold, rank 1 only half of it, and so on. Stateless: the bound
+/// on the queue is immediate (the paper's bounded-queue criterion by
+/// construction).
+#[derive(Debug, Clone)]
+pub struct QueueThreshold {
+    threshold: f64,
+}
+
+impl QueueThreshold {
+    pub fn new(threshold: f64) -> QueueThreshold {
+        assert!(threshold > 0.0, "queue threshold must be > 0");
+        QueueThreshold { threshold }
+    }
+}
+
+impl Admission for QueueThreshold {
+    fn name(&self) -> String {
+        format!("queue-threshold:threshold={}", self.threshold)
+    }
+
+    fn decide(&mut self, _t: f64, cost: u64, rank: u64, load: &FlowLoad) -> Verdict {
+        let cap = self.threshold * load.kv_budget as f64 * (1.0 - reserve_frac(rank));
+        if (load.queued_demand + cost) as f64 <= cap {
+            Verdict::Admit
+        } else {
+            Verdict::Reject
+        }
+    }
+}
+
+/// Admit everything (the flow layer as a pass-through: stats and events
+/// still flow, decisions never reject). Useful as the instrumented
+/// baseline in overload sweeps.
+#[derive(Debug, Clone, Default)]
+pub struct AdmitAll;
+
+impl Admission for AdmitAll {
+    fn name(&self) -> String {
+        "none".into()
+    }
+
+    fn decide(&mut self, _t: f64, _cost: u64, _rank: u64, _load: &FlowLoad) -> Verdict {
+        Verdict::Admit
+    }
+}
+
+fn parse_kv(opts: &str) -> Result<Vec<(String, f64)>> {
+    let mut kv = Vec::new();
+    for part in opts.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (k, v) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key=value, got '{part}'"))?;
+        let v: f64 = v
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("'{k}': '{v}' is not a number"))?;
+        kv.push((k.trim().to_string(), v));
+    }
+    Ok(kv)
+}
+
+fn lookup(kv: &[(String, f64)], key: &str, default: f64) -> f64 {
+    kv.iter()
+        .find(|(k, _)| k == key)
+        .map(|&(_, v)| v)
+        .unwrap_or(default)
+}
+
+/// Build an admission policy from a spec string (the CLI `--admission`
+/// grammar, mirroring [`crate::sched::by_name`]):
+///
+/// ```text
+/// none
+/// token-bucket[:rate=2000,burst=4000]      tokens/sec, tokens
+/// queue-threshold[:threshold=2]            × fleet KV budget
+/// ```
+pub fn admission_by_name(spec: &str) -> Result<Box<dyn Admission>> {
+    let (name, opts) = match spec.split_once(':') {
+        Some((n, o)) => (n.trim(), o),
+        None => (spec.trim(), ""),
+    };
+    let kv = parse_kv(opts)?;
+    for (k, _) in &kv {
+        let known = match name {
+            "token-bucket" | "tb" => k == "rate" || k == "burst",
+            "queue-threshold" | "qt" => k == "threshold",
+            _ => false,
+        };
+        if !known {
+            bail!("admission '{name}': unknown option '{k}'");
+        }
+    }
+    match name {
+        "none" | "off" => Ok(Box::new(AdmitAll)),
+        "token-bucket" | "tb" => {
+            let rate = lookup(&kv, "rate", 2000.0);
+            let burst = lookup(&kv, "burst", 2.0 * rate);
+            if !(rate > 0.0 && burst > 0.0) {
+                bail!("token-bucket: rate and burst must be > 0");
+            }
+            Ok(Box::new(TokenBucket::new(rate, burst)))
+        }
+        "queue-threshold" | "qt" => {
+            let threshold = lookup(&kv, "threshold", 2.0);
+            if threshold <= 0.0 {
+                bail!("queue-threshold: threshold must be > 0");
+            }
+            Ok(Box::new(QueueThreshold::new(threshold)))
+        }
+        other => Err(anyhow!(
+            "unknown admission policy '{other}' (none | token-bucket | queue-threshold)"
+        )),
+    }
+}
+
+/// How admission headroom treats priority ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedMode {
+    /// Rank-scaled headroom: background is rejected before interactive
+    /// (honors the class table's priority weights).
+    #[default]
+    Priority,
+    /// Rank-blind: every class competes for the same headroom.
+    Uniform,
+}
+
+impl ShedMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ShedMode::Priority => "priority",
+            ShedMode::Uniform => "uniform",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ShedMode> {
+        match s {
+            "priority" => Ok(ShedMode::Priority),
+            "uniform" => Ok(ShedMode::Uniform),
+            other => Err(anyhow!("unknown shed mode '{other}' (priority | uniform)")),
+        }
+    }
+}
+
+impl fmt::Display for ShedMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Client retry model: a rejected attempt `k` re-arrives after
+/// `base · mult^(k−1)` seconds scaled by a uniform jitter in
+/// `[1 − jitter, 1 + jitter]`, up to `max_retries` retries — then the
+/// request is shed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// First-retry backoff in seconds.
+    pub base: f64,
+    /// Exponential growth factor per attempt.
+    pub mult: f64,
+    /// Jitter half-width as a fraction of the backoff (0 = none, < 1).
+    pub jitter: f64,
+    /// Retries before the request is shed.
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            base: 0.5,
+            mult: 2.0,
+            jitter: 0.5,
+            max_retries: 3,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Parse `base=0.5,mult=2,jitter=0.5,max=3` (all keys optional, the
+    /// CLI `--retry` grammar).
+    pub fn parse(spec: &str) -> Result<RetryPolicy> {
+        let kv = parse_kv(spec)?;
+        for (k, _) in &kv {
+            if !matches!(k.as_str(), "base" | "mult" | "jitter" | "max") {
+                bail!("retry policy: unknown option '{k}'");
+            }
+        }
+        let d = RetryPolicy::default();
+        let p = RetryPolicy {
+            base: lookup(&kv, "base", d.base),
+            mult: lookup(&kv, "mult", d.mult),
+            jitter: lookup(&kv, "jitter", d.jitter),
+            max_retries: lookup(&kv, "max", d.max_retries as f64) as u32,
+        };
+        if !(p.base > 0.0 && p.mult >= 1.0 && (0.0..1.0).contains(&p.jitter)) {
+            bail!("retry policy needs base > 0, mult ≥ 1, jitter ∈ [0, 1)");
+        }
+        Ok(p)
+    }
+
+    /// Canonical spec string ([`Self::parse`] round-trips it).
+    pub fn spec_string(&self) -> String {
+        format!(
+            "base={},mult={},jitter={},max={}",
+            self.base, self.mult, self.jitter, self.max_retries
+        )
+    }
+}
+
+/// Backoff delay before re-submitting after the rejection of submission
+/// attempt `attempt` (1-based). A **pure function** of
+/// `(seed, id, attempt)`: the jitter draw comes from a fresh keyed RNG
+/// on [`FLOW_STREAM`], so the delay is independent of how many other
+/// requests were rejected, in what order, or on which engine — the
+/// backoff-determinism property `tests/flow_reduction.rs` pins.
+pub fn backoff_delay(policy: &RetryPolicy, seed: u64, id: RequestId, attempt: u32) -> f64 {
+    let base = policy.base * policy.mult.powi(attempt.saturating_sub(1).min(60) as i32);
+    if policy.jitter <= 0.0 {
+        return base;
+    }
+    let key = seed ^ (id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let stream = FLOW_STREAM
+        .wrapping_add((id as u64) << 8)
+        .wrapping_add(attempt as u64);
+    let mut rng = Rng::with_stream(key, stream);
+    base * rng.f64_range(1.0 - policy.jitter, 1.0 + policy.jitter)
+}
+
+/// The full flow-control configuration as round-trippable spec strings —
+/// what the CLI flags parse into and the trace meta records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowSpec {
+    /// Admission policy ([`admission_by_name`] grammar).
+    pub admission: String,
+    /// Rank handling for shedding.
+    pub shed: ShedMode,
+    /// Client retry/backoff model.
+    pub retry: RetryPolicy,
+}
+
+impl FlowSpec {
+    pub fn new(admission: &str) -> FlowSpec {
+        FlowSpec {
+            admission: admission.to_string(),
+            shed: ShedMode::default(),
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// Counters the flow layer accumulates over a run; attached to
+/// [`crate::metrics::SimOutcome`] / [`crate::metrics::FleetOutcome`]
+/// whenever flow control was active.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlowStats {
+    /// Distinct requests that reached the admission layer.
+    pub offered: usize,
+    /// Requests eventually admitted (possibly after retries).
+    pub admitted: usize,
+    /// Rejection decisions (counts every refused attempt).
+    pub rejected: u64,
+    /// Retries scheduled.
+    pub retries: u64,
+    /// Offered requests per class.
+    pub offered_by_class: Vec<usize>,
+    /// Admitted requests per class.
+    pub admitted_by_class: Vec<usize>,
+    /// Permanently dropped requests per class (retry budget exhausted).
+    pub shed_by_class: Vec<usize>,
+}
+
+fn bump(v: &mut Vec<usize>, c: ClassId) {
+    if c >= v.len() {
+        v.resize(c + 1, 0);
+    }
+    v[c] += 1;
+}
+
+impl FlowStats {
+    /// Requests permanently dropped.
+    pub fn shed(&self) -> usize {
+        self.shed_by_class.iter().sum()
+    }
+
+    /// Fraction of offered requests that were shed.
+    pub fn shed_fraction(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / self.offered as f64
+        }
+    }
+
+    /// Shed fraction within class `c`.
+    pub fn class_shed_fraction(&self, c: ClassId) -> f64 {
+        let offered = self.offered_by_class.get(c).copied().unwrap_or(0);
+        let shed = self.shed_by_class.get(c).copied().unwrap_or(0);
+        if offered == 0 {
+            0.0
+        } else {
+            shed as f64 / offered as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("offered", self.offered)
+            .set("admitted", self.admitted)
+            .set("rejected", self.rejected)
+            .set("retries", self.retries)
+            .set("shed", self.shed())
+            .set("shed_fraction", self.shed_fraction())
+            .set(
+                "shed_by_class",
+                Json::Arr(self.shed_by_class.iter().map(|&s| Json::from(s)).collect()),
+            )
+    }
+}
+
+/// What the flow layer decided for one submission attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Deliver to routing / the worker queue.
+    Admit,
+    /// Rejected; the client re-submits attempt `attempt` at time `at`.
+    Retry { at: f64, attempt: u32 },
+    /// Rejected with the retry budget exhausted: permanently dropped.
+    Shed,
+}
+
+/// A scheduled re-submission, min-ordered by (time, id, attempt).
+#[derive(Debug, Clone, Copy)]
+struct RetryEntry {
+    at: f64,
+    id: RequestId,
+    attempt: u32,
+}
+
+impl PartialEq for RetryEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for RetryEntry {}
+
+impl PartialOrd for RetryEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RetryEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then(self.id.cmp(&other.id))
+            .then(self.attempt.cmp(&other.attempt))
+    }
+}
+
+/// The runtime state of the flow layer for one run: the admission
+/// policy, the class rank table, the retry heap, and the counters.
+/// Driven by the engine loops (`sim::engine`, `sim::cluster`) and the
+/// serve client; one instance per run.
+pub struct FlowControl {
+    admission: Box<dyn Admission>,
+    shed: ShedMode,
+    retry: RetryPolicy,
+    ranks: Vec<u64>,
+    seed: u64,
+    retries: BinaryHeap<Reverse<RetryEntry>>,
+    /// Run counters (read off into the outcome after the run).
+    pub stats: FlowStats,
+}
+
+impl fmt::Debug for FlowControl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("FlowControl")
+            .field("admission", &self.admission.name())
+            .field("shed", &self.shed)
+            .field("retry", &self.retry)
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl FlowControl {
+    /// Build from a [`FlowSpec`]; `classes` supplies the priority ranks
+    /// and `seed` keys the (pure-function) backoff jitter.
+    pub fn from_spec(spec: &FlowSpec, classes: &ClassSet, seed: u64) -> Result<FlowControl> {
+        Ok(FlowControl {
+            admission: admission_by_name(&spec.admission)?,
+            shed: spec.shed,
+            retry: spec.retry,
+            ranks: classes.ranks(),
+            seed,
+            retries: BinaryHeap::new(),
+            stats: FlowStats::default(),
+        })
+    }
+
+    /// Display name of the admission policy.
+    pub fn admission_name(&self) -> String {
+        self.admission.name()
+    }
+
+    /// Earliest scheduled re-submission: `(time, id, attempt)`.
+    pub fn next_retry(&self) -> Option<(f64, RequestId, u32)> {
+        self.retries
+            .peek()
+            .map(|Reverse(e)| (e.at, e.id, e.attempt))
+    }
+
+    /// Pop the earliest scheduled re-submission.
+    pub fn pop_retry(&mut self) -> Option<(f64, RequestId, u32)> {
+        self.retries.pop().map(|Reverse(e)| (e.at, e.id, e.attempt))
+    }
+
+    /// Whether any re-submissions are still scheduled.
+    pub fn has_retries(&self) -> bool {
+        !self.retries.is_empty()
+    }
+
+    /// Decide submission attempt `attempt` (1-based) of request `id`
+    /// (class `class`, token cost `cost = s + õ + 1`) arriving at `t`.
+    /// On `Retry` the re-submission is queued internally — the driver
+    /// later collects it via [`Self::next_retry`]/[`Self::pop_retry`].
+    pub fn on_submit(
+        &mut self,
+        t: f64,
+        id: RequestId,
+        class: ClassId,
+        cost: u64,
+        load: &FlowLoad,
+        attempt: u32,
+    ) -> Decision {
+        if attempt <= 1 {
+            self.stats.offered += 1;
+            bump(&mut self.stats.offered_by_class, class);
+        }
+        let rank = match self.shed {
+            ShedMode::Priority => self.ranks.get(class).copied().unwrap_or(0),
+            ShedMode::Uniform => 0,
+        };
+        match self.admission.decide(t, cost, rank, load) {
+            Verdict::Admit => {
+                self.stats.admitted += 1;
+                bump(&mut self.stats.admitted_by_class, class);
+                Decision::Admit
+            }
+            Verdict::Reject => {
+                self.stats.rejected += 1;
+                if attempt > self.retry.max_retries {
+                    bump(&mut self.stats.shed_by_class, class);
+                    Decision::Shed
+                } else {
+                    let at = t + backoff_delay(&self.retry, self.seed, id, attempt);
+                    self.stats.retries += 1;
+                    self.retries.push(Reverse(RetryEntry {
+                        at,
+                        id,
+                        attempt: attempt + 1,
+                    }));
+                    Decision::Retry {
+                        at,
+                        attempt: attempt + 1,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(queued: u64, budget: u64) -> FlowLoad {
+        FlowLoad {
+            queued_demand: queued,
+            kv_budget: budget,
+        }
+    }
+
+    #[test]
+    fn token_bucket_drains_and_refills() {
+        let mut tb = TokenBucket::new(10.0, 100.0);
+        // Full bucket: a 60-token request fits, a second doesn't.
+        assert_eq!(tb.decide(0.0, 60, 0, &load(0, 0)), Verdict::Admit);
+        assert_eq!(tb.decide(0.0, 60, 0, &load(0, 0)), Verdict::Reject);
+        // 5 seconds refill 50 tokens: 40 + 50 = 90 ≥ 60.
+        assert_eq!(tb.decide(5.0, 60, 0, &load(0, 0)), Verdict::Admit);
+        // Refill caps at burst.
+        assert_eq!(tb.decide(1000.0, 100, 0, &load(0, 0)), Verdict::Admit);
+        assert_eq!(tb.decide(1000.0, 1, 0, &load(0, 0)), Verdict::Reject);
+    }
+
+    #[test]
+    fn token_bucket_reserves_headroom_for_high_priority() {
+        let mut tb = TokenBucket::new(1.0, 100.0);
+        // Drain to 40 tokens.
+        assert_eq!(tb.decide(0.0, 60, 0, &load(0, 0)), Verdict::Admit);
+        // Rank 2 may only use the top quarter (level must stay ≥ 75):
+        // 40 − 10 < 75 → background is rejected…
+        assert_eq!(tb.decide(0.0, 10, 2, &load(0, 0)), Verdict::Reject);
+        // …while rank 0 still gets through at the same level.
+        assert_eq!(tb.decide(0.0, 10, 0, &load(0, 0)), Verdict::Admit);
+    }
+
+    #[test]
+    fn queue_threshold_scales_by_rank() {
+        let mut qt = QueueThreshold::new(2.0);
+        let l = load(150, 100); // cap: rank 0 → 200, rank 1 → 100, rank 2 → 50
+        assert_eq!(qt.decide(0.0, 10, 0, &l), Verdict::Admit);
+        assert_eq!(qt.decide(0.0, 10, 1, &l), Verdict::Reject);
+        let quiet = load(30, 100);
+        assert_eq!(qt.decide(0.0, 10, 1, &quiet), Verdict::Admit);
+        assert_eq!(qt.decide(0.0, 30, 2, &quiet), Verdict::Reject);
+    }
+
+    #[test]
+    fn admission_spec_factory() {
+        assert_eq!(admission_by_name("none").unwrap().name(), "none");
+        let tb = admission_by_name("token-bucket:rate=500,burst=1500").unwrap();
+        assert_eq!(tb.name(), "token-bucket:rate=500,burst=1500");
+        let qt = admission_by_name("queue-threshold").unwrap();
+        assert_eq!(qt.name(), "queue-threshold:threshold=2");
+        assert!(admission_by_name("token-bucket:rate=-1").is_err());
+        assert!(admission_by_name("token-bucket:bogus=1").is_err());
+        assert!(admission_by_name("what").is_err());
+    }
+
+    #[test]
+    fn retry_policy_spec_roundtrip() {
+        let p = RetryPolicy::parse("base=0.25,mult=3,jitter=0.1,max=5").unwrap();
+        assert_eq!(
+            p,
+            RetryPolicy {
+                base: 0.25,
+                mult: 3.0,
+                jitter: 0.1,
+                max_retries: 5
+            }
+        );
+        assert_eq!(RetryPolicy::parse(&p.spec_string()).unwrap(), p);
+        assert_eq!(RetryPolicy::parse("").unwrap(), RetryPolicy::default());
+        assert!(RetryPolicy::parse("base=0").is_err());
+        assert!(RetryPolicy::parse("nope=1").is_err());
+    }
+
+    #[test]
+    fn backoff_is_pure_and_bounded() {
+        let p = RetryPolicy::default();
+        for id in [0usize, 7, 123_456] {
+            for attempt in 1..=4u32 {
+                let a = backoff_delay(&p, 42, id, attempt);
+                let b = backoff_delay(&p, 42, id, attempt);
+                assert_eq!(a.to_bits(), b.to_bits(), "pure in (seed, id, attempt)");
+                let base = p.base * p.mult.powi(attempt as i32 - 1);
+                assert!(a >= base * (1.0 - p.jitter) && a < base * (1.0 + p.jitter));
+            }
+        }
+        // Distinct keys give distinct jitter.
+        assert_ne!(
+            backoff_delay(&p, 42, 1, 1).to_bits(),
+            backoff_delay(&p, 42, 2, 1).to_bits()
+        );
+        assert_ne!(
+            backoff_delay(&p, 42, 1, 1).to_bits(),
+            backoff_delay(&p, 43, 1, 1).to_bits()
+        );
+        // No jitter → exact exponential schedule.
+        let nj = RetryPolicy {
+            jitter: 0.0,
+            ..RetryPolicy::default()
+        };
+        assert_eq!(backoff_delay(&nj, 1, 1, 3), nj.base * 4.0);
+    }
+
+    #[test]
+    fn flow_control_retries_then_sheds() {
+        let spec = FlowSpec {
+            admission: "queue-threshold:threshold=0.1".into(),
+            shed: ShedMode::Priority,
+            retry: RetryPolicy {
+                jitter: 0.0,
+                ..RetryPolicy::default()
+            },
+        };
+        let mut fc = FlowControl::from_spec(&spec, &ClassSet::default(), 9).unwrap();
+        let l = load(1000, 100); // hopelessly over threshold
+        let d1 = fc.on_submit(0.0, 0, 0, 10, &l, 1);
+        assert_eq!(
+            d1,
+            Decision::Retry {
+                at: 0.5,
+                attempt: 2
+            }
+        );
+        assert_eq!(fc.next_retry(), Some((0.5, 0, 2)));
+        let (t2, id, a2) = fc.pop_retry().unwrap();
+        let d2 = fc.on_submit(t2, id, 0, 10, &l, a2);
+        assert_eq!(
+            d2,
+            Decision::Retry {
+                at: 0.5 + 1.0,
+                attempt: 3
+            }
+        );
+        fc.pop_retry();
+        let d3 = fc.on_submit(1.5, 0, 0, 10, &l, 3);
+        assert!(matches!(d3, Decision::Retry { attempt: 4, .. }));
+        fc.pop_retry();
+        let d4 = fc.on_submit(5.5, 0, 0, 10, &l, 4);
+        assert_eq!(d4, Decision::Shed);
+        assert_eq!(fc.stats.offered, 1);
+        assert_eq!(fc.stats.rejected, 4);
+        assert_eq!(fc.stats.retries, 3);
+        assert_eq!(fc.stats.shed(), 1);
+        assert!((fc.stats.shed_fraction() - 1.0).abs() < 1e-12);
+        assert!(!fc.has_retries());
+    }
+
+    #[test]
+    fn uniform_shed_mode_ignores_rank() {
+        let classes = ClassSet::parse("interactive:0.5,background:0.5").unwrap();
+        let spec = |shed| FlowSpec {
+            admission: "queue-threshold:threshold=2".into(),
+            shed,
+            retry: RetryPolicy::default(),
+        };
+        let l = load(150, 100);
+        // Priority mode: background (rank 1) sees half the threshold.
+        let mut pri = FlowControl::from_spec(&spec(ShedMode::Priority), &classes, 1).unwrap();
+        assert_eq!(pri.on_submit(0.0, 0, 0, 10, &l, 1), Decision::Admit);
+        assert!(matches!(pri.on_submit(0.0, 1, 1, 10, &l, 1), Decision::Retry { .. }));
+        // Uniform mode: both classes admitted at the same load.
+        let mut uni = FlowControl::from_spec(&spec(ShedMode::Uniform), &classes, 1).unwrap();
+        assert_eq!(uni.on_submit(0.0, 0, 0, 10, &l, 1), Decision::Admit);
+        assert_eq!(uni.on_submit(0.0, 1, 1, 10, &l, 1), Decision::Admit);
+    }
+
+    #[test]
+    fn retry_heap_orders_by_time_then_id() {
+        let spec = FlowSpec {
+            admission: "queue-threshold:threshold=0.1".into(),
+            shed: ShedMode::Priority,
+            retry: RetryPolicy::default(),
+        };
+        let mut fc = FlowControl::from_spec(&spec, &ClassSet::default(), 3).unwrap();
+        let l = load(1000, 100);
+        for id in [5usize, 1, 9, 3] {
+            fc.on_submit(0.0, id, 0, 10, &l, 1);
+        }
+        let mut drained = Vec::new();
+        while let Some((at, id, _)) = fc.pop_retry() {
+            drained.push((at, id));
+        }
+        for w in drained.windows(2) {
+            assert!(w[0].0 <= w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1));
+        }
+        assert_eq!(drained.len(), 4);
+    }
+}

@@ -25,6 +25,7 @@
 
 pub mod cluster;
 pub mod core;
+pub mod flow;
 pub mod metrics;
 pub mod opt;
 pub mod perf;
@@ -46,7 +47,8 @@ pub mod prelude {
         ActiveReq, ClassId, ClassSet, FleetSpec, Instance, Mem, QueuedReq, Request, RequestClass,
         RequestId, Round, SloSpec,
     };
-    pub use crate::metrics::{FleetOutcome, SimOutcome};
+    pub use crate::flow::{Admission, FlowControl, FlowSpec, FlowStats, RetryPolicy, ShedMode};
+    pub use crate::metrics::{FleetOutcome, SimOutcome, Termination};
     pub use crate::predictor::Predictor;
     pub use crate::sched::{
         by_name, by_name_classed, paper_benchmark_suite, AlphaProtection, EdfThreshold,

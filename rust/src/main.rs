@@ -14,6 +14,9 @@
 //!   kvsched simulate --trace trace.json --algo mcsf
 //!   kvsched simulate --workload lmsys --n 500 --lambda 10 --algo protect:alpha=0.25
 //!   kvsched simulate --n 800 --lambda 50 --workers 4 --router po2
+//!   kvsched simulate --preset flash-crowd --admission queue-threshold
+//!   kvsched simulate --preset sustained --admission token-bucket:rate=1500 --unit-time
+//!   kvsched suite --preset sustained --n 600 --seed 1
 //!   kvsched simulate --n 500 --lambda 30 --classes interactive:0.8,batch:0.2 --slo
 //!   kvsched simulate --n 500 --classes interactive:0.8,batch:0.2 --algo priority --slo
 //!   kvsched suite --n 300 --lambda 50 --seed 1
@@ -24,6 +27,8 @@
 //!   kvsched serve --artifacts artifacts --n 24 --workers 2 --router least-kv
 //!   kvsched serve --artifacts artifacts --n 24 --classes interactive:0.8,batch:0.2 --slo
 //!   kvsched serve --artifacts artifacts --n 24 --record served.trace.json
+//!   kvsched serve --artifacts artifacts --n 24 --admission token-bucket:rate=200
+//!   kvsched record --preset sustained --admission queue-threshold --out overload.trace.json
 //!   kvsched record --workload model2 --algo mcsf --out run.trace.json
 //!   kvsched record --n 400 --workers 3 --router po2 --out fleet.trace.json
 //!   kvsched replay --trace run.trace.json
@@ -39,6 +44,18 @@
 //! (`--algo priority`, `--algo edf`, `--router slo-aware`); `--slo`
 //! prints the per-class latency/TTFT percentiles and goodput table.
 //!
+//! Flow-control flags (`simulate` / `record` / `suite` / `serve`):
+//! `--admission none|token-bucket[:rate=..,burst=..]|queue-threshold[:threshold=..]`
+//! puts an admission policy ahead of the scheduler(s); `--shed
+//! priority|uniform` picks how rejections honor class weights; `--retry
+//! base=..,mult=..,jitter=..,max=..` shapes the client backoff model.
+//! `--preset sustained|flash-crowd|diurnal|bursts` generates an
+//! overload workload (arrival rate calibrated against the estimated
+//! serving capacity) with the standard interactive/batch/background
+//! mix; flow-controlled runs print a stability verdict
+//! (`Stable`/`Divergent`) alongside the outcome, and `suite --preset ..`
+//! prints the overload survival table (one row per admission policy).
+//!
 //! Record/replay: `record` takes the same flags as `simulate` plus
 //! `--out <path>` and writes a versioned event trace (arrivals, routing
 //! picks, admissions, overflow clearings, evictions, completions);
@@ -48,13 +65,16 @@
 //! serving run as a replayable offline benchmark.
 
 use kvsched::core::{ClassSet, Instance, Request};
+use kvsched::flow::Decision;
+use kvsched::metrics::stability::{analyze_fleet, analyze_outcome, StabilityReport};
 use kvsched::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use kvsched::predictor::Predictor;
 use kvsched::prelude::*;
 use kvsched::opt::{self, HindsightConfig};
 use kvsched::sim::{continuous, discrete, SimConfig};
 use kvsched::trace::{
-    perf_by_name, record_fleet, record_sim, replay_fleet, replay_sim, Trace, TraceMeta, TraceSink,
+    perf_by_name, record_fleet_flow, record_sim_flow, replay_fleet, replay_sim, Trace, TraceEvent,
+    TraceMeta, TraceSink,
 };
 use kvsched::util::cli::Args;
 use kvsched::util::error::{anyhow, Result};
@@ -108,8 +128,52 @@ fn class_set(args: &Args) -> Result<ClassSet> {
     }
 }
 
+/// Assemble the flow-control spec from `--admission` / `--shed` /
+/// `--retry`; `None` when no flow flag is present (the default path
+/// stays bit-identical to a run without the flow layer).
+fn flow_spec_from_args(args: &Args) -> Result<Option<FlowSpec>> {
+    let (admission, shed, retry) = (args.get("admission"), args.get("shed"), args.get("retry"));
+    if admission.is_none() && shed.is_none() && retry.is_none() {
+        return Ok(None);
+    }
+    let mut spec = FlowSpec::new(admission.unwrap_or("none"));
+    if let Some(s) = shed {
+        spec.shed = ShedMode::parse(s)?;
+    }
+    if let Some(r) = retry {
+        spec.retry = RetryPolicy::parse(r)?;
+    }
+    Ok(Some(spec))
+}
+
+/// Print the stability report for an overload/flow run: one greppable
+/// verdict line plus the JSON body.
+fn print_stability(report: &StabilityReport) {
+    println!("stability verdict: {report}");
+    println!("{}", report.to_json().pretty());
+}
+
 fn load_or_generate(args: &Args) -> Result<Instance> {
     let classes = class_set(args)?;
+    // Overload presets generate their own rate profile and class mix,
+    // calibrated against the estimated serving capacity for `--m`.
+    if let Some(name) = args.get("preset") {
+        if args.has("trace") || args.has("classes") || args.has("workload") {
+            return Err(anyhow!(
+                "--preset generates its own workload and class mix; \
+                 drop --trace/--classes/--workload"
+            ));
+        }
+        let n = args.usize_or("n", 1000);
+        let m = args.u64_or("m", continuous::PAPER_M);
+        let gen = if args.has("unit-time") {
+            workload::overload::preset(name, m, &UnitTime, n)?
+        } else {
+            workload::overload::preset(name, m, &Llama70bA100x2::default(), n)?
+        };
+        let mut rng = Rng::new(args.u64_or("seed", 0));
+        return Ok(gen.instance(n, m, &mut rng));
+    }
     if let Some(path) = args.get("trace") {
         let mut inst = Instance::load(path)?;
         if !classes.is_empty() {
@@ -219,6 +283,15 @@ fn simulate(args: &Args) -> Result<()> {
     };
     let seed = args.u64_or("seed", 0);
     let (workers, router) = fleet_flags(args);
+    let flow_spec = flow_spec_from_args(args)?;
+    // Overload runs get the stability verdict even without flow flags
+    // (the no-admission baseline is the interesting comparison point).
+    let stability = flow_spec.is_some() || args.has("preset") || args.has("stability");
+    let perf: Box<dyn PerfModel> = if args.has("unit-time") {
+        Box::new(UnitTime)
+    } else {
+        Box::new(Llama70bA100x2::default())
+    };
 
     if workers > 1 {
         let inst = scale_for_fleet(inst, workers, args);
@@ -228,35 +301,63 @@ fn simulate(args: &Args) -> Result<()> {
             router,
             &inst.classes,
         )?;
-        let perf = Llama70bA100x2::default();
-        let out = if args.has("unit-time") {
-            fleet.try_simulate(&inst, &predictor, &kvsched::perf::UnitTime, seed, SimConfig::default())
-        } else {
-            fleet.try_simulate(&inst, &predictor, &perf, seed, SimConfig::default())
+        let out = match &flow_spec {
+            Some(spec) => {
+                let mut fc = FlowControl::from_spec(spec, &inst.classes, seed)?;
+                fleet.try_simulate_flow(
+                    &inst,
+                    &predictor,
+                    perf.as_ref(),
+                    seed,
+                    SimConfig::default(),
+                    &mut fc,
+                )
+            }
+            None => fleet.try_simulate(&inst, &predictor, perf.as_ref(), seed, SimConfig::default()),
         }
         .map_err(|e| anyhow!("fleet simulation failed: {e}"))?;
         println!("{}", out.to_json().pretty());
         if args.has("slo") {
             print_slo_table("per-class SLO report", out.goodput(), slo_rows(&out.class_stats()));
         }
+        if stability {
+            print_stability(&analyze_fleet(&out));
+        }
         return Ok(());
     }
 
     let mut sched = kvsched::sched::by_name_classed(args.str_or("algo", "mcsf"), &inst.classes)?;
-    let out = if args.has("unit-time") {
-        discrete::simulate_cfg(&inst, sched.as_mut(), &predictor, seed, SimConfig::default())
-    } else {
-        continuous::simulate(
+    let out = match &flow_spec {
+        Some(spec) => {
+            let mut fc = FlowControl::from_spec(spec, &inst.classes, seed)?;
+            kvsched::sim::engine::run_flow(
+                &inst,
+                sched.as_mut(),
+                &predictor,
+                perf.as_ref(),
+                seed,
+                SimConfig::default(),
+                &mut fc,
+            )
+            .map_err(|e| anyhow!("simulation failed: {e}"))?
+        }
+        None if args.has("unit-time") => {
+            discrete::simulate_cfg(&inst, sched.as_mut(), &predictor, seed, SimConfig::default())
+        }
+        None => continuous::simulate(
             &inst,
             sched.as_mut(),
             &predictor,
-            &Llama70bA100x2::default(),
+            perf.as_ref(),
             seed,
-        )
+        ),
     };
     println!("{}", out.to_json().pretty());
     if args.has("slo") {
         print_slo_table("per-class SLO report", out.goodput(), slo_rows(&out.class_stats()));
+    }
+    if stability {
+        print_stability(&analyze_outcome(&out));
     }
     Ok(())
 }
@@ -282,9 +383,11 @@ fn record(args: &Args) -> Result<()> {
         ("llama", Box::new(Llama70bA100x2::default()))
     };
 
+    let flow_spec = flow_spec_from_args(args)?;
+
     if workers > 1 {
         let inst = scale_for_fleet(inst, workers, args);
-        let (out, trace) = record_fleet(
+        let (out, trace) = record_fleet_flow(
             &inst,
             algo,
             router,
@@ -295,6 +398,7 @@ fn record(args: &Args) -> Result<()> {
             perf_name,
             seed,
             SimConfig::default(),
+            flow_spec.as_ref(),
         )?;
         trace.save(out_path)?;
         println!("wrote {trace} to {out_path}");
@@ -302,7 +406,7 @@ fn record(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let (out, trace) = record_sim(
+    let (out, trace) = record_sim_flow(
         &inst,
         algo,
         &predictor,
@@ -310,6 +414,7 @@ fn record(args: &Args) -> Result<()> {
         perf_name,
         seed,
         SimConfig::default(),
+        flow_spec.as_ref(),
     )?;
     trace.save(out_path)?;
     println!("wrote {trace} to {out_path}");
@@ -344,7 +449,116 @@ fn replay(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `suite --preset <overload>`: the overload survival table. One row
+/// per admission policy over the *same* generated overload instance,
+/// reporting how each run ended (stability verdict, recovery time) and
+/// what it cost (shed fractions, goodput) — the quantitative answer to
+/// "does flow control keep the system bounded at λ > capacity?".
+fn overload_suite(args: &Args) -> Result<()> {
+    let inst = load_or_generate(args)?;
+    let seed = args.u64_or("seed", 0);
+    let (workers, router) = fleet_flags(args);
+    let algo = args.str_or("algo", "mcsf");
+    let perf: Box<dyn PerfModel> = if args.has("unit-time") {
+        Box::new(UnitTime)
+    } else {
+        Box::new(Llama70bA100x2::default())
+    };
+    // `--shed` / `--retry` shape every row; the admission column is the
+    // sweep (an explicit --admission is added as an extra row, so tuned
+    // parameters can be compared against the defaults).
+    let base_spec = flow_spec_from_args(args)?.unwrap_or_else(|| FlowSpec::new("none"));
+    let mut admissions = vec!["none", "token-bucket", "queue-threshold"];
+    if !admissions.contains(&base_spec.admission.as_str()) {
+        admissions.push(base_spec.admission.as_str());
+    }
+    let interactive = (0..inst.classes.len())
+        .find(|&c| inst.classes.get(c).map(|rc| rc.name.as_str()) == Some("interactive"));
+    let inst = scale_for_fleet(inst, workers, args);
+    let mut table = kvsched::bench::Table::new(
+        &format!(
+            "overload survival ({} preset), algo {algo}, n={} M={}{}",
+            args.str_or("preset", "?"),
+            inst.n(),
+            inst.m,
+            if workers > 1 {
+                format!(" × {workers} workers (router {router})")
+            } else {
+                String::new()
+            }
+        ),
+        &[
+            "admission",
+            "verdict",
+            "terminated",
+            "recover_s",
+            "shed_frac",
+            "shed_interactive",
+            "goodput",
+            "goodput_interactive",
+        ],
+    );
+    for adm in admissions {
+        let mut spec = base_spec.clone();
+        spec.admission = adm.to_string();
+        let mut fc = FlowControl::from_spec(&spec, &inst.classes, seed)?;
+        let (report, goodput, class_stats) = if workers > 1 {
+            let mut fleet =
+                Fleet::new_classed(FleetSpec::replicas(workers), algo, router, &inst.classes)?;
+            let out = fleet
+                .try_simulate_flow(
+                    &inst,
+                    &Predictor::exact(),
+                    perf.as_ref(),
+                    seed,
+                    SimConfig::default(),
+                    &mut fc,
+                )
+                .map_err(|e| anyhow!("overload suite failed for {adm}: {e}"))?;
+            (analyze_fleet(&out), out.goodput(), out.class_stats())
+        } else {
+            let mut sched = kvsched::sched::by_name_classed(algo, &inst.classes)?;
+            let out = kvsched::sim::engine::run_flow(
+                &inst,
+                sched.as_mut(),
+                &Predictor::exact(),
+                perf.as_ref(),
+                seed,
+                SimConfig::default(),
+                &mut fc,
+            )
+            .map_err(|e| anyhow!("overload suite failed for {adm}: {e}"))?;
+            (analyze_outcome(&out), out.goodput(), out.class_stats())
+        };
+        let goodput_interactive = interactive
+            .and_then(|c| class_stats.get(c))
+            .map(|s| s.goodput)
+            .unwrap_or(goodput);
+        table.row(&[
+            adm.to_string(),
+            report.verdict.as_str().to_string(),
+            report.terminated.as_str().to_string(),
+            match report.time_to_recover {
+                Some(t) => kvsched::bench::fmt(t),
+                None => "-".to_string(),
+            },
+            kvsched::bench::fmt(fc.stats.shed_fraction()),
+            match interactive {
+                Some(c) => kvsched::bench::fmt(fc.stats.class_shed_fraction(c)),
+                None => "-".to_string(),
+            },
+            kvsched::bench::fmt(goodput),
+            kvsched::bench::fmt(goodput_interactive),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
 fn suite(args: &Args) -> Result<()> {
+    if args.has("preset") {
+        return overload_suite(args);
+    }
     let inst = load_or_generate(args)?;
     let perf = Llama70bA100x2::default();
     let seed = args.u64_or("seed", 0);
@@ -468,7 +682,9 @@ fn hindsight(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use kvsched::coordinator::{Coordinator, CoordinatorConfig, FleetCoordinator, ServeRequest};
+    use kvsched::coordinator::{
+        Coordinator, CoordinatorConfig, FleetCoordinator, ServeReply, ServeRequest,
+    };
     let dir = args.str_or("artifacts", "artifacts");
     let n = args.usize_or("n", 12);
     let lambda = args.f64_or("lambda", 2.0);
@@ -477,6 +693,12 @@ fn serve(args: &Args) -> Result<()> {
     let (workers, router) = fleet_flags(args);
     let algo = args.str_or("algo", "mcsf");
     let classes = class_set(args)?;
+    // Flow control on the live path is applied *client-side* (before
+    // routing), exactly where a production gateway would sit; it needs
+    // the fleet coordinator's load gauges, so a flow-controlled serve
+    // always goes through the fleet path (a 1-worker fleet is the
+    // single-worker case).
+    let flow_spec = flow_spec_from_args(args)?;
     // `--record <path>` captures the serve run as a replayable trace;
     // the sink is shared by every worker loop (and the fleet router).
     let record_path = args.get("record");
@@ -487,17 +709,77 @@ fn serve(args: &Args) -> Result<()> {
         trace: record_path.map(|_| sink.clone()),
         ..CoordinatorConfig::default()
     };
-    let save_trace = |router: Option<&str>, workers: usize| -> Result<()> {
+    // `served`: admitted submissions only — rejected attempts never
+    // produce arrival events, and replay reconstructs the instance from
+    // arrivals, so the meta block must count what the workers saw.
+    let save_trace = |router: Option<&str>, workers: usize, served: usize| -> Result<()> {
         let Some(path) = record_path else {
             return Ok(());
         };
-        let meta =
-            TraceMeta::serve(algo, router, workers, sink.budget(), n, seed, classes.clone());
+        let mut meta =
+            TraceMeta::serve(algo, router, workers, sink.budget(), served, seed, classes.clone());
+        if let Some(spec) = &flow_spec {
+            meta = meta.with_flow(spec);
+        }
         let trace = Trace { meta, events: sink.take() };
         trace.save(path)?;
         println!("wrote {trace} to {path}");
         Ok(())
     };
+
+    /// One submission attempt through the client-side flow layer:
+    /// admitted requests go to the router, rejected ones are parked for
+    /// the retry drain (or shed), with the decisions recorded to the
+    /// trace sink like the simulators do.
+    #[allow(clippy::too_many_arguments)]
+    fn offer(
+        fleet: &FleetCoordinator,
+        flow: &mut FlowControl,
+        sink: Option<&TraceSink>,
+        id: usize,
+        req: ServeRequest,
+        attempt: u32,
+        rxs: &mut Vec<std::sync::mpsc::Receiver<ServeReply>>,
+        parked: &mut std::collections::HashMap<usize, ServeRequest>,
+    ) {
+        let t = fleet.elapsed();
+        let load = fleet.flow_load();
+        let s = req.prompt.len().max(1) as u64;
+        let pred = req.predicted_new_tokens.max(1);
+        let decision = flow.on_submit(t, id, req.class, s + pred + 1, &load, attempt);
+        if decision != Decision::Admit {
+            if let Some(sk) = sink {
+                sk.record(TraceEvent::Reject {
+                    t,
+                    id,
+                    attempt,
+                    s,
+                    o: req.max_new_tokens,
+                    pred,
+                    class: req.class,
+                });
+            }
+        }
+        match decision {
+            Decision::Admit => rxs.push(fleet.submit(req).1),
+            Decision::Retry { at, attempt } => {
+                if let Some(sk) = sink {
+                    sk.record(TraceEvent::Retry { t, id, attempt, at });
+                }
+                parked.insert(id, req);
+            }
+            Decision::Shed => {
+                if let Some(sk) = sink {
+                    sk.record(TraceEvent::Shed {
+                        t,
+                        id,
+                        attempts: attempt,
+                        class: req.class,
+                    });
+                }
+            }
+        }
+    }
 
     let mk_request = |i: usize, rng: &mut Rng, classes: &ClassSet| {
         // The same mixture draw the simulated workload uses
@@ -517,10 +799,10 @@ fn serve(args: &Args) -> Result<()> {
         }
     };
 
-    if workers > 1 {
+    if workers > 1 || flow_spec.is_some() {
         // λ × N: the fleet absorbs a proportionally heavier arrival
         // stream at matched per-worker load (disable with --no-scale).
-        let lambda = if args.has("no-scale") {
+        let lambda = if args.has("no-scale") || workers == 1 {
             lambda
         } else {
             lambda * workers as f64
@@ -537,14 +819,52 @@ fn serve(args: &Args) -> Result<()> {
             kvsched::cluster::router_by_name_classed(router, &classes)?,
             cfg,
         );
+        let mut fc = match &flow_spec {
+            Some(spec) => Some(FlowControl::from_spec(spec, &classes, seed)?),
+            None => None,
+        };
+        let flow_sink = record_path.map(|_| &sink);
         let mut rxs = Vec::new();
+        let mut parked = std::collections::HashMap::new();
         for i in 0..n {
+            if let Some(flow) = fc.as_mut() {
+                // Re-submit every backed-off request whose retry time
+                // has come due on the wall clock.
+                while let Some((at, id, attempt)) = flow.next_retry() {
+                    if at > fleet.elapsed() {
+                        break;
+                    }
+                    flow.pop_retry();
+                    if let Some(req) = parked.remove(&id) {
+                        offer(&fleet, flow, flow_sink, id, req, attempt, &mut rxs, &mut parked);
+                    }
+                }
+            }
             let req = mk_request(i, &mut rng, &classes);
-            rxs.push(fleet.submit(req).1);
+            match fc.as_mut() {
+                Some(flow) => {
+                    offer(&fleet, flow, flow_sink, i, req, 1, &mut rxs, &mut parked)
+                }
+                None => rxs.push(fleet.submit(req).1),
+            }
             std::thread::sleep(std::time::Duration::from_secs_f64(rng.exponential(lambda)));
         }
+        // Drain the remaining retry schedule: sleep until each backed-off
+        // request comes due and give it its next attempt.
+        if let Some(flow) = fc.as_mut() {
+            while let Some((at, id, attempt)) = flow.next_retry() {
+                let wait = at - fleet.elapsed();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+                }
+                flow.pop_retry();
+                if let Some(req) = parked.remove(&id) {
+                    offer(&fleet, flow, flow_sink, id, req, attempt, &mut rxs, &mut parked);
+                }
+            }
+        }
         let mut latencies = Vec::new();
-        for rx in rxs {
+        for rx in &rxs {
             latencies.push(rx.recv()?.latency);
         }
         let out = fleet.shutdown();
@@ -559,11 +879,24 @@ fn serve(args: &Args) -> Result<()> {
             kvsched::util::stats::percentile(&latencies, 95.0),
             kvsched::util::stats::percentile(&latencies, 99.0),
         );
+        if let Some(flow) = &fc {
+            let st = &flow.stats;
+            println!(
+                "flow ({}): offered {} admitted {} rejected {} retries {} shed {} ({:.1}%)",
+                flow.admission_name(),
+                st.offered,
+                st.admitted,
+                st.rejected,
+                st.retries,
+                st.shed(),
+                100.0 * st.shed_fraction(),
+            );
+        }
         if args.has("slo") {
             let rows = slo_rows(&out.class_stats());
             print_slo_table("served per-class SLO report", out.goodput(), rows);
         }
-        save_trace(Some(router), workers)?;
+        save_trace(Some(router), workers, rxs.len())?;
         return Ok(());
     }
 
@@ -593,6 +926,6 @@ fn serve(args: &Args) -> Result<()> {
         let rows = slo_rows(&stats.class_stats());
         print_slo_table("served per-class SLO report", stats.goodput(), rows);
     }
-    save_trace(None, 1)?;
+    save_trace(None, 1, latencies.len())?;
     Ok(())
 }

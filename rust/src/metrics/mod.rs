@@ -5,8 +5,43 @@
 //! fraction of requests that met their class's [`SloSpec`].
 
 use crate::core::{ClassId, ClassSet, RequestId, SloSpec};
+use crate::flow::FlowStats;
 use crate::util::json::Json;
 use crate::util::stats;
+
+pub mod stability;
+
+/// How a run ended — the explicit version of [`SimOutcome::finished`],
+/// distinguishing the two truncation regimes a `false` there conflates:
+/// a round-budget cap with work still queued vs. a stall (no completion
+/// for `stall_rounds` — the divergent/infinite-loop regime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Termination {
+    /// All delivered requests completed.
+    Finished,
+    /// Hit [`crate::sim::SimConfig::max_rounds`] with work still queued.
+    Capped,
+    /// Stalled: no completion for
+    /// [`crate::sim::SimConfig::stall_rounds`] rounds (e.g. an
+    /// α-protection livelock, or a queue growing faster than it drains).
+    Diverged,
+}
+
+impl Termination {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Termination::Finished => "finished",
+            Termination::Capped => "capped",
+            Termination::Diverged => "diverged",
+        }
+    }
+}
+
+impl std::fmt::Display for Termination {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// Per-request lifecycle record.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -90,6 +125,16 @@ pub struct SimOutcome {
     /// False when the run hit its round cap before completing all
     /// requests (the "infinite processing loop" regime of small α).
     pub finished: bool,
+    /// *Why* the run ended — refines [`Self::finished`] (kept for
+    /// back-compat) into finished / capped / diverged.
+    pub terminated: Termination,
+    /// (time, queue length) sampled once per round/iteration when series
+    /// recording is on: waiting + undelivered-but-released requests —
+    /// the series the stability analyzer judges bounded vs. divergent.
+    pub queue_series: Vec<(f64, u64)>,
+    /// Flow-control counters when an admission layer ran ahead of this
+    /// run; `None` (and nothing changes anywhere) without one.
+    pub flow: Option<FlowStats>,
 }
 
 impl SimOutcome {
@@ -107,6 +152,9 @@ impl SimOutcome {
             evicted_requests: 0,
             rounds: 0,
             finished: false,
+            terminated: Termination::Capped,
+            queue_series: Vec::new(),
+            flow: None,
         }
     }
 
@@ -296,7 +344,7 @@ impl SimOutcome {
     pub fn to_json(&self) -> Json {
         let lat = self.summary();
         let wait = self.wait_summary();
-        Json::obj()
+        let mut j = Json::obj()
             .set("algo", self.algo.clone())
             .set("n", self.per_request.len())
             .set("assigned", self.assigned)
@@ -317,6 +365,11 @@ impl SimOutcome {
             .set("evicted_requests", self.evicted_requests)
             .set("rounds", self.rounds)
             .set("finished", self.finished)
+            .set("terminated", self.terminated.as_str());
+        if let Some(flow) = &self.flow {
+            j = j.set("flow", flow.to_json());
+        }
+        j
     }
 }
 
@@ -390,6 +443,10 @@ pub struct FleetOutcome {
     /// Router policy that dispatched the arrivals.
     pub router: String,
     pub per_worker: Vec<SimOutcome>,
+    /// Flow-control counters when an admission layer ran ahead of the
+    /// fleet (admission is fleet-global, so these live here rather than
+    /// on any per-worker outcome); `None` without one.
+    pub flow: Option<FlowStats>,
 }
 
 impl FleetOutcome {
@@ -398,6 +455,7 @@ impl FleetOutcome {
         FleetOutcome {
             router: router.to_string(),
             per_worker,
+            flow: None,
         }
     }
 
@@ -423,6 +481,20 @@ impl FleetOutcome {
     /// True only if every worker completed everything routed to it.
     pub fn finished(&self) -> bool {
         self.per_worker.iter().all(|w| w.finished)
+    }
+
+    /// Worst termination across workers: any divergence dominates, then
+    /// any cap, else finished.
+    pub fn terminated(&self) -> Termination {
+        let mut worst = Termination::Finished;
+        for w in &self.per_worker {
+            match w.terminated {
+                Termination::Diverged => return Termination::Diverged,
+                Termination::Capped => worst = Termination::Capped,
+                Termination::Finished => {}
+            }
+        }
+        worst
     }
 
     /// Requests routed but never completed (only nonzero when a worker
@@ -596,13 +668,14 @@ impl FleetOutcome {
         let wait = self.wait_summary();
         let imb = self.imbalance();
         let per_worker: Vec<Json> = self.per_worker.iter().map(SimOutcome::to_json).collect();
-        Json::obj()
+        let mut j = Json::obj()
             .set("router", self.router.clone())
             .set("algo", self.algo())
             .set("workers", self.workers())
             .set("completed", self.completed())
             .set("unserved", self.unserved())
             .set("finished", self.finished())
+            .set("terminated", self.terminated().as_str())
             .set("total_rounds", self.total_rounds())
             .set("overflow_events", self.overflow_events())
             .set("goodput", self.goodput())
@@ -621,7 +694,11 @@ impl FleetOutcome {
             .set("imbalance_assigned", imb.assigned_max_over_mean)
             .set("imbalance_assigned_std", imb.assigned_std)
             .set("imbalance_peak_mem", imb.peak_mem_max_over_mean)
-            .set("per_worker", Json::Arr(per_worker))
+            .set("per_worker", Json::Arr(per_worker));
+        if let Some(flow) = &self.flow {
+            j = j.set("flow", flow.to_json());
+        }
+        j
     }
 }
 
@@ -674,6 +751,7 @@ mod tests {
         o.mem_series = vec![(1.0, 5), (2.0, 9), (3.0, 7)];
         o.tokens_series = vec![(0.5, 10), (1.5, 20), (2.5, 30)];
         o.finished = true;
+        o.terminated = Termination::Finished;
         o
     }
 
@@ -722,6 +800,47 @@ mod tests {
         assert_eq!(j.req_f64("avg_wait").unwrap(), 1.0);
         assert!(j.get("wait_p99").is_some());
         assert!(j.get("latency_p99").is_some());
+        assert_eq!(j.req_str("terminated").unwrap(), "finished");
+        // Flow block only appears when an admission layer ran.
+        assert!(j.get("flow").is_none());
+    }
+
+    #[test]
+    fn termination_surfaces_and_aggregates() {
+        let mut capped = outcome();
+        capped.finished = false;
+        capped.terminated = Termination::Capped;
+        assert_eq!(capped.to_json().req_str("terminated").unwrap(), "capped");
+        let mut diverged = outcome();
+        diverged.finished = false;
+        diverged.terminated = Termination::Diverged;
+        // Fleet termination is the worst across workers.
+        let f = FleetOutcome::new("rr", vec![outcome(), capped.clone()]);
+        assert_eq!(f.terminated(), Termination::Capped);
+        let f = FleetOutcome::new("rr", vec![capped, diverged]);
+        assert_eq!(f.terminated(), Termination::Diverged);
+        assert_eq!(f.to_json().req_str("terminated").unwrap(), "diverged");
+        let f = FleetOutcome::new("rr", vec![outcome()]);
+        assert_eq!(f.terminated(), Termination::Finished);
+    }
+
+    #[test]
+    fn flow_stats_ride_into_json() {
+        let mut o = outcome();
+        o.flow = Some(FlowStats {
+            offered: 10,
+            admitted: 8,
+            rejected: 5,
+            retries: 3,
+            offered_by_class: vec![6, 4],
+            admitted_by_class: vec![6, 2],
+            shed_by_class: vec![0, 2],
+        });
+        let j = o.to_json();
+        let fj = j.req("flow").unwrap();
+        assert_eq!(fj.req_usize("offered").unwrap(), 10);
+        assert_eq!(fj.req_usize("shed").unwrap(), 2);
+        assert!((fj.req_f64("shed_fraction").unwrap() - 0.2).abs() < 1e-12);
     }
 
     fn fleet() -> FleetOutcome {

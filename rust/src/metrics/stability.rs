@@ -1,0 +1,363 @@
+//! Empirical stability analysis for overload runs: is the queue
+//! **bounded** (stable) or **divergent**, how long did recovery from the
+//! worst spike take, and how much traffic was shed to stay up?
+//!
+//! This is the paper's stability criterion (*Flow-Controlled Scheduling
+//! for LLM Inference with Provable Stability Guarantees*, PAPERS.md)
+//! checked empirically on the engine's recorded queue series rather
+//! than proved: a run is **Stable** when it drained everything it
+//! admitted, or — for round-capped runs — when the queue trajectory
+//! plateaus instead of trending up; it is **Divergent** when the engine
+//! stalled outright or the capped trajectory was still growing.
+//!
+//! The trend test splits the sampled queue series into thirds (by
+//! sample index — one sample per executed round) and compares the mean
+//! queue length of the last third against the middle third: linearly
+//! growing backlog gives `m3/m2 ≈ 5/3`, comfortably past the 1.1
+//! tolerance, while an admission-bounded queue hovers around its
+//! threshold (`m3 ≈ m2`).
+
+use crate::metrics::{FleetOutcome, SimOutcome, Termination};
+use crate::util::json::Json;
+use std::fmt;
+
+/// The empirical bounded-vs-divergent queue verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StabilityVerdict {
+    /// Queues stayed bounded: the run drained, or its capped trajectory
+    /// plateaued.
+    Stable,
+    /// Queues grew without bound (or the engine stalled outright).
+    Divergent,
+}
+
+impl StabilityVerdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StabilityVerdict::Stable => "Stable",
+            StabilityVerdict::Divergent => "Divergent",
+        }
+    }
+}
+
+impl fmt::Display for StabilityVerdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What the stability analyzer computed for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StabilityReport {
+    pub verdict: StabilityVerdict,
+    /// How the underlying run ended.
+    pub terminated: Termination,
+    /// Largest sampled queue length and when it occurred.
+    pub peak_queue: u64,
+    pub peak_time: f64,
+    /// Queue length at the last sample.
+    pub final_queue: u64,
+    /// Seconds (or rounds, under the unit perf model) from the peak
+    /// until the queue first dropped back to ~10% of it; `None` when the
+    /// run never spiked meaningfully or never recovered.
+    pub time_to_recover: Option<f64>,
+    /// Fraction of offered requests permanently dropped (0 without flow
+    /// control).
+    pub shed_fraction: f64,
+    /// Per-class (name, shed fraction of that class's offered traffic).
+    pub shed_by_class: Vec<(String, f64)>,
+}
+
+impl StabilityReport {
+    pub fn to_json(&self) -> Json {
+        let mut shed = Json::obj();
+        for (name, frac) in &self.shed_by_class {
+            shed = shed.set(name.as_str(), *frac);
+        }
+        Json::obj()
+            .set("verdict", self.verdict.as_str())
+            .set("terminated", self.terminated.as_str())
+            .set("peak_queue", self.peak_queue)
+            .set("peak_time", self.peak_time)
+            .set("final_queue", self.final_queue)
+            .set(
+                "time_to_recover",
+                match self.time_to_recover {
+                    Some(t) => Json::from(t),
+                    None => Json::Null,
+                },
+            )
+            .set("shed_fraction", self.shed_fraction)
+            .set("shed_by_class", shed)
+    }
+}
+
+impl fmt::Display for StabilityReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} (terminated: {}, peak queue {}, final {}, recover {})",
+            self.verdict,
+            self.terminated,
+            self.peak_queue,
+            self.final_queue,
+            match self.time_to_recover {
+                Some(t) => format!("{t:.2}"),
+                None => "-".to_string(),
+            }
+        )
+    }
+}
+
+fn mean_q(samples: &[(f64, u64)]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.iter().map(|&(_, q)| q as f64).sum::<f64>() / samples.len() as f64
+}
+
+/// A queue backlog small enough to count as "drained" relative to the
+/// run's peak (absolute floor of 4 so tiny runs aren't judged on noise).
+fn stable_floor(peak: u64) -> u64 {
+    (peak / 20).max(4)
+}
+
+/// Judge a sampled `(time, queue length)` series given how the run
+/// ended. The core shared by the single-worker and fleet entry points.
+pub fn analyze_series(series: &[(f64, u64)], terminated: Termination) -> StabilityReport {
+    let (mut peak_queue, mut peak_time, mut peak_idx) = (0u64, 0.0f64, 0usize);
+    for (i, &(t, q)) in series.iter().enumerate() {
+        if q > peak_queue {
+            peak_queue = q;
+            peak_time = t;
+            peak_idx = i;
+        }
+    }
+    let final_queue = series.last().map_or(0, |&(_, q)| q);
+    let floor = stable_floor(peak_queue);
+
+    let verdict = match terminated {
+        Termination::Diverged => StabilityVerdict::Divergent,
+        // The engine only reports Finished once every delivered request
+        // completed — the backlog provably drained.
+        Termination::Finished => StabilityVerdict::Stable,
+        Termination::Capped => {
+            let n = series.len();
+            let m2 = mean_q(&series[n / 3..(2 * n) / 3]);
+            let m3 = mean_q(&series[(2 * n) / 3..]);
+            if final_queue <= floor || m3 <= 1.1 * m2.max(1.0) {
+                StabilityVerdict::Stable
+            } else {
+                StabilityVerdict::Divergent
+            }
+        }
+    };
+
+    // Recovery: time from the peak until the queue first returns to
+    // ~10% of it. A run whose peak never exceeded the floor has nothing
+    // to recover from.
+    let time_to_recover = if peak_queue <= floor {
+        None
+    } else {
+        let target = (peak_queue / 10).max(floor);
+        series[peak_idx..]
+            .iter()
+            .find(|&&(_, q)| q <= target)
+            .map(|&(t, _)| t - peak_time)
+    };
+
+    StabilityReport {
+        verdict,
+        terminated,
+        peak_queue,
+        peak_time,
+        final_queue,
+        time_to_recover,
+        shed_fraction: 0.0,
+        shed_by_class: Vec::new(),
+    }
+}
+
+fn fill_shed(
+    mut report: StabilityReport,
+    flow: Option<&crate::flow::FlowStats>,
+    classes: &crate::core::ClassSet,
+) -> StabilityReport {
+    if let Some(stats) = flow {
+        report.shed_fraction = stats.shed_fraction();
+        let k = classes
+            .len()
+            .max(stats.offered_by_class.len())
+            .max(stats.shed_by_class.len())
+            .max(1);
+        report.shed_by_class = (0..k)
+            .map(|c| (classes.name(c).to_string(), stats.class_shed_fraction(c)))
+            .collect();
+    }
+    report
+}
+
+/// Stability report for a single-worker run.
+pub fn analyze_outcome(out: &SimOutcome) -> StabilityReport {
+    fill_shed(
+        analyze_series(&out.queue_series, out.terminated),
+        out.flow.as_ref(),
+        &out.classes,
+    )
+}
+
+/// Fleet-wide queue series: the per-worker series summed as step
+/// functions (each worker holds its last sampled value between its own
+/// samples), coalescing identical sample times.
+pub fn fleet_queue_series(out: &FleetOutcome) -> Vec<(f64, u64)> {
+    let mut points: Vec<(f64, usize, u64)> = Vec::new();
+    for (w, o) in out.per_worker.iter().enumerate() {
+        for &(t, q) in &o.queue_series {
+            points.push((t, w, q));
+        }
+    }
+    points.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut cur = vec![0u64; out.per_worker.len()];
+    let mut merged: Vec<(f64, u64)> = Vec::with_capacity(points.len());
+    for (t, w, q) in points {
+        cur[w] = q;
+        let total: u64 = cur.iter().sum();
+        if let Some(last) = merged.last_mut() {
+            if last.0 == t {
+                last.1 = total;
+                continue;
+            }
+        }
+        merged.push((t, total));
+    }
+    merged
+}
+
+/// Stability report for a fleet run (merged queue series, worst-worker
+/// termination, fleet-level flow counters).
+pub fn analyze_fleet(out: &FleetOutcome) -> StabilityReport {
+    fill_shed(
+        analyze_series(&fleet_queue_series(out), out.terminated()),
+        out.flow.as_ref(),
+        out.classes(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SimOutcome;
+
+    fn series(qs: &[u64]) -> Vec<(f64, u64)> {
+        qs.iter().enumerate().map(|(i, &q)| (i as f64, q)).collect()
+    }
+
+    #[test]
+    fn finished_runs_are_stable() {
+        let spike: Vec<u64> = (0..30u64)
+            .map(|i| if i < 10 { i * 5 } else { 45 - (i - 10) * 2 })
+            .collect();
+        let r = analyze_series(&series(&spike), Termination::Finished);
+        assert_eq!(r.verdict, StabilityVerdict::Stable);
+        assert_eq!(r.peak_queue, 45);
+        // Peak at t = 9; the series ends at q = 7, still above the
+        // recovery target of 4, so recovery never completed.
+        assert_eq!(r.time_to_recover, None);
+    }
+
+    #[test]
+    fn recovery_time_measures_spike_decay() {
+        let mut qs: Vec<u64> = vec![0; 5];
+        qs.extend([100, 80, 60, 40, 20, 9, 5, 3, 2, 1, 0]);
+        let r = analyze_series(&series(&qs), Termination::Finished);
+        assert_eq!(r.peak_queue, 100);
+        assert_eq!(r.peak_time, 5.0);
+        // Target is max(100/10, floor 5) = 10: first hit at q = 9, t = 10.
+        assert_eq!(r.time_to_recover, Some(5.0));
+    }
+
+    #[test]
+    fn growing_capped_queue_is_divergent() {
+        let qs: Vec<u64> = (0..90).map(|i| i * 3).collect();
+        let r = analyze_series(&series(&qs), Termination::Capped);
+        assert_eq!(r.verdict, StabilityVerdict::Divergent);
+        assert!(r.final_queue > 0);
+    }
+
+    #[test]
+    fn plateaued_capped_queue_is_stable() {
+        let mut qs: Vec<u64> = (0..30).map(|i| i * 4).collect();
+        qs.extend((0..60).map(|_| 120));
+        let r = analyze_series(&series(&qs), Termination::Capped);
+        assert_eq!(r.verdict, StabilityVerdict::Stable);
+    }
+
+    #[test]
+    fn stalled_runs_are_divergent_regardless_of_series() {
+        let r = analyze_series(&series(&[0, 1, 1, 0]), Termination::Diverged);
+        assert_eq!(r.verdict, StabilityVerdict::Divergent);
+    }
+
+    #[test]
+    fn empty_series_judged_on_termination_alone() {
+        assert_eq!(
+            analyze_series(&[], Termination::Finished).verdict,
+            StabilityVerdict::Stable
+        );
+        assert_eq!(
+            analyze_series(&[], Termination::Capped).verdict,
+            StabilityVerdict::Stable
+        );
+        assert_eq!(
+            analyze_series(&[], Termination::Diverged).verdict,
+            StabilityVerdict::Divergent
+        );
+    }
+
+    #[test]
+    fn fleet_series_sums_as_step_functions() {
+        let mut a = SimOutcome::new("x");
+        a.queue_series = vec![(0.0, 2), (2.0, 4)];
+        a.finished = true;
+        a.terminated = Termination::Finished;
+        let mut b = SimOutcome::new("x");
+        b.queue_series = vec![(1.0, 10), (2.0, 1)];
+        b.finished = true;
+        b.terminated = Termination::Finished;
+        let f = FleetOutcome::new("rr", vec![a, b]);
+        let merged = fleet_queue_series(&f);
+        // t=0: a=2; t=1: a=2,b=10 → 12; t=2: both sampled → 4+1 = 5.
+        assert_eq!(merged, vec![(0.0, 2), (1.0, 12), (2.0, 5)]);
+        let r = analyze_fleet(&f);
+        assert_eq!(r.peak_queue, 12);
+        assert_eq!(r.verdict, StabilityVerdict::Stable);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let mut out = SimOutcome::new("x");
+        out.queue_series = series(&[0, 50, 5, 0]);
+        out.finished = true;
+        out.terminated = Termination::Finished;
+        out.classes = crate::core::ClassSet::parse("interactive:0.5,background:0.5").unwrap();
+        out.flow = Some(crate::flow::FlowStats {
+            offered: 10,
+            admitted: 8,
+            rejected: 4,
+            retries: 2,
+            offered_by_class: vec![5, 5],
+            admitted_by_class: vec![5, 3],
+            shed_by_class: vec![0, 2],
+        });
+        let r = analyze_outcome(&out);
+        assert!((r.shed_fraction - 0.2).abs() < 1e-12);
+        assert_eq!(r.shed_by_class.len(), 2);
+        assert_eq!(r.shed_by_class[0], ("interactive".to_string(), 0.0));
+        assert_eq!(r.shed_by_class[1], ("background".to_string(), 0.4));
+        let j = r.to_json();
+        assert_eq!(j.req_str("verdict").unwrap(), "Stable");
+        assert_eq!(j.req_str("terminated").unwrap(), "finished");
+        assert!(j.get("time_to_recover").is_some());
+        assert!((j.req("shed_by_class").unwrap().req_f64("background").unwrap() - 0.4).abs() < 1e-12);
+    }
+}

@@ -33,6 +33,7 @@
 use super::engine::{clamped_predictions, SimConfig, SimError, WaitState, WorkerSim};
 use crate::cluster::router::{Router, WorkerLoad};
 use crate::core::{Instance, QueuedReq};
+use crate::flow::{Decision, FlowControl, FlowLoad};
 use crate::metrics::FleetOutcome;
 use crate::perf::PerfModel;
 use crate::predictor::Predictor;
@@ -63,13 +64,34 @@ pub fn run_fleet(
 ) -> Result<FleetOutcome, SimError> {
     let m = worker_m.unwrap_or(inst.m);
     let preds = clamped_predictions(inst, predictor, m)?;
-    run_fleet_inner(inst, scheds, router, m, &preds, perf, seed, cfg, None)
+    run_fleet_inner(inst, scheds, router, m, &preds, perf, seed, cfg, None, None)
 }
 
-/// [`run_fleet`] with a resolved budget, pre-clamped predictions and an
-/// optional recording sink — the shared driver behind fleet recording
-/// and replay (`crate::trace`), where the predictions come from the
-/// trace rather than a predictor.
+/// [`run_fleet`] with a flow-control layer ahead of routing: every
+/// submission passes admission against the *fleet-wide* load (summed
+/// queued demand and KV budget of the live workers) before the router
+/// ever sees it; rejected requests re-arrive after backoff or are shed.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_flow(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    router: &mut dyn Router,
+    worker_m: Option<u64>,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    flow: &mut FlowControl,
+) -> Result<FleetOutcome, SimError> {
+    let m = worker_m.unwrap_or(inst.m);
+    let preds = clamped_predictions(inst, predictor, m)?;
+    run_fleet_inner(inst, scheds, router, m, &preds, perf, seed, cfg, None, Some(flow))
+}
+
+/// [`run_fleet`] with a resolved budget, pre-clamped predictions, an
+/// optional recording sink and an optional flow layer — the shared
+/// driver behind fleet recording and replay (`crate::trace`), where the
+/// predictions come from the trace rather than a predictor.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_fleet_inner(
     inst: &Instance,
@@ -81,6 +103,7 @@ pub(crate) fn run_fleet_inner(
     seed: u64,
     cfg: SimConfig,
     sink: Option<TraceSink>,
+    mut flow: Option<&mut FlowControl>,
 ) -> Result<FleetOutcome, SimError> {
     let w_count = scheds.len();
     assert!(w_count >= 1, "fleet needs at least one worker");
@@ -124,15 +147,100 @@ pub(crate) fn run_fleet_inner(
             }
         }
 
-        // Route the next arrival when it lands at or before every
+        // Earliest next submission: the next original arrival or the
+        // flow layer's earliest scheduled retry (originals win ties, so
+        // the default path sees the exact pre-flow event order).
+        let orig = (next_arrival < n).then(|| inst.requests[next_arrival].arrival);
+        let retry = flow.as_deref().and_then(FlowControl::next_retry).map(|(at, _, _)| at);
+        let submission = match (orig, retry) {
+            (None, None) => None,
+            (Some(a), None) => Some((a, false)),
+            (None, Some(rt)) => Some((rt, true)),
+            (Some(a), Some(rt)) => {
+                if rt < a {
+                    Some((rt, true))
+                } else {
+                    Some((a, false))
+                }
+            }
+        };
+
+        // Handle the next submission when it lands at or before every
         // pending formation: the snapshot below is then causal.
-        let arrival_due = next_arrival < n
-            && next_step.map_or(true, |(bt, _)| inst.requests[next_arrival].arrival <= bt);
-        if arrival_due {
-            let r = &inst.requests[next_arrival];
+        let submission_due = submission
+            .map_or(false, |(at, _)| next_step.map_or(true, |(bt, _)| at <= bt));
+        if submission_due {
+            let (_, is_retry) = submission.unwrap();
+            let (r, attempt, submit_t) = if is_retry {
+                let (rt, id, attempt) = flow.as_mut().unwrap().pop_retry().unwrap();
+                (&inst.requests[id], attempt, rt)
+            } else {
+                let r = &inst.requests[next_arrival];
+                next_arrival += 1;
+                (r, 1, r.arrival)
+            };
+
+            // Flow-control admission against the fleet-wide live load,
+            // *before* routing — a rejected request never reaches the
+            // router, so no Route/Arrival events are recorded for it.
+            let mut admitted = true;
+            if let Some(fc) = flow.as_mut() {
+                let mut queued = 0u64;
+                let mut budget = 0u64;
+                for w in workers.iter().filter(|w| !w.stopped()) {
+                    queued += w.queued_demand();
+                    budget += w.budget();
+                }
+                // All workers capped ⇒ budget 0 ⇒ load-aware admission
+                // rejects and the retry budget drains: overload against
+                // a dead fleet sheds instead of black-holing.
+                let load = FlowLoad {
+                    queued_demand: queued,
+                    kv_budget: budget,
+                };
+                let cost = r.prompt_len + preds[r.id] + 1;
+                let decision = fc.on_submit(submit_t, r.id, r.class, cost, &load, attempt);
+                if decision != Decision::Admit {
+                    admitted = false;
+                    if let Some(sk) = &sink {
+                        sk.record(TraceEvent::Reject {
+                            t: submit_t,
+                            id: r.id,
+                            attempt,
+                            s: r.prompt_len,
+                            o: r.output_len,
+                            pred: preds[r.id],
+                            class: r.class,
+                        });
+                        match decision {
+                            Decision::Retry { at, attempt } => {
+                                sk.record(TraceEvent::Retry {
+                                    t: submit_t,
+                                    id: r.id,
+                                    attempt,
+                                    at,
+                                });
+                            }
+                            Decision::Shed => {
+                                sk.record(TraceEvent::Shed {
+                                    t: submit_t,
+                                    id: r.id,
+                                    attempts: attempt,
+                                    class: r.class,
+                                });
+                            }
+                            Decision::Admit => unreachable!(),
+                        }
+                    }
+                }
+            }
+            if !admitted {
+                continue;
+            }
+
             let view = QueuedReq {
                 id: r.id,
-                arrival: r.arrival,
+                arrival: submit_t,
                 s: r.prompt_len,
                 pred: preds[r.id],
                 class: r.class,
@@ -171,30 +279,30 @@ pub(crate) fn run_fleet_inner(
             };
             if let Some(sink) = &sink {
                 sink.record(TraceEvent::Route {
-                    t: r.arrival,
+                    t: submit_t,
                     worker: pick,
                     id: r.id,
                 });
             }
             workers[pick].deliver(WaitState {
                 id: r.id,
-                arrival: r.arrival,
+                arrival: submit_t,
+                first_arrival: r.arrival,
                 s: r.prompt_len,
                 o_true: r.output_len,
                 pred: preds[r.id],
                 class: r.class,
             });
-            next_arrival += 1;
             continue;
         }
 
         let Some((_, i)) = next_step else {
-            break; // no arrivals left, no busy workers: done
+            break; // no submissions left, no busy workers: done
         };
         workers[i].step(scheds[i].as_mut(), perf)?;
     }
 
-    Ok(FleetOutcome::new(
+    let mut out = FleetOutcome::new(
         &router.name(),
         workers
             .into_iter()
@@ -204,7 +312,11 @@ pub(crate) fn run_fleet_inner(
                 out
             })
             .collect(),
-    ))
+    );
+    if let Some(fc) = flow {
+        out.flow = Some(fc.stats.clone());
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -328,6 +440,95 @@ mod tests {
         assert_eq!(out.assigned().iter().sum::<usize>(), inst.n());
         assert_eq!(out.unserved(), inst.n() - out.completed());
         assert!(out.unserved() > 0);
+    }
+
+    /// Flow with admission "none" is a pass-through: the fleet outcome
+    /// matches a plain `run_fleet` field-for-field (the broad corpus
+    /// check is tests/flow_reduction.rs).
+    #[test]
+    fn flow_none_matches_plain_fleet() {
+        use crate::core::ClassSet;
+        use crate::flow::{FlowControl, FlowSpec};
+        use crate::workload::synthetic;
+
+        let mut rng = Rng::new(11);
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let mut router = JoinShortestQueue;
+        let plain = run_fleet(
+            &inst,
+            &mut scheds(3),
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            4,
+            SimConfig::default(),
+        )
+        .unwrap();
+        let spec = FlowSpec::new("none");
+        let mut flow = FlowControl::from_spec(&spec, &ClassSet::default(), 4).unwrap();
+        let mut router = JoinShortestQueue;
+        let flowed = run_fleet_flow(
+            &inst,
+            &mut scheds(3),
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            4,
+            SimConfig::default(),
+            &mut flow,
+        )
+        .unwrap();
+        assert_eq!(plain.assigned(), flowed.assigned());
+        assert_eq!(plain.total_latency().to_bits(), flowed.total_latency().to_bits());
+        for (a, b) in plain.per_worker.iter().zip(&flowed.per_worker) {
+            assert_eq!(a.per_request, b.per_request);
+            assert_eq!(a.rounds, b.rounds);
+        }
+        let stats = flowed.flow.unwrap();
+        assert_eq!(stats.admitted, inst.n());
+        assert_eq!(stats.rejected, 0);
+    }
+
+    /// Priority shedding: under a tight fleet-wide queue threshold the
+    /// low-weight background class sheds at a strictly higher rate than
+    /// interactive — the class-aware headroom at work.
+    #[test]
+    fn flow_priority_sheds_background_first() {
+        use crate::core::ClassSet;
+        use crate::flow::{FlowControl, FlowSpec};
+
+        let classes = ClassSet::parse("interactive:0.5,background:0.5").unwrap();
+        let reqs: Vec<Request> = (0..24)
+            .map(|i| Request::new(i, 0.0, 5, 3).with_class(i % 2))
+            .collect();
+        let inst = Instance::new(30, reqs).with_classes(classes);
+        let mut spec = FlowSpec::new("queue-threshold:threshold=1");
+        spec.retry.jitter = 0.0;
+        let mut flow = FlowControl::from_spec(&spec, &inst.classes, 9).unwrap();
+        let mut router = RoundRobin::default();
+        let out = run_fleet_flow(
+            &inst,
+            &mut scheds(2),
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            9,
+            SimConfig::default(),
+            &mut flow,
+        )
+        .unwrap();
+        assert!(out.finished());
+        let stats = out.flow.as_ref().unwrap();
+        assert!(stats.shed() > 0, "tight threshold must shed");
+        assert!(
+            stats.class_shed_fraction(1) > stats.class_shed_fraction(0),
+            "background ({:.2}) must shed more than interactive ({:.2})",
+            stats.class_shed_fraction(1),
+            stats.class_shed_fraction(0)
+        );
     }
 
     #[test]

@@ -41,7 +41,8 @@
 //! this function (`tests/cluster_reduction.rs`).
 
 use crate::core::{ActiveReq, ClassId, Instance, QueuedReq, RequestId};
-use crate::metrics::{PerRequest, SimOutcome};
+use crate::flow::{Decision, FlowControl, FlowLoad};
+use crate::metrics::{PerRequest, SimOutcome, Termination};
 use crate::perf::{BatchComposition, PerfModel};
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
@@ -107,6 +108,7 @@ impl std::error::Error for SimError {}
 struct ActiveState {
     id: RequestId,
     arrival: f64,
+    first_arrival: f64,
     s: u64,
     o_true: u64,
     pred: u64,
@@ -132,7 +134,14 @@ impl ActiveState {
 #[derive(Debug, Clone)]
 pub(crate) struct WaitState {
     pub(crate) id: RequestId,
+    /// Effective arrival at the worker: the original arrival time, or
+    /// the retry time for a request flow control rejected first.
+    /// Release gating and the scheduler's queue view use this.
     pub(crate) arrival: f64,
+    /// The client's *original* submission time — what latency and wait
+    /// metrics are charged against, so retry backoff counts as queueing
+    /// delay. Equal to [`Self::arrival`] without flow control.
+    pub(crate) first_arrival: f64,
     pub(crate) s: u64,
     pub(crate) o_true: u64,
     pub(crate) pred: u64,
@@ -379,13 +388,17 @@ impl WorkerSim {
         // *fully executed* rounds, matching the per-round series
         // lengths (see [`SimOutcome::rounds`]).
         self.round += 1;
-        if self.round > self.cfg.max_rounds
-            || self
-                .round
-                .saturating_sub(self.last_completion_round)
-                > self.cfg.stall_rounds
-        {
+        let stalled =
+            self.round.saturating_sub(self.last_completion_round) > self.cfg.stall_rounds;
+        if self.round > self.cfg.max_rounds || stalled {
             self.outcome.finished = false;
+            // A stall is the divergent/livelock regime; a round-budget
+            // hit just means the run was truncated with work queued.
+            self.outcome.terminated = if stalled {
+                Termination::Diverged
+            } else {
+                Termination::Capped
+            };
             self.outcome.rounds = self.round - 1;
             self.stopped = true;
             return Ok(());
@@ -449,6 +462,7 @@ impl WorkerSim {
             self.active.push(ActiveState {
                 id: w.id,
                 arrival: w.arrival,
+                first_arrival: w.first_arrival,
                 s: w.s,
                 o_true: w.o_true,
                 pred: w.pred,
@@ -511,6 +525,7 @@ impl WorkerSim {
                 let w = WaitState {
                     id: a.id,
                     arrival: a.arrival,
+                    first_arrival: a.first_arrival,
                     s: a.s,
                     o_true: a.o_true,
                     pred: a.pred,
@@ -528,6 +543,9 @@ impl WorkerSim {
                 // An aborted iteration produces no tokens; recording the
                 // zero keeps the two series index-aligned round-for-round.
                 self.outcome.tokens_series.push((self.t, 0));
+                self.outcome
+                    .queue_series
+                    .push((self.t, self.queued_len() as u64));
             }
             return Ok(());
         }
@@ -540,6 +558,9 @@ impl WorkerSim {
             self.outcome
                 .tokens_series
                 .push((self.t, batch.tokens_processed()));
+            self.outcome
+                .queue_series
+                .push((self.t, self.queued_len() as u64));
         }
 
         // Token production + completions.
@@ -571,7 +592,7 @@ impl WorkerSim {
                 self.records[a.id] = Some(PerRequest {
                     id: a.id,
                     class: a.class,
-                    arrival: a.arrival,
+                    arrival: a.first_arrival,
                     start: a.start_time,
                     first_token: self.first_token[a.id],
                     completion: self.t,
@@ -591,6 +612,7 @@ impl WorkerSim {
         if !self.stopped {
             self.outcome.rounds = self.round;
             self.outcome.finished = true;
+            self.outcome.terminated = Termination::Finished;
         }
         self.outcome.per_request = self.records.into_iter().flatten().collect();
         self.outcome
@@ -610,6 +632,23 @@ pub fn run(
     run_with_preds(inst, sched, &preds, perf, seed, cfg, None)
 }
 
+/// [`run`] with a flow-control layer ahead of the worker: every
+/// submission passes admission first; rejected requests re-arrive after
+/// backoff (or are shed once out of retries). The `flow` instance
+/// carries the accumulated [`crate::flow::FlowStats`] into the outcome.
+pub fn run_flow(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    flow: &mut FlowControl,
+) -> Result<SimOutcome, SimError> {
+    let preds = clamped_predictions(inst, predictor, inst.m)?;
+    run_with_preds_flow(inst, sched, &preds, perf, seed, cfg, None, Some(flow))
+}
+
 /// [`run`] with pre-resolved (clamped) predictions and an optional
 /// recording sink — the shared driver behind recording and replay,
 /// where the predictions come from the trace rather than a predictor.
@@ -622,38 +661,129 @@ pub(crate) fn run_with_preds(
     cfg: SimConfig,
     sink: Option<TraceSink>,
 ) -> Result<SimOutcome, SimError> {
+    run_with_preds_flow(inst, sched, preds, perf, seed, cfg, sink, None)
+}
+
+/// The full single-worker driver: [`run_with_preds`] plus an optional
+/// flow-control layer. Submissions are merged from two sources in
+/// nondecreasing time order — the instance's original arrivals and the
+/// flow layer's scheduled retries (originals win ties) — so admission
+/// decisions happen in submission order and token buckets see monotone
+/// time. With `flow = None` the control flow is *identical* to the
+/// pre-flow loop: no extra RNG draws, no extra events — the bit-identity
+/// `tests/flow_reduction.rs` pins.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_with_preds_flow(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    sink: Option<TraceSink>,
+    mut flow: Option<&mut FlowControl>,
+) -> Result<SimOutcome, SimError> {
     let n = inst.requests.len();
     let incremental = cfg.incremental && sched.supports_incremental();
     if incremental {
         sched.on_reset();
     }
 
+    // Rejections are recorded by this driver (they never reach the
+    // worker), completions by the worker — same sink, shared order.
+    let flow_sink = sink.clone();
     let mut worker = WorkerSim::new(n, inst.m, &sched.name(), seed, cfg, incremental);
     if let Some(sink) = sink {
         worker.set_trace(sink, 0);
     }
     let mut next_arrival = 0usize;
     loop {
-        // Deliver arrivals due at or before the next batch-formation
-        // time — the same `arrival ≤ t` gating as the classic loop.
-        while next_arrival < n {
+        // Deliver submissions due at or before the next batch-formation
+        // time — the same `arrival ≤ t` gating as the classic loop,
+        // extended to the merged original + retry stream.
+        loop {
+            let orig = (next_arrival < n).then(|| inst.requests[next_arrival].arrival);
+            let retry = flow.as_deref().and_then(FlowControl::next_retry).map(|(at, _, _)| at);
+            let (at, is_retry) = match (orig, retry) {
+                (None, None) => break,
+                (Some(a), None) => (a, false),
+                (None, Some(rt)) => (rt, true),
+                (Some(a), Some(rt)) => {
+                    if rt < a {
+                        (rt, true)
+                    } else {
+                        (a, false)
+                    }
+                }
+            };
             let due = match worker.next_time() {
                 None => true,
-                Some(ft) => inst.requests[next_arrival].arrival <= ft,
+                Some(ft) => at <= ft,
             };
             if !due {
                 break;
             }
-            let r = &inst.requests[next_arrival];
-            worker.deliver(WaitState {
-                id: r.id,
-                arrival: r.arrival,
-                s: r.prompt_len,
-                o_true: r.output_len,
-                pred: preds[r.id],
-                class: r.class,
-            });
-            next_arrival += 1;
+            let (r, attempt, submit_t) = if is_retry {
+                let (rt, id, attempt) = flow.as_mut().unwrap().pop_retry().unwrap();
+                (&inst.requests[id], attempt, rt)
+            } else {
+                let r = &inst.requests[next_arrival];
+                next_arrival += 1;
+                (r, 1, r.arrival)
+            };
+            let mut admitted = true;
+            if let Some(fc) = flow.as_mut() {
+                let load = FlowLoad {
+                    queued_demand: worker.queued_demand(),
+                    kv_budget: inst.m,
+                };
+                let cost = r.prompt_len + preds[r.id] + 1;
+                let decision = fc.on_submit(submit_t, r.id, r.class, cost, &load, attempt);
+                if decision != Decision::Admit {
+                    admitted = false;
+                    if let Some(sk) = &flow_sink {
+                        sk.record(TraceEvent::Reject {
+                            t: submit_t,
+                            id: r.id,
+                            attempt,
+                            s: r.prompt_len,
+                            o: r.output_len,
+                            pred: preds[r.id],
+                            class: r.class,
+                        });
+                        match decision {
+                            Decision::Retry { at, attempt } => {
+                                sk.record(TraceEvent::Retry {
+                                    t: submit_t,
+                                    id: r.id,
+                                    attempt,
+                                    at,
+                                });
+                            }
+                            Decision::Shed => {
+                                sk.record(TraceEvent::Shed {
+                                    t: submit_t,
+                                    id: r.id,
+                                    attempts: attempt,
+                                    class: r.class,
+                                });
+                            }
+                            Decision::Admit => unreachable!(),
+                        }
+                    }
+                }
+            }
+            if admitted {
+                worker.deliver(WaitState {
+                    id: r.id,
+                    arrival: submit_t,
+                    first_arrival: r.arrival,
+                    s: r.prompt_len,
+                    o_true: r.output_len,
+                    pred: preds[r.id],
+                    class: r.class,
+                });
+            }
         }
         if !worker.busy() {
             break;
@@ -662,6 +792,9 @@ pub(crate) fn run_with_preds(
     }
     let mut out = worker.finish();
     out.classes = inst.classes.clone();
+    if let Some(fc) = flow {
+        out.flow = Some(fc.stats.clone());
+    }
     Ok(out)
 }
 
@@ -1007,5 +1140,155 @@ mod tests {
         assert_eq!(out.rounds, 500);
         assert_eq!(out.mem_series.len(), 500);
         assert_eq!(out.tokens_series.len(), 500);
+    }
+
+    /// The three-way termination verdict: a completed run is `Finished`,
+    /// a round-budget hit is `Capped`, and a stall (no completion for
+    /// `stall_rounds` consecutive rounds — the §5.2 clearing livelock)
+    /// is `Diverged`.
+    #[test]
+    fn termination_verdicts_cover_all_exits() {
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 5, 7)]);
+        let out = run_mcsf(&inst);
+        assert_eq!(out.terminated, Termination::Finished);
+
+        let reqs: Vec<Request> = (0..12).map(|i| Request::new(i, 0.0, 2, 20)).collect();
+        let inst = Instance::new(60, reqs);
+        let capped = run(
+            &inst,
+            &mut AlphaProtection::new(0.05, 1.0),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig {
+                max_rounds: 200,
+                stall_rounds: 1_000_000,
+                record_series: false,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(!capped.finished);
+        assert_eq!(capped.terminated, Termination::Capped);
+
+        let diverged = run(
+            &inst,
+            &mut AlphaProtection::new(0.05, 1.0),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig {
+                max_rounds: 1_000_000,
+                stall_rounds: 200,
+                record_series: false,
+                ..SimConfig::default()
+            },
+        )
+        .unwrap();
+        assert!(!diverged.finished);
+        assert_eq!(diverged.terminated, Termination::Diverged);
+    }
+
+    /// The queue-depth series is recorded alongside the memory series —
+    /// one sample per executed round, on both the execute and the
+    /// overflow-clearing branches.
+    #[test]
+    fn queue_series_aligns_with_rounds() {
+        let reqs: Vec<Request> = (0..18).map(|i| Request::new(i, 0.0, 2, 4)).collect();
+        let inst = Instance::new(60, reqs);
+        let out = run(
+            &inst,
+            &mut AlphaProtection::new(0.05, 0.5),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert!(out.overflow_events > 0, "expected clearing events");
+        assert_eq!(out.queue_series.len(), out.mem_series.len());
+        assert_eq!(out.rounds as usize, out.queue_series.len());
+        // The queue drains by the end of a finished run.
+        assert_eq!(out.queue_series.last().unwrap().1, 0);
+    }
+
+    /// Flow-control smoke through the single-worker driver: a tight
+    /// queue threshold under a burst rejects, retries with backoff, and
+    /// eventually sheds the overflow; counters land in `outcome.flow`
+    /// and shed requests never produce a completion record.
+    #[test]
+    fn run_flow_sheds_under_a_tight_threshold() {
+        use crate::core::ClassSet;
+        use crate::flow::FlowSpec;
+
+        // 20 simultaneous requests, each cost 5 + 3 + 1 = 9; budget 30.
+        // threshold=1 ⇒ admit while queued_demand + cost ≤ 30.
+        let reqs: Vec<Request> = (0..20).map(|i| Request::new(i, 0.0, 5, 3)).collect();
+        let inst = Instance::new(30, reqs);
+        let mut spec = FlowSpec::new("queue-threshold:threshold=1");
+        spec.retry.jitter = 0.0;
+        let mut flow = FlowControl::from_spec(&spec, &ClassSet::default(), 7).unwrap();
+        let out = run_flow(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            7,
+            SimConfig::default(),
+            &mut flow,
+        )
+        .unwrap();
+        assert!(out.finished, "admitted work must still complete");
+        let stats = out.flow.as_ref().expect("flow stats attached");
+        assert_eq!(stats.offered, 20);
+        assert!(stats.admitted < 20, "threshold must reject some");
+        assert!(stats.rejected > 0);
+        assert_eq!(out.per_request.len(), stats.admitted);
+        // Every request is accounted: admitted or shed (retries are
+        // re-submissions of the same request, not new offers).
+        assert_eq!(stats.admitted + stats.shed(), 20);
+    }
+
+    /// With admission "none" the flow layer is a pass-through: every
+    /// request admitted, zero rejects, and the outcome matches a plain
+    /// run field-for-field (the broad corpus check is
+    /// tests/flow_reduction.rs).
+    #[test]
+    fn admit_all_flow_matches_plain_run() {
+        use crate::core::ClassSet;
+        use crate::flow::FlowSpec;
+        use crate::workload::synthetic;
+
+        let mut rng = Rng::new(31);
+        let inst = synthetic::arrival_model_1(&mut rng);
+        let plain = run(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            5,
+            SimConfig::default(),
+        )
+        .unwrap();
+        let spec = FlowSpec::new("none");
+        let mut flow = FlowControl::from_spec(&spec, &inst.classes, 5).unwrap();
+        let flowed = run_flow(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            5,
+            SimConfig::default(),
+            &mut flow,
+        )
+        .unwrap();
+        assert_eq!(plain.per_request, flowed.per_request);
+        assert_eq!(plain.rounds, flowed.rounds);
+        assert_eq!(plain.mem_series, flowed.mem_series);
+        assert_eq!(plain.queue_series, flowed.queue_series);
+        let stats = flowed.flow.unwrap();
+        assert_eq!(stats.offered, inst.n());
+        assert_eq!(stats.admitted, inst.n());
+        assert_eq!(stats.rejected, 0);
     }
 }

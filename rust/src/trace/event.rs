@@ -14,7 +14,16 @@
 //! ["ovf",   t, round, worker, usage]            KV overflow (clearing)
 //! ["evict", t, round, worker, id]               eviction during clearing
 //! ["done",  t, round, worker, id]               completion
+//! ["reject", t, id, attempt, s, o, pred, class] admission refused (flow control)
+//! ["retry", t, id, attempt, at]                 client re-submission scheduled for `at`
+//! ["shed",  t, id, attempts, class]             retry budget exhausted, dropped
 //! ```
+//!
+//! The three flow-control events carry no `worker` field: admission sits
+//! *ahead* of routing, so a rejected attempt never touched a worker. A
+//! `reject` carries the full request body (like an arrival) because a
+//! shed request produces no arrival event at all — replay rebuilds such
+//! requests from their first rejection.
 //!
 //! Bit-exactness across a disk round-trip is load-bearing: replay
 //! verification compares event streams with `PartialEq` over `f64`
@@ -90,6 +99,35 @@ pub enum TraceEvent {
         round: u64,
         worker: usize,
         id: RequestId,
+    },
+    /// Flow control refused submission attempt `attempt` (1-based) of
+    /// `id` at time `t`. Carries the full request body so replay can
+    /// rebuild requests that were never admitted; for a retried request,
+    /// the attempt-1 rejection's `t` is the original arrival time.
+    Reject {
+        t: f64,
+        id: RequestId,
+        attempt: u32,
+        s: u64,
+        o: u64,
+        pred: u64,
+        class: ClassId,
+    },
+    /// After the rejection of attempt `attempt − 1`, the modeled client
+    /// scheduled re-submission attempt `attempt` for time `at`.
+    Retry {
+        t: f64,
+        id: RequestId,
+        attempt: u32,
+        at: f64,
+    },
+    /// `id` exhausted its retry budget after `attempts` submissions and
+    /// was permanently dropped.
+    Shed {
+        t: f64,
+        id: RequestId,
+        attempts: u32,
+        class: ClassId,
     },
 }
 
@@ -168,6 +206,43 @@ impl TraceEvent {
                 Json::from(round),
                 Json::from(worker),
                 Json::from(id),
+            ]),
+            TraceEvent::Reject {
+                t,
+                id,
+                attempt,
+                s,
+                o,
+                pred,
+                class,
+            } => Json::Arr(vec![
+                Json::from("reject"),
+                Json::from(t),
+                Json::from(id),
+                Json::from(attempt),
+                Json::from(s),
+                Json::from(o),
+                Json::from(pred),
+                Json::from(class),
+            ]),
+            TraceEvent::Retry { t, id, attempt, at } => Json::Arr(vec![
+                Json::from("retry"),
+                Json::from(t),
+                Json::from(id),
+                Json::from(attempt),
+                Json::from(at),
+            ]),
+            TraceEvent::Shed {
+                t,
+                id,
+                attempts,
+                class,
+            } => Json::Arr(vec![
+                Json::from("shed"),
+                Json::from(t),
+                Json::from(id),
+                Json::from(attempts),
+                Json::from(class),
             ]),
         }
     }
@@ -254,6 +329,36 @@ impl TraceEvent {
                     id: int(4)?,
                 })
             }
+            "reject" => {
+                want(8)?;
+                Ok(TraceEvent::Reject {
+                    t: num(1)?,
+                    id: int(2)?,
+                    attempt: int(3)? as u32,
+                    s: int(4)? as u64,
+                    o: int(5)? as u64,
+                    pred: int(6)? as u64,
+                    class: int(7)?,
+                })
+            }
+            "retry" => {
+                want(5)?;
+                Ok(TraceEvent::Retry {
+                    t: num(1)?,
+                    id: int(2)?,
+                    attempt: int(3)? as u32,
+                    at: num(4)?,
+                })
+            }
+            "shed" => {
+                want(5)?;
+                Ok(TraceEvent::Shed {
+                    t: num(1)?,
+                    id: int(2)?,
+                    attempts: int(3)? as u32,
+                    class: int(4)?,
+                })
+            }
             other => Err(anyhow!("unknown trace event tag '{other}'")),
         }
     }
@@ -332,6 +437,15 @@ pub struct TraceMeta {
     pub record_series: bool,
     /// Whether hook-aware schedulers took the incremental path.
     pub incremental: bool,
+    /// Admission-policy spec ([`crate::flow::admission_by_name`]
+    /// grammar) when the run had flow control ahead of it; `None` (the
+    /// default, and the pre-flow schema) otherwise.
+    pub admission: Option<String>,
+    /// Shed mode (`priority` | `uniform`); only with `admission`.
+    pub shed: Option<String>,
+    /// Retry/backoff spec ([`crate::flow::RetryPolicy::parse`]
+    /// grammar); only with `admission`.
+    pub retry: Option<String>,
 }
 
 impl TraceMeta {
@@ -363,7 +477,36 @@ impl TraceMeta {
             stall_rounds: cfg.stall_rounds,
             record_series: cfg.record_series,
             incremental: cfg.incremental,
+            admission: None,
+            shed: None,
+            retry: None,
         }
+    }
+
+    /// Record a flow-control configuration (spec strings round-trip
+    /// through [`crate::flow::FlowSpec`]); replay rebuilds the admission
+    /// layer from these.
+    pub fn with_flow(mut self, flow: &crate::flow::FlowSpec) -> TraceMeta {
+        self.admission = Some(flow.admission.clone());
+        self.shed = Some(flow.shed.as_str().to_string());
+        self.retry = Some(flow.retry.spec_string());
+        self
+    }
+
+    /// The flow-control configuration recorded in this meta block, if
+    /// any.
+    pub fn flow_spec(&self) -> Result<Option<crate::flow::FlowSpec>> {
+        let Some(admission) = &self.admission else {
+            return Ok(None);
+        };
+        let mut spec = crate::flow::FlowSpec::new(admission);
+        if let Some(s) = &self.shed {
+            spec.shed = crate::flow::ShedMode::parse(s)?;
+        }
+        if let Some(r) = &self.retry {
+            spec.retry = crate::flow::RetryPolicy::parse(r)?;
+        }
+        Ok(Some(spec))
     }
 
     /// The engine config the run used (and replay must reuse — the caps
@@ -395,6 +538,15 @@ impl TraceMeta {
         }
         if let Some(rs) = self.router_stream {
             j = j.set("router_stream", rs.to_string());
+        }
+        if let Some(a) = &self.admission {
+            j = j.set("admission", a.as_str());
+        }
+        if let Some(s) = &self.shed {
+            j = j.set("shed", s.as_str());
+        }
+        if let Some(r) = &self.retry {
+            j = j.set("retry", r.as_str());
         }
         j.set("max_rounds", self.max_rounds)
             .set("stall_rounds", self.stall_rounds)
@@ -434,6 +586,12 @@ impl TraceMeta {
             stall_rounds: j.req_usize("stall_rounds")? as u64,
             record_series: req_bool("record_series")?,
             incremental: req_bool("incremental")?,
+            admission: j
+                .get("admission")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            shed: j.get("shed").and_then(Json::as_str).map(str::to_string),
+            retry: j.get("retry").and_then(Json::as_str).map(str::to_string),
         })
     }
 }
@@ -614,6 +772,27 @@ mod tests {
                 worker: 0,
                 id: 0,
             },
+            TraceEvent::Reject {
+                t: 0.25,
+                id: 1,
+                attempt: 1,
+                s: 4,
+                o: 6,
+                pred: 8,
+                class: 2,
+            },
+            TraceEvent::Retry {
+                t: 0.25,
+                id: 1,
+                attempt: 2,
+                at: 0.875,
+            },
+            TraceEvent::Shed {
+                t: 3.5,
+                id: 1,
+                attempts: 4,
+                class: 2,
+            },
         ]
     }
 
@@ -634,6 +813,9 @@ mod tests {
             stall_rounds: 1_500,
             record_series: true,
             incremental: false,
+            admission: None,
+            shed: None,
+            retry: None,
         }
     }
 
@@ -672,6 +854,14 @@ mod tests {
         };
         let back = TraceMeta::from_json(&meta.to_json()).unwrap();
         assert_eq!(back, meta);
+        // The flow-control shape round-trips and re-parses into a spec.
+        let flow = crate::flow::FlowSpec::new("queue-threshold:threshold=1.5");
+        let meta = sample_meta().with_flow(&flow);
+        let back = TraceMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(back, meta);
+        assert_eq!(back.flow_spec().unwrap(), Some(flow));
+        // Pre-flow metas (no admission fields) read back as flow-less.
+        assert_eq!(sample_meta().flow_spec().unwrap(), None);
     }
 
     #[test]
@@ -726,7 +916,7 @@ mod tests {
         for ev in sample_events() {
             clone.record(ev);
         }
-        assert_eq!(sink.len(), 6);
+        assert_eq!(sink.len(), sample_events().len());
         sink.publish_budget(1234);
         assert_eq!(sink.budget(), 1234);
         let drained = sink.take();

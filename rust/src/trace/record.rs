@@ -9,12 +9,13 @@
 use super::event::{Trace, TraceKind, TraceMeta, TraceSink};
 use crate::cluster::router_by_name_classed;
 use crate::core::Instance;
+use crate::flow::{FlowControl, FlowSpec};
 use crate::metrics::{FleetOutcome, SimOutcome};
 use crate::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use crate::predictor::Predictor;
 use crate::sched::{by_name_classed, Scheduler};
 use crate::sim::cluster::{run_fleet_inner, ROUTER_STREAM};
-use crate::sim::engine::{clamped_predictions, run_with_preds};
+use crate::sim::engine::{clamped_predictions, run_with_preds_flow};
 use crate::sim::SimConfig;
 use crate::util::error::{anyhow, Result};
 
@@ -55,6 +56,9 @@ fn meta_from_cfg(
         stall_rounds: cfg.stall_rounds,
         record_series: cfg.record_series,
         incremental: cfg.incremental,
+        admission: None,
+        shed: None,
+        retry: None,
     }
 }
 
@@ -71,10 +75,32 @@ pub fn record_sim(
     seed: u64,
     cfg: SimConfig,
 ) -> Result<(SimOutcome, Trace)> {
+    record_sim_flow(inst, algo, predictor, perf, perf_name, seed, cfg, None)
+}
+
+/// [`record_sim`] with an optional flow-control layer: the admission /
+/// shed / retry spec is stamped into the trace meta and every
+/// reject/retry/shed decision is recorded, so replay can rebuild the
+/// identical flow layer and bit-verify the full decision stream.
+#[allow(clippy::too_many_arguments)]
+pub fn record_sim_flow(
+    inst: &Instance,
+    algo: &str,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    perf_name: &str,
+    seed: u64,
+    cfg: SimConfig,
+    flow: Option<&FlowSpec>,
+) -> Result<(SimOutcome, Trace)> {
     let mut sched = by_name_classed(algo, &inst.classes)?;
     let preds = clamped_predictions(inst, predictor, inst.m)?;
     let sink = TraceSink::new();
-    let out = run_with_preds(
+    let mut fc = match flow {
+        Some(spec) => Some(FlowControl::from_spec(spec, &inst.classes, seed)?),
+        None => None,
+    };
+    let out = run_with_preds_flow(
         inst,
         sched.as_mut(),
         &preds,
@@ -82,8 +108,9 @@ pub fn record_sim(
         seed,
         cfg,
         Some(sink.clone()),
+        fc.as_mut(),
     )?;
-    let meta = meta_from_cfg(
+    let mut meta = meta_from_cfg(
         TraceKind::Sim,
         algo,
         None,
@@ -94,6 +121,9 @@ pub fn record_sim(
         inst,
         cfg,
     );
+    if let Some(spec) = flow {
+        meta = meta.with_flow(spec);
+    }
     Ok((
         out,
         Trace {
@@ -121,6 +151,37 @@ pub fn record_fleet(
     seed: u64,
     cfg: SimConfig,
 ) -> Result<(FleetOutcome, Trace)> {
+    record_fleet_flow(
+        inst,
+        algo,
+        router_spec,
+        workers,
+        worker_m,
+        predictor,
+        perf,
+        perf_name,
+        seed,
+        cfg,
+        None,
+    )
+}
+
+/// [`record_fleet`] with an optional flow-control layer ahead of
+/// routing; see [`record_sim_flow`].
+#[allow(clippy::too_many_arguments)]
+pub fn record_fleet_flow(
+    inst: &Instance,
+    algo: &str,
+    router_spec: &str,
+    workers: usize,
+    worker_m: Option<u64>,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    perf_name: &str,
+    seed: u64,
+    cfg: SimConfig,
+    flow: Option<&FlowSpec>,
+) -> Result<(FleetOutcome, Trace)> {
     let mut scheds: Vec<Box<dyn Scheduler>> = (0..workers.max(1))
         .map(|_| by_name_classed(algo, &inst.classes))
         .collect::<Result<_>>()?;
@@ -128,6 +189,10 @@ pub fn record_fleet(
     let m = worker_m.unwrap_or(inst.m);
     let preds = clamped_predictions(inst, predictor, m)?;
     let sink = TraceSink::new();
+    let mut fc = match flow {
+        Some(spec) => Some(FlowControl::from_spec(spec, &inst.classes, seed)?),
+        None => None,
+    };
     let out = run_fleet_inner(
         inst,
         &mut scheds,
@@ -138,8 +203,9 @@ pub fn record_fleet(
         seed,
         cfg,
         Some(sink.clone()),
+        fc.as_mut(),
     )?;
-    let meta = meta_from_cfg(
+    let mut meta = meta_from_cfg(
         TraceKind::Sim,
         algo,
         Some(router_spec),
@@ -150,6 +216,9 @@ pub fn record_fleet(
         inst,
         cfg,
     );
+    if let Some(spec) = flow {
+        meta = meta.with_flow(spec);
+    }
     Ok((
         out,
         Trace {

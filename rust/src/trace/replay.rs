@@ -20,11 +20,12 @@ use super::event::{Trace, TraceEvent, TraceKind, TraceSink};
 use crate::cluster::router::{Router, WorkerLoad};
 use crate::cluster::router_by_name_classed;
 use crate::core::{Instance, QueuedReq, Request};
+use crate::flow::FlowControl;
 use crate::metrics::{FleetOutcome, SimOutcome};
 use crate::perf::PerfModel;
 use crate::sched::{by_name_classed, Scheduler};
 use crate::sim::cluster::run_fleet_inner;
-use crate::sim::engine::run_with_preds;
+use crate::sim::engine::run_with_preds_flow;
 use crate::sim::SimError;
 use crate::util::rng::Rng;
 use std::fmt;
@@ -111,6 +112,16 @@ pub(crate) struct ReplaySetup {
 /// recorded ids aligned with reconstructed ones. Serve recordings
 /// interleave worker threads and use per-worker id spaces, so arrivals
 /// are re-sorted by `(t, worker, id)` and re-densified instead.
+///
+/// Flow-controlled sim recordings carry request bodies in *two* event
+/// kinds: an `Arrival` for admitted requests (timed at the effective —
+/// possibly retried — submission) and a `Reject` for every refused
+/// attempt (the attempt-1 reject is timed at the original client
+/// arrival). The first event seen per id is therefore always the
+/// original submission, which is what the instance is rebuilt from —
+/// including requests that were shed and never produced an `Arrival` at
+/// all. Serve recordings apply flow control client-side and count only
+/// admitted requests in `meta.n`, so their rejects are skipped here.
 pub(crate) fn reconstruct(trace: &Trace) -> Result<ReplaySetup, ReplayError> {
     struct Arr {
         t: f64,
@@ -123,18 +134,19 @@ pub(crate) fn reconstruct(trace: &Trace) -> Result<ReplaySetup, ReplayError> {
     }
     let meta = &trace.meta;
     let mut arrivals: Vec<Arr> = Vec::new();
+    let mut seen: Vec<bool> = Vec::new();
+    let mut first_seen = |arrivals: &mut Vec<Arr>, a: Arr| {
+        if a.id >= seen.len() {
+            seen.resize(a.id + 1, false);
+        }
+        if !seen[a.id] {
+            seen[a.id] = true;
+            arrivals.push(a);
+        }
+    };
     for ev in &trace.events {
-        if let TraceEvent::Arrival {
-            t,
-            worker,
-            id,
-            s,
-            o,
-            pred,
-            class,
-        } = *ev
-        {
-            arrivals.push(Arr {
+        match *ev {
+            TraceEvent::Arrival {
                 t,
                 worker,
                 id,
@@ -142,7 +154,45 @@ pub(crate) fn reconstruct(trace: &Trace) -> Result<ReplaySetup, ReplayError> {
                 o,
                 pred,
                 class,
-            });
+            } => {
+                let a = Arr {
+                    t,
+                    worker,
+                    id,
+                    s,
+                    o,
+                    pred,
+                    class,
+                };
+                if meta.kind == TraceKind::Sim {
+                    first_seen(&mut arrivals, a);
+                } else {
+                    arrivals.push(a);
+                }
+            }
+            TraceEvent::Reject {
+                t,
+                id,
+                s,
+                o,
+                pred,
+                class,
+                ..
+            } if meta.kind == TraceKind::Sim => {
+                first_seen(
+                    &mut arrivals,
+                    Arr {
+                        t,
+                        worker: 0,
+                        id,
+                        s,
+                        o,
+                        pred,
+                        class,
+                    },
+                );
+            }
+            _ => {}
         }
     }
     if arrivals.len() != meta.n {
@@ -274,7 +324,8 @@ pub fn replay_sim(trace: &Trace, perf: &dyn PerfModel) -> Result<SimOutcome, Rep
     let mut sched = by_name_classed(&meta.algo, &meta.classes)
         .map_err(|e| malformed(format!("unknown scheduler '{}': {e}", meta.algo)))?;
     let sink = TraceSink::new();
-    let out = run_with_preds(
+    let mut fc = rebuild_flow(trace)?;
+    let out = run_with_preds_flow(
         &setup.inst,
         sched.as_mut(),
         &setup.preds,
@@ -282,11 +333,34 @@ pub fn replay_sim(trace: &Trace, perf: &dyn PerfModel) -> Result<SimOutcome, Rep
         meta.seed,
         meta.sim_config(),
         Some(sink.clone()),
+        fc.as_mut(),
     )?;
     if meta.kind == TraceKind::Sim {
         diff_events(&trace.events, &sink.take())?;
     }
     Ok(out)
+}
+
+/// Rebuild the recorded flow layer for a sim replay: admission, shed
+/// mode and retry policy come from the meta block, the backoff jitter
+/// re-keys off the recorded seed — so every reject/retry/shed decision
+/// re-derives exactly and falls under the event diff. Serve traces
+/// applied flow control client-side (only admitted requests are in the
+/// trace), so they replay with no flow layer.
+fn rebuild_flow(trace: &Trace) -> Result<Option<FlowControl>, ReplayError> {
+    let meta = &trace.meta;
+    if meta.kind != TraceKind::Sim {
+        return Ok(None);
+    }
+    let Some(spec) = meta
+        .flow_spec()
+        .map_err(|e| malformed(format!("bad flow spec: {e}")))?
+    else {
+        return Ok(None);
+    };
+    FlowControl::from_spec(&spec, &meta.classes, meta.seed)
+        .map(Some)
+        .map_err(|e| malformed(format!("bad flow spec: {e}")))
 }
 
 /// Replay a fleet trace through [`crate::sim::cluster`].
@@ -313,6 +387,7 @@ pub fn replay_fleet(trace: &Trace, perf: &dyn PerfModel) -> Result<FleetOutcome,
             let mut router = router_by_name_classed(router_spec, &meta.classes)
                 .map_err(|e| malformed(format!("unknown router '{router_spec}': {e}")))?;
             let sink = TraceSink::new();
+            let mut fc = rebuild_flow(trace)?;
             let out = run_fleet_inner(
                 &setup.inst,
                 &mut scheds,
@@ -323,6 +398,7 @@ pub fn replay_fleet(trace: &Trace, perf: &dyn PerfModel) -> Result<FleetOutcome,
                 meta.seed,
                 meta.sim_config(),
                 Some(sink.clone()),
+                fc.as_mut(),
             )?;
             diff_events(&trace.events, &sink.take())?;
             Ok(out)
@@ -340,6 +416,7 @@ pub fn replay_fleet(trace: &Trace, perf: &dyn PerfModel) -> Result<FleetOutcome,
                 perf,
                 meta.seed,
                 meta.sim_config(),
+                None,
                 None,
             )?;
             Ok(out)

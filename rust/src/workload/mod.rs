@@ -4,10 +4,12 @@
 
 pub mod classes;
 pub mod lmsys;
+pub mod overload;
 pub mod synthetic;
 
 pub use classes::ClassMixGen;
 pub use lmsys::LmsysGen;
+pub use overload::{capacity_per_sec, OverloadGen, RateProfile};
 
 use crate::core::Instance;
 use crate::util::rng::Rng;

@@ -1,0 +1,368 @@
+//! Overload scenario generators: non-homogeneous Poisson arrival
+//! processes whose rate deliberately exceeds serving capacity.
+//!
+//! The paper's stability question (§4: does the scheduler keep queues
+//! bounded?) only bites when offered load crosses capacity, so these
+//! generators are parameterized *relative to an estimated capacity* —
+//! [`capacity_per_sec`] inverts the perf model at a representative
+//! steady-state batch to get a requests-per-second ceiling, and every
+//! [`preset`] expresses its rate profile as a multiple of it. Four
+//! canonical shapes cover the overload taxonomy:
+//!
+//! * **sustained** — λ = 1.5× capacity for the whole horizon: the
+//!   divergent regime an admission policy must convert into bounded
+//!   queues by shedding;
+//! * **flash-crowd** — a 10× spike on a 0.6× base (the "million users
+//!   arrive at once" event): tests time-to-recover;
+//! * **diurnal** — a sinusoidal day/night cycle whose crest exceeds
+//!   capacity: overload arrives and leaves smoothly;
+//! * **bursts** — short correlated 5× bursts on a 0.6× base: repeated
+//!   shock-and-drain cycles.
+//!
+//! Arrival times come from thinning a homogeneous Poisson process at the
+//! profile's peak rate (accept an arrival at `t` with probability
+//! `rate(t) / peak`), the textbook exact NHPP sampler. Request bodies
+//! reuse the LMSYS-calibrated marginals with per-class length scaling;
+//! unlike [`super::ClassMixGen`] there is **no burst coalescing** — the
+//! burstiness here lives in the arrival rate itself, so the profiles
+//! stay interpretable as λ(t).
+
+use super::lmsys::LmsysGen;
+use crate::core::{ClassSet, Instance, Request};
+use crate::perf::{BatchComposition, PerfModel};
+use crate::util::error::{anyhow, Result};
+use crate::util::rng::Rng;
+
+/// Class mix the presets serve: latency-sensitive interactive traffic,
+/// throughput batch, and sheddable background.
+pub const PRESET_CLASSES: &str = "interactive:0.6,batch:0.3,background:0.1";
+
+/// Preset names [`preset`] accepts.
+pub const PRESET_NAMES: [&str; 4] = ["sustained", "flash-crowd", "diurnal", "bursts"];
+
+/// A deterministic arrival-rate profile λ(t) in requests/sec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateProfile {
+    /// Constant rate.
+    Sustained { lambda: f64 },
+    /// Base rate with one `mult`× spike over `[start, start + duration)`.
+    Flash {
+        base: f64,
+        mult: f64,
+        start: f64,
+        duration: f64,
+    },
+    /// Sinusoidal cycle: `mean · (1 + amplitude · sin(2πt / period))`.
+    Diurnal {
+        mean: f64,
+        amplitude: f64,
+        period: f64,
+    },
+    /// Base rate with a `mult`× burst of length `duration` at the start
+    /// of every `period` (correlated cross-class bursts).
+    Bursts {
+        base: f64,
+        mult: f64,
+        period: f64,
+        duration: f64,
+    },
+}
+
+impl RateProfile {
+    /// λ(t).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            RateProfile::Sustained { lambda } => lambda,
+            RateProfile::Flash {
+                base,
+                mult,
+                start,
+                duration,
+            } => {
+                if t >= start && t < start + duration {
+                    base * mult
+                } else {
+                    base
+                }
+            }
+            RateProfile::Diurnal {
+                mean,
+                amplitude,
+                period,
+            } => mean * (1.0 + amplitude * (std::f64::consts::TAU * t / period).sin()),
+            RateProfile::Bursts {
+                base,
+                mult,
+                period,
+                duration,
+            } => {
+                if t.rem_euclid(period) < duration {
+                    base * mult
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// max_t λ(t) — the thinning envelope.
+    pub fn peak_rate(&self) -> f64 {
+        match *self {
+            RateProfile::Sustained { lambda } => lambda,
+            RateProfile::Flash { base, mult, .. } => base * mult,
+            RateProfile::Diurnal {
+                mean, amplitude, ..
+            } => mean * (1.0 + amplitude),
+            RateProfile::Bursts { base, mult, .. } => base * mult,
+        }
+    }
+}
+
+/// `n` arrival times of the non-homogeneous Poisson process with rate
+/// `profile.rate_at(t)`, sampled exactly by thinning at the peak rate.
+pub fn nhpp_arrival_times(n: usize, profile: &RateProfile, rng: &mut Rng) -> Vec<f64> {
+    let lmax = profile.peak_rate();
+    assert!(lmax > 0.0 && lmax.is_finite(), "bad peak rate {lmax}");
+    let mut t = 0.0;
+    let mut times = Vec::with_capacity(n);
+    while times.len() < n {
+        t += rng.exponential(lmax);
+        if rng.f64() * lmax <= profile.rate_at(t) {
+            times.push(t);
+        }
+    }
+    times
+}
+
+/// Estimated serving capacity in requests/sec for KV budget `m` under
+/// `perf`, at the given mean prompt/output lengths.
+///
+/// The steady-state model: the KV budget packs
+/// `conc = m / (mean_s + mean_o / 2)` concurrent requests (each holds
+/// its prompt plus on average half its output). Each needs `mean_o`
+/// decode iterations, and per iteration `conc / mean_o` fresh requests
+/// enter, bringing `mean_s` prefill tokens each. The iteration time of
+/// that representative batch then gives
+/// `capacity = conc / (mean_o · dt)` completions per second. This is a
+/// back-of-envelope ceiling (no queueing slack, perfect packing) — which
+/// is exactly what an *overload* generator should exceed.
+pub fn capacity_per_sec(m: u64, perf: &dyn PerfModel, mean_s: f64, mean_o: f64) -> f64 {
+    assert!(mean_s > 0.0 && mean_o > 0.0);
+    let conc = (m as f64 / (mean_s + mean_o / 2.0)).max(1.0);
+    let batch = BatchComposition {
+        prefill_tokens: (conc * mean_s / mean_o).round() as u64,
+        decode_reqs: conc.round() as u64,
+        kv_tokens: (conc * (mean_s + mean_o / 2.0)).round() as u64,
+    };
+    let dt = perf.iteration_time(&batch);
+    assert!(dt > 0.0 && dt.is_finite(), "bad iteration time {dt}");
+    conc / (mean_o * dt)
+}
+
+/// Overload workload generator: NHPP arrivals shaped by a
+/// [`RateProfile`], LMSYS-calibrated bodies with per-class length
+/// scaling (no burst coalescing — the rate profile carries the shape).
+#[derive(Debug, Clone)]
+pub struct OverloadGen {
+    /// The traffic classes (shares, SLOs, length profiles).
+    pub classes: ClassSet,
+    /// The arrival-rate profile.
+    pub profile: RateProfile,
+    base: LmsysGen,
+}
+
+impl OverloadGen {
+    /// Build a generator over `classes` with peak cap `m` (one request
+    /// must fit in a worker's KV budget).
+    pub fn new(classes: ClassSet, profile: RateProfile, m: u64) -> OverloadGen {
+        OverloadGen {
+            classes,
+            profile,
+            base: LmsysGen::new(m),
+        }
+    }
+
+    /// Generate `n` requests under budget `m`. Deterministic given the
+    /// RNG state.
+    pub fn instance(&self, n: usize, m: u64, rng: &mut Rng) -> Instance {
+        let times = nhpp_arrival_times(n, &self.profile, rng);
+        let reqs = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let c = self.classes.draw_class(rng);
+                let (ps, os) = self
+                    .classes
+                    .get(c)
+                    .map(|p| (p.prompt_scale, p.output_scale))
+                    .unwrap_or((1.0, 1.0));
+                let (s, o) = self.base.sample_lengths_scaled(rng, ps, os);
+                Request::new(i, t, s, o).with_class(c)
+            })
+            .collect();
+        Instance::new(m, reqs).with_classes(self.classes.clone())
+    }
+}
+
+/// Build a named overload preset sized for an `n`-request run against
+/// KV budget `m` under `perf`. The rate profile is expressed relative
+/// to [`capacity_per_sec`] at the LMSYS means; time constants scale
+/// with the horizon `T0 = n / base_rate` so every preset's shape is
+/// visible regardless of `n`.
+pub fn preset(name: &str, m: u64, perf: &dyn PerfModel, n: usize) -> Result<OverloadGen> {
+    use super::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
+    let cap = capacity_per_sec(m, perf, PROMPT_MEAN, OUTPUT_MEAN);
+    let classes = ClassSet::parse(PRESET_CLASSES).expect("preset class spec parses");
+    let n = n.max(1) as f64;
+    let profile = match name {
+        "sustained" => RateProfile::Sustained { lambda: 1.5 * cap },
+        "flash-crowd" => {
+            let base = 0.6 * cap;
+            let t0 = n / base;
+            RateProfile::Flash {
+                base,
+                mult: 10.0,
+                start: 0.3 * t0,
+                duration: 0.1 * t0,
+            }
+        }
+        "diurnal" => {
+            let mean = 0.8 * cap;
+            RateProfile::Diurnal {
+                mean,
+                amplitude: 0.6,
+                period: n / mean / 2.0,
+            }
+        }
+        "bursts" => {
+            let base = 0.6 * cap;
+            let t0 = n / base;
+            RateProfile::Bursts {
+                base,
+                mult: 5.0,
+                period: t0 / 6.0,
+                duration: t0 / 30.0,
+            }
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown overload preset '{other}' (sustained | flash-crowd | diurnal | bursts)"
+            ))
+        }
+    };
+    Ok(OverloadGen::new(classes, profile, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::UnitTime;
+
+    #[test]
+    fn rate_profiles_have_the_declared_shapes() {
+        let f = RateProfile::Flash {
+            base: 10.0,
+            mult: 10.0,
+            start: 5.0,
+            duration: 2.0,
+        };
+        assert_eq!(f.rate_at(0.0), 10.0);
+        assert_eq!(f.rate_at(5.0), 100.0);
+        assert_eq!(f.rate_at(6.9), 100.0);
+        assert_eq!(f.rate_at(7.0), 10.0);
+        assert_eq!(f.peak_rate(), 100.0);
+
+        let d = RateProfile::Diurnal {
+            mean: 10.0,
+            amplitude: 0.5,
+            period: 4.0,
+        };
+        assert!((d.rate_at(1.0) - 15.0).abs() < 1e-9); // crest
+        assert!((d.rate_at(3.0) - 5.0).abs() < 1e-9); // trough
+        assert!((d.peak_rate() - 15.0).abs() < 1e-9);
+
+        let b = RateProfile::Bursts {
+            base: 10.0,
+            mult: 5.0,
+            period: 10.0,
+            duration: 1.0,
+        };
+        assert_eq!(b.rate_at(0.5), 50.0);
+        assert_eq!(b.rate_at(1.5), 10.0);
+        assert_eq!(b.rate_at(10.5), 50.0);
+    }
+
+    #[test]
+    fn thinning_matches_a_constant_rate() {
+        let mut rng = Rng::new(41);
+        let p = RateProfile::Sustained { lambda: 50.0 };
+        let times = nhpp_arrival_times(10_000, &p, &mut rng);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        let span = *times.last().unwrap();
+        // 10k arrivals at 50/s ≈ 200 s.
+        assert!((span - 200.0).abs() < 15.0, "span={span}");
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_in_the_spike() {
+        let mut rng = Rng::new(42);
+        let p = RateProfile::Flash {
+            base: 10.0,
+            mult: 10.0,
+            start: 20.0,
+            duration: 10.0,
+        };
+        let times = nhpp_arrival_times(4000, &p, &mut rng);
+        let in_spike = times.iter().filter(|&&t| (20.0..30.0).contains(&t)).count();
+        // Spike rate 100/s over 10 s ≈ 1000 arrivals vs 10/s elsewhere;
+        // the spike window must hold far more than its length share.
+        assert!(in_spike > 600, "only {in_spike} arrivals in the spike");
+        let before = times.iter().filter(|&&t| t < 20.0).count();
+        assert!((100..400).contains(&before), "{before} arrivals before the spike");
+    }
+
+    #[test]
+    fn capacity_estimate_is_sane_under_unit_time() {
+        use crate::workload::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
+        // Unit rounds: dt = 1, conc = m / (s̄ + ō/2), cap = conc / ō.
+        let cap = capacity_per_sec(16_492, &UnitTime, PROMPT_MEAN, OUTPUT_MEAN);
+        let conc = 16_492.0 / (PROMPT_MEAN + OUTPUT_MEAN / 2.0);
+        assert!((cap - conc / OUTPUT_MEAN).abs() < 1e-9);
+        assert!(cap > 1.0 && cap < 10.0, "cap={cap}");
+    }
+
+    #[test]
+    fn presets_build_feasible_classed_instances() {
+        for name in PRESET_NAMES {
+            let gen = preset(name, 500, &UnitTime, 300).unwrap();
+            let mut rng = Rng::new(13);
+            let inst = gen.instance(300, 500, &mut rng);
+            assert_eq!(inst.n(), 300, "{name}");
+            assert!(inst.is_feasible(), "{name}");
+            assert_eq!(inst.classes.len(), 3, "{name}");
+            assert!(inst.requests.iter().any(|r| r.class > 0), "{name}");
+        }
+        assert!(preset("nope", 500, &UnitTime, 300).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let gen = preset("bursts", 500, &UnitTime, 200).unwrap();
+        let a = gen.instance(200, 500, &mut Rng::new(8));
+        let b = gen.instance(200, 500, &mut Rng::new(8));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sustained_preset_exceeds_capacity() {
+        use crate::workload::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
+        let cap = capacity_per_sec(500, &UnitTime, PROMPT_MEAN, OUTPUT_MEAN);
+        let gen = preset("sustained", 500, &UnitTime, 100).unwrap();
+        match gen.profile {
+            RateProfile::Sustained { lambda } => {
+                assert!((lambda - 1.5 * cap).abs() < 1e-9);
+            }
+            ref p => panic!("unexpected profile {p:?}"),
+        }
+    }
+}

@@ -10,16 +10,18 @@
 //! replaying clean (CI diffs them against fresh recordings).
 
 use kvsched::core::{ClassSet, Instance, Request};
+use kvsched::flow::FlowSpec;
 use kvsched::metrics::SimOutcome;
 use kvsched::perf::UnitTime;
 use kvsched::predictor::Predictor;
 use kvsched::sim::SimConfig;
 use kvsched::trace::{
-    record_fleet, record_sim, replay_fleet, replay_sim, ReplayError, Trace, TraceEvent,
+    record_fleet, record_fleet_flow, record_sim, record_sim_flow, replay_fleet, replay_sim,
+    ReplayError, Trace, TraceEvent,
 };
 use kvsched::util::prop::{forall_cases, usize_in};
 use kvsched::util::rng::Rng;
-use kvsched::workload::{synthetic, ClassMixGen};
+use kvsched::workload::{overload, synthetic, ClassMixGen};
 use std::path::PathBuf;
 
 /// Incremental implementations plus snapshot-only baselines — same mix
@@ -349,4 +351,139 @@ fn golden_traces_replay_bit_identically() {
     check_golden("slo_priority.trace", &strace);
     let sreplayed = replay_sim(&strace, &UnitTime).unwrap();
     assert_identical(&sout, &sreplayed, "golden slo_priority");
+}
+
+/// A sustained-overload instance small enough for the test suite but
+/// hot enough that queue-threshold admission actually rejects, retries,
+/// and sheds — so the recorded trace carries all three flow event kinds.
+fn overload_instance(seed: u64) -> Instance {
+    let gen = overload::preset("sustained", 140, &UnitTime, 80).unwrap();
+    gen.instance(80, 140, &mut Rng::new(seed))
+}
+
+/// Flow-controlled recordings (rejections, retries, sheds) replay to
+/// bit-identical outcomes — including the flow counters — on both
+/// engine paths and through the text round-trip, single-worker and
+/// fleet alike.
+#[test]
+fn overload_flow_records_replay_bit_identically() {
+    let inst = overload_instance(0x0BAD_CAFE);
+    let spec = FlowSpec::new("queue-threshold:threshold=0.6");
+    for inc in [true, false] {
+        let ctx = format!("overload sim inc={inc}");
+        let (out, trace) = record_sim_flow(
+            &inst,
+            "mcsf",
+            &Predictor::exact(),
+            &UnitTime,
+            "unit",
+            9,
+            cfg(inc),
+            Some(&spec),
+        )
+        .unwrap();
+        let stats = out.flow.as_ref().expect("flow stats recorded");
+        assert!(stats.rejected > 0, "{ctx}: the scenario must reject");
+        assert!(stats.retries > 0, "{ctx}: the scenario must retry");
+        assert!(
+            trace
+                .events
+                .iter()
+                .any(|e| matches!(e, TraceEvent::Retry { .. })),
+            "{ctx}: retry events recorded"
+        );
+        let replayed = replay_sim(&trace, &UnitTime)
+            .unwrap_or_else(|e| panic!("{ctx}: replay failed: {e}"));
+        assert_identical(&out, &replayed, &ctx);
+        assert_eq!(out.flow, replayed.flow, "{ctx}: flow counters");
+        let reparsed = Trace::from_text(&trace.to_text()).unwrap();
+        assert_eq!(trace, reparsed, "{ctx}: text round-trip");
+        let replayed2 = replay_sim(&reparsed, &UnitTime).unwrap();
+        assert_identical(&out, &replayed2, &ctx);
+    }
+
+    let (fout, ftrace) = record_fleet_flow(
+        &inst,
+        "mcsf",
+        "po2",
+        2,
+        None,
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+        Some(&spec),
+    )
+    .unwrap();
+    let freplayed = replay_fleet(&ftrace, &UnitTime).unwrap();
+    assert_eq!(fout.assigned(), freplayed.assigned(), "fleet assigned");
+    assert_eq!(fout.flow, freplayed.flow, "fleet flow counters");
+    for w in 0..2 {
+        assert_identical(
+            &fout.per_worker[w],
+            &freplayed.per_worker[w],
+            &format!("overload fleet worker={w}"),
+        );
+    }
+    let reparsed = Trace::from_text(&ftrace.to_text()).unwrap();
+    assert_eq!(ftrace, reparsed, "overload fleet text round-trip");
+}
+
+/// A tampered retry event — the modeled client re-arriving at the wrong
+/// instant — must surface as a divergence at exactly that event.
+#[test]
+fn tampered_retry_event_reports_divergence() {
+    let inst = overload_instance(0xBAD2);
+    let spec = FlowSpec::new("queue-threshold:threshold=0.6");
+    let (_, mut trace) = record_sim_flow(
+        &inst,
+        "mcsf",
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+        Some(&spec),
+    )
+    .unwrap();
+    let pos = trace
+        .events
+        .iter()
+        .position(|e| matches!(e, TraceEvent::Retry { .. }))
+        .expect("an overloaded qt run schedules retries");
+    if let TraceEvent::Retry { at, .. } = &mut trace.events[pos] {
+        *at += 0.25;
+    }
+    match replay_sim(&trace, &UnitTime) {
+        Err(ReplayError::Divergence(d)) => {
+            assert_eq!(d.index, pos, "divergence must point at the tampered retry");
+        }
+        Err(other) => panic!("expected a divergence, got: {other}"),
+        Ok(_) => panic!("tampered retry must not replay clean"),
+    }
+}
+
+/// The committed overload fixture: a sustained-overload queue-threshold
+/// run with rejections and retries must keep matching its golden trace
+/// and replaying bit-identically.
+#[test]
+fn golden_overload_trace_replays_bit_identically() {
+    let inst = overload_instance(0x601D_F10);
+    let spec = FlowSpec::new("queue-threshold:threshold=0.6");
+    let (out, trace) = record_sim_flow(
+        &inst,
+        "mcsf",
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+        Some(&spec),
+    )
+    .unwrap();
+    check_golden("overload_qt.trace", &trace);
+    let replayed = replay_sim(&trace, &UnitTime).unwrap();
+    assert_identical(&out, &replayed, "golden overload_qt");
+    assert_eq!(out.flow, replayed.flow, "golden overload_qt flow counters");
 }
