@@ -119,6 +119,15 @@ fn main() {
     // Baseline ledger at the repo root (EXPERIMENTS.md §Cluster).
     let doc = Json::obj()
         .set("bench", "perf_cluster")
+        .set(
+            "note",
+            "measured by `cargo bench --bench perf_cluster` (fleets with workers > 1 run on \
+             the scoped-thread parallel driver); CI regenerates this ledger on every push \
+             and gates it via tools/check_bench.py. Acceptance: (1) scaling — power-of-two \
+             throughput_req_per_s at the largest fleet must be \u{2265}2\u{00d7} its \
+             workers=1 value at matched per-worker load; (2) routing — power-of-two \
+             avg_latency_s must not exceed round-robin by more than 5% at any workers > 1.",
+        )
         .set("algo", "MC-SF")
         .set("workload", "lmsys")
         .set("m_per_worker", PAPER_M)

@@ -37,7 +37,7 @@ fn main() {
     let seed = args.u64_or("seed", 1);
 
     let perf = Llama70bA100x2::default();
-    let cap = capacity_per_sec(m, &perf, PROMPT_MEAN, OUTPUT_MEAN);
+    let cap = capacity_per_sec(m, &perf, PROMPT_MEAN, OUTPUT_MEAN).expect("capacity estimate");
     let base = 0.6 * cap;
     // Token-bucket refill matched to capacity in admission-cost units
     // (cost = s + õ + 1 per request).

@@ -1,4 +1,4 @@
-//! Perf: the serving hot paths. Two parts:
+//! Perf: the serving hot paths. Three parts:
 //!
 //! 1. **End-to-end sim throughput** (always runs): rounds/sec of the
 //!    whole engine round loop on an overloaded queue at
@@ -6,16 +6,23 @@
 //!    scheduling — the system-level number behind the L3 change-4 entry
 //!    in EXPERIMENTS.md §Perf. Baselines land in `BENCH_sim.json` at the
 //!    repo root.
-//! 2. **PJRT kernels** (needs `make artifacts`): per-iteration
+//! 2. **Event engine vs round engine** (always runs): the same workload
+//!    family at *low* utilization, where most rounds are quiet — the
+//!    regime `sim/events.rs` exists for. Reports the fast-path
+//!    composition (quiet/slow rounds, heap events), events/sec, and the
+//!    wall-clock speedup over the round-synchronous engine; the
+//!    reduction corpus (`tests/event_reduction.rs`) pins bit-identity,
+//!    this bench pins the speed claim. Rows join `BENCH_sim.json`.
+//! 3. **PJRT kernels** (needs `make artifacts`): per-iteration
 //!    decode/prefill latency by batch bucket, plus the host-side
 //!    gather/scatter overhead. Self-skips when artifacts are absent.
 
-use kvsched::bench::{bench_fn, fmt, Table};
+use kvsched::bench::{bench_fn, fmt, Compare, Table};
 use kvsched::core::{Instance, Request};
 use kvsched::prelude::*;
 use kvsched::runtime::kv_cache::{KvCache, RowCache};
 use kvsched::runtime::{engine::argmax, Engine};
-use kvsched::sim::{engine as sim_engine, SimConfig};
+use kvsched::sim::{engine as sim_engine, run_events_stats, SimConfig};
 use kvsched::util::cli::Args;
 use kvsched::util::json::Json;
 use std::time::Instant;
@@ -35,7 +42,7 @@ fn overloaded_instance(w: usize) -> Instance {
     Instance::new(m, reqs)
 }
 
-fn sim_throughput(args: &Args) {
+fn sim_throughput(args: &Args) -> Vec<Json> {
     let cap_rounds = args.u64_or("sim-rounds", 1500);
     let mut table = Table::new(
         "end-to-end sim throughput, overloaded queue (MC-SF, unit time)",
@@ -72,6 +79,7 @@ fn sim_throughput(args: &Args) {
             ]);
             rows.push(
                 Json::obj()
+                    .set("section", "overloaded")
                     .set("waiting", w)
                     .set("path", path)
                     .set("rounds", out.rounds)
@@ -82,18 +90,129 @@ fn sim_throughput(args: &Args) {
     }
     table.print();
     table.save_json("perf_sim_throughput");
+    rows
+}
 
-    let doc = Json::obj()
-        .set("bench", "perf_runtime/sim_throughput")
-        .set("max_rounds", cap_rounds)
-        .set("rows", Json::Arr(rows));
-    kvsched::bench::save_root_json("BENCH_sim.json", &doc);
+/// Low-utilization open-arrival instance: one request every `gap`
+/// rounds with mean decode length ≈ 25 tokens, so the offered load is
+/// ≈ `util` of the unit-time service rate and ≈ `1 - util` of all
+/// rounds are quiet (no completion due, nothing waiting).
+fn low_util_instance(n: usize, util: f64) -> Instance {
+    let mut rng = Rng::new((util * 1000.0) as u64);
+    let m = kvsched::sim::continuous::PAPER_M;
+    let gap = (25.0 / util).round();
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let s = rng.i64_range(5, 120) as u64;
+            let o = rng.i64_range(1, 49) as u64;
+            Request::new(i, i as f64 * gap, s, o)
+        })
+        .collect();
+    Instance::new(m, reqs)
+}
+
+fn event_vs_round(args: &Args) -> Vec<Json> {
+    let n = args.usize_or("events-n", 400);
+    let cfg = SimConfig {
+        max_rounds: 50_000_000,
+        record_series: false,
+        incremental: true,
+        ..SimConfig::default()
+    };
+    let mut cmp = Compare::new(
+        &format!("event-driven vs round engine at low utilization (MC-SF, unit time, n={n})"),
+        "round_rps",
+        "event_rps",
+        true,
+    );
+    let mut detail = Table::new(
+        "event engine fast-path composition",
+        &["util", "rounds", "quiet", "slow", "heap_events", "events_per_sec"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &util in &[0.1f64, 0.2, 0.3] {
+        let inst = low_util_instance(n, util);
+        let t0 = Instant::now();
+        let round_out = sim_engine::run(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &kvsched::perf::UnitTime,
+            1,
+            cfg,
+        )
+        .unwrap();
+        let round_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let t0 = Instant::now();
+        let (event_out, st) = run_events_stats(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &kvsched::perf::UnitTime,
+            1,
+            cfg,
+        )
+        .unwrap();
+        let event_s = t0.elapsed().as_secs_f64().max(1e-9);
+        // The reduction corpus pins full bit-identity; this cheap guard
+        // keeps the timed comparison apples-to-apples.
+        assert_eq!(round_out.rounds, event_out.rounds, "round count diverged");
+        assert_eq!(round_out.per_request, event_out.per_request, "outcomes diverged");
+        let rounds = event_out.rounds;
+        let round_rps = rounds as f64 / round_s;
+        let event_rps = rounds as f64 / event_s;
+        let events_per_sec = (st.slow_rounds + st.heap_events) as f64 / event_s;
+        let speedup = round_s / event_s;
+        cmp.row(&format!("util={util}"), round_rps, event_rps);
+        detail.row(&[
+            util.to_string(),
+            rounds.to_string(),
+            st.quiet_rounds.to_string(),
+            st.slow_rounds.to_string(),
+            st.heap_events.to_string(),
+            fmt(events_per_sec),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("section", "low_util")
+                .set("utilization", util)
+                .set("n", n)
+                .set("rounds", rounds)
+                .set("quiet_rounds", st.quiet_rounds)
+                .set("slow_rounds", st.slow_rounds)
+                .set("heap_events", st.heap_events)
+                .set("round_elapsed_s", round_s)
+                .set("event_elapsed_s", event_s)
+                .set("round_rounds_per_sec", round_rps)
+                .set("event_rounds_per_sec", event_rps)
+                .set("events_per_sec", events_per_sec)
+                .set("speedup_vs_round", speedup),
+        );
+    }
+    cmp.print();
+    detail.print();
+    detail.save_json("perf_event_engine");
+    rows
 }
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let iters = args.usize_or("iters", 20);
-    sim_throughput(&args);
+    let mut rows = sim_throughput(&args);
+    rows.extend(event_vs_round(&args));
+    let doc = Json::obj()
+        .set("bench", "perf_runtime")
+        .set(
+            "note",
+            "measured by `cargo bench --bench perf_runtime`; CI regenerates this ledger on \
+             every push and gates it via tools/check_bench.py. Acceptance: (1) overloaded — \
+             incremental rounds_per_sec \u{2265}2\u{00d7} snapshot at waiting \u{2265} 6400; \
+             (2) low_util — event-engine speedup_vs_round \u{2265}2\u{00d7} at every \
+             utilization \u{2264} 0.3.",
+        )
+        .set("max_rounds", args.u64_or("sim-rounds", 1500))
+        .set("rows", Json::Arr(rows));
+    kvsched::bench::save_root_json("BENCH_sim.json", &doc);
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("skipping PJRT sections of perf_runtime: run `make artifacts` first");

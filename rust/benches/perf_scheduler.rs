@@ -12,7 +12,7 @@
 //! re-heapifies all W candidates) is kept below for before/after
 //! comparison; both land in `BENCH_scheduler.json` at the repo root.
 
-use kvsched::bench::{bench_fn, fmt, Table};
+use kvsched::bench::{bench_fn, fmt, Compare, Table};
 use kvsched::core::{ActiveReq, QueuedReq};
 use kvsched::prelude::*;
 use kvsched::sched::Scheduler;
@@ -118,11 +118,13 @@ fn main() {
         "MC-SF admit cost vs queue length (incremental hot path, M=16492)",
         &["waiting", "mean_us", "p50_us", "admitted"],
     );
+    let mut inc_means: Vec<(usize, f64)> = Vec::new();
     for &w in &[100usize, 400, 1600, 6400, 25_600] {
         let rounds_per_seg = (iters as u64 * 10).max(100);
         let (seg_means, adm_per_round) = treadmill_round_cost(w, m, 8, rounds_per_seg);
         let mean_us = stats::mean(&seg_means);
         let p50_us = stats::median(&seg_means);
+        inc_means.push((w, mean_us));
         table.row(&[
             w.to_string(),
             fmt(mean_us),
@@ -148,6 +150,7 @@ fn main() {
         "MC-SF admit cost vs queue length (legacy snapshot path, 64 active)",
         &["waiting", "mean_us", "p50_us", "admitted"],
     );
+    let mut snap_means: Vec<(usize, f64)> = Vec::new();
     for &w in &[100usize, 400, 1600, 6400, 25_600] {
         let mut rng = Rng::new(w as u64);
         let active = mk_active(64, m, &mut rng);
@@ -158,6 +161,7 @@ fn main() {
             let mut rng2 = Rng::new(0);
             admitted = sched.admit(1, m, &active, &waiting, &mut rng2).len();
         });
+        snap_means.push((w, r.mean_us()));
         table.row(&[
             w.to_string(),
             fmt(r.mean_us()),
@@ -174,6 +178,20 @@ fn main() {
     }
     table.print();
     table.save_json("perf_scheduler_queue_snapshot");
+
+    // 1c. Before/after: snapshot vs incremental per-round cost at each
+    //     queue length (the ledger's headline claim, CI-gated at 6400).
+    let mut cmp = Compare::new(
+        "per-round admit cost: snapshot (before) vs incremental (after)",
+        "snapshot_us",
+        "incremental_us",
+        false,
+    );
+    for (&(w, inc), &(ws, snap)) in inc_means.iter().zip(&snap_means) {
+        assert_eq!(w, ws, "queue-length sweeps out of step");
+        cmp.row(&format!("W={w}"), snap, inc);
+    }
+    cmp.print();
 
     // 2. admit cost vs M (Prop 4.2: O(M²) per round; batch size grows
     //    with M so cost should scale roughly quadratically then flatten
@@ -218,6 +236,12 @@ fn main() {
     // Baseline ledger at the repo root (EXPERIMENTS.md §Perf).
     let doc = Json::obj()
         .set("bench", "perf_scheduler")
+        .set(
+            "note",
+            "measured by `cargo bench --bench perf_scheduler`; CI regenerates this ledger \
+             on every push and gates it via tools/check_bench.py. Acceptance: incremental \
+             mean_us at waiting=6400 must be \u{2265}3\u{00d7} below snapshot mean_us.",
+        )
         .set("m", m)
         .set("iters", iters)
         .set("rows", Json::Arr(bench_rows));

@@ -1,11 +1,15 @@
 //! Benchmark harness (no `criterion` in the offline build).
 //!
-//! Two facilities:
+//! Three facilities:
 //! * [`time_it`] / [`bench_fn`] — wall-clock micro-benchmarking with
 //!   warmup and robust aggregation, for the perf benches;
 //! * [`Table`] — aligned console tables for the paper-figure benches, so
 //!   each bench prints exactly the rows/series of the table or figure it
-//!   regenerates, plus a JSON dump under `results/`.
+//!   regenerates, plus a JSON dump under `results/`;
+//! * [`Compare`] — a `bench-compare`-style paired A/B harness: each case
+//!   carries a baseline and a candidate measurement plus the derived
+//!   speedup, so before/after claims in the `BENCH_*.json` ledgers are
+//!   computed in one place instead of ad hoc in every bench.
 
 use crate::util::json::Json;
 use crate::util::stats;
@@ -122,6 +126,77 @@ impl Table {
     }
 }
 
+/// Paired before/after comparison harness (`bench-compare` style).
+///
+/// Collects `(case, baseline, candidate)` measurements and derives the
+/// speedup of the candidate over the baseline — `≥ 1` always means "the
+/// candidate improved", regardless of whether the metric is a rate
+/// (higher is better) or a latency (lower is better). [`Compare::print`]
+/// renders the aligned table; [`Compare::speedups`] hands the ratios
+/// back for ledger rows and acceptance checks.
+#[derive(Debug, Clone)]
+pub struct Compare {
+    title: String,
+    base_label: String,
+    cand_label: String,
+    higher_is_better: bool,
+    rows: Vec<(String, f64, f64)>,
+}
+
+impl Compare {
+    pub fn new(
+        title: &str,
+        base_label: &str,
+        cand_label: &str,
+        higher_is_better: bool,
+    ) -> Compare {
+        Compare {
+            title: title.to_string(),
+            base_label: base_label.to_string(),
+            cand_label: cand_label.to_string(),
+            higher_is_better,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, case: &str, base: f64, cand: f64) {
+        self.rows.push((case.to_string(), base, cand));
+    }
+
+    /// Candidate-over-baseline improvement ratio for one pair.
+    pub fn speedup(&self, base: f64, cand: f64) -> f64 {
+        if self.higher_is_better {
+            cand / base.max(1e-12)
+        } else {
+            base / cand.max(1e-12)
+        }
+    }
+
+    /// `(case, speedup)` for every recorded row, in insertion order.
+    pub fn speedups(&self) -> Vec<(String, f64)> {
+        self.rows
+            .iter()
+            .map(|(c, b, n)| (c.clone(), self.speedup(*b, *n)))
+            .collect()
+    }
+
+    pub fn print(&self) {
+        let mut t = Table::new(
+            &self.title,
+            &["case", &self.base_label, &self.cand_label, "speedup"],
+        );
+        for (case, base, cand) in &self.rows {
+            t.row(&[
+                case.clone(),
+                fmt(*base),
+                fmt(*cand),
+                format!("{:.2}x", self.speedup(*base, *cand)),
+            ]);
+        }
+        t.print();
+    }
+}
+
 /// Write a baseline ledger document to `<repo root>/<file_name>` (the
 /// parent of the crate directory) — the `BENCH_*.json` files referenced
 /// by EXPERIMENTS.md §Perf.
@@ -177,6 +252,19 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("demo", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn compare_speedup_orientation() {
+        // Rate metric: candidate doubled the throughput.
+        let mut up = Compare::new("tput", "base", "cand", true);
+        up.row("a", 100.0, 200.0);
+        assert!((up.speedups()[0].1 - 2.0).abs() < 1e-12);
+        // Latency metric: candidate halved the time — same speedup.
+        let mut down = Compare::new("lat", "base", "cand", false);
+        down.row("a", 10.0, 5.0);
+        assert!((down.speedups()[0].1 - 2.0).abs() < 1e-12);
+        up.print(); // visual only; must not panic
     }
 
     #[test]

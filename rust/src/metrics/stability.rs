@@ -143,12 +143,26 @@ pub fn analyze_series(series: &[(f64, u64)], terminated: Termination) -> Stabili
         Termination::Finished => StabilityVerdict::Stable,
         Termination::Capped => {
             let n = series.len();
-            let m2 = mean_q(&series[n / 3..(2 * n) / 3]);
-            let m3 = mean_q(&series[(2 * n) / 3..]);
-            if final_queue <= floor || m3 <= 1.1 * m2.max(1.0) {
-                StabilityVerdict::Stable
+            if n < 3 {
+                // Too few samples for a trend: both thirds-windows are
+                // empty (their means degenerate to 0.0), which would
+                // silently reduce the verdict to the drain check with a
+                // vacuously-true trend arm. Make the rule explicit: a
+                // short capped run is Stable iff its queue drained to
+                // the floor, Divergent otherwise.
+                if final_queue <= floor {
+                    StabilityVerdict::Stable
+                } else {
+                    StabilityVerdict::Divergent
+                }
             } else {
-                StabilityVerdict::Divergent
+                let m2 = mean_q(&series[n / 3..(2 * n) / 3]);
+                let m3 = mean_q(&series[(2 * n) / 3..]);
+                if final_queue <= floor || m3 <= 1.1 * m2.max(1.0) {
+                    StabilityVerdict::Stable
+                } else {
+                    StabilityVerdict::Divergent
+                }
             }
         }
     };
@@ -312,6 +326,26 @@ mod tests {
             analyze_series(&[], Termination::Diverged).verdict,
             StabilityVerdict::Divergent
         );
+    }
+
+    #[test]
+    fn short_capped_series_judged_on_drain_alone() {
+        // n < 3 leaves no room for a trend estimate, so the explicit
+        // rule is: Stable iff the final queue drained to the floor.
+        // n = 0: nothing sampled, nothing queued — Stable.
+        let r0 = analyze_series(&[], Termination::Capped);
+        assert_eq!(r0.verdict, StabilityVerdict::Stable);
+        // n = 1: a single undrained sample above the floor — Divergent
+        // (previously the vacuous trend windows judged this Stable).
+        let r1 = analyze_series(&series(&[50]), Termination::Capped);
+        assert_eq!(r1.verdict, StabilityVerdict::Divergent);
+        let r1d = analyze_series(&series(&[0]), Termination::Capped);
+        assert_eq!(r1d.verdict, StabilityVerdict::Stable);
+        // n = 2: same rule — only the final sample matters.
+        let r2 = analyze_series(&series(&[100, 100]), Termination::Capped);
+        assert_eq!(r2.verdict, StabilityVerdict::Divergent);
+        let r2d = analyze_series(&series(&[100, 4]), Termination::Capped);
+        assert_eq!(r2d.verdict, StabilityVerdict::Stable);
     }
 
     #[test]

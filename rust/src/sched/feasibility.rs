@@ -21,7 +21,6 @@
 //! ([`feasible_bruteforce`]) backs the property tests.
 
 use crate::core::{ActiveReq, FeasItem, Mem, QueuedReq, RequestId, Round};
-use std::collections::{BTreeMap, HashMap};
 
 /// Incremental feasibility checker for building one batch.
 ///
@@ -160,13 +159,28 @@ impl FeasChecker {
 /// `max(1)` clamp, so feasibility decisions stay bit-identical to the
 /// snapshot path (see the equivalence property tests below and
 /// `tests/incremental_diff.rs`).
+///
+/// Storage is flat: a `Vec` of `((e, id), c)` entries kept sorted
+/// ascending by `(e, id)` (the batch is small — bounded by how many
+/// items fit in `M` — so a binary-search insert's memmove is cheaper
+/// than `BTreeMap` node traffic, and the descending peak scan is a
+/// plain reversed slice walk), plus a dense id-indexed `Vec` mapping
+/// each id to its `e` (`VACANT` when absent) in place of the former
+/// `HashMap`.
 #[derive(Debug, Clone, Default)]
 pub struct PersistentFeasChecker {
-    /// (predicted completion round `e`, id) → `c`, ordered by `e`.
-    items: BTreeMap<(u64, RequestId), i64>,
-    /// id → `e`, so removal needs no linear scan.
-    by_id: HashMap<RequestId, u64>,
+    /// `((predicted completion round e, id), c)`, sorted ascending by
+    /// `(e, id)`.
+    items: Vec<((u64, RequestId), i64)>,
+    /// id → `e`, dense (`VACANT` = not in the batch), so removal
+    /// needs no linear scan.
+    by_id: Vec<u64>,
 }
+
+/// Sentinel in [`PersistentFeasChecker`]'s dense id map: the id is not
+/// currently in the batch. A real `e` can never reach `u64::MAX` (it is
+/// `now + rem − 1` for bounded horizons).
+const VACANT: u64 = u64::MAX;
 
 impl PersistentFeasChecker {
     pub fn new() -> PersistentFeasChecker {
@@ -187,7 +201,7 @@ impl PersistentFeasChecker {
     }
 
     pub fn contains(&self, id: RequestId) -> bool {
-        self.by_id.contains_key(&id)
+        self.by_id.get(id).is_some_and(|&e| e != VACANT)
     }
 
     fn encode(now: Round, item: FeasItem) -> (u64, i64) {
@@ -195,21 +209,41 @@ impl PersistentFeasChecker {
         (now + item.rem - 1, item.base as i64 + 1 - now as i64)
     }
 
+    /// Record `(e, id) → c` in both structures (caller has checked for
+    /// duplicates).
+    fn store(&mut self, id: RequestId, e: u64, c: i64) {
+        let pos = match self.items.binary_search_by(|probe| probe.0.cmp(&(e, id))) {
+            Ok(_) => unreachable!("duplicate batch item {id}"),
+            Err(pos) => pos,
+        };
+        self.items.insert(pos, ((e, id), c));
+        if id >= self.by_id.len() {
+            self.by_id.resize(id + 1, VACANT);
+        }
+        self.by_id[id] = e;
+    }
+
     /// Add unconditionally — `item` is the request's feasibility view *at
     /// round `now`* ([`ActiveReq::feas_item`] / [`QueuedReq::feas_item`]).
     pub fn insert(&mut self, id: RequestId, now: Round, item: FeasItem) {
         let (e, c) = Self::encode(now, item);
-        debug_assert!(!self.by_id.contains_key(&id), "duplicate item {id}");
-        self.items.insert((e, id), c);
-        self.by_id.insert(id, e);
+        debug_assert!(!self.contains(id), "duplicate item {id}");
+        self.store(id, e, c);
     }
 
     /// Remove the item (completion or eviction). Returns whether it was
     /// present.
     pub fn remove(&mut self, id: RequestId) -> bool {
-        match self.by_id.remove(&id) {
-            Some(e) => self.items.remove(&(e, id)).is_some(),
-            None => false,
+        let Some(e) = self.by_id.get(id).copied().filter(|&e| e != VACANT) else {
+            return false;
+        };
+        self.by_id[id] = VACANT;
+        match self.items.binary_search_by(|probe| probe.0.cmp(&(e, id))) {
+            Ok(pos) => {
+                self.items.remove(pos);
+                true
+            }
+            Err(_) => unreachable!("dense map and sorted items disagree on {id}"),
         }
     }
 
@@ -221,9 +255,8 @@ impl PersistentFeasChecker {
         if self.peak_with(now, Some((e, c))) > m as i64 {
             return false;
         }
-        debug_assert!(!self.by_id.contains_key(&id), "duplicate item {id}");
-        self.items.insert((e, id), c);
-        self.by_id.insert(id, e);
+        debug_assert!(!self.contains(id), "duplicate item {id}");
+        self.store(id, e, c);
         true
     }
 
@@ -250,13 +283,13 @@ impl PersistentFeasChecker {
         let mut iter = self.items.iter().rev().peekable();
         let mut extra = extra;
         loop {
-            let next_item = iter.peek().map(|&(&(e, _), _)| e.max(now));
+            let next_item = iter.peek().map(|&&((e, _), _)| e.max(now));
             let next_extra = extra.map(|(e, _)| e.max(now));
             let checkpoint = match next_item.max(next_extra) {
                 Some(e) => e,
                 None => break,
             };
-            while let Some(&(&(e, _), &c)) = iter.peek() {
+            while let Some(&&((e, _), c)) = iter.peek() {
                 if e.max(now) == checkpoint {
                     cnt += 1;
                     csum += c;

@@ -7,22 +7,38 @@
 //! [`IncrementalCore`] keeps both structures alive across rounds and
 //! updates them by deltas driven by the engine's event hooks
 //! ([`Scheduler::on_arrival`](super::Scheduler::on_arrival) and
-//! friends): a keyed ordered index over the waiting set (O(log W)
-//! insert/remove) and a [`PersistentFeasChecker`] over the running batch
-//! (O(log k) insert/remove, nothing to do on round advance thanks to the
+//! friends): a keyed ordered index over the waiting set (O(log W +
+//! bucket) insert/remove) and a [`PersistentFeasChecker`] over the
+//! running batch (nothing to do on round advance thanks to the
 //! uniform-decode observation). Steady-state rounds then cost O(Δ) in
 //! the number of arrivals/admissions/completions — matching Prop 4.2's
 //! request-count-independent bound — instead of O(n + W log W).
+//!
+//! ## Flat storage
+//!
+//! The waiting index is a **bucketed sorted list** (`WaitIndex`): an
+//! ordered sequence of small sorted vectors (≤ `BUCKET_CAP` entries
+//! each) held in a [`Slab`] arena so bucket splits/merges recycle slots
+//! instead of shifting a monolithic array. Compared to the previous
+//! per-node `BTreeMap`, entries sit contiguously (the admission scan is
+//! a linear walk over flat memory) while an insert pays one bucket-level
+//! binary search plus a ≤ `BUCKET_CAP`-element memmove — the
+//! cache-conscious middle ground between a sorted `Vec` (O(W) memmove
+//! per insert) and a pointer-chasing tree. The id → key side map is a
+//! dense `Vec` indexed by request id (ids are instance-global and
+//! small), replacing the former `HashMap`.
 //!
 //! Iteration order over the waiting index equals the snapshot path's
 //! heap pop order (keys embed the id as a unique final tiebreak), and
 //! the persistent checker is decision-identical to the snapshot checker,
 //! so admission results are **bit-identical** between the two paths
-//! (enforced by `tests/incremental_diff.rs`).
+//! (enforced by `tests/incremental_diff.rs`; the flat index is also
+//! property-tested against a `BTreeMap` model in
+//! `tests/flat_structs.rs`).
 
 use super::feasibility::{OrdF64, PersistentFeasChecker};
 use crate::core::{FeasItem, Mem, QueuedReq, RequestId, Round};
-use std::collections::{BTreeMap, HashMap};
+use crate::util::slab::Slab;
 
 /// Waiting-queue scan key: (priority group, policy primary key, arrival,
 /// id). The group is the class-priority rank for the SLO-aware
@@ -33,15 +49,123 @@ use std::collections::{BTreeMap, HashMap};
 /// order untouched, which is what keeps single-class runs bit-identical.
 type WaitKey = (u64, u64, OrdF64, RequestId);
 
+/// A waiting-index entry: scan key plus the feasibility payload
+/// (prompt length, predicted output) inline, so the admission scan
+/// needs no side lookups.
+type WaitEntry = (WaitKey, (u64, u64));
+
+/// Split threshold for `WaitIndex` buckets. 64 entries × 48 bytes keeps
+/// a bucket inside a handful of cache lines, so the per-insert memmove
+/// stays cheap while the admission scan still walks long contiguous
+/// runs.
+const BUCKET_CAP: usize = 64;
+
+/// Bucketed sorted list over the waiting set (see module docs): bucket
+/// payloads live in a [`Slab`] arena, `order` holds the arena slots in
+/// ascending key order. Every bucket is non-empty and internally
+/// sorted; all keys in `order[i]` precede all keys in `order[i + 1]`,
+/// so a flat walk of `order` yields exactly the `BTreeMap` iteration
+/// order this structure replaced.
+#[derive(Debug, Clone, Default)]
+struct WaitIndex {
+    arena: Slab<Vec<WaitEntry>>,
+    order: Vec<usize>,
+    len: usize,
+}
+
+impl WaitIndex {
+    fn clear(&mut self) {
+        self.arena.clear();
+        self.order.clear();
+        self.len = 0;
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Position in `order` of the bucket that owns `key`: the first
+    /// bucket whose largest key is ≥ `key`, or the last bucket when
+    /// `key` exceeds everything. `None` only when the index is empty.
+    fn bucket_for(&self, key: &WaitKey) -> Option<usize> {
+        if self.order.is_empty() {
+            return None;
+        }
+        let (mut lo, mut hi) = (0, self.order.len() - 1);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            let bucket = self.arena.get(self.order[mid]).expect("ordered slot is live");
+            let last = &bucket.last().expect("buckets are never empty").0;
+            if last < key {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+
+    fn insert(&mut self, key: WaitKey, payload: (u64, u64)) {
+        self.len += 1;
+        let Some(at) = self.bucket_for(&key) else {
+            let mut bucket = Vec::with_capacity(BUCKET_CAP);
+            bucket.push((key, payload));
+            let slot = self.arena.insert(bucket);
+            self.order.push(slot);
+            return;
+        };
+        let bucket = self.arena.get_mut(self.order[at]).expect("ordered slot is live");
+        let pos = match bucket.binary_search_by(|e| e.0.cmp(&key)) {
+            Ok(_) => unreachable!("duplicate waiting key (ids are unique)"),
+            Err(pos) => pos,
+        };
+        bucket.insert(pos, (key, payload));
+        if bucket.len() >= BUCKET_CAP {
+            let right = bucket.split_off(BUCKET_CAP / 2);
+            let slot = self.arena.insert(right);
+            self.order.insert(at + 1, slot);
+        }
+    }
+
+    /// Remove `key`; returns whether it was present. An emptied bucket
+    /// is released back to the arena.
+    fn remove(&mut self, key: &WaitKey) -> bool {
+        let Some(at) = self.bucket_for(key) else {
+            return false;
+        };
+        let slot = self.order[at];
+        let bucket = self.arena.get_mut(slot).expect("ordered slot is live");
+        match bucket.binary_search_by(|e| e.0.cmp(key)) {
+            Ok(pos) => {
+                bucket.remove(pos);
+                self.len -= 1;
+                if bucket.is_empty() {
+                    self.arena.remove(slot);
+                    self.order.remove(at);
+                }
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// All entries in ascending key order.
+    fn iter(&self) -> impl Iterator<Item = &WaitEntry> + '_ {
+        self.order
+            .iter()
+            .flat_map(|&slot| self.arena.get(slot).expect("ordered slot is live").iter())
+    }
+}
+
 /// Persistent waiting index + running-batch checker. Policies embed one
 /// and forward the [`Scheduler`](super::Scheduler) hooks to it.
 #[derive(Debug, Clone, Default)]
 pub struct IncrementalCore {
-    /// Waiting requests in admission-scan order; the value carries the
-    /// feasibility payload (prompt length, predicted output) so the scan
-    /// needs no side lookups.
-    waiting: BTreeMap<WaitKey, (u64, u64)>,
-    key_of: HashMap<RequestId, WaitKey>,
+    /// Waiting requests in admission-scan order.
+    waiting: WaitIndex,
+    /// Dense id → scan key map (`None` = not waiting). Request ids are
+    /// instance-global and compact, so direct indexing beats hashing.
+    key_of: Vec<Option<WaitKey>>,
     checker: PersistentFeasChecker,
 }
 
@@ -66,9 +190,12 @@ impl IncrementalCore {
     /// scan key.
     pub fn on_arrival(&mut self, group: u64, primary: u64, req: &QueuedReq) {
         let key = (group, primary, OrdF64(req.arrival), req.id);
-        debug_assert!(!self.key_of.contains_key(&req.id), "duplicate arrival {}", req.id);
+        if req.id >= self.key_of.len() {
+            self.key_of.resize(req.id + 1, None);
+        }
+        debug_assert!(self.key_of[req.id].is_none(), "duplicate arrival {}", req.id);
         self.waiting.insert(key, (req.s, req.pred));
-        self.key_of.insert(req.id, key);
+        self.key_of[req.id] = Some(key);
     }
 
     /// A running request finished and left the batch.
@@ -87,11 +214,12 @@ impl IncrementalCore {
     /// candidate is checked against running ∪ admitted-so-far; with
     /// `stop_on_first_reject` the scan breaks at the first infeasible
     /// candidate (prefix semantics, Eq 6), otherwise it continues (the
-    /// "skip" ablation). Costs O(A log W + A·k) for A admissions — the
-    /// queue length W only enters through the O(log W) removals.
+    /// "skip" ablation). Costs O(A·(log W + B) + A·k) for A admissions
+    /// and bucket size B — the queue length W only enters through the
+    /// bucket-search removals.
     pub fn admit(&mut self, now: Round, m: Mem, stop_on_first_reject: bool) -> Vec<RequestId> {
         let mut admitted = Vec::new();
-        for (&(_, _, _, id), &(s, pred)) in self.waiting.iter() {
+        for &((_, _, _, id), (s, pred)) in self.waiting.iter() {
             let item = FeasItem {
                 base: s,
                 rem: pred.max(1),
@@ -103,7 +231,7 @@ impl IncrementalCore {
             }
         }
         for &id in &admitted {
-            let key = self.key_of.remove(&id).expect("admitted id was indexed");
+            let key = self.key_of[id].take().expect("admitted id was indexed");
             self.waiting.remove(&key);
         }
         admitted

@@ -29,6 +29,18 @@ use crate::util::error::{anyhow, bail, Result};
 use crate::util::rng::Rng;
 
 /// A batching/scheduling policy.
+///
+/// ## Quiescence contract
+///
+/// When the waiting queue is empty, [`Scheduler::admit`] and
+/// [`Scheduler::admit_incremental`] must be **pure no-ops**: return an
+/// empty admission list, draw nothing from `rng`, and leave no
+/// observable state change. Every in-tree policy satisfies this (there
+/// is nothing to rank, so nothing consumes randomness or moves). The
+/// event-driven engine ([`crate::sim::events`]) relies on it to *skip*
+/// the scheduler call entirely on rounds where nothing waits, while
+/// staying bit-identical — including RNG stream position — to the
+/// round engine that does make the call.
 pub trait Scheduler: Send {
     /// Human-readable name (appears in metrics and bench output).
     fn name(&self) -> String;

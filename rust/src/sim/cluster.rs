@@ -29,12 +29,31 @@
 //! fleet loop adds an O(W) scan per event to find the earliest formation
 //! time (W ≤ dozens here; a formation-time heap would drop this to
 //! O(log W) if fleets ever grow past that).
+//!
+//! ## Parallel execution
+//!
+//! Between two consecutive submissions, workers never interact: each
+//! one's rounds depend only on its own queue, scheduler and RNG stream.
+//! The driver exploits that with one scoped thread per worker
+//! (`std::thread::scope`), each owning its `(WorkerSim, scheduler)`
+//! pair. The main thread keeps the causal event discipline: it computes
+//! the next submission instant `at`, tells every worker to advance until
+//! its next formation time reaches `at` (strictly — ties still go to the
+//! submission), and only routes once all workers have quiesced, so the
+//! load snapshot is exactly the one the sequential loop would see. Flow
+//! admission, router draws and the router RNG stream all stay on the
+//! main thread in submission order, and every worker's step sequence is
+//! unchanged — so outcomes are **bit-identical** to sequential execution
+//! regardless of thread interleaving (pinned by the
+//! `parallel_path_matches_sequential_*` tests below). Recording runs
+//! (`sink` present) and single-worker fleets take the sequential path;
+//! a trace is an interleaved event log, and threading would reorder it.
 
 use super::engine::{clamped_predictions, SimConfig, SimError, WaitState, WorkerSim};
 use crate::cluster::router::{Router, WorkerLoad};
-use crate::core::{Instance, QueuedReq};
+use crate::core::{Instance, QueuedReq, Request};
 use crate::flow::{Decision, FlowControl, FlowLoad};
-use crate::metrics::FleetOutcome;
+use crate::metrics::{FleetOutcome, SimOutcome};
 use crate::perf::PerfModel;
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
@@ -132,6 +151,140 @@ pub(crate) fn run_fleet_inner(
         }
     }
     let mut router_rng = Rng::with_stream(seed, ROUTER_STREAM);
+
+    let outcomes = if sink.is_none() && w_count > 1 {
+        run_fleet_parallel(
+            inst,
+            scheds,
+            router,
+            preds,
+            perf,
+            &mut router_rng,
+            workers,
+            &mut flow,
+        )?
+    } else {
+        run_fleet_sequential(
+            inst,
+            scheds,
+            router,
+            preds,
+            perf,
+            &mut router_rng,
+            workers,
+            sink,
+            &mut flow,
+        )?
+    };
+
+    let mut out = FleetOutcome::new(
+        &router.name(),
+        outcomes
+            .into_iter()
+            .map(|mut o| {
+                o.classes = inst.classes.clone();
+                o
+            })
+            .collect(),
+    );
+    if let Some(fc) = flow {
+        out.flow = Some(fc.stats.clone());
+    }
+    Ok(out)
+}
+
+/// Earliest next submission: the next original arrival or the flow
+/// layer's earliest scheduled retry (originals win ties, so the default
+/// path sees the exact pre-flow event order). `true` marks a retry.
+fn next_submission(
+    inst: &Instance,
+    next_arrival: usize,
+    flow: Option<&FlowControl>,
+) -> Option<(f64, bool)> {
+    let orig = (next_arrival < inst.requests.len()).then(|| inst.requests[next_arrival].arrival);
+    let retry = flow.and_then(FlowControl::next_retry).map(|(at, _, _)| at);
+    match (orig, retry) {
+        (None, None) => None,
+        (Some(a), None) => Some((a, false)),
+        (None, Some(rt)) => Some((rt, true)),
+        (Some(a), Some(rt)) => {
+            if rt < a {
+                Some((rt, true))
+            } else {
+                Some((a, false))
+            }
+        }
+    }
+}
+
+/// Flow-control admission for one submission against the fleet-wide
+/// live load, *before* routing — a rejected request never reaches the
+/// router, so no Route/Arrival events are recorded for it. Returns
+/// whether the request proceeds to routing; rejections are recorded on
+/// `sink` when present.
+fn flow_admit(
+    fc: &mut FlowControl,
+    r: &Request,
+    pred: u64,
+    attempt: u32,
+    submit_t: f64,
+    load: &FlowLoad,
+    sink: Option<&TraceSink>,
+) -> bool {
+    let cost = r.prompt_len + pred + 1;
+    let decision = fc.on_submit(submit_t, r.id, r.class, cost, load, attempt);
+    if decision == Decision::Admit {
+        return true;
+    }
+    if let Some(sk) = sink {
+        sk.record(TraceEvent::Reject {
+            t: submit_t,
+            id: r.id,
+            attempt,
+            s: r.prompt_len,
+            o: r.output_len,
+            pred,
+            class: r.class,
+        });
+        match decision {
+            Decision::Retry { at, attempt } => {
+                sk.record(TraceEvent::Retry {
+                    t: submit_t,
+                    id: r.id,
+                    attempt,
+                    at,
+                });
+            }
+            Decision::Shed => {
+                sk.record(TraceEvent::Shed {
+                    t: submit_t,
+                    id: r.id,
+                    attempts: attempt,
+                    class: r.class,
+                });
+            }
+            Decision::Admit => unreachable!(),
+        }
+    }
+    false
+}
+
+/// Single-threaded fleet driver: interleaves worker rounds and
+/// submissions on one clock. Carries the recording sink — a trace is a
+/// totally-ordered event log, so recording always runs here.
+#[allow(clippy::too_many_arguments)]
+fn run_fleet_sequential(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    router: &mut dyn Router,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    router_rng: &mut Rng,
+    mut workers: Vec<WorkerSim>,
+    sink: Option<TraceSink>,
+    flow: &mut Option<&mut FlowControl>,
+) -> Result<Vec<SimOutcome>, SimError> {
+    let w_count = workers.len();
     let mut loads: Vec<WorkerLoad> = Vec::with_capacity(w_count);
     let mut next_arrival = 0usize;
 
@@ -147,23 +300,7 @@ pub(crate) fn run_fleet_inner(
             }
         }
 
-        // Earliest next submission: the next original arrival or the
-        // flow layer's earliest scheduled retry (originals win ties, so
-        // the default path sees the exact pre-flow event order).
-        let orig = (next_arrival < n).then(|| inst.requests[next_arrival].arrival);
-        let retry = flow.as_deref().and_then(FlowControl::next_retry).map(|(at, _, _)| at);
-        let submission = match (orig, retry) {
-            (None, None) => None,
-            (Some(a), None) => Some((a, false)),
-            (None, Some(rt)) => Some((rt, true)),
-            (Some(a), Some(rt)) => {
-                if rt < a {
-                    Some((rt, true))
-                } else {
-                    Some((a, false))
-                }
-            }
-        };
+        let submission = next_submission(inst, next_arrival, flow.as_deref());
 
         // Handle the next submission when it lands at or before every
         // pending formation: the snapshot below is then causal.
@@ -180,10 +317,6 @@ pub(crate) fn run_fleet_inner(
                 (r, 1, r.arrival)
             };
 
-            // Flow-control admission against the fleet-wide live load,
-            // *before* routing — a rejected request never reaches the
-            // router, so no Route/Arrival events are recorded for it.
-            let mut admitted = true;
             if let Some(fc) = flow.as_mut() {
                 let mut queued = 0u64;
                 let mut budget = 0u64;
@@ -198,44 +331,9 @@ pub(crate) fn run_fleet_inner(
                     queued_demand: queued,
                     kv_budget: budget,
                 };
-                let cost = r.prompt_len + preds[r.id] + 1;
-                let decision = fc.on_submit(submit_t, r.id, r.class, cost, &load, attempt);
-                if decision != Decision::Admit {
-                    admitted = false;
-                    if let Some(sk) = &sink {
-                        sk.record(TraceEvent::Reject {
-                            t: submit_t,
-                            id: r.id,
-                            attempt,
-                            s: r.prompt_len,
-                            o: r.output_len,
-                            pred: preds[r.id],
-                            class: r.class,
-                        });
-                        match decision {
-                            Decision::Retry { at, attempt } => {
-                                sk.record(TraceEvent::Retry {
-                                    t: submit_t,
-                                    id: r.id,
-                                    attempt,
-                                    at,
-                                });
-                            }
-                            Decision::Shed => {
-                                sk.record(TraceEvent::Shed {
-                                    t: submit_t,
-                                    id: r.id,
-                                    attempts: attempt,
-                                    class: r.class,
-                                });
-                            }
-                            Decision::Admit => unreachable!(),
-                        }
-                    }
+                if !flow_admit(fc, r, preds[r.id], attempt, submit_t, &load, sink.as_ref()) {
+                    continue;
                 }
-            }
-            if !admitted {
-                continue;
             }
 
             let view = QueuedReq {
@@ -269,7 +367,7 @@ pub(crate) fn run_fleet_inner(
                 // park it on worker 0 (it shows up in assigned − served).
                 0
             } else {
-                let id = router.route(&view, &loads, &mut router_rng);
+                let id = router.route(&view, &loads, router_rng);
                 assert!(
                     id < w_count && loads.iter().any(|l| l.worker == id),
                     "router '{}' picked worker {id} outside the live view",
@@ -302,21 +400,236 @@ pub(crate) fn run_fleet_inner(
         workers[i].step(scheds[i].as_mut(), perf)?;
     }
 
-    let mut out = FleetOutcome::new(
-        &router.name(),
-        workers
-            .into_iter()
-            .map(|w| {
-                let mut out = w.finish();
-                out.classes = inst.classes.clone();
-                out
-            })
-            .collect(),
-    );
-    if let Some(fc) = flow {
-        out.flow = Some(fc.stats.clone());
+    Ok(workers.into_iter().map(WorkerSim::finish).collect())
+}
+
+/// Scoped-thread fleet driver (see "Parallel execution" in the module
+/// docs): one thread per worker, commanded from the main thread, which
+/// retains the causal submission order, the flow layer, the router and
+/// its RNG stream. Bit-identical to [`run_fleet_sequential`] because
+/// every worker executes exactly the same step sequence and every
+/// routing decision sees exactly the same quiesced load snapshot.
+#[allow(clippy::too_many_arguments)]
+fn run_fleet_parallel(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    router: &mut dyn Router,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    router_rng: &mut Rng,
+    workers: Vec<WorkerSim>,
+    flow: &mut Option<&mut FlowControl>,
+) -> Result<Vec<SimOutcome>, SimError> {
+    use std::sync::mpsc;
+
+    enum Cmd {
+        /// Step while the next formation time is strictly before `t`
+        /// (ties go to the submission, as in the sequential loop), then
+        /// report a load snapshot. `f64::INFINITY` drains to completion.
+        Advance(f64),
+        /// Enqueue one routed request (no stepping, no reply).
+        Deliver(WaitState),
+        /// Consume the worker and send back its outcome.
+        Finish,
     }
-    Ok(out)
+
+    /// Per-worker load snapshot at a quiescent point — the same fields
+    /// the sequential loop reads straight off `WorkerSim` when building
+    /// [`WorkerLoad`] / [`FlowLoad`] views.
+    struct Quiesce {
+        stopped: bool,
+        queued: usize,
+        running: usize,
+        kv_used: u64,
+        budget: u64,
+        queued_demand: u64,
+        assigned: usize,
+        err: Option<SimError>,
+    }
+
+    enum Reply {
+        Quiesced(Quiesce),
+        Done(Box<SimOutcome>),
+    }
+
+    fn snapshot(w: &WorkerSim, err: Option<SimError>) -> Quiesce {
+        Quiesce {
+            stopped: w.stopped(),
+            queued: w.queued_len(),
+            running: w.running_len(),
+            kv_used: w.kv_used(),
+            budget: w.budget(),
+            queued_demand: w.queued_demand(),
+            assigned: w.assigned(),
+            err,
+        }
+    }
+
+    let w_count = workers.len();
+    std::thread::scope(|scope| {
+        let mut cmd_txs = Vec::with_capacity(w_count);
+        let mut reply_rxs = Vec::with_capacity(w_count);
+        for (mut worker, sched) in workers.into_iter().zip(scheds.iter_mut()) {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+            scope.spawn(move || {
+                let mut failed = false;
+                while let Ok(cmd) = cmd_rx.recv() {
+                    match cmd {
+                        Cmd::Advance(until) => {
+                            let mut err = None;
+                            while !failed {
+                                match worker.next_time() {
+                                    Some(ft) if ft < until => {
+                                        if let Err(e) = worker.step(sched.as_mut(), perf) {
+                                            failed = true;
+                                            err = Some(e);
+                                        }
+                                    }
+                                    _ => break,
+                                }
+                            }
+                            if reply_tx.send(Reply::Quiesced(snapshot(&worker, err))).is_err() {
+                                break; // driver gone (error abort)
+                            }
+                        }
+                        Cmd::Deliver(wst) => worker.deliver(wst),
+                        Cmd::Finish => {
+                            let _ = reply_tx.send(Reply::Done(Box::new(worker.finish())));
+                            break;
+                        }
+                    }
+                }
+            });
+            cmd_txs.push(cmd_tx);
+            reply_rxs.push(reply_rx);
+        }
+
+        let mut loads: Vec<WorkerLoad> = Vec::with_capacity(w_count);
+        let mut quiesces: Vec<Quiesce> = Vec::with_capacity(w_count);
+        let mut next_arrival = 0usize;
+        let mut failure: Option<SimError> = None;
+
+        'drive: loop {
+            let submission = next_submission(inst, next_arrival, flow.as_deref());
+            // Barrier: every worker finishes all formations strictly
+            // before the submission instant (all of them, for a drain),
+            // then reports its quiesced load. The collection order is
+            // worker order, so a multi-failure barrier deterministically
+            // surfaces the lowest-index error.
+            let until = submission.map_or(f64::INFINITY, |(at, _)| at);
+            for tx in &cmd_txs {
+                let _ = tx.send(Cmd::Advance(until));
+            }
+            quiesces.clear();
+            for rx in &reply_rxs {
+                match rx.recv().expect("fleet worker thread lost") {
+                    Reply::Quiesced(mut q) => {
+                        if let Some(e) = q.err.take() {
+                            failure.get_or_insert(e);
+                        }
+                        quiesces.push(q);
+                    }
+                    Reply::Done(_) => unreachable!("no Finish sent yet"),
+                }
+            }
+            if failure.is_some() {
+                break 'drive;
+            }
+            let Some((_, is_retry)) = submission else {
+                break 'drive; // drained: no submissions, all workers idle
+            };
+
+            let (r, attempt, submit_t) = if is_retry {
+                let (rt, id, attempt) = flow.as_mut().unwrap().pop_retry().unwrap();
+                (&inst.requests[id], attempt, rt)
+            } else {
+                let r = &inst.requests[next_arrival];
+                next_arrival += 1;
+                (r, 1, r.arrival)
+            };
+
+            if let Some(fc) = flow.as_mut() {
+                let mut queued = 0u64;
+                let mut budget = 0u64;
+                for q in quiesces.iter().filter(|q| !q.stopped) {
+                    queued += q.queued_demand;
+                    budget += q.budget;
+                }
+                let load = FlowLoad {
+                    queued_demand: queued,
+                    kv_budget: budget,
+                };
+                if !flow_admit(fc, r, preds[r.id], attempt, submit_t, &load, None) {
+                    continue 'drive;
+                }
+            }
+
+            let view = QueuedReq {
+                id: r.id,
+                arrival: submit_t,
+                s: r.prompt_len,
+                pred: preds[r.id],
+                class: r.class,
+            };
+            loads.clear();
+            loads.extend(
+                quiesces
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| !q.stopped)
+                    .map(|(i, q)| WorkerLoad {
+                        worker: i,
+                        queued: q.queued,
+                        running: q.running,
+                        kv_used: q.kv_used,
+                        kv_budget: q.budget,
+                        queued_demand: q.queued_demand,
+                        assigned: q.assigned,
+                    }),
+            );
+            let pick = if loads.is_empty() {
+                0 // every worker capped: park on worker 0, as sequential
+            } else {
+                let id = router.route(&view, &loads, router_rng);
+                assert!(
+                    id < w_count && loads.iter().any(|l| l.worker == id),
+                    "router '{}' picked worker {id} outside the live view",
+                    router.name()
+                );
+                id
+            };
+            // In-order per channel: the delivery lands before the next
+            // Advance this loop sends, so the worker sees it exactly
+            // where the sequential driver would have delivered it.
+            let _ = cmd_txs[pick].send(Cmd::Deliver(WaitState {
+                id: r.id,
+                arrival: submit_t,
+                first_arrival: r.arrival,
+                s: r.prompt_len,
+                o_true: r.output_len,
+                pred: preds[r.id],
+                class: r.class,
+            }));
+        }
+
+        if let Some(e) = failure {
+            // Dropping the command channels unblocks and retires every
+            // worker thread; the scope joins them on exit.
+            return Err(e);
+        }
+        for tx in &cmd_txs {
+            let _ = tx.send(Cmd::Finish);
+        }
+        let mut outs = Vec::with_capacity(w_count);
+        for rx in &reply_rxs {
+            match rx.recv().expect("fleet worker thread lost") {
+                Reply::Done(o) => outs.push(*o),
+                Reply::Quiesced(_) => unreachable!("protocol: Done expected after Finish"),
+            }
+        }
+        Ok(outs)
+    })
 }
 
 #[cfg(test)]
@@ -529,6 +842,113 @@ mod tests {
             stats.class_shed_fraction(1),
             stats.class_shed_fraction(0)
         );
+    }
+
+    /// The scoped-thread parallel path (no sink, > 1 worker) must be
+    /// bit-identical to the sequential driver — forced here through the
+    /// recording path, which always runs sequentially — on every
+    /// per-worker field.
+    #[test]
+    fn parallel_path_matches_sequential_bit_for_bit() {
+        use crate::cluster::router::PowerOfTwo;
+        use crate::trace::TraceSink;
+        use crate::workload::synthetic;
+        let mut rng = Rng::new(13);
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let preds = clamped_predictions(&inst, &Predictor::exact(), inst.m).unwrap();
+        for workers in [2usize, 4] {
+            let mut router = PowerOfTwo;
+            let par = run_fleet(
+                &inst,
+                &mut scheds(workers),
+                &mut router,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                7,
+                SimConfig::default(),
+            )
+            .unwrap();
+            let mut router = PowerOfTwo;
+            let seq = run_fleet_inner(
+                &inst,
+                &mut scheds(workers),
+                &mut router,
+                inst.m,
+                &preds,
+                &UnitTime,
+                7,
+                SimConfig::default(),
+                Some(TraceSink::new()),
+                None,
+            )
+            .unwrap();
+            assert_eq!(par.assigned(), seq.assigned(), "workers={workers}");
+            assert_eq!(
+                par.total_latency().to_bits(),
+                seq.total_latency().to_bits(),
+                "workers={workers}"
+            );
+            for (w, (a, b)) in par.per_worker.iter().zip(&seq.per_worker).enumerate() {
+                assert_eq!(a.per_request, b.per_request, "workers={workers} w={w}");
+                assert_eq!(a.rounds, b.rounds, "workers={workers} w={w}");
+                assert_eq!(a.mem_series, b.mem_series, "workers={workers} w={w}");
+                assert_eq!(a.queue_series, b.queue_series, "workers={workers} w={w}");
+            }
+        }
+    }
+
+    /// Same equivalence with a flow-control layer in front: admission,
+    /// retry and shed decisions ride the quiesced load snapshots and
+    /// must not shift under threading.
+    #[test]
+    fn parallel_flow_matches_sequential_flow() {
+        use crate::core::ClassSet;
+        use crate::flow::{FlowControl, FlowSpec};
+        use crate::trace::TraceSink;
+        use crate::workload::synthetic;
+        let mut rng = Rng::new(17);
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let preds = clamped_predictions(&inst, &Predictor::exact(), inst.m).unwrap();
+        let spec = FlowSpec::new("queue-threshold:threshold=4");
+        let mut f_par = FlowControl::from_spec(&spec, &ClassSet::default(), 9).unwrap();
+        let mut f_seq = FlowControl::from_spec(&spec, &ClassSet::default(), 9).unwrap();
+        let mut router = RoundRobin::default();
+        let par = run_fleet_flow(
+            &inst,
+            &mut scheds(3),
+            &mut router,
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            9,
+            SimConfig::default(),
+            &mut f_par,
+        )
+        .unwrap();
+        let mut router = RoundRobin::default();
+        let seq = run_fleet_inner(
+            &inst,
+            &mut scheds(3),
+            &mut router,
+            inst.m,
+            &preds,
+            &UnitTime,
+            9,
+            SimConfig::default(),
+            Some(TraceSink::new()),
+            Some(&mut f_seq),
+        )
+        .unwrap();
+        assert_eq!(par.assigned(), seq.assigned());
+        assert_eq!(par.total_latency().to_bits(), seq.total_latency().to_bits());
+        let (sp, sq) = (par.flow.as_ref().unwrap(), seq.flow.as_ref().unwrap());
+        assert_eq!(sp.admitted, sq.admitted);
+        assert_eq!(sp.rejected, sq.rejected);
+        assert_eq!(sp.shed(), sq.shed());
+        for (a, b) in par.per_worker.iter().zip(&seq.per_worker) {
+            assert_eq!(a.per_request, b.per_request);
+        }
     }
 
     #[test]

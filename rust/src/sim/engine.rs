@@ -233,9 +233,27 @@ pub(crate) struct WorkerSim {
     /// Σ (s + õ + 1) over `pending` + `waiting`: the queued token demand
     /// read by the least-KV-load router key.
     queued_demand: u64,
+    /// Σ (s + done + quiet_offset + 1) over `active` — the KV usage the
+    /// *next* formed batch will need, maintained incrementally (admit /
+    /// evict / complete / token production) so neither the per-round
+    /// overflow check nor the router-facing [`Self::kv_used`] pays an
+    /// O(batch) fold.
+    kv_next: u64,
+    /// Uniform token-progress debt accumulated by quiet rounds (the
+    /// event-driven fast path): instead of incrementing every active's
+    /// `done`, a quiet round bumps this shared offset. Always zero on
+    /// the classic path; [`Self::flush_quiet`] materializes it before
+    /// any full `step`.
+    quiet_offset: u64,
     t: f64,
     round: u64,
     last_completion_round: u64,
+    /// Round number of the most recent overflow-clearing round (0 when
+    /// none yet). The round after a clearing must be a full step:
+    /// clearings skip token production, so survivors admitted that very
+    /// round still sit at `done = 0` and need a real executed round to
+    /// produce their first token (and set `first_token`).
+    last_overflow_round: u64,
     stopped: bool,
     // View buffers reused across rounds; the snapshot path refills them
     // every round, the incremental path only on (rare) overflow events.
@@ -275,9 +293,12 @@ impl WorkerSim {
             wait_slot: vec![NO_SLOT; n],
             act_slot: vec![NO_SLOT; n],
             queued_demand: 0,
+            kv_next: 0,
+            quiet_offset: 0,
             t: 0.0,
             round: 0,
             last_completion_round: 0,
+            last_overflow_round: 0,
             stopped: false,
             active_views: Vec::new(),
             waiting_views: Vec::new(),
@@ -349,8 +370,9 @@ impl WorkerSim {
     }
 
     /// KV tokens the running batch will hold next round (Σ s + done + 1).
+    /// O(1): read from the incrementally maintained counter.
     pub(crate) fn kv_used(&self) -> u64 {
-        self.active.iter().map(|a| a.s + a.done + 1).sum()
+        self.kv_next
     }
 
     pub(crate) fn queued_demand(&self) -> u64 {
@@ -377,6 +399,10 @@ impl WorkerSim {
         sched: &mut dyn Scheduler,
         perf: &dyn PerfModel,
     ) -> Result<(), SimError> {
+        debug_assert_eq!(
+            self.quiet_offset, 0,
+            "flush_quiet must run before a full step"
+        );
         let Some(ft) = self.next_time() else {
             return Ok(());
         };
@@ -458,6 +484,7 @@ impl WorkerSim {
             }
             prefill_tokens += w.s;
             self.queued_demand -= w.s + w.pred + 1;
+            self.kv_next += w.s + 1;
             self.act_slot[w.id] = self.active.len();
             self.active.push(ActiveState {
                 id: w.id,
@@ -473,8 +500,14 @@ impl WorkerSim {
             });
         }
 
-        // Actual memory needed to run this round.
-        let usage: u64 = self.active.iter().map(|a| a.s + a.done + 1).sum();
+        // Actual memory needed to run this round — the incrementally
+        // maintained counter, checked against the O(batch) fold in
+        // debug builds.
+        let usage = self.kv_next;
+        debug_assert_eq!(
+            usage,
+            self.active.iter().map(|a| a.s + a.done + 1).sum::<u64>()
+        );
         let batch = BatchComposition {
             prefill_tokens,
             decode_reqs: self.active.len() as u64,
@@ -484,6 +517,7 @@ impl WorkerSim {
         if usage > self.m {
             // KV overflow: clearing event (rare — views built on demand).
             self.outcome.overflow_events += 1;
+            self.last_overflow_round = self.round;
             self.active_views.clear();
             self.active_views.extend(self.active.iter().map(ActiveState::view));
             let evicted = sched.on_overflow(&self.active_views, &mut self.rng);
@@ -512,6 +546,7 @@ impl WorkerSim {
                     self.act_slot[rest.id] = pos + i;
                 }
                 post_usage -= a.s + a.done + 1;
+                self.kv_next -= a.s + a.done + 1;
                 self.restarts[a.id] += 1;
                 self.outcome.evicted_requests += 1;
                 if let Some(sink) = &self.sink {
@@ -563,7 +598,10 @@ impl WorkerSim {
                 .push((self.t, self.queued_len() as u64));
         }
 
-        // Token production + completions.
+        // Token production + completions. Every active gains one token,
+        // so next round's usage grows by the batch size (completions
+        // subtract themselves back out below).
+        self.kv_next += self.active.len() as u64;
         let mut i = 0;
         while i < self.active.len() {
             self.active[i].done += 1;
@@ -574,6 +612,7 @@ impl WorkerSim {
             }
             if self.active[i].done >= self.active[i].o_true {
                 let a = self.active.swap_remove(i);
+                self.kv_next -= a.s + a.done + 1;
                 self.act_slot[a.id] = NO_SLOT;
                 if let Some(moved) = self.active.get(i) {
                     self.act_slot[moved.id] = i;
@@ -604,6 +643,105 @@ impl WorkerSim {
             }
         }
         Ok(())
+    }
+
+    // ----- event-driven fast path (`sim::events`) -----------------------
+
+    /// Whether the *next* round can run as a quiet round: a batch that
+    /// only decodes — no releasable arrival, no waiting request (so the
+    /// scheduler call is a guaranteed no-op by the quiescence contract
+    /// on [`Scheduler`]), no KV overflow, and the previous round was not
+    /// an overflow clearing (whose survivors may still sit at
+    /// `done = 0`, needing a full step to produce their first token).
+    /// The caller must additionally rule out completion events due next
+    /// round — that knowledge lives in the event heap, not here.
+    pub(crate) fn quiet_eligible(&self) -> bool {
+        !self.stopped
+            && !self.active.is_empty()
+            && self.waiting.is_empty()
+            && self.pending.front().map_or(true, |w| w.arrival > self.t)
+            && self.kv_next <= self.m
+            && self.last_overflow_round != self.round
+    }
+
+    /// Execute one round known to change nothing but the clock and every
+    /// active's token count — O(1) regardless of batch size. The f64
+    /// arithmetic, series samples, and cap/stall checks are exactly
+    /// [`Self::step`]'s execute branch, which is what keeps the event
+    /// engine bit-identical to the round engine
+    /// (`tests/event_reduction.rs`).
+    pub(crate) fn quiet_round(&mut self, perf: &dyn PerfModel) {
+        debug_assert!(self.quiet_eligible());
+        self.round += 1;
+        let stalled =
+            self.round.saturating_sub(self.last_completion_round) > self.cfg.stall_rounds;
+        if self.round > self.cfg.max_rounds || stalled {
+            self.outcome.finished = false;
+            self.outcome.terminated = if stalled {
+                Termination::Diverged
+            } else {
+                Termination::Capped
+            };
+            self.outcome.rounds = self.round - 1;
+            self.stopped = true;
+            return;
+        }
+        let usage = self.kv_next;
+        let batch = BatchComposition {
+            prefill_tokens: 0,
+            decode_reqs: self.active.len() as u64,
+            kv_tokens: usage,
+        };
+        self.t += perf.iteration_time(&batch);
+        self.outcome.peak_mem = self.outcome.peak_mem.max(usage);
+        if self.cfg.record_series {
+            self.outcome.mem_series.push((self.t, usage));
+            self.outcome
+                .tokens_series
+                .push((self.t, batch.tokens_processed()));
+            self.outcome
+                .queue_series
+                .push((self.t, self.queued_len() as u64));
+        }
+        // One token per active, bookkept as a shared offset.
+        self.quiet_offset += 1;
+        self.kv_next += self.active.len() as u64;
+    }
+
+    /// Materialize the quiet-round token debt into per-request `done`
+    /// counters. Must run before any full [`Self::step`]; O(batch), paid
+    /// once per quiet stretch rather than once per round.
+    pub(crate) fn flush_quiet(&mut self) {
+        if self.quiet_offset == 0 {
+            return;
+        }
+        let off = self.quiet_offset;
+        self.quiet_offset = 0;
+        for a in &mut self.active {
+            a.done += off;
+        }
+    }
+
+    /// The last executed (or cap-consumed) round number.
+    pub(crate) fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Overflow clearings so far (the event driver schedules a forced
+    /// full step for the round after each one).
+    pub(crate) fn overflow_count(&self) -> u64 {
+        self.outcome.overflow_events
+    }
+
+    /// Absolute completion round of every active request, assuming only
+    /// quiet rounds from here on: one token per round means request `a`
+    /// finishes in round `round + (o_true − done)`. Call with the quiet
+    /// offset flushed.
+    pub(crate) fn completion_rounds(&self) -> impl Iterator<Item = (RequestId, u64)> + '_ {
+        debug_assert_eq!(self.quiet_offset, 0);
+        self.active
+            .iter()
+            .map(|a| (a.id, self.round + (a.o_true - a.done)))
     }
 
     /// Seal the worker's outcome. A stopped worker keeps the

@@ -1,0 +1,362 @@
+//! Continuous-time **event-driven** engine: the round engine's exact
+//! semantics, minus the per-round work on rounds where nothing can
+//! happen.
+//!
+//! The round-synchronous loop ([`super::engine::run`]) pays a scheduler
+//! call, an O(batch) token-production sweep, and slot-map bookkeeping on
+//! *every* round — even in long stretches where the batch just decodes:
+//! nothing arrives, nothing completes, nothing overflows. At low
+//! utilization those stretches dominate. This driver classifies each
+//! upcoming round with a [`BinaryHeap`] of timestamped events and runs
+//! the quiet ones through [`WorkerSim::quiet_round`] — O(1) per round,
+//! no scheduler call — while every *eventful* round (arrival release,
+//! completion, overflow, eviction, non-empty waiting queue) is delegated
+//! to the **same** [`WorkerSim::step`] the round engine uses.
+//!
+//! ## Equivalence contract
+//!
+//! Outcomes are **bit-identical** to the round engine — same
+//! `per_request` records, rounds, clock arithmetic, series, counters —
+//! pinned over the shared `incremental_diff` corpus by
+//! `tests/event_reduction.rs`. The argument:
+//!
+//! * A quiet round repeats the execute branch's exact f64 operations on
+//!   the exact `BatchComposition` the round engine would have built
+//!   (prefill 0, same decode count, same KV usage), so the clock and
+//!   series agree to the bit.
+//! * Skipping the scheduler call is legal only because quiet rounds
+//!   require an **empty waiting queue**, where the quiescence contract
+//!   on [`crate::sched::Scheduler`] guarantees the call returns nothing,
+//!   draws no RNG, and mutates no observable state. (Admission
+//!   *feasibility* can flip round-to-round without any event — the
+//!   Eq-(5) peak is not monotone in the round index — so skipping is
+//!   never legal while anything waits.)
+//! * Completion timing is deterministic during a quiet stretch: one
+//!   token per round means request `a` completes in absolute round
+//!   `round + (o_true − done)`. The heap is rebuilt from those rounds
+//!   after every full step, and the stretch is cut one round short of
+//!   the earliest event so the completion itself runs through `step`.
+//! * Overflow clearings skip token production, so survivors admitted in
+//!   the clearing round still sit at `done = 0`; a [`Event::PostOverflow`]
+//!   entry forces the following round through `step` (where their first
+//!   token — and `first_token` timestamp — is produced).
+//!
+//! Token progress during a stretch is bookkept as a shared
+//! `quiet_offset` rather than per-request increments;
+//! [`WorkerSim::flush_quiet`] materializes it before any full step.
+//! That keeps quiet rounds O(1) in batch size.
+
+use crate::core::{Instance, RequestId};
+use crate::metrics::SimOutcome;
+use crate::perf::PerfModel;
+use crate::predictor::Predictor;
+use crate::sched::Scheduler;
+use crate::sim::engine::{clamped_predictions, SimConfig, SimError, WaitState, WorkerSim};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// What makes an upcoming round eventful. Ordered by round, then FIFO
+/// insertion order (`seq`) — the heap only ever needs the earliest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    /// A running request produces its final token in this round.
+    Completion { id: RequestId },
+    /// The previous round was an overflow clearing: survivors may hold
+    /// `done = 0` and the next admission/feasibility picture changed, so
+    /// this round must be a full step.
+    PostOverflow,
+}
+
+/// Heap key: `(absolute round, insertion seq, event)` behind a
+/// [`Reverse`] so the [`BinaryHeap`] pops the earliest round first.
+type EventKey = (u64, u64, Event);
+
+/// Counters the event driver accumulates about its own fast path —
+/// consumed by `benches/perf_runtime.rs` for the events/sec ledger rows.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EventStats {
+    /// Rounds executed through the O(1) quiet fast path.
+    pub quiet_rounds: u64,
+    /// Rounds delegated to the full `WorkerSim::step`.
+    pub slow_rounds: u64,
+    /// Events pushed through the heap (completions + post-overflow
+    /// barriers).
+    pub heap_events: u64,
+}
+
+/// Run one policy over one instance on the event-driven engine.
+/// Deterministic given `seed`; bit-identical to [`super::engine::run`].
+pub fn run_events(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<SimOutcome, SimError> {
+    run_events_stats(inst, sched, predictor, perf, seed, cfg).map(|(out, _)| out)
+}
+
+/// [`run_events`] plus the fast-path counters.
+pub fn run_events_stats(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<(SimOutcome, EventStats), SimError> {
+    let preds = clamped_predictions(inst, predictor, inst.m)?;
+    let n = inst.requests.len();
+    let incremental = cfg.incremental && sched.supports_incremental();
+    if incremental {
+        sched.on_reset();
+    }
+    let mut worker = WorkerSim::new(n, inst.m, &sched.name(), seed, cfg, incremental);
+    let mut heap: BinaryHeap<Reverse<EventKey>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut seen_overflows = 0u64;
+    let mut stats = EventStats::default();
+
+    let mut next_arrival = 0usize;
+    loop {
+        // Deliver submissions due at or before the next batch-formation
+        // time — the identical `arrival ≤ t` gating as the round
+        // engine's driver (a stopped worker absorbs the remainder, which
+        // keeps the `assigned` accounting bit-identical).
+        while next_arrival < n {
+            let at = inst.requests[next_arrival].arrival;
+            let due = match worker.next_time() {
+                None => true,
+                Some(ft) => at <= ft,
+            };
+            if !due {
+                break;
+            }
+            let r = &inst.requests[next_arrival];
+            next_arrival += 1;
+            worker.deliver(WaitState {
+                id: r.id,
+                arrival: r.arrival,
+                first_arrival: r.arrival,
+                s: r.prompt_len,
+                o_true: r.output_len,
+                pred: preds[r.id],
+                class: r.class,
+            });
+        }
+        if !worker.busy() {
+            break;
+        }
+
+        // Quiet fast path: nothing schedulable, nothing completing, no
+        // clearing fallout — advance the clock in O(1).
+        let event_due = heap
+            .peek()
+            .is_some_and(|&Reverse((round, _, _))| round <= worker.round() + 1);
+        if !event_due && worker.quiet_eligible() {
+            worker.quiet_round(perf);
+            stats.quiet_rounds += 1;
+            continue;
+        }
+
+        // Eventful round: materialize quiet-round progress and run the
+        // round engine's own step, then rebuild the event horizon from
+        // the surviving batch.
+        worker.flush_quiet();
+        worker.step(sched, perf)?;
+        stats.slow_rounds += 1;
+        if worker.stopped() {
+            // Next loop iteration delivers any remaining arrivals (cap
+            // accounting), then exits via `busy()`.
+            continue;
+        }
+        heap.clear();
+        for (id, round) in worker.completion_rounds() {
+            heap.push(Reverse((round, seq, Event::Completion { id })));
+            seq += 1;
+            stats.heap_events += 1;
+        }
+        if worker.overflow_count() > seen_overflows {
+            seen_overflows = worker.overflow_count();
+            heap.push(Reverse((worker.round() + 1, seq, Event::PostOverflow)));
+            seq += 1;
+            stats.heap_events += 1;
+        }
+    }
+    let mut out = worker.finish();
+    out.classes = inst.classes.clone();
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::perf::UnitTime;
+    use crate::sched::{AlphaProtection, McSf};
+    use crate::sim::engine::run;
+    use crate::util::rng::Rng;
+    use crate::workload::synthetic;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn single_request_matches_round_engine() {
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 5, 7)]);
+        let a = run(&inst, &mut McSf::default(), &Predictor::exact(), &UnitTime, 1, cfg()).unwrap();
+        let (b, stats) = run_events_stats(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            cfg(),
+        )
+        .unwrap();
+        assert_eq!(a.per_request, b.per_request);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.mem_series, b.mem_series);
+        assert_eq!(a.queue_series, b.queue_series);
+        // o = 7: one admission step, then rounds 2..=6 are quiet, round 7
+        // completes through the heap.
+        assert!(stats.quiet_rounds >= 5, "{stats:?}");
+        assert!(stats.heap_events >= 1);
+    }
+
+    #[test]
+    fn long_decode_tail_is_mostly_quiet() {
+        // One long request: after admission every round but the last is
+        // quiet, so slow rounds stay O(events), not O(rounds).
+        let inst = Instance::new(1000, vec![Request::new(0, 0.0, 4, 400)]);
+        let (out, stats) = run_events_stats(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            3,
+            cfg(),
+        )
+        .unwrap();
+        assert!(out.finished);
+        assert_eq!(out.rounds, 400);
+        assert_eq!(stats.slow_rounds, 2, "{stats:?}");
+        assert_eq!(stats.quiet_rounds, 398, "{stats:?}");
+    }
+
+    #[test]
+    fn overflow_heavy_run_matches_round_engine() {
+        // β-clearing churn: overflows, evictions, re-admissions — the
+        // PostOverflow barrier keeps first-token accounting exact.
+        let reqs: Vec<Request> = (0..18).map(|i| Request::new(i, 0.0, 2, 4)).collect();
+        let inst = Instance::new(60, reqs);
+        let a = run(
+            &inst,
+            &mut AlphaProtection::new(0.05, 0.5),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            cfg(),
+        )
+        .unwrap();
+        let b = run_events(
+            &inst,
+            &mut AlphaProtection::new(0.05, 0.5),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            cfg(),
+        )
+        .unwrap();
+        assert!(a.overflow_events > 0, "scenario must actually overflow");
+        assert_eq!(a.per_request, b.per_request);
+        assert_eq!(a.overflow_events, b.overflow_events);
+        assert_eq!(a.evicted_requests, b.evicted_requests);
+        assert_eq!(a.mem_series, b.mem_series);
+        assert_eq!(a.tokens_series, b.tokens_series);
+        assert_eq!(a.queue_series, b.queue_series);
+    }
+
+    #[test]
+    fn capped_runs_match_and_stay_series_aligned() {
+        // The livelock regime under a round cap: the cap can hit inside
+        // a quiet stretch, and the series/rounds invariant from PR 4
+        // must hold on the event path too.
+        let reqs: Vec<Request> = (0..12).map(|i| Request::new(i, 0.0, 2, 20)).collect();
+        let inst = Instance::new(60, reqs);
+        let capped_cfg = SimConfig {
+            max_rounds: 500,
+            ..SimConfig::default()
+        };
+        let a = run(
+            &inst,
+            &mut AlphaProtection::new(0.05, 1.0),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            capped_cfg,
+        )
+        .unwrap();
+        let b = run_events(
+            &inst,
+            &mut AlphaProtection::new(0.05, 1.0),
+            &Predictor::exact(),
+            &UnitTime,
+            2,
+            capped_cfg,
+        )
+        .unwrap();
+        assert!(!b.finished);
+        assert_eq!(a.terminated, b.terminated);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.mem_series, b.mem_series);
+        assert_eq!(b.rounds as usize, b.mem_series.len());
+        assert_eq!(b.rounds as usize, b.queue_series.len());
+        assert_eq!(b.rounds as usize, b.tokens_series.len());
+    }
+
+    #[test]
+    fn random_instances_match_both_scheduler_paths() {
+        let mut rng = Rng::new(77);
+        for trial in 0..10 {
+            let inst = synthetic::arrival_model_2(&mut rng);
+            for incremental in [true, false] {
+                let c = SimConfig {
+                    incremental,
+                    ..SimConfig::default()
+                };
+                for pred in [Predictor::exact(), Predictor::uniform_noise(0.5, 11)] {
+                    let a = run(
+                        &inst,
+                        &mut McSf::with_protection(0.1),
+                        &pred,
+                        &UnitTime,
+                        7,
+                        c,
+                    )
+                    .unwrap();
+                    let b = run_events(
+                        &inst,
+                        &mut McSf::with_protection(0.1),
+                        &pred,
+                        &UnitTime,
+                        7,
+                        c,
+                    )
+                    .unwrap();
+                    assert_eq!(a.per_request, b.per_request, "trial {trial}");
+                    assert_eq!(a.rounds, b.rounds, "trial {trial}");
+                    assert_eq!(a.mem_series, b.mem_series, "trial {trial}");
+                    assert_eq!(a.queue_series, b.queue_series, "trial {trial}");
+                    assert_eq!(
+                        a.total_latency().to_bits(),
+                        b.total_latency().to_bits(),
+                        "trial {trial}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -10,11 +10,17 @@
 //!   the §5.2 serving simulation (the role Vidur plays in the paper);
 //! * [`cluster::run_fleet`] — N workers behind a pluggable
 //!   [`crate::cluster::Router`], each worker running the same per-round
-//!   loop as the single-worker engines.
+//!   loop as the single-worker engines;
+//! * [`events::run_events`] — the continuous-time event-driven driver:
+//!   same semantics, but rounds where nothing can happen run through an
+//!   O(1) fast path instead of the full per-round loop, bit-identical
+//!   to [`engine::run`] (`tests/event_reduction.rs`).
 
 pub mod cluster;
 pub mod continuous;
 pub mod discrete;
 pub mod engine;
+pub mod events;
 
 pub use engine::{SimConfig, SimError};
+pub use events::{run_events, run_events_stats, EventStats};

@@ -7,4 +7,5 @@ pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod slab;
 pub mod stats;

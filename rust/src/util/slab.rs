@@ -1,0 +1,157 @@
+//! A minimal arena slab: stable `usize` keys into a flat `Vec`, with a
+//! free-list so removed slots are recycled instead of leaking.
+//!
+//! The hot-path scheduler state (`sched/incremental.rs`) stores its
+//! waiting-queue buckets in a slab so splits and merges recycle arena
+//! slots — flat, cache-friendly storage in place of the previous
+//! per-request `BTreeMap`/`HashMap` nodes. The aliasing invariant the
+//! recycler must uphold — a slot returned by [`Slab::insert`] is never
+//! one still holding a live entry — is property-tested in
+//! `tests/flat_structs.rs`.
+
+/// Arena with free-list slot recycling. Keys are plain `usize` indices;
+/// a removed key is invalid until `insert` hands it out again.
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    entries: Vec<Option<T>>,
+    /// Stack of vacant slots available for reuse.
+    free: Vec<usize>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab {
+            entries: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Slab<T> {
+        Slab {
+            entries: Vec::with_capacity(cap),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Store `value`, returning its slot. Reuses the most recently freed
+    /// slot when one exists, else appends.
+    pub fn insert(&mut self, value: T) -> usize {
+        self.len += 1;
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.entries[slot].is_none(), "free-list slot was live");
+                self.entries[slot] = Some(value);
+                slot
+            }
+            None => {
+                self.entries.push(Some(value));
+                self.entries.len() - 1
+            }
+        }
+    }
+
+    /// Remove and return the entry at `slot`; `None` if the slot is
+    /// vacant (or out of range). The slot becomes reusable immediately.
+    pub fn remove(&mut self, slot: usize) -> Option<T> {
+        let v = self.entries.get_mut(slot)?.take()?;
+        self.len -= 1;
+        self.free.push(slot);
+        Some(v)
+    }
+
+    pub fn get(&self, slot: usize) -> Option<&T> {
+        self.entries.get(slot)?.as_ref()
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut T> {
+        self.entries.get_mut(slot)?.as_mut()
+    }
+
+    /// Drop every entry and the free list (capacity is kept).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.free.clear();
+        self.len = 0;
+    }
+
+    /// Live `(slot, &entry)` pairs in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &T)> + '_ {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| e.as_ref().map(|v| (i, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<&str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None, "double remove is inert");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn freed_slots_are_recycled() {
+        let mut s: Slab<u32> = Slab::new();
+        let a = s.insert(1);
+        let _b = s.insert(2);
+        s.remove(a);
+        let c = s.insert(3);
+        assert_eq!(c, a, "most recently freed slot is reused");
+        assert_eq!(s.entries.len(), 2, "no growth while slots are free");
+        assert_eq!(s.get(c), Some(&3));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut s: Slab<u32> = Slab::new();
+        for i in 0..10 {
+            s.insert(i);
+        }
+        s.remove(3);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.iter().count(), 0);
+        let slot = s.insert(99);
+        assert_eq!(slot, 0, "fresh numbering after clear");
+    }
+
+    #[test]
+    fn iter_walks_live_entries_in_slot_order() {
+        let mut s: Slab<u32> = Slab::new();
+        let slots: Vec<usize> = (0..5).map(|i| s.insert(i * 10)).collect();
+        s.remove(slots[1]);
+        s.remove(slots[3]);
+        let seen: Vec<(usize, u32)> = s.iter().map(|(i, &v)| (i, v)).collect();
+        assert_eq!(seen, vec![(0, 0), (2, 20), (4, 40)]);
+    }
+}

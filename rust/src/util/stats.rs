@@ -43,12 +43,22 @@ pub fn median(xs: &[f64]) -> f64 {
 /// bench ledgers — a p99 over fewer than ~100 samples leans on
 /// interpolation, so treat tail percentiles of small runs as smoothed
 /// estimates, not observed order statistics.
+///
+/// **NaN rule**: NaN samples are dropped before ranking (they carry no
+/// order information), so a series polluted by a few undefined points —
+/// e.g. flow-stats ratios with a zero denominator — still yields the
+/// percentile of the defined remainder. An all-NaN (or empty-after-
+/// filtering) input returns NaN rather than panicking, making the
+/// pollution visible downstream instead of aborting the run.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() as f64 - 1.0);
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -183,6 +193,22 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 10.0);
         assert_eq!(percentile(&xs, 100.0), 40.0);
         assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_and_propagates_all_nan() {
+        // A NaN mixed into an otherwise clean series is dropped, not a
+        // panic source (regression: sort_by(partial_cmp().unwrap())
+        // aborted here before).
+        let xs = [10.0, f64::NAN, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+        assert_eq!(median(&[f64::NAN, 5.0]), 5.0);
+        // All-NaN input: no defined order statistics — propagate NaN.
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+        // Empty input keeps its documented 0.0 behavior.
+        assert_eq!(percentile(&[], 99.0), 0.0);
     }
 
     #[test]

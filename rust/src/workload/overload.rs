@@ -146,8 +146,23 @@ pub fn nhpp_arrival_times(n: usize, profile: &RateProfile, rng: &mut Rng) -> Vec
 /// `capacity = conc / (mean_o · dt)` completions per second. This is a
 /// back-of-envelope ceiling (no queueing slack, perfect packing) — which
 /// is exactly what an *overload* generator should exceed.
-pub fn capacity_per_sec(m: u64, perf: &dyn PerfModel, mean_s: f64, mean_o: f64) -> f64 {
-    assert!(mean_s > 0.0 && mean_o > 0.0);
+///
+/// Errors (instead of panicking — the CLI's `--preset` reaches this
+/// with user-supplied class specs) when `mean_s`/`mean_o` are not
+/// strictly positive and finite, or the perf model returns a
+/// non-positive / non-finite iteration time for the representative
+/// batch.
+pub fn capacity_per_sec(m: u64, perf: &dyn PerfModel, mean_s: f64, mean_o: f64) -> Result<f64> {
+    if !(mean_s > 0.0 && mean_s.is_finite()) {
+        return Err(anyhow!(
+            "capacity estimate needs a positive finite mean prompt length, got {mean_s}"
+        ));
+    }
+    if !(mean_o > 0.0 && mean_o.is_finite()) {
+        return Err(anyhow!(
+            "capacity estimate needs a positive finite mean output length, got {mean_o}"
+        ));
+    }
     let conc = (m as f64 / (mean_s + mean_o / 2.0)).max(1.0);
     let batch = BatchComposition {
         prefill_tokens: (conc * mean_s / mean_o).round() as u64,
@@ -155,8 +170,14 @@ pub fn capacity_per_sec(m: u64, perf: &dyn PerfModel, mean_s: f64, mean_o: f64) 
         kv_tokens: (conc * (mean_s + mean_o / 2.0)).round() as u64,
     };
     let dt = perf.iteration_time(&batch);
-    assert!(dt > 0.0 && dt.is_finite(), "bad iteration time {dt}");
-    conc / (mean_o * dt)
+    if !(dt > 0.0 && dt.is_finite()) {
+        return Err(anyhow!(
+            "perf model '{}' returned a non-positive iteration time {dt} for the \
+             representative batch (m={m}, mean_s={mean_s}, mean_o={mean_o})",
+            perf.name()
+        ));
+    }
+    Ok(conc / (mean_o * dt))
 }
 
 /// Overload workload generator: NHPP arrivals shaped by a
@@ -211,7 +232,7 @@ impl OverloadGen {
 /// visible regardless of `n`.
 pub fn preset(name: &str, m: u64, perf: &dyn PerfModel, n: usize) -> Result<OverloadGen> {
     use super::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
-    let cap = capacity_per_sec(m, perf, PROMPT_MEAN, OUTPUT_MEAN);
+    let cap = capacity_per_sec(m, perf, PROMPT_MEAN, OUTPUT_MEAN)?;
     let classes = ClassSet::parse(PRESET_CLASSES).expect("preset class spec parses");
     let n = n.max(1) as f64;
     let profile = match name {
@@ -325,10 +346,23 @@ mod tests {
     fn capacity_estimate_is_sane_under_unit_time() {
         use crate::workload::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
         // Unit rounds: dt = 1, conc = m / (s̄ + ō/2), cap = conc / ō.
-        let cap = capacity_per_sec(16_492, &UnitTime, PROMPT_MEAN, OUTPUT_MEAN);
+        let cap = capacity_per_sec(16_492, &UnitTime, PROMPT_MEAN, OUTPUT_MEAN).unwrap();
         let conc = 16_492.0 / (PROMPT_MEAN + OUTPUT_MEAN / 2.0);
         assert!((cap - conc / OUTPUT_MEAN).abs() < 1e-9);
         assert!(cap > 1.0 && cap < 10.0, "cap={cap}");
+    }
+
+    #[test]
+    fn capacity_estimate_rejects_degenerate_means() {
+        // Non-positive or non-finite means surface as errors, not
+        // asserts — `--preset` reaches this with user-supplied specs.
+        assert!(capacity_per_sec(500, &UnitTime, 0.0, 10.0).is_err());
+        assert!(capacity_per_sec(500, &UnitTime, -3.0, 10.0).is_err());
+        assert!(capacity_per_sec(500, &UnitTime, 10.0, 0.0).is_err());
+        assert!(capacity_per_sec(500, &UnitTime, f64::NAN, 10.0).is_err());
+        assert!(capacity_per_sec(500, &UnitTime, 10.0, f64::INFINITY).is_err());
+        let msg = format!("{:#}", capacity_per_sec(500, &UnitTime, 0.0, 10.0).unwrap_err());
+        assert!(msg.contains("mean prompt length"), "{msg}");
     }
 
     #[test]
@@ -356,7 +390,7 @@ mod tests {
     #[test]
     fn sustained_preset_exceeds_capacity() {
         use crate::workload::lmsys::{OUTPUT_MEAN, PROMPT_MEAN};
-        let cap = capacity_per_sec(500, &UnitTime, PROMPT_MEAN, OUTPUT_MEAN);
+        let cap = capacity_per_sec(500, &UnitTime, PROMPT_MEAN, OUTPUT_MEAN).unwrap();
         let gen = preset("sustained", 500, &UnitTime, 100).unwrap();
         match gen.profile {
             RateProfile::Sustained { lambda } => {

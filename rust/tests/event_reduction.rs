@@ -1,0 +1,195 @@
+//! Differential reduction test for the continuous-time event-driven
+//! engine: over the same corpus `tests/incremental_diff.rs` uses —
+//! every policy spec, exact and noisy predictions, random + §5.1 + the
+//! Thm-4.1 adversarial instances — [`kvsched::sim::events::run_events`]
+//! must produce a `SimOutcome` **bit-identical** to the round-synchronous
+//! [`kvsched::sim::engine::run`], on both the incremental and the
+//! snapshot scheduler paths. This is the event/round equivalence
+//! contract ARCHITECTURE.md documents: quiet-round skipping may change
+//! how fast the engine runs, never what it computes.
+//!
+//! Beyond `incremental_diff`'s field set this also pins `queue_series`
+//! — the satellite invariant that the event engine's recorded series
+//! stay aligned with `rounds` is checked here on every corpus instance
+//! (including overflow-heavy and capped runs).
+
+use kvsched::core::{Instance, Request};
+use kvsched::metrics::SimOutcome;
+use kvsched::predictor::Predictor;
+use kvsched::sched::{by_name, Scheduler};
+use kvsched::sim::engine::run;
+use kvsched::sim::events::run_events;
+use kvsched::sim::SimConfig;
+use kvsched::util::prop::{forall_cases, usize_in};
+use kvsched::util::rng::Rng;
+use kvsched::workload::synthetic;
+
+/// The shared corpus policy set (see tests/incremental_diff.rs).
+const SPECS: [&str; 9] = [
+    "mcsf",
+    "mcsf:alpha=0.15",
+    "mcsf:skip=1",
+    "mc-benchmark",
+    "protect:alpha=0.2",
+    "protect:alpha=0.1,beta=0.5",
+    "fcfs:threshold=0.9",
+    "priority",
+    "edf:threshold=0.9",
+];
+
+fn cfg(incremental: bool) -> SimConfig {
+    SimConfig {
+        max_rounds: 10_000,
+        stall_rounds: 1_500,
+        record_series: true,
+        incremental,
+    }
+}
+
+fn assert_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.algo, b.algo, "{ctx}: algo");
+    assert_eq!(a.finished, b.finished, "{ctx}: finished");
+    assert_eq!(a.terminated, b.terminated, "{ctx}: termination");
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.peak_mem, b.peak_mem, "{ctx}: peak_mem");
+    assert_eq!(a.overflow_events, b.overflow_events, "{ctx}: overflows");
+    assert_eq!(a.evicted_requests, b.evicted_requests, "{ctx}: evictions");
+    assert_eq!(a.assigned, b.assigned, "{ctx}: assigned");
+    assert_eq!(a.per_request, b.per_request, "{ctx}: per-request records");
+    assert_eq!(a.mem_series, b.mem_series, "{ctx}: memory series");
+    assert_eq!(a.tokens_series, b.tokens_series, "{ctx}: token series");
+    assert_eq!(a.queue_series, b.queue_series, "{ctx}: queue series");
+    assert_eq!(
+        a.total_latency().to_bits(),
+        b.total_latency().to_bits(),
+        "{ctx}: total latency bits"
+    );
+    // The PR-4 alignment invariant, on the event engine's output.
+    assert_eq!(b.rounds as usize, b.mem_series.len(), "{ctx}: mem align");
+    assert_eq!(b.rounds as usize, b.queue_series.len(), "{ctx}: queue align");
+    assert_eq!(
+        b.rounds as usize,
+        b.tokens_series.len(),
+        "{ctx}: tokens align"
+    );
+}
+
+fn diff_instance(inst: &Instance, case: &str) -> Result<(), String> {
+    for spec in SPECS {
+        for incremental in [true, false] {
+            for (pname, pred) in [
+                ("exact", Predictor::exact()),
+                ("noisy", Predictor::uniform_noise(0.5, 11)),
+            ] {
+                let mut s1: Box<dyn Scheduler> = by_name(spec).unwrap();
+                let mut s2: Box<dyn Scheduler> = by_name(spec).unwrap();
+                let ctx = format!("{case} spec={spec} inc={incremental} pred={pname}");
+                let round = run(
+                    inst,
+                    s1.as_mut(),
+                    &pred,
+                    &kvsched::perf::UnitTime,
+                    9,
+                    cfg(incremental),
+                )
+                .map_err(|e| format!("{ctx}: round engine failed: {e}"))?;
+                let event = run_events(
+                    inst,
+                    s2.as_mut(),
+                    &pred,
+                    &kvsched::perf::UnitTime,
+                    9,
+                    cfg(incremental),
+                )
+                .map_err(|e| format!("{ctx}: event engine failed: {e}"))?;
+                assert_identical(&event, &round, &ctx);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// 120 fully random small instances — the same generator and seed as
+/// the incremental differential, so the corpora are literally shared.
+#[test]
+fn event_engine_equals_round_engine_on_random_instances() {
+    forall_cases(0x1DE17, 120, usize_in(0, u32::MAX as usize), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let m = rng.i64_range(8, 50) as u64;
+        let n = rng.usize_range(1, 30);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let s = rng.i64_range(1, 5) as u64;
+                let o = rng.i64_range(1, (m - s).min(14) as i64) as u64;
+                let a = rng.i64_range(0, 8) as f64;
+                Request::new(i, a, s, o)
+            })
+            .collect();
+        diff_instance(&Instance::new(m, reqs), &format!("seed={seed:#x}"))
+    });
+}
+
+/// 40 + 40 instances from the paper's §5.1 synthetic arrival models.
+#[test]
+fn event_engine_equals_round_engine_on_paper_arrival_models() {
+    let mut rng = Rng::new(0xA221);
+    for trial in 0..40 {
+        let inst = synthetic::arrival_model_1(&mut rng);
+        diff_instance(&inst, &format!("model1 trial={trial}")).unwrap();
+    }
+    for trial in 0..40 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        diff_instance(&inst, &format!("model2 trial={trial}")).unwrap();
+    }
+}
+
+/// The Thm-4.1 adversarial construction.
+#[test]
+fn event_engine_equals_round_engine_on_adversarial_instances() {
+    for m in [16u64, 64, 144] {
+        let inst = synthetic::adversarial_thm41(m, 0);
+        diff_instance(&inst, &format!("thm41 m={m}")).unwrap();
+    }
+}
+
+/// Low-utilization sparse traffic — the regime the event engine exists
+/// for (long decode tails, long idle gaps): most rounds must take the
+/// quiet fast path while outcomes stay bit-identical.
+#[test]
+fn event_engine_mostly_skips_at_low_utilization() {
+    use kvsched::sim::events::run_events_stats;
+    let m = 4096u64;
+    let reqs: Vec<Request> = (0..40)
+        .map(|i| {
+            // One arrival every 300 rounds, each decoding for 200: the
+            // batch is a lone decoder most of the time.
+            Request::new(i, (i as f64) * 300.0, 16, 200)
+        })
+        .collect();
+    let inst = Instance::new(m, reqs);
+    let mut s1 = by_name("mcsf").unwrap();
+    let mut s2 = by_name("mcsf").unwrap();
+    let round = run(
+        &inst,
+        s1.as_mut(),
+        &Predictor::exact(),
+        &kvsched::perf::UnitTime,
+        9,
+        SimConfig::default(),
+    )
+    .unwrap();
+    let (event, stats) = run_events_stats(
+        &inst,
+        s2.as_mut(),
+        &Predictor::exact(),
+        &kvsched::perf::UnitTime,
+        9,
+        SimConfig::default(),
+    )
+    .unwrap();
+    assert_identical(&event, &round, "low-util");
+    assert!(
+        stats.quiet_rounds > 10 * stats.slow_rounds,
+        "expected a quiet-dominated run, got {stats:?}"
+    );
+}

@@ -318,7 +318,7 @@ fn sustained_overload() -> Instance {
         ClassSet::parse("interactive(ttft=100000;e2e=150):0.6,background:0.4").unwrap();
     let m = 600u64;
     let mean_o = 0.6 * 0.6 * OUTPUT_MEAN + 0.4 * OUTPUT_MEAN;
-    let cap = capacity_per_sec(m, &UnitTime, PROMPT_MEAN, mean_o);
+    let cap = capacity_per_sec(m, &UnitTime, PROMPT_MEAN, mean_o).unwrap();
     let gen = OverloadGen::new(classes, RateProfile::Sustained { lambda: 1.5 * cap }, m);
     gen.instance(400, m, &mut Rng::new(0xF10))
 }

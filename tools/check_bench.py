@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Gate the repo-root BENCH_*.json perf ledgers.
+
+Two modes:
+
+  check_bench.py --nulls-only   # committed-ledger hygiene: no nulls anywhere
+  check_bench.py                # full gate: no nulls AND the acceptance
+                                # ratios each ledger states in its "note"
+
+Acceptance ratios (mirrored from the ledger notes — update both together):
+
+  BENCH_scheduler.json  incremental mean_us at waiting=6400 >= 3x below
+                        snapshot mean_us.
+  BENCH_sim.json        overloaded: incremental rounds_per_sec >= 2x snapshot
+                        at every waiting >= 6400;
+                        low_util: event-engine speedup_vs_round >= 2x at every
+                        utilization <= 0.3.
+  BENCH_cluster.json    scaling: power-of-two throughput at the largest fleet
+                        >= 2x its workers=1 value;
+                        routing: power-of-two avg_latency_s <= 1.05x
+                        round-robin at every workers > 1.
+
+Exit code 0 iff every check passes. Stdlib only."""
+
+import json
+import sys
+from pathlib import Path
+
+LEDGERS = ["BENCH_scheduler.json", "BENCH_sim.json", "BENCH_cluster.json"]
+
+failures = []
+
+
+def fail(msg):
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def ok(msg):
+    print(f"  ok: {msg}")
+
+
+def find_nulls(node, path):
+    """Yield JSON paths of every null in the document."""
+    if node is None:
+        yield path
+    elif isinstance(node, dict):
+        for k, v in node.items():
+            yield from find_nulls(v, f"{path}.{k}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from find_nulls(v, f"{path}[{i}]")
+
+
+def is_po2(router):
+    r = str(router).lower()
+    return "power" in r or r == "po2"
+
+
+def is_rr(router):
+    r = str(router).lower()
+    return "round" in r or r == "rr"
+
+
+def check_scheduler(doc):
+    rows = doc["rows"]
+    inc = {r["waiting"]: r for r in rows if r.get("path") == "incremental"}
+    snap = {r["waiting"]: r for r in rows if r.get("path") == "snapshot"}
+    w = 6400
+    if w not in inc or w not in snap:
+        fail(f"BENCH_scheduler.json: missing waiting={w} row (inc/snap)")
+        return
+    i, s = inc[w]["mean_us"], snap[w]["mean_us"]
+    ratio = s / i if i > 0 else float("inf")
+    if ratio >= 3.0:
+        ok(f"scheduler: incremental@{w} {i:.3g}us vs snapshot {s:.3g}us = {ratio:.1f}x (>= 3x)")
+    else:
+        fail(f"BENCH_scheduler.json: incremental@{w} only {ratio:.2f}x below snapshot (< 3x)")
+
+
+def check_sim(doc):
+    rows = doc["rows"]
+    over = [r for r in rows if r.get("section") == "overloaded"]
+    low = [r for r in rows if r.get("section") == "low_util"]
+    if not over or not low:
+        fail("BENCH_sim.json: missing 'overloaded' or 'low_util' rows")
+        return
+    for w in sorted({r["waiting"] for r in over}):
+        if w < 6400:
+            continue
+        inc = next(r for r in over if r["waiting"] == w and r["path"] == "incremental")
+        snap = next(r for r in over if r["waiting"] == w and r["path"] == "snapshot")
+        ratio = inc["rounds_per_sec"] / max(snap["rounds_per_sec"], 1e-12)
+        if ratio >= 2.0:
+            ok(f"sim overloaded W={w}: incremental {ratio:.1f}x snapshot rounds/sec (>= 2x)")
+        else:
+            fail(f"BENCH_sim.json: overloaded W={w} incremental only {ratio:.2f}x snapshot (< 2x)")
+    for r in low:
+        if r["utilization"] > 0.3:
+            continue
+        sp = r["speedup_vs_round"]
+        if sp >= 2.0:
+            ok(f"sim low_util u={r['utilization']}: event engine {sp:.1f}x round engine (>= 2x)")
+        else:
+            fail(f"BENCH_sim.json: low_util u={r['utilization']} event engine only {sp:.2f}x (< 2x)")
+
+
+def check_cluster(doc):
+    rows = doc["rows"]
+    po2 = {r["workers"]: r for r in rows if is_po2(r["router"])}
+    rr = {r["workers"]: r for r in rows if is_rr(r["router"])}
+    if not po2 or 1 not in po2:
+        fail("BENCH_cluster.json: no power-of-two workers=1 row")
+        return
+    w_max = max(po2)
+    scale = po2[w_max]["throughput_req_per_s"] / max(po2[1]["throughput_req_per_s"], 1e-12)
+    if w_max > 1 and scale >= 2.0:
+        ok(f"cluster scaling: po2 throughput W={w_max} is {scale:.1f}x W=1 (>= 2x)")
+    else:
+        fail(f"BENCH_cluster.json: po2 throughput W={w_max} only {scale:.2f}x W=1 (< 2x)")
+    for w in sorted(po2):
+        if w <= 1 or w not in rr:
+            continue
+        p, r = po2[w]["avg_latency_s"], rr[w]["avg_latency_s"]
+        if p <= 1.05 * r:
+            ok(f"cluster routing W={w}: po2 latency {p:.3g}s <= 1.05x rr {r:.3g}s")
+        else:
+            fail(f"BENCH_cluster.json: W={w} po2 latency {p:.3g}s > 1.05x rr {r:.3g}s")
+
+
+def main():
+    argv = sys.argv[1:]
+    nulls_only = "--nulls-only" in argv
+    argv = [a for a in argv if a != "--nulls-only"]
+    root = Path(argv[0]) if argv else Path(__file__).resolve().parent.parent
+
+    docs = {}
+    for name in LEDGERS:
+        path = root / name
+        print(f"== {path} ==")
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            fail(f"{name}: unreadable ({e})")
+            continue
+        nulls = list(find_nulls(doc, "$"))
+        if nulls:
+            fail(f"{name}: {len(nulls)} null value(s), e.g. {nulls[0]} — ledger not measured")
+        else:
+            ok("no nulls")
+        docs[name] = doc
+
+    if not nulls_only and not failures:
+        check_scheduler(docs["BENCH_scheduler.json"])
+        check_sim(docs["BENCH_sim.json"])
+        check_cluster(docs["BENCH_cluster.json"])
+
+    if failures:
+        print(f"\n{len(failures)} ledger check(s) FAILED")
+        return 1
+    print("\nall ledger checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
