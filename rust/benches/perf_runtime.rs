@@ -1,4 +1,4 @@
-//! Perf: the serving hot paths. Three parts:
+//! Perf: the serving hot paths. Four parts:
 //!
 //! 1. **End-to-end sim throughput** (always runs): rounds/sec of the
 //!    whole engine round loop on an overloaded queue at
@@ -13,7 +13,11 @@
 //!    wall-clock speedup over the round-synchronous engine; the
 //!    reduction corpus (`tests/event_reduction.rs`) pins bit-identity,
 //!    this bench pins the speed claim. Rows join `BENCH_sim.json`.
-//! 3. **PJRT kernels** (needs `make artifacts`): per-iteration
+//! 3. **Event fleet vs round fleet** (always runs): the same
+//!    low-utilization family behind a 4-replica `run_fleet` — every
+//!    worker traverses the full global horizon, so quiet-round skipping
+//!    compounds across the fleet. Rows join `BENCH_sim.json`.
+//! 4. **PJRT kernels** (needs `make artifacts`): per-iteration
 //!    decode/prefill latency by batch bucket, plus the host-side
 //!    gather/scatter overhead. Self-skips when artifacts are absent.
 
@@ -22,7 +26,7 @@ use kvsched::core::{Instance, Request};
 use kvsched::prelude::*;
 use kvsched::runtime::kv_cache::{KvCache, RowCache};
 use kvsched::runtime::{engine::argmax, Engine};
-use kvsched::sim::{engine as sim_engine, run_events_stats, SimConfig};
+use kvsched::sim::{engine as sim_engine, run_events_stats, EngineKind, SimConfig};
 use kvsched::util::cli::Args;
 use kvsched::util::json::Json;
 use std::time::Instant;
@@ -130,7 +134,10 @@ fn event_vs_round(args: &Args) -> Vec<Json> {
         &["util", "rounds", "quiet", "slow", "heap_events", "events_per_sec"],
     );
     let mut rows: Vec<Json> = Vec::new();
-    for &util in &[0.1f64, 0.2, 0.3] {
+    // 0.7 is past the crossover: most rounds have events, so the event
+    // engine pays heap upkeep for nothing and the two engines converge
+    // (the speedup gate only applies at utilization ≤ 0.3).
+    for &util in &[0.1f64, 0.2, 0.3, 0.7] {
         let inst = low_util_instance(n, util);
         let t0 = Instant::now();
         let round_out = sim_engine::run(
@@ -195,11 +202,85 @@ fn event_vs_round(args: &Args) -> Vec<Json> {
     rows
 }
 
+/// Event engine as the fleet's per-worker clock driver: `run_fleet` at
+/// low utilization with 4 replicas, round vs event. Every worker must
+/// traverse the same global time horizon, so quiet-round skipping
+/// multiplies across the fleet; the differential corpus
+/// (`tests/event_reduction.rs`, fleet section) pins bit-identity, this
+/// bench pins the speed claim. Rows join `BENCH_sim.json` under
+/// `fleet_low_util`.
+fn fleet_event_vs_round(args: &Args) -> Vec<Json> {
+    let n = args.usize_or("events-n", 400);
+    let workers = 4usize;
+    let mk_cfg = |engine| SimConfig {
+        max_rounds: 50_000_000,
+        record_series: false,
+        incremental: true,
+        engine,
+        ..SimConfig::default()
+    };
+    let mut cmp = Compare::new(
+        &format!(
+            "event vs round fleet at low utilization (MC-SF, po2, {workers} workers, \
+             unit time, n={n})"
+        ),
+        "round_rps",
+        "event_rps",
+        true,
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &util in &[0.1f64, 0.2, 0.3] {
+        let inst = low_util_instance(n, util);
+        let run_one = |engine: EngineKind| {
+            let mut fleet = Fleet::new(FleetSpec::replicas(workers), "mcsf", "po2").unwrap();
+            let t0 = Instant::now();
+            let out = fleet
+                .try_simulate(
+                    &inst,
+                    &Predictor::exact(),
+                    &kvsched::perf::UnitTime,
+                    1,
+                    mk_cfg(engine),
+                )
+                .unwrap();
+            (out, t0.elapsed().as_secs_f64().max(1e-9))
+        };
+        let (round_out, round_s) = run_one(EngineKind::Round);
+        let (event_out, event_s) = run_one(EngineKind::Event);
+        // Cheap identity guard so the timed comparison stays
+        // apples-to-apples (full bit-identity lives in the test corpus).
+        for (i, (a, b)) in round_out.per_worker.iter().zip(&event_out.per_worker).enumerate() {
+            assert_eq!(a.rounds, b.rounds, "fleet round count diverged (worker {i})");
+            assert_eq!(a.per_request, b.per_request, "fleet outcomes diverged (worker {i})");
+        }
+        let rounds: u64 = event_out.per_worker.iter().map(|w| w.rounds).sum();
+        let round_rps = rounds as f64 / round_s;
+        let event_rps = rounds as f64 / event_s;
+        cmp.row(&format!("util={util}"), round_rps, event_rps);
+        rows.push(
+            Json::obj()
+                .set("section", "fleet_low_util")
+                .set("utilization", util)
+                .set("workers", workers)
+                .set("n", n)
+                .set("rounds", rounds)
+                .set("round_elapsed_s", round_s)
+                .set("event_elapsed_s", event_s)
+                .set("round_rounds_per_sec", round_rps)
+                .set("event_rounds_per_sec", event_rps)
+                .set("speedup_vs_round", round_s / event_s),
+        );
+    }
+    cmp.print();
+    rows
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let iters = args.usize_or("iters", 20);
     let mut rows = sim_throughput(&args);
     rows.extend(event_vs_round(&args));
+    rows.extend(fleet_event_vs_round(&args));
     let doc = Json::obj()
         .set("bench", "perf_runtime")
         .set(
@@ -208,6 +289,9 @@ fn main() {
              every push and gates it via tools/check_bench.py. Acceptance: (1) overloaded — \
              incremental rounds_per_sec \u{2265}2\u{00d7} snapshot at waiting \u{2265} 6400; \
              (2) low_util — event-engine speedup_vs_round \u{2265}2\u{00d7} at every \
+             utilization \u{2264} 0.3 (the 0.7 row documents the crossover: once most \
+             rounds carry events the engines converge and the gate does not apply); \
+             (3) fleet_low_util — event fleet speedup_vs_round \u{2265}2\u{00d7} at every \
              utilization \u{2264} 0.3.",
         )
         .set("max_rounds", args.u64_or("sim-rounds", 1500))

@@ -14,6 +14,8 @@
 //!   kvsched simulate --trace trace.json --algo mcsf
 //!   kvsched simulate --workload lmsys --n 500 --lambda 10 --algo protect:alpha=0.25
 //!   kvsched simulate --n 800 --lambda 50 --workers 4 --router po2
+//!   kvsched simulate --workload lmsys --n 2000 --lambda 10 --engine event
+//!   kvsched simulate --stream --n 1000000 --lambda 10 --algo mcsf
 //!   kvsched simulate --preset flash-crowd --admission queue-threshold
 //!   kvsched simulate --preset sustained --admission token-bucket:rate=1500 --unit-time
 //!   kvsched suite --preset sustained --n 600 --seed 1
@@ -37,6 +39,15 @@
 //! replicas behind `--router rr|jsq|least-kv|po2|slo-aware`; simulated
 //! arrival rates are scaled λ × N so per-worker load stays comparable
 //! with the single-worker baseline (disable with `--no-scale`).
+//!
+//! Engine flags (`simulate` / `suite` / `record`): `--engine
+//! round|event` picks the clock driver — outcomes are bit-identical,
+//! `event` skips quiet rounds in O(1) and is the fast path whenever
+//! idle/decode-only stretches dominate (low utilization). `simulate
+//! --stream` additionally generates the lmsys/class workload lazily and
+//! feeds it to the streaming event driver, so million-request sweeps
+//! never materialize the request vector (single worker, non-bursty
+//! classes only).
 //!
 //! SLO flags: `--classes <spec>` generates an SLO-tiered mixture (see
 //! `ClassSet::parse` for the grammar, e.g. `interactive:0.8,batch:0.2`)
@@ -71,7 +82,7 @@ use kvsched::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use kvsched::predictor::Predictor;
 use kvsched::prelude::*;
 use kvsched::opt::{self, HindsightConfig};
-use kvsched::sim::{continuous, discrete, SimConfig};
+use kvsched::sim::{continuous, discrete, EngineKind, SimConfig};
 use kvsched::trace::{
     perf_by_name, record_fleet_flow, record_sim_flow, replay_fleet, replay_sim, Trace, TraceEvent,
     TraceMeta, TraceSink,
@@ -108,6 +119,17 @@ fn main() {
 /// Fleet flags shared by `simulate` / `suite` / `serve`.
 fn fleet_flags(args: &Args) -> (usize, &str) {
     (args.usize_or("workers", 1).max(1), args.str_or("router", "po2"))
+}
+
+/// Engine config from `--engine round|event` (`simulate` / `suite` /
+/// `record`): both engines are bit-identical; `event` skips quiet
+/// rounds in O(1) and is the fast path at low utilization.
+fn sim_config(args: &Args) -> Result<SimConfig> {
+    let engine = EngineKind::parse(args.str_or("engine", "round")).map_err(|e| anyhow!("{e}"))?;
+    Ok(SimConfig {
+        engine,
+        ..SimConfig::default()
+    })
 }
 
 /// Apply the λ × N load scaling for a `workers`-replica fleet (skipped
@@ -276,12 +298,16 @@ fn gen_trace(args: &Args) -> Result<()> {
 }
 
 fn simulate(args: &Args) -> Result<()> {
+    if args.has("stream") {
+        return simulate_stream(args);
+    }
     let inst = load_or_generate(args)?;
     let predictor = match args.get("eps") {
         Some(_) => Predictor::uniform_noise(args.f64_or("eps", 0.0), args.u64_or("seed", 0)),
         None => Predictor::exact(),
     };
     let seed = args.u64_or("seed", 0);
+    let cfg = sim_config(args)?;
     let (workers, router) = fleet_flags(args);
     let flow_spec = flow_spec_from_args(args)?;
     // Overload runs get the stability verdict even without flow flags
@@ -304,16 +330,9 @@ fn simulate(args: &Args) -> Result<()> {
         let out = match &flow_spec {
             Some(spec) => {
                 let mut fc = FlowControl::from_spec(spec, &inst.classes, seed)?;
-                fleet.try_simulate_flow(
-                    &inst,
-                    &predictor,
-                    perf.as_ref(),
-                    seed,
-                    SimConfig::default(),
-                    &mut fc,
-                )
+                fleet.try_simulate_flow(&inst, &predictor, perf.as_ref(), seed, cfg, &mut fc)
             }
-            None => fleet.try_simulate(&inst, &predictor, perf.as_ref(), seed, SimConfig::default()),
+            None => fleet.try_simulate(&inst, &predictor, perf.as_ref(), seed, cfg),
         }
         .map_err(|e| anyhow!("fleet simulation failed: {e}"))?;
         println!("{}", out.to_json().pretty());
@@ -336,21 +355,19 @@ fn simulate(args: &Args) -> Result<()> {
                 &predictor,
                 perf.as_ref(),
                 seed,
-                SimConfig::default(),
+                cfg,
                 &mut fc,
             )
             .map_err(|e| anyhow!("simulation failed: {e}"))?
         }
         None if args.has("unit-time") => {
-            discrete::simulate_cfg(&inst, sched.as_mut(), &predictor, seed, SimConfig::default())
+            discrete::try_simulate_cfg(&inst, sched.as_mut(), &predictor, seed, cfg)
+                .map_err(|e| anyhow!("simulation failed: {e}"))?
         }
-        None => continuous::simulate(
-            &inst,
-            sched.as_mut(),
-            &predictor,
-            perf.as_ref(),
-            seed,
-        ),
+        None => {
+            continuous::try_simulate(&inst, sched.as_mut(), &predictor, perf.as_ref(), seed, cfg)
+                .map_err(|e| anyhow!("simulation failed: {e}"))?
+        }
     };
     println!("{}", out.to_json().pretty());
     if args.has("slo") {
@@ -358,6 +375,72 @@ fn simulate(args: &Args) -> Result<()> {
     }
     if stability {
         print_stability(&analyze_outcome(&out));
+    }
+    Ok(())
+}
+
+/// `simulate --stream`: generate arrivals lazily and feed them straight
+/// into the streaming event driver, so million-request sweeps hold
+/// O(active window) request state instead of a materialized `Vec`. The
+/// stream is always event-driven (`--engine` is redundant here) and
+/// single-worker; bursty class mixes are rejected because their
+/// coalesced arrivals stream out of order (materialize those instead).
+fn simulate_stream(args: &Args) -> Result<()> {
+    for unsupported in ["trace", "preset", "workload", "admission", "shed", "retry"] {
+        if args.has(unsupported) {
+            return Err(anyhow!("--stream generates lmsys/class arrivals lazily; drop --{unsupported}"));
+        }
+    }
+    if args.usize_or("workers", 1) > 1 {
+        return Err(anyhow!("--stream is single-worker; drop --workers"));
+    }
+    let classes = class_set(args)?;
+    let n = args.usize_or("n", 1000);
+    let lambda = args.f64_or("lambda", 50.0);
+    let m = args.u64_or("m", continuous::PAPER_M);
+    let seed = args.u64_or("seed", 0);
+    let gen = workload::ClassMixGen::new(classes.clone(), m);
+    let stream = gen.stream(n, lambda, Rng::new(seed));
+    if !stream.is_monotone() {
+        return Err(anyhow!(
+            "--stream requires non-bursty classes (burst ≤ 1); \
+             bursty mixes re-order arrivals and must be materialized"
+        ));
+    }
+    let predictor = match args.get("eps") {
+        Some(_) => Predictor::uniform_noise(args.f64_or("eps", 0.0), seed),
+        None => Predictor::exact(),
+    };
+    let perf: Box<dyn PerfModel> = if args.has("unit-time") {
+        Box::new(UnitTime)
+    } else {
+        Box::new(Llama70bA100x2::default())
+    };
+    let mut sched = kvsched::sched::by_name_classed(args.str_or("algo", "mcsf"), &classes)?;
+    let cfg = SimConfig {
+        engine: EngineKind::Event,
+        record_series: false,
+        ..sim_config(args)?
+    };
+    let (out, stats) = kvsched::sim::run_events_stream(
+        stream,
+        n,
+        m,
+        &classes,
+        sched.as_mut(),
+        &predictor,
+        perf.as_ref(),
+        seed,
+        cfg,
+    )
+    .map_err(|e| anyhow!("streamed simulation failed: {e}"))?;
+    println!("{}", out.to_json().pretty());
+    println!(
+        "event engine: {} quiet rounds skipped in O(1), {} full rounds",
+        stats.quiet_rounds, stats.slow_rounds
+    );
+    if args.has("slo") {
+        print_slo_table("per-class SLO report", out.goodput(), slo_rows(&out.class_stats()));
     }
     Ok(())
 }
@@ -372,6 +455,7 @@ fn record(args: &Args) -> Result<()> {
         None => Predictor::exact(),
     };
     let seed = args.u64_or("seed", 0);
+    let cfg = sim_config(args)?;
     let (workers, router) = fleet_flags(args);
     let algo = args.str_or("algo", "mcsf");
     let out_path = args.req_str("out");
@@ -397,7 +481,7 @@ fn record(args: &Args) -> Result<()> {
             perf.as_ref(),
             perf_name,
             seed,
-            SimConfig::default(),
+            cfg,
             flow_spec.as_ref(),
         )?;
         trace.save(out_path)?;
@@ -413,7 +497,7 @@ fn record(args: &Args) -> Result<()> {
         perf.as_ref(),
         perf_name,
         seed,
-        SimConfig::default(),
+        cfg,
         flow_spec.as_ref(),
     )?;
     trace.save(out_path)?;
@@ -457,6 +541,7 @@ fn replay(args: &Args) -> Result<()> {
 fn overload_suite(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let seed = args.u64_or("seed", 0);
+    let cfg = sim_config(args)?;
     let (workers, router) = fleet_flags(args);
     let algo = args.str_or("algo", "mcsf");
     let perf: Box<dyn PerfModel> = if args.has("unit-time") {
@@ -506,14 +591,7 @@ fn overload_suite(args: &Args) -> Result<()> {
             let mut fleet =
                 Fleet::new_classed(FleetSpec::replicas(workers), algo, router, &inst.classes)?;
             let out = fleet
-                .try_simulate_flow(
-                    &inst,
-                    &Predictor::exact(),
-                    perf.as_ref(),
-                    seed,
-                    SimConfig::default(),
-                    &mut fc,
-                )
+                .try_simulate_flow(&inst, &Predictor::exact(), perf.as_ref(), seed, cfg, &mut fc)
                 .map_err(|e| anyhow!("overload suite failed for {adm}: {e}"))?;
             (analyze_fleet(&out), out.goodput(), out.class_stats())
         } else {
@@ -524,7 +602,7 @@ fn overload_suite(args: &Args) -> Result<()> {
                 &Predictor::exact(),
                 perf.as_ref(),
                 seed,
-                SimConfig::default(),
+                cfg,
                 &mut fc,
             )
             .map_err(|e| anyhow!("overload suite failed for {adm}: {e}"))?;
@@ -562,6 +640,7 @@ fn suite(args: &Args) -> Result<()> {
     let inst = load_or_generate(args)?;
     let perf = Llama70bA100x2::default();
     let seed = args.u64_or("seed", 0);
+    let cfg = sim_config(args)?;
     let (workers, router) = fleet_flags(args);
     let slo = args.has("slo");
     // Classed runs add the SLO-tier policies to the paper's suite.
@@ -597,7 +676,7 @@ fn suite(args: &Args) -> Result<()> {
             let mut fleet =
                 Fleet::new_classed(FleetSpec::replicas(workers), spec, router, &inst.classes)?;
             let out = fleet
-                .try_simulate(&inst, &Predictor::exact(), &perf, seed, SimConfig::default())
+                .try_simulate(&inst, &Predictor::exact(), &perf, seed, cfg)
                 .map_err(|e| anyhow!("fleet suite failed for {spec}: {e}"))?;
             let lat = out.latency_summary();
             let mut row = vec![
@@ -634,7 +713,7 @@ fn suite(args: &Args) -> Result<()> {
             &Predictor::exact(),
             &perf,
             seed,
-            SimConfig::default(),
+            cfg,
         )?;
         let lat = out.summary();
         let mut row = vec![

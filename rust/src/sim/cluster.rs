@@ -49,7 +49,8 @@
 //! (`sink` present) and single-worker fleets take the sequential path;
 //! a trace is an interleaved event log, and threading would reorder it.
 
-use super::engine::{clamped_predictions, SimConfig, SimError, WaitState, WorkerSim};
+use super::engine::{clamped_predictions, EngineKind, SimConfig, SimError, WaitState, WorkerSim};
+use super::events::{EventStats, WorkerEvents};
 use crate::cluster::router::{Router, WorkerLoad};
 use crate::core::{Instance, QueuedReq, Request};
 use crate::flow::{Decision, FlowControl, FlowLoad};
@@ -162,6 +163,7 @@ pub(crate) fn run_fleet_inner(
             &mut router_rng,
             workers,
             &mut flow,
+            cfg.engine,
         )?
     } else {
         run_fleet_sequential(
@@ -174,6 +176,7 @@ pub(crate) fn run_fleet_inner(
             workers,
             sink,
             &mut flow,
+            cfg.engine,
         )?
     };
 
@@ -283,9 +286,15 @@ fn run_fleet_sequential(
     mut workers: Vec<WorkerSim>,
     sink: Option<TraceSink>,
     flow: &mut Option<&mut FlowControl>,
+    engine: EngineKind,
 ) -> Result<Vec<SimOutcome>, SimError> {
     let w_count = workers.len();
     let mut loads: Vec<WorkerLoad> = Vec::with_capacity(w_count);
+    // Per-worker event horizons for the event-driven fast path: each
+    // worker classifies its own next round (quiet vs eventful) locally
+    // while the driver keeps submissions on the global causal clock.
+    let mut horizons: Vec<WorkerEvents> = (0..w_count).map(|_| WorkerEvents::new()).collect();
+    let mut ev_stats = EventStats::default();
     let mut next_arrival = 0usize;
 
     loop {
@@ -397,7 +406,12 @@ fn run_fleet_sequential(
         let Some((_, i)) = next_step else {
             break; // no submissions left, no busy workers: done
         };
-        workers[i].step(scheds[i].as_mut(), perf)?;
+        match engine {
+            EngineKind::Round => workers[i].step(scheds[i].as_mut(), perf)?,
+            EngineKind::Event => {
+                horizons[i].turn(&mut workers[i], scheds[i].as_mut(), perf, &mut ev_stats)?
+            }
+        }
     }
 
     Ok(workers.into_iter().map(WorkerSim::finish).collect())
@@ -419,6 +433,7 @@ fn run_fleet_parallel(
     router_rng: &mut Rng,
     workers: Vec<WorkerSim>,
     flow: &mut Option<&mut FlowControl>,
+    engine: EngineKind,
 ) -> Result<Vec<SimOutcome>, SimError> {
     use std::sync::mpsc;
 
@@ -474,6 +489,11 @@ fn run_fleet_parallel(
             let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
             scope.spawn(move || {
                 let mut failed = false;
+                // Per-thread event horizon: the quiet/eventful decision
+                // is purely worker-local, so the fast path composes with
+                // the parallel protocol without any cross-thread state.
+                let mut horizon = WorkerEvents::new();
+                let mut ev_stats = EventStats::default();
                 while let Ok(cmd) = cmd_rx.recv() {
                     match cmd {
                         Cmd::Advance(until) => {
@@ -481,7 +501,18 @@ fn run_fleet_parallel(
                             while !failed {
                                 match worker.next_time() {
                                     Some(ft) if ft < until => {
-                                        if let Err(e) = worker.step(sched.as_mut(), perf) {
+                                        let step = match engine {
+                                            EngineKind::Round => {
+                                                worker.step(sched.as_mut(), perf)
+                                            }
+                                            EngineKind::Event => horizon.turn(
+                                                &mut worker,
+                                                sched.as_mut(),
+                                                perf,
+                                                &mut ev_stats,
+                                            ),
+                                        };
+                                        if let Err(e) = step {
                                             failed = true;
                                             err = Some(e);
                                         }

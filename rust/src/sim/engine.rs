@@ -51,6 +51,48 @@ use crate::util::rng::Rng;
 use std::collections::VecDeque;
 use std::fmt;
 
+/// Which driver advances the simulation clock.
+///
+/// Both engines implement the *same* semantics over the same
+/// [`WorkerSim`] rounds and produce bit-identical outcomes
+/// (`tests/event_reduction.rs`); they differ only in how much work a
+/// round with no events costs. [`EngineKind::Round`] executes every
+/// round through the full per-round loop; [`EngineKind::Event`]
+/// classifies upcoming rounds with an event heap and runs the quiet
+/// ones through the O(1) fast path (`sim::events`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Round-synchronous: the classic loop, one full iteration per round.
+    #[default]
+    Round,
+    /// Continuous-time event-driven: quiet rounds skip in O(1).
+    Event,
+}
+
+impl EngineKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Round => "round",
+            EngineKind::Event => "event",
+        }
+    }
+
+    /// Parse the CLI `--engine` grammar.
+    pub fn parse(s: &str) -> Result<EngineKind, String> {
+        match s {
+            "round" => Ok(EngineKind::Round),
+            "event" => Ok(EngineKind::Event),
+            other => Err(format!("unknown engine '{other}' (round | event)")),
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Engine limits / options.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
@@ -69,6 +111,10 @@ pub struct SimConfig {
     /// every policy — outcomes are identical either way; the flag exists
     /// for the differential tests and before/after perf comparisons.
     pub incremental: bool,
+    /// Which driver advances the clock ([`EngineKind::Round`] or
+    /// [`EngineKind::Event`]). Outcomes are bit-identical either way;
+    /// the event engine is faster whenever quiet rounds dominate.
+    pub engine: EngineKind,
 }
 
 impl Default for SimConfig {
@@ -78,6 +124,7 @@ impl Default for SimConfig {
             stall_rounds: 30_000,
             record_series: true,
             incremental: true,
+            engine: EngineKind::Round,
         }
     }
 }
@@ -821,6 +868,13 @@ pub(crate) fn run_with_preds_flow(
     sink: Option<TraceSink>,
     mut flow: Option<&mut FlowControl>,
 ) -> Result<SimOutcome, SimError> {
+    if cfg.engine == EngineKind::Event {
+        // Same semantics, continuous-time driver: the event engine runs
+        // the identical delivery loop below but classifies rounds with a
+        // completion heap so quiet ones take the O(1) fast path.
+        return super::events::run_events_driver(inst, sched, preds, perf, seed, cfg, sink, flow)
+            .map(|(out, _)| out);
+    }
     let n = inst.requests.len();
     let incremental = cfg.incremental && sched.supports_incremental();
     if incremental {

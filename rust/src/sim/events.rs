@@ -46,12 +46,14 @@
 //! [`WorkerSim::flush_quiet`] materializes it before any full step.
 //! That keeps quiet rounds O(1) in batch size.
 
-use crate::core::{Instance, RequestId};
+use crate::core::{ClassSet, Instance, Request, RequestId};
+use crate::flow::{Decision, FlowControl, FlowLoad};
 use crate::metrics::SimOutcome;
 use crate::perf::PerfModel;
 use crate::predictor::Predictor;
 use crate::sched::Scheduler;
 use crate::sim::engine::{clamped_predictions, SimConfig, SimError, WaitState, WorkerSim};
+use crate::trace::{TraceEvent, TraceSink};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -107,25 +109,147 @@ pub fn run_events_stats(
     cfg: SimConfig,
 ) -> Result<(SimOutcome, EventStats), SimError> {
     let preds = clamped_predictions(inst, predictor, inst.m)?;
+    run_events_driver(inst, sched, &preds, perf, seed, cfg, None, None)
+}
+
+/// One worker's event horizon: the heap of upcoming eventful rounds plus
+/// the per-worker counters the rebuild logic needs. Owning this per
+/// worker is what lets the fleet engine ([`crate::sim::cluster`]) run N
+/// independent fast paths merged on the global causal clock: each
+/// worker's heap answers "is your next round quiet?" locally, while the
+/// fleet driver keeps routing decisions on the exact event order of the
+/// round engine.
+pub(crate) struct WorkerEvents {
+    heap: BinaryHeap<Reverse<EventKey>>,
+    seq: u64,
+    seen_overflows: u64,
+}
+
+impl WorkerEvents {
+    pub(crate) fn new() -> Self {
+        WorkerEvents {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            seen_overflows: 0,
+        }
+    }
+
+    /// Is an eventful round due at or before the worker's next round?
+    fn due(&self, worker: &WorkerSim) -> bool {
+        self.heap
+            .peek()
+            .is_some_and(|&Reverse((round, _, _))| round <= worker.round() + 1)
+    }
+
+    /// Rebuild the event horizon from the surviving batch after a full
+    /// step: one completion event per active request plus a
+    /// post-overflow barrier when the step cleared.
+    fn rebuild(&mut self, worker: &WorkerSim, stats: &mut EventStats) {
+        self.heap.clear();
+        for (id, round) in worker.completion_rounds() {
+            self.heap.push(Reverse((round, self.seq, Event::Completion { id })));
+            self.seq += 1;
+            stats.heap_events += 1;
+        }
+        if worker.overflow_count() > self.seen_overflows {
+            self.seen_overflows = worker.overflow_count();
+            self.heap
+                .push(Reverse((worker.round() + 1, self.seq, Event::PostOverflow)));
+            self.seq += 1;
+            stats.heap_events += 1;
+        }
+    }
+
+    /// Advance the worker by exactly one round: the O(1) quiet fast path
+    /// when no event is due and the worker is quiescent, otherwise the
+    /// round engine's own [`WorkerSim::step`] followed by a heap rebuild.
+    /// This is the *entire* per-round divergence between the two engines
+    /// — everything else (delivery gating, routing, flow admission) is
+    /// shared code.
+    pub(crate) fn turn(
+        &mut self,
+        worker: &mut WorkerSim,
+        sched: &mut dyn Scheduler,
+        perf: &dyn PerfModel,
+        stats: &mut EventStats,
+    ) -> Result<(), SimError> {
+        if !self.due(worker) && worker.quiet_eligible() {
+            worker.quiet_round(perf);
+            stats.quiet_rounds += 1;
+            return Ok(());
+        }
+        worker.flush_quiet();
+        worker.step(sched, perf)?;
+        stats.slow_rounds += 1;
+        if !worker.stopped() {
+            self.rebuild(worker, stats);
+        }
+        Ok(())
+    }
+}
+
+/// The unified single-worker event driver: the *same* merged
+/// original + retry delivery loop as the round engine's
+/// [`super::engine::run_with_preds_flow`], with the per-round step
+/// replaced by [`WorkerEvents::turn`]. Covers plain runs, flow-controlled
+/// runs, and recording — [`super::engine::run_with_preds_flow`]
+/// dispatches here whenever [`SimConfig::engine`] is
+/// [`super::engine::EngineKind::Event`].
+///
+/// Flow on the event clock: retries and admission checks need no heap
+/// entries of their own, because the merged submission stream is
+/// re-consulted before *every* round — quiet or full — at the worker's
+/// next batch-formation time, exactly like the round engine. A delivered
+/// submission lands in `pending` with `arrival ≤ t`, which makes the
+/// worker quiet-ineligible and forces the releasing round through the
+/// full step; token buckets therefore see the identical nondecreasing
+/// decision times, and `admission none` reduces to the plain event
+/// engine with zero extra work.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_events_driver(
+    inst: &Instance,
+    sched: &mut dyn Scheduler,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    sink: Option<TraceSink>,
+    mut flow: Option<&mut FlowControl>,
+) -> Result<(SimOutcome, EventStats), SimError> {
     let n = inst.requests.len();
     let incremental = cfg.incremental && sched.supports_incremental();
     if incremental {
         sched.on_reset();
     }
+    let flow_sink = sink.clone();
     let mut worker = WorkerSim::new(n, inst.m, &sched.name(), seed, cfg, incremental);
-    let mut heap: BinaryHeap<Reverse<EventKey>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let mut seen_overflows = 0u64;
+    if let Some(sink) = sink {
+        worker.set_trace(sink, 0);
+    }
+    let mut ev = WorkerEvents::new();
     let mut stats = EventStats::default();
-
     let mut next_arrival = 0usize;
     loop {
         // Deliver submissions due at or before the next batch-formation
         // time — the identical `arrival ≤ t` gating as the round
-        // engine's driver (a stopped worker absorbs the remainder, which
-        // keeps the `assigned` accounting bit-identical).
-        while next_arrival < n {
-            let at = inst.requests[next_arrival].arrival;
+        // engine's driver, over the identical merged original + retry
+        // stream (a stopped worker absorbs the remainder, which keeps
+        // the `assigned` accounting bit-identical).
+        loop {
+            let orig = (next_arrival < n).then(|| inst.requests[next_arrival].arrival);
+            let retry = flow.as_deref().and_then(FlowControl::next_retry).map(|(at, _, _)| at);
+            let (at, is_retry) = match (orig, retry) {
+                (None, None) => break,
+                (Some(a), None) => (a, false),
+                (None, Some(rt)) => (rt, true),
+                (Some(a), Some(rt)) => {
+                    if rt < a {
+                        (rt, true)
+                    } else {
+                        (a, false)
+                    }
+                }
+            };
             let due = match worker.next_time() {
                 None => true,
                 Some(ft) => at <= ft,
@@ -133,59 +257,164 @@ pub fn run_events_stats(
             if !due {
                 break;
             }
-            let r = &inst.requests[next_arrival];
-            next_arrival += 1;
+            let (r, attempt, submit_t) = if is_retry {
+                let (rt, id, attempt) = flow.as_mut().unwrap().pop_retry().unwrap();
+                (&inst.requests[id], attempt, rt)
+            } else {
+                let r = &inst.requests[next_arrival];
+                next_arrival += 1;
+                (r, 1, r.arrival)
+            };
+            let mut admitted = true;
+            if let Some(fc) = flow.as_mut() {
+                let load = FlowLoad {
+                    queued_demand: worker.queued_demand(),
+                    kv_budget: inst.m,
+                };
+                let cost = r.prompt_len + preds[r.id] + 1;
+                let decision = fc.on_submit(submit_t, r.id, r.class, cost, &load, attempt);
+                if decision != Decision::Admit {
+                    admitted = false;
+                    if let Some(sk) = &flow_sink {
+                        sk.record(TraceEvent::Reject {
+                            t: submit_t,
+                            id: r.id,
+                            attempt,
+                            s: r.prompt_len,
+                            o: r.output_len,
+                            pred: preds[r.id],
+                            class: r.class,
+                        });
+                        match decision {
+                            Decision::Retry { at, attempt } => {
+                                sk.record(TraceEvent::Retry {
+                                    t: submit_t,
+                                    id: r.id,
+                                    attempt,
+                                    at,
+                                });
+                            }
+                            Decision::Shed => {
+                                sk.record(TraceEvent::Shed {
+                                    t: submit_t,
+                                    id: r.id,
+                                    attempts: attempt,
+                                    class: r.class,
+                                });
+                            }
+                            Decision::Admit => unreachable!(),
+                        }
+                    }
+                }
+            }
+            if admitted {
+                worker.deliver(WaitState {
+                    id: r.id,
+                    arrival: submit_t,
+                    first_arrival: r.arrival,
+                    s: r.prompt_len,
+                    o_true: r.output_len,
+                    pred: preds[r.id],
+                    class: r.class,
+                });
+            }
+        }
+        if !worker.busy() {
+            break;
+        }
+        ev.turn(&mut worker, sched, perf, &mut stats)?;
+    }
+    let mut out = worker.finish();
+    out.classes = inst.classes.clone();
+    if let Some(fc) = flow {
+        out.flow = Some(fc.stats.clone());
+    }
+    Ok((out, stats))
+}
+
+/// Streaming event driver: [`run_events_stats`] over an arrival
+/// *iterator* instead of a materialized [`Instance`], so an n=10⁶ sweep
+/// holds O(active window) requests in flight (plus the O(n) dense slot /
+/// record arrays the outcome needs — indices, not request bodies).
+///
+/// Contract: the iterator must yield requests with **nondecreasing
+/// arrivals and dense ids in arrival order** (`id == position`), i.e. a
+/// pre-sorted stream like [`crate::workload::RequestStream`] over a
+/// non-bursty profile. Bursty class mixes coalesce arrivals backwards in
+/// time and must be materialized through [`Instance::new`] instead; the
+/// contract is debug-asserted here.
+#[allow(clippy::too_many_arguments)]
+pub fn run_events_stream<I>(
+    requests: I,
+    n: usize,
+    m: u64,
+    classes: &ClassSet,
+    sched: &mut dyn Scheduler,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<(SimOutcome, EventStats), SimError>
+where
+    I: IntoIterator<Item = Request>,
+{
+    let incremental = cfg.incremental && sched.supports_incremental();
+    if incremental {
+        sched.on_reset();
+    }
+    let mut worker = WorkerSim::new(n, m, &sched.name(), seed, cfg, incremental);
+    let mut ev = WorkerEvents::new();
+    let mut stats = EventStats::default();
+    let mut it = requests.into_iter().peekable();
+    let mut delivered = 0usize;
+    let mut last_arrival = f64::NEG_INFINITY;
+    loop {
+        while let Some(next) = it.peek() {
+            let due = match worker.next_time() {
+                None => true,
+                Some(ft) => next.arrival <= ft,
+            };
+            if !due {
+                break;
+            }
+            let r = it.next().unwrap();
+            debug_assert!(
+                r.arrival >= last_arrival,
+                "streaming driver needs nondecreasing arrivals (got {} after {})",
+                r.arrival,
+                last_arrival
+            );
+            last_arrival = r.arrival;
+            debug_assert_eq!(r.id, delivered, "streaming driver needs dense ids in arrival order");
+            delivered += 1;
+            // Same clamp as `clamped_predictions`, applied lazily per
+            // request so the stream never materializes.
+            if r.peak_mem() > m {
+                return Err(SimError::Infeasible {
+                    id: r.id,
+                    peak: r.peak_mem(),
+                    m,
+                });
+            }
+            let pred = predictor.predict(&r).min(m.saturating_sub(r.prompt_len)).max(1);
             worker.deliver(WaitState {
                 id: r.id,
                 arrival: r.arrival,
                 first_arrival: r.arrival,
                 s: r.prompt_len,
                 o_true: r.output_len,
-                pred: preds[r.id],
+                pred,
                 class: r.class,
             });
         }
         if !worker.busy() {
             break;
         }
-
-        // Quiet fast path: nothing schedulable, nothing completing, no
-        // clearing fallout — advance the clock in O(1).
-        let event_due = heap
-            .peek()
-            .is_some_and(|&Reverse((round, _, _))| round <= worker.round() + 1);
-        if !event_due && worker.quiet_eligible() {
-            worker.quiet_round(perf);
-            stats.quiet_rounds += 1;
-            continue;
-        }
-
-        // Eventful round: materialize quiet-round progress and run the
-        // round engine's own step, then rebuild the event horizon from
-        // the surviving batch.
-        worker.flush_quiet();
-        worker.step(sched, perf)?;
-        stats.slow_rounds += 1;
-        if worker.stopped() {
-            // Next loop iteration delivers any remaining arrivals (cap
-            // accounting), then exits via `busy()`.
-            continue;
-        }
-        heap.clear();
-        for (id, round) in worker.completion_rounds() {
-            heap.push(Reverse((round, seq, Event::Completion { id })));
-            seq += 1;
-            stats.heap_events += 1;
-        }
-        if worker.overflow_count() > seen_overflows {
-            seen_overflows = worker.overflow_count();
-            heap.push(Reverse((worker.round() + 1, seq, Event::PostOverflow)));
-            seq += 1;
-            stats.heap_events += 1;
-        }
+        ev.turn(&mut worker, sched, perf, &mut stats)?;
     }
+    debug_assert_eq!(delivered, n, "stream yielded {delivered} of {n} requests");
     let mut out = worker.finish();
-    out.classes = inst.classes.clone();
+    out.classes = classes.clone();
     Ok((out, stats))
 }
 

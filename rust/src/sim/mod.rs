@@ -22,5 +22,5 @@ pub mod discrete;
 pub mod engine;
 pub mod events;
 
-pub use engine::{SimConfig, SimError};
-pub use events::{run_events, run_events_stats, EventStats};
+pub use engine::{EngineKind, SimConfig, SimError};
+pub use events::{run_events, run_events_stats, run_events_stream, EventStats};

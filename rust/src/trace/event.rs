@@ -36,7 +36,7 @@
 
 use crate::core::{ClassId, ClassSet, RequestId};
 use crate::sim::cluster::ROUTER_STREAM;
-use crate::sim::SimConfig;
+use crate::sim::{EngineKind, SimConfig};
 use crate::util::error::{anyhow, bail, Context, Result};
 use crate::util::json::Json;
 use std::fmt;
@@ -510,13 +510,17 @@ impl TraceMeta {
     }
 
     /// The engine config the run used (and replay must reuse — the caps
-    /// shape truncated outcomes).
+    /// shape truncated outcomes). The engine *kind* is deliberately not
+    /// part of the trace schema: quiet rounds record no events, so the
+    /// round and event engines emit identical traces and a trace
+    /// produced by either replays against the canonical round driver.
     pub fn sim_config(&self) -> SimConfig {
         SimConfig {
             max_rounds: self.max_rounds,
             stall_rounds: self.stall_rounds,
             record_series: self.record_series,
             incremental: self.incremental,
+            engine: EngineKind::Round,
         }
     }
 
@@ -633,18 +637,32 @@ impl Trace {
     /// Git-friendly rendering: header fields on their own lines, then
     /// one compact event per line.
     pub fn to_text(&self) -> String {
-        let mut s = String::new();
-        s.push_str("{\"version\":");
-        s.push_str(&TRACE_VERSION.to_string());
-        s.push_str(",\n\"meta\":");
-        s.push_str(&self.meta.to_json().to_string());
-        s.push_str(",\n\"events\":[");
+        let mut buf = Vec::with_capacity(256 + 48 * self.events.len());
+        self.write_text(&mut buf)
+            .expect("writing to an in-memory buffer is infallible");
+        String::from_utf8(buf).expect("trace text is ascii/utf-8")
+    }
+
+    /// Stream the [`Self::to_text`] form into `w`, reusing one line
+    /// buffer across all events instead of allocating a `String` per
+    /// event — byte-identical output (pinned by
+    /// `streamed_save_matches_to_text` below and the committed goldens).
+    pub fn write_text<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        use std::fmt::Write as _;
+        let mut line = String::with_capacity(128);
+        line.push_str("{\"version\":");
+        let _ = write!(line, "{TRACE_VERSION}");
+        line.push_str(",\n\"meta\":");
+        self.meta.to_json().write_compact(&mut line);
+        line.push_str(",\n\"events\":[");
+        w.write_all(line.as_bytes())?;
         for (i, ev) in self.events.iter().enumerate() {
-            s.push_str(if i == 0 { "\n" } else { ",\n" });
-            s.push_str(&ev.to_json().to_string());
+            line.clear();
+            line.push_str(if i == 0 { "\n" } else { ",\n" });
+            ev.to_json().write_compact(&mut line);
+            w.write_all(line.as_bytes())?;
         }
-        s.push_str("\n]}\n");
-        s
+        w.write_all(b"\n]}\n")
     }
 
     /// Parse anything [`Self::to_text`] (or a generic JSON emitter)
@@ -655,7 +673,12 @@ impl Trace {
     }
 
     pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_text())
+        use std::io::Write as _;
+        let file =
+            std::fs::File::create(path).with_context(|| format!("creating trace file {path}"))?;
+        let mut out = std::io::BufWriter::new(file);
+        self.write_text(&mut out)
+            .and_then(|()| out.flush())
             .with_context(|| format!("writing trace to {path}"))
     }
 
@@ -885,6 +908,27 @@ mod tests {
         });
         let back = Trace::from_text(&trace.to_text()).unwrap();
         assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn streamed_save_matches_to_text() {
+        // The buffered on-disk writer and the in-memory renderer must
+        // produce byte-identical files (goldens additionally pin the
+        // bytes against the pre-buffering format).
+        let trace = Trace {
+            meta: sample_meta(),
+            events: sample_events(),
+        };
+        let mut streamed = Vec::new();
+        trace.write_text(&mut streamed).unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), trace.to_text());
+        let path = std::env::temp_dir().join("kvsched_streamed_save.trace");
+        let path = path.to_str().unwrap();
+        trace.save(path).unwrap();
+        let on_disk = std::fs::read_to_string(path).unwrap();
+        let _ = std::fs::remove_file(path);
+        assert_eq!(on_disk, trace.to_text(), "buffered save must be byte-identical");
+        assert_eq!(Trace::from_text(&on_disk).unwrap(), trace);
     }
 
     #[test]

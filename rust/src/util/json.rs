@@ -169,6 +169,14 @@ impl Json {
         s
     }
 
+    /// Compact single-line rendering appended into a caller-supplied
+    /// buffer — the allocation-free form of [`Self::to_string`] for hot
+    /// paths that serialize many values (e.g. the trace sink, which
+    /// reuses one line buffer across a million events).
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     /// Pretty rendering with 2-space indent.
     pub fn pretty(&self) -> String {
         let mut s = String::new();
@@ -182,10 +190,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
+                use std::fmt::Write as _;
+                // In-place formatting: no per-number temporary String.
                 if x.fract() == 0.0 && x.abs() < 1e15 {
-                    out.push_str(&format!("{}", *x as i64));
+                    let _ = write!(out, "{}", *x as i64);
                 } else {
-                    out.push_str(&format!("{x}"));
+                    let _ = write!(out, "{x}");
                 }
             }
             Json::Str(s) => write_escaped(out, s),
@@ -244,7 +254,10 @@ fn write_escaped(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
             c => out.push(c),
         }
     }

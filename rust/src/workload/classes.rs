@@ -80,6 +80,16 @@ impl ClassMixGen {
         Instance::new(m, reqs).with_classes(self.classes.clone())
     }
 
+    /// Streaming form of [`Self::instance`]: an iterator yielding the
+    /// bit-identical request sequence one request at a time (see
+    /// [`super::RequestStream`]). Note bursty mixes (`burst > 1`) stream
+    /// in draw order, which is not arrival order — check
+    /// [`super::RequestStream::is_monotone`] before feeding a simulator
+    /// directly.
+    pub fn stream(&self, n: usize, lambda: f64, rng: Rng) -> super::RequestStream {
+        super::RequestStream::new(self.classes.clone(), self.base, n, lambda, rng)
+    }
+
     /// Whether every class keeps the base length distribution and plain
     /// Poisson arrivals (the draw-identical reduction precondition).
     fn is_default_profile(&self) -> bool {

@@ -99,6 +99,15 @@ impl LmsysGen {
         Instance::new(m, reqs)
     }
 
+    /// Streaming form of [`Self::instance`]: an iterator yielding the
+    /// bit-identical request sequence one request at a time, holding
+    /// O(1) generator state instead of the full `Vec`. Takes the RNG by
+    /// value (the stream owns two cursors over it; see
+    /// [`super::RequestStream`]).
+    pub fn stream(&self, n: usize, lambda: f64, rng: Rng) -> super::RequestStream {
+        super::RequestStream::new(crate::core::ClassSet::default(), *self, n, lambda, rng)
+    }
+
     /// The paper's high-demand setting: λ = 50 req/s.
     pub fn high_demand(&self, n: usize, rng: &mut Rng) -> Instance {
         self.instance(n, 50.0, self.max_peak, rng)

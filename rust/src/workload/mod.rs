@@ -5,11 +5,13 @@
 pub mod classes;
 pub mod lmsys;
 pub mod overload;
+pub mod stream;
 pub mod synthetic;
 
 pub use classes::ClassMixGen;
 pub use lmsys::LmsysGen;
 pub use overload::{capacity_per_sec, OverloadGen, RateProfile};
+pub use stream::RequestStream;
 
 use crate::core::Instance;
 use crate::util::rng::Rng;

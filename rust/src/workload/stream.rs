@@ -1,0 +1,250 @@
+//! Streaming request generation: an iterator that yields the *same*
+//! request sequence as the materialized generators without ever holding
+//! more than O(1) state per pending draw.
+//!
+//! The materialized generators ([`LmsysGen::instance`],
+//! [`ClassMixGen::instance`]) consume their RNG in two phases: first all
+//! `n` arrival gaps (one exponential per request, accumulated into a
+//! Poisson process), then all `n` request bodies in id order (class draw,
+//! burst draw, length rejection loop). A streaming generator cannot
+//! interleave those phases without changing the draw sequence — so it
+//! keeps **two RNG cursors** over the same underlying stream:
+//!
+//! * the *arrivals cursor* is a clone of the input RNG taken before any
+//!   draw;
+//! * the *bodies cursor* is the input RNG fast-forwarded through the `n`
+//!   exponential arrival draws (O(n) time, O(1) memory — exactly the
+//!   draws the materialized path spends on
+//!   [`super::poisson_arrival_times`]).
+//!
+//! Each `next()` then advances both cursors by one request: one
+//! exponential gap from the arrivals cursor, one body from the bodies
+//! cursor. Because [`Rng`] clones its full state (including the cached
+//! Box–Muller spare), every draw lands bit-identically where the
+//! materialized generator would have placed it; the reduction tests below
+//! pin `stream().collect() == instance().requests`.
+//!
+//! Streams from bursty class mixes (`burst > 1`) can emit non-monotone
+//! arrival times — a burst continuation is re-anchored at the burst's
+//! first arrival — so only streams with [`RequestStream::is_monotone`]
+//! may be fed directly to [`crate::sim::events::run_events_stream`];
+//! bursty sequences must be materialized through
+//! [`crate::core::Instance::new`], which re-sorts and re-ids.
+
+use super::lmsys::LmsysGen;
+use crate::core::{ClassSet, Request};
+use crate::util::rng::Rng;
+
+/// Lazy request source, draw-identical to the materialized generators.
+///
+/// Construct via [`LmsysGen::stream`] or [`ClassMixGen::stream`]
+/// (`ClassMixGen` is re-exported as [`super::ClassMixGen`]).
+#[derive(Debug, Clone)]
+pub struct RequestStream {
+    classes: ClassSet,
+    base: LmsysGen,
+    lambda: f64,
+    n: usize,
+    emitted: usize,
+    /// Running arrival-process time (the Poisson cumulative sum).
+    t: f64,
+    /// Cursor over the arrival-gap draws (phase 1 of the materialized
+    /// generator's RNG consumption).
+    arrivals: Rng,
+    /// Cursor over the body draws (phase 2), starting where the arrival
+    /// draws ended.
+    bodies: Rng,
+    /// Per-class burst anchors, mirroring `ClassMixGen::instance`.
+    burst_anchor: Vec<Option<f64>>,
+    /// Whether the base-generator reduction applies (≤ 1 default-profile
+    /// class: no class draw, no burst draw, identity scaling).
+    single_default: bool,
+}
+
+impl RequestStream {
+    /// Build a stream over `classes` with base sampler `base`: `n`
+    /// Poisson(`lambda`) arrivals. Takes the RNG by value — the stream
+    /// owns both cursors, and the caller's sequence would diverge from
+    /// the materialized generators anyway if it kept drawing.
+    pub(crate) fn new(
+        classes: ClassSet,
+        base: LmsysGen,
+        n: usize,
+        lambda: f64,
+        rng: Rng,
+    ) -> RequestStream {
+        assert!(lambda > 0.0, "arrival rate must be positive");
+        let arrivals = rng.clone();
+        let mut bodies = rng;
+        // Fast-forward past the n arrival draws the materialized path
+        // performs first; the bodies cursor then starts exactly where
+        // `poisson_arrival_times` left the shared RNG.
+        for _ in 0..n {
+            bodies.exponential(lambda);
+        }
+        let single_default = classes.len() <= 1 && default_profile(&classes);
+        let k = classes.len();
+        RequestStream {
+            classes,
+            base,
+            lambda,
+            n,
+            emitted: 0,
+            t: 0.0,
+            arrivals,
+            bodies,
+            burst_anchor: vec![None; k],
+            single_default,
+        }
+    }
+
+    /// Total number of requests this stream will yield.
+    pub fn total(&self) -> usize {
+        self.n
+    }
+
+    /// Number of requests yielded so far (the next request's id).
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    /// Whether arrival times are guaranteed nondecreasing in emission
+    /// order. True unless some class coalesces bursts (`burst > 1`),
+    /// whose continuations are re-anchored at an earlier arrival.
+    /// Monotone streams feed [`crate::sim::events::run_events_stream`]
+    /// directly; non-monotone ones must be materialized and sorted.
+    pub fn is_monotone(&self) -> bool {
+        self.classes.classes.iter().all(|c| c.burst <= 1.0)
+    }
+
+    /// The class table the stream draws from (attach to outcomes so
+    /// metrics can score SLOs).
+    pub fn classes(&self) -> &ClassSet {
+        &self.classes
+    }
+}
+
+/// Whether every class keeps the base length distribution and plain
+/// Poisson arrivals — must mirror `ClassMixGen::is_default_profile`.
+fn default_profile(classes: &ClassSet) -> bool {
+    classes
+        .classes
+        .iter()
+        .all(|c| c.prompt_scale == 1.0 && c.output_scale == 1.0 && c.burst <= 1.0)
+}
+
+impl Iterator for RequestStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.emitted == self.n {
+            return None;
+        }
+        let id = self.emitted;
+        self.emitted += 1;
+        self.t += self.arrivals.exponential(self.lambda);
+        let t = self.t;
+        if self.single_default {
+            // Base-generator reduction: same draws as `LmsysGen::instance`.
+            let (s, o) = self.base.sample_lengths(&mut self.bodies);
+            return Some(Request::new(id, t, s, o));
+        }
+        // Mirror of the `ClassMixGen::instance` body loop, draw for draw.
+        let c = self.classes.draw_class(&mut self.bodies);
+        let p = &self.classes.classes[c];
+        let arrival = match self.burst_anchor[c] {
+            Some(prev) if p.burst > 1.0 && self.bodies.bool(1.0 - 1.0 / p.burst) => prev,
+            _ => t,
+        };
+        self.burst_anchor[c] = Some(arrival);
+        let (s, o) = self
+            .base
+            .sample_lengths_scaled(&mut self.bodies, p.prompt_scale, p.output_scale);
+        Some(Request::new(id, arrival, s, o).with_class(c))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.n - self.emitted;
+        (left, Some(left))
+    }
+}
+
+impl ExactSizeIterator for RequestStream {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Instance;
+    use crate::workload::ClassMixGen;
+
+    /// The core reduction: streaming the LMSYS generator yields the
+    /// exact request sequence the materialized path builds — same
+    /// arrivals, same lengths, same ids — from the same seed.
+    #[test]
+    fn lmsys_stream_is_draw_identical_to_instance() {
+        let gen = LmsysGen::new(500);
+        let mut rng = Rng::new(0x57AE);
+        let inst = gen.instance(400, 20.0, 500, &mut rng);
+        let streamed: Vec<Request> = gen.stream(400, 20.0, Rng::new(0x57AE)).collect();
+        assert_eq!(streamed, inst.requests);
+    }
+
+    /// Single default-profile class mixes take the base-reduction path in
+    /// both generators; the stream must match it too.
+    #[test]
+    fn default_class_stream_matches_class_mix_instance() {
+        let classes = ClassSet::parse("default:1.0").unwrap();
+        let gen = ClassMixGen::new(classes, 500);
+        let mut rng = Rng::new(0x11A);
+        let inst = gen.instance(300, 15.0, 500, &mut rng);
+        let streamed: Vec<Request> = gen.stream(300, 15.0, Rng::new(0x11A)).collect();
+        assert_eq!(streamed, inst.requests);
+    }
+
+    /// Multi-class, non-bursty: class and length draws interleave with
+    /// scaling, arrivals stay monotone, and the sequence is still
+    /// bit-identical to the materialized generator.
+    #[test]
+    fn scaled_mix_stream_is_draw_identical_and_monotone() {
+        let classes =
+            ClassSet::parse("interactive:0.7,batch(burst=1):0.3").unwrap();
+        let gen = ClassMixGen::new(classes, 2000);
+        let mut rng = Rng::new(0xBEE);
+        let inst = gen.instance(600, 25.0, 2000, &mut rng);
+        let stream = gen.stream(600, 25.0, Rng::new(0xBEE));
+        assert!(stream.is_monotone());
+        let streamed: Vec<Request> = stream.collect();
+        assert_eq!(streamed, inst.requests);
+        assert!(streamed.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+    }
+
+    /// Bursty mixes re-anchor arrivals, so the raw stream is declared
+    /// non-monotone — but materializing it through `Instance::new`
+    /// (sort + re-id) reproduces the generator's instance exactly.
+    #[test]
+    fn bursty_stream_materializes_to_the_same_instance() {
+        let classes = ClassSet::parse("interactive:0.6,batch:0.4").unwrap();
+        let gen = ClassMixGen::new(classes.clone(), 4000);
+        let mut rng = Rng::new(0xB0B);
+        let inst = gen.instance(500, 25.0, 4000, &mut rng);
+        let stream = gen.stream(500, 25.0, Rng::new(0xB0B));
+        assert!(!stream.is_monotone());
+        let streamed: Vec<Request> = stream.collect();
+        let rebuilt = Instance::new(4000, streamed).with_classes(classes);
+        assert_eq!(rebuilt, inst);
+    }
+
+    /// The iterator contract: exact size, decremented as it drains.
+    #[test]
+    fn stream_reports_exact_len() {
+        let gen = LmsysGen::new(500);
+        let mut stream = gen.stream(10, 5.0, Rng::new(1));
+        assert_eq!(stream.len(), 10);
+        assert_eq!(stream.total(), 10);
+        assert!(stream.next().is_some());
+        assert_eq!(stream.len(), 9);
+        assert_eq!(stream.emitted(), 1);
+        assert_eq!(stream.by_ref().count(), 9);
+        assert!(stream.next().is_none());
+    }
+}

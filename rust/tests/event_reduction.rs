@@ -13,16 +13,19 @@
 //! stay aligned with `rounds` is checked here on every corpus instance
 //! (including overflow-heavy and capped runs).
 
-use kvsched::core::{Instance, Request};
-use kvsched::metrics::SimOutcome;
+use kvsched::cluster::Fleet;
+use kvsched::core::{ClassSet, FleetSpec, Instance, Request};
+use kvsched::flow::{FlowControl, FlowSpec};
+use kvsched::metrics::{FleetOutcome, SimOutcome};
+use kvsched::perf::UnitTime;
 use kvsched::predictor::Predictor;
 use kvsched::sched::{by_name, Scheduler};
-use kvsched::sim::engine::run;
+use kvsched::sim::engine::{run, run_flow};
 use kvsched::sim::events::run_events;
-use kvsched::sim::SimConfig;
+use kvsched::sim::{EngineKind, SimConfig};
 use kvsched::util::prop::{forall_cases, usize_in};
 use kvsched::util::rng::Rng;
-use kvsched::workload::synthetic;
+use kvsched::workload::{synthetic, ClassMixGen};
 
 /// The shared corpus policy set (see tests/incremental_diff.rs).
 const SPECS: [&str; 9] = [
@@ -43,6 +46,7 @@ fn cfg(incremental: bool) -> SimConfig {
         stall_rounds: 1_500,
         record_series: true,
         incremental,
+        ..SimConfig::default()
     }
 }
 
@@ -192,4 +196,235 @@ fn event_engine_mostly_skips_at_low_utilization() {
         stats.quiet_rounds > 10 * stats.slow_rounds,
         "expected a quiet-dominated run, got {stats:?}"
     );
+}
+
+// ---------------------------------------------------------------------
+// Fleet section: the event engine as the per-worker clock driver inside
+// `run_fleet`, merged on the global causal clock, must stay bit-identical
+// to the round-synchronous fleet under every router.
+// ---------------------------------------------------------------------
+
+const ROUTERS: [&str; 5] = ["rr", "jsq", "least-kv", "po2", "slo-aware"];
+
+fn cfg_engine(engine: EngineKind) -> SimConfig {
+    SimConfig {
+        engine,
+        ..cfg(true)
+    }
+}
+
+fn assert_fleet_identical(a: &FleetOutcome, b: &FleetOutcome, ctx: &str) {
+    assert_eq!(a.router, b.router, "{ctx}: router");
+    assert_eq!(a.per_worker.len(), b.per_worker.len(), "{ctx}: workers");
+    for (i, (x, y)) in a.per_worker.iter().zip(&b.per_worker).enumerate() {
+        assert_identical(x, y, &format!("{ctx} worker={i}"));
+    }
+    assert_eq!(a.flow, b.flow, "{ctx}: flow stats");
+}
+
+/// Random small instances, three workers, all routers: event-fleet ==
+/// round-fleet bit for bit (this drives the parallel fleet driver — no
+/// trace sink — so the event turn inside worker threads is covered).
+#[test]
+fn event_fleet_equals_round_fleet_under_every_router() {
+    forall_cases(0xF1E9, 25, usize_in(0, u32::MAX as usize), |&seed| {
+        let mut rng = Rng::new(seed as u64);
+        let m = rng.i64_range(8, 50) as u64;
+        let n = rng.usize_range(1, 30);
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| {
+                let s = rng.i64_range(1, 5) as u64;
+                let o = rng.i64_range(1, (m - s).min(14) as i64) as u64;
+                let a = rng.i64_range(0, 8) as f64;
+                Request::new(i, a, s, o)
+            })
+            .collect();
+        let inst = Instance::new(m, reqs);
+        for router in ROUTERS {
+            let ctx = format!("seed={seed:#x} router={router}");
+            let run_one = |engine: EngineKind| {
+                let mut fleet = Fleet::new(FleetSpec::replicas(3), "mcsf", router).unwrap();
+                fleet
+                    .try_simulate(&inst, &Predictor::exact(), &UnitTime, 9, cfg_engine(engine))
+                    .map_err(|e| format!("{ctx} engine={engine}: {e}"))
+            };
+            let round = run_one(EngineKind::Round)?;
+            let event = run_one(EngineKind::Event)?;
+            assert_fleet_identical(&event, &round, &ctx);
+        }
+        Ok(())
+    });
+}
+
+/// The §5.1 arrival models through the event fleet (longer runs, real
+/// arrival bursts) under every router.
+#[test]
+fn event_fleet_equals_round_fleet_on_paper_arrival_models() {
+    let mut rng = Rng::new(0xFEE7);
+    for trial in 0..6 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        for router in ROUTERS {
+            let ctx = format!("trial={trial} router={router}");
+            let run_one = |engine: EngineKind| {
+                let mut fleet = Fleet::new(FleetSpec::replicas(3), "mcsf", router).unwrap();
+                fleet
+                    .try_simulate(&inst, &Predictor::exact(), &UnitTime, 5, cfg_engine(engine))
+                    .unwrap()
+            };
+            let round = run_one(EngineKind::Round);
+            let event = run_one(EngineKind::Event);
+            assert_fleet_identical(&event, &round, &ctx);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flow section: admission / retry / shed decisions ride the event clock
+// — every submission is re-consulted before each (quiet or full) round,
+// so decision times, retry schedules and shed choices are identical to
+// the round engine's.
+// ---------------------------------------------------------------------
+
+/// A sustained-overload class mix (same shape as tests/flow_reduction.rs)
+/// so the admission layer actually rejects, retries and sheds.
+fn overload_instance(seed: u64) -> Instance {
+    let classes =
+        ClassSet::parse("interactive(ttft=100000;e2e=150):0.6,background:0.4").unwrap();
+    let gen = ClassMixGen::new(classes, 600);
+    let mut rng = Rng::new(seed);
+    gen.instance(250, 30.0, 600, &mut rng)
+}
+
+const ADMISSIONS: [&str; 3] = ["none", "token-bucket:rate=2000", "queue-threshold:threshold=1"];
+
+/// Single worker: `run_flow` on the event engine == `run_flow` on the
+/// round engine, for every admission policy, including the flow counters.
+#[test]
+fn event_flow_equals_round_flow() {
+    for seed in [1u64, 2, 3] {
+        let inst = overload_instance(seed);
+        for adm in ADMISSIONS {
+            let ctx = format!("seed={seed} adm={adm}");
+            let run_one = |engine: EngineKind| {
+                let spec = FlowSpec::new(adm);
+                let mut fc = FlowControl::from_spec(&spec, &inst.classes, 7).unwrap();
+                let mut sched = by_name("mcsf").unwrap();
+                run_flow(
+                    &inst,
+                    sched.as_mut(),
+                    &Predictor::exact(),
+                    &UnitTime,
+                    7,
+                    cfg_engine(engine),
+                    &mut fc,
+                )
+                .unwrap()
+            };
+            let round = run_one(EngineKind::Round);
+            let event = run_one(EngineKind::Event);
+            assert_identical(&event, &round, &ctx);
+            assert_eq!(event.flow, round.flow, "{ctx}: flow stats");
+        }
+    }
+}
+
+/// `--admission none` on the event engine reduces to the plain event
+/// engine: same outcome as `run` with zero flow interference.
+#[test]
+fn event_flow_none_reduces_to_plain_event_engine() {
+    for seed in [4u64, 5] {
+        let inst = overload_instance(seed);
+        let ctx = format!("seed={seed}");
+        let mut s1 = by_name("mcsf").unwrap();
+        let plain = run(
+            &inst,
+            s1.as_mut(),
+            &Predictor::exact(),
+            &UnitTime,
+            7,
+            cfg_engine(EngineKind::Event),
+        )
+        .unwrap();
+        let spec = FlowSpec::new("none");
+        let mut fc = FlowControl::from_spec(&spec, &inst.classes, 7).unwrap();
+        let mut s2 = by_name("mcsf").unwrap();
+        let flowed = run_flow(
+            &inst,
+            s2.as_mut(),
+            &Predictor::exact(),
+            &UnitTime,
+            7,
+            cfg_engine(EngineKind::Event),
+            &mut fc,
+        )
+        .unwrap();
+        assert_identical(&flowed, &plain, &ctx);
+        let stats = flowed.flow.as_ref().expect("flow counters recorded");
+        assert_eq!(stats.admitted, inst.n(), "{ctx}: everything admitted");
+        assert_eq!(stats.rejected, 0, "{ctx}: nothing rejected");
+    }
+}
+
+/// Fleet + flow together on the event clock: fleet-wide admission over
+/// per-worker event heaps == the round fleet, router by router.
+#[test]
+fn event_fleet_flow_equals_round_fleet_flow() {
+    for seed in [6u64, 7] {
+        let inst = overload_instance(seed);
+        for router in ["rr", "po2", "slo-aware"] {
+            for adm in ["token-bucket:rate=2000", "queue-threshold:threshold=1"] {
+                let ctx = format!("seed={seed} router={router} adm={adm}");
+                let run_one = |engine: EngineKind| {
+                    let spec = FlowSpec::new(adm);
+                    let mut fc = FlowControl::from_spec(&spec, &inst.classes, 7).unwrap();
+                    let mut fleet =
+                        Fleet::new_classed(FleetSpec::replicas(3), "mcsf", router, &inst.classes)
+                            .unwrap();
+                    fleet
+                        .try_simulate_flow(
+                            &inst,
+                            &Predictor::exact(),
+                            &UnitTime,
+                            7,
+                            cfg_engine(engine),
+                            &mut fc,
+                        )
+                        .unwrap()
+                };
+                let round = run_one(EngineKind::Round);
+                let event = run_one(EngineKind::Event);
+                assert_fleet_identical(&event, &round, &ctx);
+            }
+        }
+    }
+}
+
+/// The public entry points agree with the explicit engine plumbing: a
+/// `SimConfig { engine: Event }` through `continuous::try_simulate` is
+/// the same run as `run_events`.
+#[test]
+fn engine_flag_dispatches_to_the_event_driver() {
+    let mut rng = Rng::new(0xD15);
+    let inst = synthetic::arrival_model_1(&mut rng);
+    let mut s1 = by_name("mcsf").unwrap();
+    let via_flag = kvsched::sim::continuous::try_simulate(
+        &inst,
+        s1.as_mut(),
+        &Predictor::exact(),
+        &UnitTime,
+        3,
+        cfg_engine(EngineKind::Event),
+    )
+    .unwrap();
+    let mut s2 = by_name("mcsf").unwrap();
+    let direct = run_events(
+        &inst,
+        s2.as_mut(),
+        &Predictor::exact(),
+        &UnitTime,
+        3,
+        cfg_engine(EngineKind::Event),
+    )
+    .unwrap();
+    assert_identical(&via_flag, &direct, "flag dispatch");
 }

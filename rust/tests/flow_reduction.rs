@@ -43,6 +43,7 @@ fn cfg(incremental: bool) -> SimConfig {
         stall_rounds: 1_500,
         record_series: true,
         incremental,
+        ..SimConfig::default()
     }
 }
 
@@ -404,6 +405,7 @@ fn no_admission_overload_is_divergent() {
         stall_rounds: 100_000,
         record_series: true,
         incremental: true,
+        ..SimConfig::default()
     };
     let (out, _) = run_overload(&inst, "none", cfg);
     assert_eq!(out.terminated, Termination::Capped);

@@ -43,6 +43,7 @@ fn cfg(incremental: bool) -> SimConfig {
         stall_rounds: 1_500,
         record_series: true,
         incremental,
+        ..SimConfig::default()
     }
 }
 

@@ -28,6 +28,7 @@ fn cfg() -> SimConfig {
         stall_rounds: 1_500,
         record_series: true,
         incremental: true,
+        ..SimConfig::default()
     }
 }
 

@@ -14,7 +14,7 @@ use kvsched::flow::FlowSpec;
 use kvsched::metrics::SimOutcome;
 use kvsched::perf::UnitTime;
 use kvsched::predictor::Predictor;
-use kvsched::sim::SimConfig;
+use kvsched::sim::{EngineKind, SimConfig};
 use kvsched::trace::{
     record_fleet, record_fleet_flow, record_sim, record_sim_flow, replay_fleet, replay_sim,
     ReplayError, Trace, TraceEvent,
@@ -41,6 +41,7 @@ fn cfg(incremental: bool) -> SimConfig {
         stall_rounds: 1_500,
         record_series: true,
         incremental,
+        ..SimConfig::default()
     }
 }
 
@@ -461,6 +462,52 @@ fn tampered_retry_event_reports_divergence() {
         }
         Err(other) => panic!("expected a divergence, got: {other}"),
         Ok(_) => panic!("tampered retry must not replay clean"),
+    }
+}
+
+/// Traces are engine-independent: recording the same run on the round
+/// engine and the event engine yields byte-identical trace text (quiet
+/// rounds record no events, so skipping them changes nothing), and a
+/// trace recorded under `--engine event` replays clean through the
+/// round-clock replayer — cross-engine replay in both framings.
+#[test]
+fn traces_are_engine_independent_and_replay_cross_engine() {
+    let mut rng = Rng::new(0xE7A7);
+    for trial in 0..4 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        for (fname, fspec) in [
+            ("none", None),
+            ("qt", Some(FlowSpec::new("queue-threshold:threshold=0.6"))),
+        ] {
+            let ctx = format!("trial={trial} flow={fname}");
+            let record_on = |engine: EngineKind| {
+                record_sim_flow(
+                    &inst,
+                    "mcsf",
+                    &Predictor::exact(),
+                    &UnitTime,
+                    "unit",
+                    9,
+                    SimConfig { engine, ..cfg(true) },
+                    fspec.as_ref(),
+                )
+                .unwrap()
+            };
+            let (rout, rtrace) = record_on(EngineKind::Round);
+            let (eout, etrace) = record_on(EngineKind::Event);
+            assert_identical(&rout, &eout, &ctx);
+            assert_eq!(rout.flow, eout.flow, "{ctx}: flow counters");
+            assert_eq!(
+                rtrace.to_text(),
+                etrace.to_text(),
+                "{ctx}: trace text must not depend on the recording engine"
+            );
+            // The replayer runs on the round clock; feeding it the
+            // event-recorded trace is a cross-engine replay.
+            let replayed = replay_sim(&etrace, &UnitTime)
+                .unwrap_or_else(|e| panic!("{ctx}: cross-engine replay failed: {e}"));
+            assert_identical(&eout, &replayed, &ctx);
+        }
     }
 }
 

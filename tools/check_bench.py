@@ -14,11 +14,27 @@ Acceptance ratios (mirrored from the ledger notes — update both together):
   BENCH_sim.json        overloaded: incremental rounds_per_sec >= 2x snapshot
                         at every waiting >= 6400;
                         low_util: event-engine speedup_vs_round >= 2x at every
-                        utilization <= 0.3.
+                        utilization <= 0.3 (rows above 0.3 document the
+                        crossover and are exempt);
+                        fleet_low_util: event fleet speedup_vs_round >= 2x at
+                        every utilization <= 0.3.
   BENCH_cluster.json    scaling: power-of-two throughput at the largest fleet
                         >= 2x its workers=1 value;
                         routing: power-of-two avg_latency_s <= 1.05x
                         round-robin at every workers > 1.
+  BENCH_slo.json        priority: P-MC-SF interactive_goodput >= MC-SF
+                        interactive_goodput on every mixed row;
+                        no starvation: P-MC-SF batch_goodput > 0 on every
+                        mixed row.
+  BENCH_overload.json   survival: both admission policies report Stable on
+                        every row, and at mult >= 5 they hold peak_queue to
+                        at most half of none's;
+                        protection: queue-threshold goodput_interactive >=
+                        none's on every mult > 1 row;
+                        recovery: at mult >= 5 the none row reports a finite
+                        time_to_recover_s or a non-Stable verdict (the key
+                        is omitted, never null, when a run has nothing to
+                        recover from or never recovers).
 
 Exit code 0 iff every check passes. Stdlib only."""
 
@@ -26,7 +42,13 @@ import json
 import sys
 from pathlib import Path
 
-LEDGERS = ["BENCH_scheduler.json", "BENCH_sim.json", "BENCH_cluster.json"]
+LEDGERS = [
+    "BENCH_scheduler.json",
+    "BENCH_sim.json",
+    "BENCH_cluster.json",
+    "BENCH_slo.json",
+    "BENCH_overload.json",
+]
 
 failures = []
 
@@ -82,8 +104,9 @@ def check_sim(doc):
     rows = doc["rows"]
     over = [r for r in rows if r.get("section") == "overloaded"]
     low = [r for r in rows if r.get("section") == "low_util"]
-    if not over or not low:
-        fail("BENCH_sim.json: missing 'overloaded' or 'low_util' rows")
+    fleet = [r for r in rows if r.get("section") == "fleet_low_util"]
+    if not over or not low or not fleet:
+        fail("BENCH_sim.json: missing 'overloaded', 'low_util', or 'fleet_low_util' rows")
         return
     for w in sorted({r["waiting"] for r in over}):
         if w < 6400:
@@ -103,6 +126,20 @@ def check_sim(doc):
             ok(f"sim low_util u={r['utilization']}: event engine {sp:.1f}x round engine (>= 2x)")
         else:
             fail(f"BENCH_sim.json: low_util u={r['utilization']} event engine only {sp:.2f}x (< 2x)")
+    for r in fleet:
+        if r["utilization"] > 0.3:
+            continue
+        sp = r["speedup_vs_round"]
+        if sp >= 2.0:
+            ok(
+                f"sim fleet_low_util u={r['utilization']} W={r['workers']}: "
+                f"event fleet {sp:.1f}x round fleet (>= 2x)"
+            )
+        else:
+            fail(
+                f"BENCH_sim.json: fleet_low_util u={r['utilization']} "
+                f"event fleet only {sp:.2f}x (< 2x)"
+            )
 
 
 def check_cluster(doc):
@@ -126,6 +163,91 @@ def check_cluster(doc):
             ok(f"cluster routing W={w}: po2 latency {p:.3g}s <= 1.05x rr {r:.3g}s")
         else:
             fail(f"BENCH_cluster.json: W={w} po2 latency {p:.3g}s > 1.05x rr {r:.3g}s")
+
+
+def check_slo(doc):
+    rows = doc["rows"]
+    by_mix = {}
+    for r in rows:
+        by_mix.setdefault(r["mix"], {})[r["policy"]] = r
+    if not by_mix:
+        fail("BENCH_slo.json: no rows")
+        return
+    for mix, pols in sorted(by_mix.items()):
+        p = pols.get("P-MC-SF")
+        base = pols.get("MC-SF")
+        if p is None or base is None:
+            fail(f"BENCH_slo.json: mix '{mix}' missing P-MC-SF or MC-SF row")
+            continue
+        # Interactive-only mixes omit the batch_* keys entirely; the
+        # priority gates only apply to mixed (interactive + batch) rows.
+        if "batch_goodput" not in p:
+            ok(f"slo '{mix}': interactive-only, priority gates not applicable")
+            continue
+        pg, bg = p["interactive_goodput"], base["interactive_goodput"]
+        if pg >= bg:
+            ok(f"slo '{mix}': P-MC-SF interactive goodput {pg:.3f} >= MC-SF {bg:.3f}")
+        else:
+            fail(f"BENCH_slo.json: mix '{mix}' P-MC-SF interactive {pg:.3f} < MC-SF {bg:.3f}")
+        if p["batch_goodput"] > 0.0:
+            ok(f"slo '{mix}': P-MC-SF batch goodput {p['batch_goodput']:.3f} > 0 (no starvation)")
+        else:
+            fail(f"BENCH_slo.json: mix '{mix}' P-MC-SF starves batch (goodput 0)")
+
+
+def check_overload(doc):
+    rows = doc["rows"]
+    by_mult = {}
+    for r in rows:
+        by_mult.setdefault(float(r["mult"]), {})[r["admission"]] = r
+    if not by_mult:
+        fail("BENCH_overload.json: no rows")
+        return
+    for mult, pols in sorted(by_mult.items()):
+        none = pols.get("none")
+        tb = pols.get("token-bucket")
+        qt = pols.get("queue-threshold")
+        if none is None or tb is None or qt is None:
+            fail(f"BENCH_overload.json: mult={mult:g} missing an admission row")
+            continue
+        for name, r in (("token-bucket", tb), ("queue-threshold", qt)):
+            if r["verdict"] == "Stable":
+                ok(f"overload mult={mult:g}: {name} Stable")
+            else:
+                fail(f"BENCH_overload.json: mult={mult:g} {name} verdict {r['verdict']}")
+        if mult >= 5.0:
+            for name, r in (("token-bucket", tb), ("queue-threshold", qt)):
+                pq, npq = r["peak_queue"], none["peak_queue"]
+                if 2 * pq <= npq:
+                    ok(f"overload mult={mult:g}: {name} peak queue {pq} <= half of none's {npq}")
+                else:
+                    fail(
+                        f"BENCH_overload.json: mult={mult:g} {name} peak queue {pq} "
+                        f"not bounded vs none's {npq}"
+                    )
+            # "Nothing to recover from / never recovered" is encoded by
+            # omitting the key (nulls are banned). After a >=5x spike the
+            # unguarded run must either drain back down (finite recovery
+            # time) or be flagged non-Stable.
+            t = none.get("time_to_recover_s")
+            if isinstance(t, (int, float)) and t >= 0.0:
+                ok(f"overload mult={mult:g}: none recovers in {t:.2f}s")
+            elif none["verdict"] != "Stable":
+                ok(f"overload mult={mult:g}: none never recovers and is {none['verdict']}")
+            else:
+                fail(
+                    f"BENCH_overload.json: mult={mult:g} 'none' claims Stable "
+                    f"without a recovery time"
+                )
+        if mult > 1.0:
+            g_qt, g_none = qt["goodput_interactive"], none["goodput_interactive"]
+            if g_qt >= g_none:
+                ok(f"overload mult={mult:g}: queue-threshold interactive {g_qt:.3f} >= none {g_none:.3f}")
+            else:
+                fail(
+                    f"BENCH_overload.json: mult={mult:g} queue-threshold interactive "
+                    f"{g_qt:.3f} < none {g_none:.3f}"
+                )
 
 
 def main():
@@ -154,6 +276,8 @@ def main():
         check_scheduler(docs["BENCH_scheduler.json"])
         check_sim(docs["BENCH_sim.json"])
         check_cluster(docs["BENCH_cluster.json"])
+        check_slo(docs["BENCH_slo.json"])
+        check_overload(docs["BENCH_overload.json"])
 
     if failures:
         print(f"\n{len(failures)} ledger check(s) FAILED")
