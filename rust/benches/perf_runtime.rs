@@ -1,4 +1,4 @@
-//! Perf: the serving hot paths. Four parts:
+//! Perf: the serving hot paths. Five parts:
 //!
 //! 1. **End-to-end sim throughput** (always runs): rounds/sec of the
 //!    whole engine round loop on an overloaded queue at
@@ -17,7 +17,15 @@
 //!    low-utilization family behind a 4-replica `run_fleet` — every
 //!    worker traverses the full global horizon, so quiet-round skipping
 //!    compounds across the fleet. Rows join `BENCH_sim.json`.
-//! 4. **PJRT kernels** (needs `make artifacts`): per-iteration
+//! 4. **Chunked vs monolithic prefill** (always runs): the same
+//!    batch-heavy class mix through the engine under the Llama2-70B
+//!    model at `prefill_chunk ∈ {0, 1024, 256}`, scoring interactive
+//!    TTFT goodput against a fixed deadline. The reduction corpus
+//!    (`tests/phase_reduction.rs`) pins the chunking *semantics*; this
+//!    cell pins the serving claim — chunking protects interactive TTFT
+//!    when long prompts would otherwise park the GPU for whole
+//!    iterations. Rows join `BENCH_sim.json` under `prefill_phase`.
+//! 5. **PJRT kernels** (needs `make artifacts`): per-iteration
 //!    decode/prefill latency by batch bucket, plus the host-side
 //!    gather/scatter overhead. Self-skips when artifacts are absent.
 
@@ -275,12 +283,133 @@ fn fleet_event_vs_round(args: &Args) -> Vec<Json> {
     rows
 }
 
+/// Batch-heavy phase mix for the chunked-prefill cell: 80% long-prompt
+/// batch requests, 20% short interactive ones, open Poisson arrivals at
+/// `lambda` req/s — the regime where a monolithic prefill bills a whole
+/// multi-second iteration to whoever arrives behind it.
+fn phase_mix_instance(n: usize, lambda: f64) -> Instance {
+    let mut rng = Rng::new(0xC4A9);
+    let classes = ClassSet::parse("interactive:0.2,batch:0.8").expect("mix spec parses");
+    let m = kvsched::sim::continuous::PAPER_M;
+    let mut t = 0.0;
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            t += rng.exponential(lambda);
+            if rng.bool(0.8) {
+                let s = rng.i64_range(800, 2000) as u64;
+                let o = rng.i64_range(20, 100) as u64;
+                Request::new(i, t, s, o).with_class(1)
+            } else {
+                let s = rng.i64_range(10, 100) as u64;
+                let o = rng.i64_range(5, 30) as u64;
+                Request::new(i, t, s, o).with_class(0)
+            }
+        })
+        .collect();
+    Instance::new(m, reqs).with_classes(classes)
+}
+
+/// Chunked vs monolithic prefill under the Llama2-70B model. The
+/// simulation is deterministic (iteration times come from the analytic
+/// model, not the wall clock), so the regenerated rows are
+/// machine-independent; `tools/check_bench.py` gates the smallest-chunk
+/// row's interactive TTFT goodput against the monolithic row's. Rows
+/// join `BENCH_sim.json` under `prefill_phase`.
+fn chunked_prefill(args: &Args) -> Vec<Json> {
+    let n = args.usize_or("prefill-n", 160);
+    let lambda = 0.5;
+    // Interactive time-to-first-token budget, model seconds. Sits between
+    // a chunked iteration (~0.3 s at chunk=256) and a monolithic long
+    // prefill (~1.6 s at s=1400), so the goodput gap is the chunking
+    // effect, not workload noise.
+    let deadline = 1.0;
+    let inst = phase_mix_instance(n, lambda);
+    let perf = kvsched::perf::Llama70bA100x2::default();
+    let mut table = Table::new(
+        &format!(
+            "chunked vs monolithic prefill (Llama2-70B@2xA100, MC-SF, \
+             batch-heavy mix, n={n}, lambda={lambda}, deadline={deadline}s)"
+        ),
+        &[
+            "path",
+            "ttft_goodput",
+            "ttft_p50_s",
+            "ttft_p95_s",
+            "decode_avg_s",
+            "batch_ttft_p95_s",
+            "rounds",
+            "elapsed_s",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &chunk in &[0u64, 1024, 256] {
+        let cfg = SimConfig {
+            record_series: false,
+            prefill_chunk: chunk,
+            ..SimConfig::default()
+        };
+        let t0 = Instant::now();
+        let out = sim_engine::run(
+            &inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &perf,
+            1,
+            cfg,
+        )
+        .unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(out.unserved(), 0, "phase mix must drain (chunk={chunk})");
+        let ttfts = out.class_ttfts(0);
+        let goodput =
+            ttfts.iter().filter(|&&t| t <= deadline).count() as f64 / ttfts.len().max(1) as f64;
+        let tstat = kvsched::util::stats::Summary::of(&ttfts);
+        let dstat = kvsched::util::stats::Summary::of(&out.class_decode_times(0));
+        let bstat = kvsched::util::stats::Summary::of(&out.class_ttfts(1));
+        let path = if chunk == 0 {
+            "monolithic".to_string()
+        } else {
+            format!("chunked-{chunk}")
+        };
+        table.row(&[
+            path.clone(),
+            fmt(goodput),
+            fmt(tstat.p50),
+            fmt(tstat.p95),
+            fmt(dstat.mean),
+            fmt(bstat.p95),
+            out.rounds.to_string(),
+            fmt(wall),
+        ]);
+        rows.push(
+            Json::obj()
+                .set("section", "prefill_phase")
+                .set("path", path)
+                .set("prefill_chunk", chunk)
+                .set("n", n)
+                .set("lambda", lambda)
+                .set("ttft_deadline_s", deadline)
+                .set("interactive_ttft_goodput", goodput)
+                .set("interactive_ttft_p50_s", tstat.p50)
+                .set("interactive_ttft_p95_s", tstat.p95)
+                .set("interactive_decode_avg_s", dstat.mean)
+                .set("batch_ttft_p95_s", bstat.p95)
+                .set("rounds", out.rounds)
+                .set("elapsed_s", wall),
+        );
+    }
+    table.print();
+    table.save_json("perf_prefill_phase");
+    rows
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let iters = args.usize_or("iters", 20);
     let mut rows = sim_throughput(&args);
     rows.extend(event_vs_round(&args));
     rows.extend(fleet_event_vs_round(&args));
+    rows.extend(chunked_prefill(&args));
     let doc = Json::obj()
         .set("bench", "perf_runtime")
         .set(
@@ -292,7 +421,11 @@ fn main() {
              utilization \u{2264} 0.3 (the 0.7 row documents the crossover: once most \
              rounds carry events the engines converge and the gate does not apply); \
              (3) fleet_low_util — event fleet speedup_vs_round \u{2265}2\u{00d7} at every \
-             utilization \u{2264} 0.3.",
+             utilization \u{2264} 0.3; (4) prefill_phase — the smallest-chunk row's \
+             interactive_ttft_goodput \u{2265} the monolithic row's (deterministic \
+             model-time simulation, so the comparison is machine-independent; the \
+             batch_ttft_p95_s column documents the tradeoff chunking buys that \
+             protection with).",
         )
         .set("max_rounds", args.u64_or("sim-rounds", 1500))
         .set("rows", Json::Arr(rows));

@@ -4,9 +4,11 @@
 //! generalizes it to N replicas behind a routing layer, the shape a
 //! production deployment actually has:
 //!
-//! * [`Router`] + five policies ([`RoundRobin`], [`JoinShortestQueue`],
-//!   [`LeastKvLoad`], [`PowerOfTwo`], [`SloAware`]) — dispatch decisions
-//!   made online, per arrival, from causal [`WorkerLoad`] snapshots;
+//! * [`Router`] + seven policies ([`RoundRobin`], [`JoinShortestQueue`],
+//!   [`LeastKvLoad`], [`PowerOfTwo`], [`SloAware`], and the
+//!   phase-specialized [`PrefillBalance`] / [`KvHeadroom`] pair the
+//!   disaggregated driver uses) — dispatch decisions made online, per
+//!   arrival, from causal [`WorkerLoad`] snapshots;
 //! * [`Fleet`] — N workers, each with its own KV budget
 //!   ([`crate::core::FleetSpec`]) and its own scheduler instance reusing
 //!   the incremental O(Δ)-per-round hooks;
@@ -24,6 +26,6 @@ pub mod router;
 
 pub use fleet::Fleet;
 pub use router::{
-    router_by_name, router_by_name_classed, JoinShortestQueue, LeastKvLoad, PowerOfTwo,
-    RoundRobin, Router, SloAware, WorkerLoad,
+    router_by_name, router_by_name_classed, JoinShortestQueue, KvHeadroom, LeastKvLoad,
+    PowerOfTwo, PrefillBalance, RoundRobin, Router, SloAware, WorkerLoad,
 };

@@ -17,6 +17,16 @@
 //!   classes go where they will be served soonest, lax classes are
 //!   spread by cumulative count so they don't crowd the low-claim
 //!   workers the urgent tiers depend on.
+//!
+//! Two phase-specialized policies serve the disaggregated fleet
+//! (`sim::disagg`), which routes each phase with the key that phase is
+//! actually bound by:
+//!
+//! * [`PrefillBalance`] — prefill is compute-bound and its cost is the
+//!   prompt length, so spread arrivals by cumulative *routed prompt
+//!   tokens* rather than heads or KV.
+//! * [`KvHeadroom`] — decode is memory-bound, so place each handoff on
+//!   the worker with the most free KV budget.
 
 use crate::core::{ClassSet, QueuedReq};
 use crate::util::error::{bail, Result};
@@ -206,11 +216,73 @@ impl Router for SloAware {
     }
 }
 
+/// Balance prefill work by *prompt tokens routed so far*: argmin over
+/// cumulative routed `s`, ties toward the lowest worker index. Prefill
+/// cost is ∝ prompt length, so token-weighted spreading keeps the
+/// prefill tier's compute even where round-robin would let a run of
+/// long prompts pile onto one worker. Deterministic and load-view
+/// independent (the counter is the router's own state), which keeps
+/// disagg runs replayable from the trace alone.
+#[derive(Debug, Default)]
+pub struct PrefillBalance {
+    /// Cumulative routed prompt tokens per fleet worker index (grown on
+    /// demand — the router doesn't know the fleet size up front).
+    committed: Vec<u64>,
+}
+
+impl Router for PrefillBalance {
+    fn name(&self) -> String {
+        "prefill-balance".into()
+    }
+
+    fn route(&mut self, req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        let max_w = loads.iter().map(|l| l.worker).max().expect("loads is non-empty");
+        if self.committed.len() <= max_w {
+            self.committed.resize(max_w + 1, 0);
+        }
+        let pick = loads
+            .iter()
+            .map(|l| l.worker)
+            .min_by_key(|&w| (self.committed[w], w))
+            .expect("loads is non-empty");
+        self.committed[pick] += req.s;
+        pick
+    }
+}
+
+/// Place each arrival on the worker with the most free KV budget
+/// (`kv_budget − kv_claim`, saturating), ties toward the lowest index —
+/// the decode tier's placement key: decode is memory-bound, and a
+/// handoff brings `s + 1` resident tokens with it, so headroom is what
+/// decides whether it batches immediately or waits.
+#[derive(Debug, Default)]
+pub struct KvHeadroom;
+
+impl Router for KvHeadroom {
+    fn name(&self) -> String {
+        "kv-headroom".into()
+    }
+
+    fn route(&mut self, _req: &QueuedReq, loads: &[WorkerLoad], _rng: &mut Rng) -> usize {
+        loads
+            .iter()
+            // max headroom == min (−headroom); encode as (Reverse-free)
+            // min over (u64::MAX − headroom, worker) for low-index ties.
+            .min_by_key(|l| {
+                let headroom = l.kv_budget.saturating_sub(l.kv_claim());
+                (u64::MAX - headroom, l.worker)
+            })
+            .expect("loads is non-empty")
+            .worker
+    }
+}
+
 /// Build a router from a spec string (CLI / config):
 /// `rr` | `round-robin`, `jsq` | `join-shortest-queue`,
 /// `least-kv` | `least-kv-load`, `po2` | `p2c` | `power-of-two`,
 /// `slo` | `slo-aware` (use [`router_by_name_classed`] to give the
-/// SLO-aware policy its class table).
+/// SLO-aware policy its class table), `prefill-balance`, `kv-headroom`
+/// (the disagg tiers' defaults, also usable on homogeneous fleets).
 pub fn router_by_name(spec: &str) -> Result<Box<dyn Router>> {
     router_by_name_classed(spec, &ClassSet::default())
 }
@@ -227,7 +299,11 @@ pub fn router_by_name_classed(spec: &str, classes: &ClassSet) -> Result<Box<dyn 
         "least-kv" | "kv" | "least-kv-load" => Ok(Box::new(LeastKvLoad)),
         "po2" | "p2c" | "power-of-two" => Ok(Box::new(PowerOfTwo)),
         "slo" | "slo-aware" => Ok(Box::new(SloAware::new(classes.clone()))),
-        other => bail!("unknown router '{other}' (try rr | jsq | least-kv | po2 | slo-aware)"),
+        "prefill-balance" | "prefill" => Ok(Box::new(PrefillBalance::default())),
+        "kv-headroom" | "headroom" => Ok(Box::new(KvHeadroom)),
+        other => bail!(
+            "unknown router '{other}' (try rr | jsq | least-kv | po2 | slo-aware | prefill-balance | kv-headroom)"
+        ),
     }
 }
 
@@ -351,10 +427,62 @@ mod tests {
             ("p2c", "power-of-two"),
             ("slo", "slo-aware"),
             ("slo-aware", "slo-aware"),
+            ("prefill-balance", "prefill-balance"),
+            ("kv-headroom", "kv-headroom"),
         ] {
             assert_eq!(router_by_name(spec).unwrap().name(), name, "{spec}");
         }
         assert!(router_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn prefill_balance_spreads_by_prompt_tokens() {
+        let loads = [load(0, 0, 0, 0), load(1, 0, 0, 0)];
+        let mut rt = PrefillBalance::default();
+        let mut rng = Rng::new(1);
+        let mut send = |s: u64| {
+            let r = QueuedReq { s, ..req() };
+            rt.route(&r, &loads, &mut rng)
+        };
+        // Long prompt lands on 0, then shorter ones fill 1 until its
+        // token total catches up — head counts never enter into it.
+        assert_eq!(send(100), 0);
+        assert_eq!(send(30), 1);
+        assert_eq!(send(30), 1);
+        assert_eq!(send(30), 1);
+        assert_eq!(send(30), 1); // w1 at 120 > 100
+        assert_eq!(send(5), 0);
+    }
+
+    #[test]
+    fn prefill_balance_handles_subset_views() {
+        // Worker ids with gaps (a stopped worker filtered out of view).
+        let loads = [load(1, 0, 0, 0), load(3, 0, 0, 0)];
+        let mut rt = PrefillBalance::default();
+        let mut rng = Rng::new(1);
+        let first = rt.route(&QueuedReq { s: 10, ..req() }, &loads, &mut rng);
+        assert_eq!(first, 1); // tie toward the lowest id
+        let second = rt.route(&QueuedReq { s: 4, ..req() }, &loads, &mut rng);
+        assert_eq!(second, 3);
+    }
+
+    #[test]
+    fn kv_headroom_picks_most_free_budget() {
+        // Worker 0: big budget mostly used; worker 1: small budget, empty.
+        let mut a = load(0, 0, 3, 900); // headroom 1000 - 900 = 100
+        a.queued_demand = 0;
+        let mut b = load(1, 0, 0, 0);
+        b.kv_budget = 300; // headroom 300
+        b.queued_demand = 0;
+        let mut rng = Rng::new(1);
+        assert_eq!(KvHeadroom.route(&req(), &[a, b], &mut rng), 1);
+        // Queued demand eats headroom too.
+        b.queued_demand = 250; // headroom 50 < 100
+        assert_eq!(KvHeadroom.route(&req(), &[a, b], &mut rng), 0);
+        // Ties break toward the lowest worker index.
+        let t0 = load(0, 0, 0, 500);
+        let t1 = load(1, 0, 0, 500);
+        assert_eq!(KvHeadroom.route(&req(), &[t0, t1], &mut rng), 0);
     }
 
     #[test]

@@ -6,9 +6,13 @@
 //! core-layer view of that deployment: the replica count and the
 //! per-worker KV budget (defaulting to the instance's `M` on every
 //! worker, i.e. N identical copies of the paper's machine).
+//! [`DisaggSpec`] layers the prefill/decode disaggregation pattern
+//! (DistServe-style) on top: the first `prefill_workers` replicas run
+//! only prefill, the rest only decode, with a modeled KV-transfer cost
+//! for shipping each finished prompt's cache across.
 
 use super::Mem;
-use crate::util::error::{bail, Result};
+use crate::util::error::{bail, Context, Result};
 
 /// Replica-fleet configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -62,6 +66,120 @@ impl FleetSpec {
     }
 }
 
+/// Prefill/decode disaggregation layered on a [`FleetSpec`]: of the
+/// fleet's `workers`, the first `prefill_workers` handle only the
+/// prefill phase and the remaining `workers − prefill_workers` only
+/// decode. A completed prefill's KV cache is shipped to a decode worker
+/// at a modeled cost of `transfer_latency + transfer_per_token · (s+1)`
+/// seconds (prompt KV plus the piggybacked first token).
+///
+/// With `transfer_latency = transfer_per_token = 0` the handoff is
+/// instantaneous, which is what makes the 1-prefill + 1-decode serial
+/// fleet reduce bit-identically to a single homogeneous worker on
+/// spaced arrivals (`tests/phase_reduction.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DisaggSpec {
+    /// Workers dedicated to prefill (the fleet's first `K` indices);
+    /// `1 ≤ K < workers`.
+    pub prefill_workers: usize,
+    /// Fixed per-handoff KV-transfer latency (seconds).
+    pub transfer_latency: f64,
+    /// Per-KV-token transfer cost (seconds/token).
+    pub transfer_per_token: f64,
+}
+
+impl Default for DisaggSpec {
+    fn default() -> Self {
+        DisaggSpec {
+            prefill_workers: 1,
+            transfer_latency: 0.0,
+            transfer_per_token: 0.0,
+        }
+    }
+}
+
+impl DisaggSpec {
+    /// Parse the CLI `--fleet-mode` grammar:
+    /// `disagg[:prefill=K,latency=L,per-token=P]` — any subset of the
+    /// key=value options, in any order; omitted keys take the defaults
+    /// (1 prefill worker, zero-cost transfer).
+    pub fn parse(spec: &str) -> Result<DisaggSpec> {
+        let rest = match spec.strip_prefix("disagg") {
+            Some(r) => r,
+            None => bail!("unknown fleet mode '{spec}' (homog | disagg[:prefill=K,latency=L,per-token=P])"),
+        };
+        let mut out = DisaggSpec::default();
+        let opts = match rest.strip_prefix(':') {
+            None if rest.is_empty() => return Ok(out),
+            None => bail!("bad disagg spec '{spec}': options start with ':'"),
+            Some(o) => o,
+        };
+        for opt in opts.split(',') {
+            let Some((key, val)) = opt.split_once('=') else {
+                bail!("bad disagg option '{opt}' (want key=value)");
+            };
+            match key {
+                "prefill" => {
+                    out.prefill_workers = val
+                        .parse()
+                        .with_context(|| format!("bad disagg prefill count '{val}'"))?;
+                }
+                "latency" => {
+                    out.transfer_latency = val
+                        .parse()
+                        .with_context(|| format!("bad disagg transfer latency '{val}'"))?;
+                }
+                "per-token" => {
+                    out.transfer_per_token = val
+                        .parse()
+                        .with_context(|| format!("bad disagg per-token cost '{val}'"))?;
+                }
+                other => bail!("unknown disagg option '{other}' (prefill | latency | per-token)"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical spec string (round-trips through [`Self::parse`];
+    /// recorded in trace metadata).
+    pub fn spec_string(&self) -> String {
+        format!(
+            "disagg:prefill={},latency={},per-token={}",
+            self.prefill_workers, self.transfer_latency, self.transfer_per_token
+        )
+    }
+
+    /// Time to ship one finished prefill's KV (`s` prompt tokens plus
+    /// the piggybacked first output token) to a decode worker.
+    pub fn transfer_time(&self, s: u64) -> f64 {
+        self.transfer_latency + self.transfer_per_token * (s + 1) as f64
+    }
+
+    /// Decode workers implied by a total fleet size.
+    pub fn decode_workers(&self, workers: usize) -> usize {
+        workers - self.prefill_workers
+    }
+
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        if workers < 2 {
+            bail!("disagg fleet needs at least 2 workers (1 prefill + 1 decode)");
+        }
+        if self.prefill_workers == 0 || self.prefill_workers >= workers {
+            bail!(
+                "disagg needs 1 <= prefill workers < total workers (got {} of {workers})",
+                self.prefill_workers
+            );
+        }
+        if !(self.transfer_latency >= 0.0 && self.transfer_latency.is_finite()) {
+            bail!("disagg transfer latency must be finite and nonnegative");
+        }
+        if !(self.transfer_per_token >= 0.0 && self.transfer_per_token.is_finite()) {
+            bail!("disagg per-token cost must be finite and nonnegative");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +206,41 @@ mod tests {
             worker_m: Some(0),
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn disagg_spec_parses_and_round_trips() {
+        let d = DisaggSpec::parse("disagg").unwrap();
+        assert_eq!(d, DisaggSpec::default());
+        let d = DisaggSpec::parse("disagg:prefill=2,latency=0.5,per-token=0.001").unwrap();
+        assert_eq!(d.prefill_workers, 2);
+        assert_eq!(d.transfer_latency, 0.5);
+        assert_eq!(d.transfer_per_token, 0.001);
+        let rt = DisaggSpec::parse(&d.spec_string()).unwrap();
+        assert_eq!(d, rt);
+        // s=9: latency + per-token * (s+1) = 0.5 + 0.001*10.
+        assert_eq!(d.transfer_time(9), 0.5 + 0.01);
+        assert_eq!(d.decode_workers(5), 3);
+    }
+
+    #[test]
+    fn disagg_spec_rejects_bad_input() {
+        assert!(DisaggSpec::parse("homog").is_err());
+        assert!(DisaggSpec::parse("disagg:prefill").is_err());
+        assert!(DisaggSpec::parse("disagg:prefill=x").is_err());
+        assert!(DisaggSpec::parse("disagg:speed=3").is_err());
+        let d = DisaggSpec::default();
+        assert!(d.validate(1).is_err()); // needs >= 2 workers
+        assert!(d.validate(2).is_ok());
+        let all_prefill = DisaggSpec {
+            prefill_workers: 2,
+            ..DisaggSpec::default()
+        };
+        assert!(all_prefill.validate(2).is_err()); // no decode worker left
+        let neg = DisaggSpec {
+            transfer_latency: -1.0,
+            ..DisaggSpec::default()
+        };
+        assert!(neg.validate(2).is_err());
     }
 }

@@ -79,6 +79,29 @@ impl Instance {
         self.requests.iter().map(|r| r.output_len).sum()
     }
 
+    /// Sum of `s_i` — the total prefill work the instance carries. This
+    /// is the load a disaggregated fleet's prefill tier must absorb and
+    /// what the prefill-balance router spreads across it.
+    pub fn total_prompt_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.prompt_len).sum()
+    }
+
+    /// The prefill-stage view of this instance: the same arrivals,
+    /// prompts, and classes, but every output truncated to the single
+    /// piggybacked first token a prefill worker produces before handing
+    /// the KV cache to a decode worker (`sim::disagg`). Arrival order
+    /// and ids are already dense+sorted, so the rebuild is id-stable.
+    pub fn prefill_view(&self) -> Instance {
+        let reqs = self
+            .requests
+            .iter()
+            .map(|r| {
+                Request::new(r.id, r.arrival, r.prompt_len, 1).with_class(r.class)
+            })
+            .collect();
+        Instance::new(self.m, reqs).with_classes(self.classes.clone())
+    }
+
     // ---- JSON trace format ------------------------------------------------
 
     /// Serialize to the JSON trace format. Untagged requests and the
@@ -196,6 +219,22 @@ mod tests {
         // max arrival -> must complete within the horizon.
         let serial_finish = 3 + inst.total_output_tokens() + inst.n() as u64;
         assert!(inst.horizon() >= serial_finish);
+    }
+
+    #[test]
+    fn prefill_view_truncates_outputs_only() {
+        let inst = tiny();
+        assert_eq!(inst.total_prompt_tokens(), 2 + 5 + 1);
+        let pf = inst.prefill_view();
+        assert_eq!(pf.m, inst.m);
+        assert_eq!(pf.n(), inst.n());
+        for (p, r) in pf.requests.iter().zip(&inst.requests) {
+            assert_eq!(p.id, r.id);
+            assert_eq!(p.arrival, r.arrival);
+            assert_eq!(p.prompt_len, r.prompt_len);
+            assert_eq!(p.class, r.class);
+            assert_eq!(p.output_len, 1);
+        }
     }
 
     #[test]

@@ -12,9 +12,9 @@ pub mod request;
 pub mod slo;
 
 pub use batch::{ActiveReq, FeasItem, QueuedReq};
-pub use fleet::FleetSpec;
+pub use fleet::{DisaggSpec, FleetSpec};
 pub use instance::Instance;
-pub use request::{Request, RequestId};
+pub use request::{Phase, Request, RequestId};
 pub use slo::{ClassId, ClassSet, RequestClass, SloSpec};
 
 /// Discrete round index (1-based inside simulations).

@@ -1,9 +1,26 @@
-//! Request type: one prompt with its (true) output length.
+//! Request type: one prompt with its (true) output length, and the
+//! prefill/decode phase arithmetic derived from them.
 
 use super::slo::ClassId;
 
 /// Request identifier (dense index into the instance).
 pub type RequestId = usize;
+
+/// Which lifecycle phase a request is in on a worker.
+///
+/// **Prefill** writes the prompt's KV cache (compute-bound, cost ∝
+/// prompt length, chunkable via `--prefill-chunk`); **decode** then
+/// produces one output token per round (memory-bound). The round that
+/// writes the last prompt chunk also piggybacks the first decode token,
+/// so monolithic prefill (`chunk = 0`) spends zero extra rounds — the
+/// paper's original model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Prompt KV still being written; no output tokens yet.
+    Prefill,
+    /// Prompt fully cached; generating output tokens.
+    Decode,
+}
 
 /// One inference request, as in the paper's model (§2).
 ///
@@ -92,6 +109,36 @@ impl Request {
     pub fn service_rounds(&self) -> u64 {
         self.output_len
     }
+
+    /// Rounds the prefill phase occupies under chunk size `chunk`
+    /// (`0` = monolithic): `⌈s / chunk⌉`, with the monolithic case
+    /// collapsing to one round.
+    pub fn prefill_rounds(&self, chunk: u64) -> u64 {
+        if chunk == 0 {
+            1
+        } else {
+            self.prompt_len.div_ceil(chunk)
+        }
+    }
+
+    /// Minimum rounds from admission to completion under chunked
+    /// prefill: `prefill_rounds(chunk) − 1 + o` — the last prefill round
+    /// piggybacks the first decode token, so monolithic reduces to the
+    /// classic `o` (`service_rounds`).
+    pub fn service_rounds_chunked(&self, chunk: u64) -> u64 {
+        self.prefill_rounds(chunk) - 1 + self.output_len
+    }
+
+    /// Phase implied by a prefilled-token count (the engine's
+    /// `prefilled` cursor): still [`Phase::Prefill`] while fewer than
+    /// `s` prompt tokens are cached.
+    pub fn phase_at(&self, prefilled: u64) -> Phase {
+        if prefilled < self.prompt_len {
+            Phase::Prefill
+        } else {
+            Phase::Decode
+        }
+    }
 }
 
 /// `vol_o` for a generic (s, o) pair — used by the competitive-analysis
@@ -127,6 +174,24 @@ mod tests {
     #[should_panic]
     fn zero_output_rejected() {
         Request::new(0, 0.0, 5, 0);
+    }
+
+    #[test]
+    fn phase_arithmetic() {
+        let r = Request::new(0, 0.0, 5, 7);
+        // Monolithic: one prefill round, classic o-round service.
+        assert_eq!(r.prefill_rounds(0), 1);
+        assert_eq!(r.service_rounds_chunked(0), r.service_rounds());
+        // chunk=2 over s=5: chunks of 2,2,1 -> 3 prefill rounds; the
+        // piggybacked first token makes service 3-1+7 = 9 rounds.
+        assert_eq!(r.prefill_rounds(2), 3);
+        assert_eq!(r.service_rounds_chunked(2), 9);
+        // A chunk >= s is monolithic.
+        assert_eq!(r.prefill_rounds(100), 1);
+        assert_eq!(r.service_rounds_chunked(100), 7);
+        assert_eq!(r.phase_at(0), Phase::Prefill);
+        assert_eq!(r.phase_at(4), Phase::Prefill);
+        assert_eq!(r.phase_at(5), Phase::Decode);
     }
 
     #[test]

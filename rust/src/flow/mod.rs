@@ -30,6 +30,21 @@
 //! `shed` / `retry` specs and regenerates the identical
 //! `Reject`/`Retry`/`Shed` event stream (`tests/trace_replay.rs`).
 //!
+//! ## Retry semantics across the prefill/decode split
+//!
+//! Rejection happens *ahead* of admission: a refused request never
+//! reached a worker, so no prompt KV was written and there is no
+//! partial prefill to resume — the remaining prompt at rejection time
+//! *is* the full prompt. A retry therefore re-offers the original
+//! arrival unchanged (all `s` prompt tokens, the full predicted output,
+//! the original class); only the submission time moves, to
+//! `reject time + backoff`. On eventual admission the engine prefills
+//! from scratch (`prefilled = 0`), chunked or monolithic alike. The
+//! backoff schedule is a pure function of `(seed, id, attempt)` and so
+//! engine-independent; `tests/flow_reduction.rs` pins the recorded
+//! retry schedule bit-identical across the round and event engines,
+//! with and without chunked prefill.
+//!
 //! With no flow control configured (the default everywhere), none of
 //! this code runs: no RNG draws, no events, no behavior change — the
 //! flow-off reduction pinned by `tests/flow_reduction.rs`.

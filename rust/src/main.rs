@@ -15,6 +15,9 @@
 //!   kvsched simulate --workload lmsys --n 500 --lambda 10 --algo protect:alpha=0.25
 //!   kvsched simulate --n 800 --lambda 50 --workers 4 --router po2
 //!   kvsched simulate --workload lmsys --n 2000 --lambda 10 --engine event
+//!   kvsched simulate --n 500 --lambda 30 --prefill-chunk 256
+//!   kvsched simulate --n 800 --workers 4 --fleet-mode disagg:prefill=2,latency=0.01
+//!   kvsched record --n 400 --workers 3 --fleet-mode disagg --out disagg.trace.json
 //!   kvsched simulate --stream --n 1000000 --lambda 10 --algo mcsf
 //!   kvsched simulate --preset flash-crowd --admission queue-threshold
 //!   kvsched simulate --preset sustained --admission token-bucket:rate=1500 --unit-time
@@ -39,6 +42,17 @@
 //! replicas behind `--router rr|jsq|least-kv|po2|slo-aware`; simulated
 //! arrival rates are scaled λ × N so per-worker load stays comparable
 //! with the single-worker baseline (disable with `--no-scale`).
+//!
+//! Phase flags (`simulate` / `record`): `--prefill-chunk C` splits each
+//! prompt's prefill into C-token chunks scheduled across rounds (0, the
+//! default, keeps the paper's monolithic one-round prefill and is
+//! bit-identical to not passing the flag); `--fleet-mode
+//! disagg[:prefill=K,latency=L,per-token=P]` splits a `--workers N`
+//! fleet into K dedicated prefill workers and N−K decode workers with a
+//! modeled KV-transfer cost `L + P·(s+1)` between the tiers (prefill
+//! placed by prompt length, decode by KV headroom; per-phase TTFT/e2e
+//! come from the stitched records). Disagg is incompatible with
+//! `--admission` and `--stream`.
 //!
 //! Engine flags (`simulate` / `suite` / `record`): `--engine
 //! round|event` picks the clock driver — outcomes are bit-identical,
@@ -75,17 +89,17 @@
 //! execution no longer matches. `serve --record <path>` captures a live
 //! serving run as a replayable offline benchmark.
 
-use kvsched::core::{ClassSet, Instance, Request};
+use kvsched::core::{ClassSet, DisaggSpec, Instance, Request};
 use kvsched::flow::Decision;
 use kvsched::metrics::stability::{analyze_fleet, analyze_outcome, StabilityReport};
 use kvsched::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use kvsched::predictor::Predictor;
 use kvsched::prelude::*;
 use kvsched::opt::{self, HindsightConfig};
-use kvsched::sim::{continuous, discrete, EngineKind, SimConfig};
+use kvsched::sim::{continuous, discrete, run_fleet_disagg, EngineKind, SimConfig};
 use kvsched::trace::{
-    perf_by_name, record_fleet_flow, record_sim_flow, replay_fleet, replay_sim, Trace, TraceEvent,
-    TraceMeta, TraceSink,
+    perf_by_name, record_fleet_disagg, record_fleet_flow, record_sim_flow, replay_fleet,
+    replay_sim, Trace, TraceEvent, TraceMeta, TraceSink,
 };
 use kvsched::util::cli::Args;
 use kvsched::util::error::{anyhow, Result};
@@ -124,12 +138,28 @@ fn fleet_flags(args: &Args) -> (usize, &str) {
 /// Engine config from `--engine round|event` (`simulate` / `suite` /
 /// `record`): both engines are bit-identical; `event` skips quiet
 /// rounds in O(1) and is the fast path at low utilization.
+/// `--prefill-chunk C` (default 0 = monolithic) splits prefill into
+/// C-token chunks on either engine.
 fn sim_config(args: &Args) -> Result<SimConfig> {
     let engine = EngineKind::parse(args.str_or("engine", "round")).map_err(|e| anyhow!("{e}"))?;
     Ok(SimConfig {
         engine,
+        prefill_chunk: args.u64_or("prefill-chunk", 0),
         ..SimConfig::default()
     })
+}
+
+/// Parse `--fleet-mode homog|disagg[:...]` against the fleet width;
+/// `None` is the homogeneous default.
+fn disagg_spec(args: &Args, workers: usize) -> Result<Option<DisaggSpec>> {
+    let mode = args.str_or("fleet-mode", "homog");
+    if mode == "homog" {
+        return Ok(None);
+    }
+    let spec = DisaggSpec::parse(mode)?;
+    spec.validate(workers)
+        .map_err(|e| anyhow!("--fleet-mode {mode} with --workers {workers}: {e}"))?;
+    Ok(Some(spec))
 }
 
 /// Apply the λ × N load scaling for a `workers`-replica fleet (skipped
@@ -319,6 +349,37 @@ fn simulate(args: &Args) -> Result<()> {
         Box::new(Llama70bA100x2::default())
     };
 
+    if let Some(spec) = disagg_spec(args, workers)? {
+        if flow_spec.is_some() {
+            return Err(anyhow!(
+                "--fleet-mode disagg has no flow-control layer yet; drop --admission/--shed/--retry"
+            ));
+        }
+        let inst = scale_for_fleet(inst, workers, args);
+        let mut scheds = (0..workers)
+            .map(|_| kvsched::sched::by_name_classed(args.str_or("algo", "mcsf"), &inst.classes))
+            .collect::<Result<Vec<_>>>()?;
+        let out = run_fleet_disagg(
+            &inst,
+            &mut scheds,
+            spec,
+            None,
+            &predictor,
+            perf.as_ref(),
+            seed,
+            cfg,
+        )
+        .map_err(|e| anyhow!("disagg simulation failed: {e}"))?;
+        println!("{}", out.to_json().pretty());
+        if args.has("slo") {
+            print_slo_table("per-class SLO report", out.goodput(), slo_rows(&out.class_stats()));
+        }
+        if stability {
+            print_stability(&analyze_fleet(&out));
+        }
+        return Ok(());
+    }
+
     if workers > 1 {
         let inst = scale_for_fleet(inst, workers, args);
         let mut fleet = Fleet::new_classed(
@@ -386,7 +447,7 @@ fn simulate(args: &Args) -> Result<()> {
 /// single-worker; bursty class mixes are rejected because their
 /// coalesced arrivals stream out of order (materialize those instead).
 fn simulate_stream(args: &Args) -> Result<()> {
-    for unsupported in ["trace", "preset", "workload", "admission", "shed", "retry"] {
+    for unsupported in ["trace", "preset", "workload", "admission", "shed", "retry", "fleet-mode"] {
         if args.has(unsupported) {
             return Err(anyhow!("--stream generates lmsys/class arrivals lazily; drop --{unsupported}"));
         }
@@ -468,6 +529,31 @@ fn record(args: &Args) -> Result<()> {
     };
 
     let flow_spec = flow_spec_from_args(args)?;
+
+    if let Some(spec) = disagg_spec(args, workers)? {
+        if flow_spec.is_some() {
+            return Err(anyhow!(
+                "--fleet-mode disagg has no flow-control layer yet; drop --admission/--shed/--retry"
+            ));
+        }
+        let inst = scale_for_fleet(inst, workers, args);
+        let (out, trace) = record_fleet_disagg(
+            &inst,
+            algo,
+            spec,
+            workers,
+            None,
+            &predictor,
+            perf.as_ref(),
+            perf_name,
+            seed,
+            cfg,
+        )?;
+        trace.save(out_path)?;
+        println!("wrote {trace} to {out_path}");
+        println!("{}", out.to_json().pretty());
+        return Ok(());
+    }
 
     if workers > 1 {
         let inst = scale_for_fleet(inst, workers, args);

@@ -79,6 +79,13 @@ impl PerRequest {
         self.first_token - self.arrival
     }
 
+    /// Decode-phase time: final token minus first token. In a
+    /// disaggregated run this spans the KV transfer plus the decode
+    /// tier's queueing and service; single-token requests report 0.
+    pub fn decode_time(&self) -> f64 {
+        self.completion - self.first_token
+    }
+
     /// Whether this request met the given SLO (TTFT and e2e latency).
     pub fn met(&self, slo: &SloSpec) -> bool {
         slo.met(self.ttft(), self.latency())
@@ -288,6 +295,15 @@ impl SimOutcome {
             .collect()
     }
 
+    /// Completed-request decode-phase times for class `c`.
+    pub fn class_decode_times(&self, c: ClassId) -> Vec<f64> {
+        self.per_request
+            .iter()
+            .filter(|r| r.class == c)
+            .map(|r| r.decode_time())
+            .collect()
+    }
+
     /// Per-class goodput: SLO-met requests of class `c` over everything
     /// of class `c` routed here.
     pub fn class_goodput(&self, c: ClassId) -> f64 {
@@ -331,6 +347,7 @@ impl SimOutcome {
                     goodput: self.class_goodput(c),
                     latency,
                     ttft: stats::Summary::of(&self.class_ttfts(c)),
+                    decode: stats::Summary::of(&self.class_decode_times(c)),
                 }
             })
             .collect()
@@ -393,6 +410,10 @@ pub struct ClassStats {
     pub latency: stats::Summary,
     /// Time-to-first-token summary over completed requests.
     pub ttft: stats::Summary,
+    /// Decode-phase time summary (completion − first token) over
+    /// completed requests; includes the KV-transfer delay in
+    /// disaggregated runs.
+    pub decode: stats::Summary,
 }
 
 impl ClassStats {
@@ -412,6 +433,10 @@ impl ClassStats {
             .set("ttft_p50", self.ttft.p50)
             .set("ttft_p95", self.ttft.p95)
             .set("ttft_p99", self.ttft.p99)
+            .set("avg_decode", self.decode.mean)
+            .set("decode_p50", self.decode.p50)
+            .set("decode_p95", self.decode.p95)
+            .set("decode_p99", self.decode.p99)
     }
 }
 
@@ -625,6 +650,14 @@ impl FleetOutcome {
             .collect()
     }
 
+    /// Fleet-wide decode-phase times of class `c`'s completed requests.
+    pub fn class_decode_times(&self, c: ClassId) -> Vec<f64> {
+        self.per_worker
+            .iter()
+            .flat_map(|w| w.class_decode_times(c))
+            .collect()
+    }
+
     /// Fleet-level per-class rollups (mirrors
     /// [`SimOutcome::class_stats`], summed over workers).
     pub fn class_stats(&self) -> Vec<ClassStats> {
@@ -642,6 +675,7 @@ impl FleetOutcome {
                     goodput: self.class_goodput(c),
                     latency,
                     ttft: stats::Summary::of(&self.class_ttfts(c)),
+                    decode: stats::Summary::of(&self.class_decode_times(c)),
                 }
             })
             .collect()

@@ -399,6 +399,7 @@ fn run_fleet_sequential(
                 o_true: r.output_len,
                 pred: preds[r.id],
                 class: r.class,
+                prefilled: 0,
             });
             continue;
         }
@@ -641,6 +642,7 @@ fn run_fleet_parallel(
                 o_true: r.output_len,
                 pred: preds[r.id],
                 class: r.class,
+                prefilled: 0,
             }));
         }
 

@@ -1,0 +1,483 @@
+//! Disaggregated prefill/decode fleet driver (the DistServe / vLLM
+//! production pattern): the fleet's first `K` workers run *only* the
+//! prefill phase, the rest *only* decode, with a modeled KV-transfer
+//! cost for shipping each finished prompt's cache across the tiers.
+//!
+//! ## Two causal stages
+//!
+//! Information flows one way — a decode worker can never affect a
+//! prefill worker — so the driver runs as two complete passes:
+//!
+//! 1. **Prefill stage.** The instance's [`Instance::prefill_view`]
+//!    (same arrivals/prompts/classes, outputs truncated to the one
+//!    piggybacked first token) runs on the `K` prefill workers through
+//!    the ordinary fleet driver behind a [`PrefillBalance`] router
+//!    (place by cumulative routed prompt tokens). Requests whose true
+//!    output is a single token finish here outright.
+//! 2. **Decode stage.** Every completed prefill with more output owed
+//!    becomes a *handoff*: at `t₁ + transfer_time(s)` (prefill finish
+//!    plus the modeled KV shipping cost) the request re-arrives — fully
+//!    prefilled, carrying its prompt-plus-first-token KV — at the
+//!    decode tier, where a [`KvHeadroom`] router places it by free KV
+//!    budget and the same `WorkerSim` round loop decodes the remaining
+//!    `o − 1` tokens.
+//!
+//! Per-request records are stitched across the boundary: arrival, start
+//! and first-token come from the prefill stage, completion from the
+//! decode stage, so TTFT measures the prefill tier and e2e spans both.
+//!
+//! ## Reduction
+//!
+//! With zero transfer cost, one worker per tier, and arrivals spaced so
+//! nothing ever queues, the handoff lands exactly where the homogeneous
+//! single worker would have started decoding: the decode tier sees
+//! `s' = s + 1` resident tokens (`prefilled = s'`) and owes `o − 1`
+//! tokens, reproducing the homogeneous `s + done + 1` KV trajectory and
+//! the identical `t + 1.0` unit-time sequence — bit-identical
+//! per-request records (`tests/phase_reduction.rs`).
+//!
+//! ## Determinism
+//!
+//! Worker `w` (globally indexed across both tiers) owns scheduler RNG
+//! stream `seed + w`, exactly as the homogeneous fleet; the decode
+//! router draws from its own [`DECODE_ROUTER_STREAM`] so the two tiers'
+//! routing randomness never interferes. Both stages are sequential and
+//! recordable; a recorded disagg run replays bit-identically
+//! (`tests/trace_replay.rs`).
+
+use super::cluster::run_fleet_inner;
+use super::engine::{clamped_predictions, EngineKind, SimConfig, SimError, WaitState, WorkerSim};
+use super::events::{EventStats, WorkerEvents};
+use crate::cluster::router::{KvHeadroom, PrefillBalance, Router, WorkerLoad};
+use crate::core::{DisaggSpec, Instance, QueuedReq};
+use crate::metrics::{FleetOutcome, PerRequest, SimOutcome};
+use crate::perf::PerfModel;
+use crate::predictor::Predictor;
+use crate::sched::Scheduler;
+use crate::trace::{TraceEvent, TraceSink};
+use crate::util::rng::Rng;
+
+/// RNG stream tag for the decode tier's router (distinct from the
+/// prefill tier's [`super::cluster::ROUTER_STREAM`] and every worker's
+/// scheduler stream). Both disagg routers are deterministic today, but
+/// the stream split keeps any future randomized policy from perturbing
+/// the other tier.
+pub(crate) const DECODE_ROUTER_STREAM: u64 = 0xc2b2_ae3d_27d4_eb4f;
+
+/// One finished prefill on its way to the decode tier.
+struct Handoff {
+    /// Prefill worker that produced the KV (recorded in the trace's
+    /// Transfer event).
+    from: usize,
+    wait: WaitState,
+}
+
+/// Run a disaggregated fleet over one instance: `scheds` supplies one
+/// scheduler per worker (first `spec.prefill_workers` are the prefill
+/// tier), `worker_m` overrides the per-worker KV budget. Deterministic
+/// given `seed`. The returned [`FleetOutcome`] has one entry per worker
+/// in global order (prefill tier first); stitched per-request records
+/// live on the worker that *completed* each request.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_disagg(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    spec: DisaggSpec,
+    worker_m: Option<u64>,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<FleetOutcome, SimError> {
+    let m = worker_m.unwrap_or(inst.m);
+    let preds = clamped_predictions(inst, predictor, m)?;
+    run_fleet_disagg_inner(inst, scheds, spec, m, &preds, perf, seed, cfg, None)
+}
+
+/// [`run_fleet_disagg`] with a resolved budget, pre-clamped predictions
+/// and an optional recording sink — the shared driver behind disagg
+/// recording and replay.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_fleet_disagg_inner(
+    inst: &Instance,
+    scheds: &mut [Box<dyn Scheduler>],
+    spec: DisaggSpec,
+    m: u64,
+    preds: &[u64],
+    perf: &dyn PerfModel,
+    seed: u64,
+    cfg: SimConfig,
+    sink: Option<TraceSink>,
+) -> Result<FleetOutcome, SimError> {
+    let w_count = scheds.len();
+    spec.validate(w_count).unwrap_or_else(|e| {
+        panic!("invalid disagg spec for a {w_count}-worker fleet: {e}")
+    });
+    let p_count = spec.prefill_workers;
+    let n = inst.requests.len();
+
+    // ---- Stage 1: prefill tier over the output-truncated view --------
+    // The original (clamped) predictions ride along unchanged: they
+    // over-predict the one-token prefill stage, which is conservative —
+    // a feasibility check that passes under the full prediction
+    // certainly passes for less.
+    let pf_inst = inst.prefill_view();
+    let mut pf_router = PrefillBalance::default();
+    let stage1 = run_fleet_inner(
+        &pf_inst,
+        &mut scheds[..p_count],
+        &mut pf_router,
+        m,
+        preds,
+        perf,
+        seed,
+        cfg,
+        sink.clone(),
+        None,
+    )?;
+    let mut prefill_outs = stage1.per_worker;
+
+    // ---- Handoffs: completed prefills that still owe decode tokens ---
+    // A request's prefill record stays on its prefill worker only when
+    // the request *terminates* there (true o = 1); everything else is
+    // detached for stitching and charged to the decode tier.
+    let mut prefill_rec: Vec<Option<(usize, PerRequest)>> = (0..n).map(|_| None).collect();
+    let mut handoffs: Vec<Handoff> = Vec::new();
+    for (w, out) in prefill_outs.iter_mut().enumerate() {
+        out.per_request.retain(|rec| {
+            let r = &inst.requests[rec.id];
+            if r.output_len == 1 {
+                return true; // fully served by the prefill tier
+            }
+            // Handed off: the decode tier owns the request now.
+            out.assigned -= 1;
+            if rec.class < out.assigned_by_class.len() {
+                out.assigned_by_class[rec.class] -= 1;
+            }
+            let at = rec.completion + spec.transfer_time(r.prompt_len);
+            handoffs.push(Handoff {
+                from: w,
+                wait: WaitState {
+                    id: rec.id,
+                    arrival: at,
+                    first_arrival: rec.arrival,
+                    // Prompt plus the piggybacked first token are
+                    // resident on arrival: s' = s + 1 fully prefilled,
+                    // o' = o - 1 still owed — the homogeneous
+                    // `s + done + 1` trajectory continues exactly.
+                    s: r.prompt_len + 1,
+                    o_true: r.output_len - 1,
+                    pred: (preds[rec.id] - 1).max(1),
+                    class: r.class,
+                    prefilled: r.prompt_len + 1,
+                },
+            });
+            prefill_rec[rec.id] = Some((w, rec.clone()));
+            false
+        });
+    }
+    handoffs.sort_by(|a, b| {
+        a.wait
+            .arrival
+            .partial_cmp(&b.wait.arrival)
+            .unwrap()
+            .then(a.wait.id.cmp(&b.wait.id))
+    });
+
+    // ---- Stage 2: decode tier over the handoff stream ----------------
+    let d_count = w_count - p_count;
+    let mut router = KvHeadroom;
+    let mut router_rng = Rng::with_stream(seed, DECODE_ROUTER_STREAM);
+    let mut workers: Vec<WorkerSim> = scheds[p_count..]
+        .iter_mut()
+        .enumerate()
+        .map(|(j, sched)| {
+            let incremental = cfg.incremental && sched.supports_incremental();
+            if incremental {
+                sched.on_reset();
+            }
+            WorkerSim::new(
+                n,
+                m,
+                &sched.name(),
+                seed.wrapping_add((p_count + j) as u64),
+                cfg,
+                incremental,
+            )
+        })
+        .collect();
+    if let Some(sink) = &sink {
+        for (j, worker) in workers.iter_mut().enumerate() {
+            worker.set_trace(sink.clone(), p_count + j);
+        }
+    }
+
+    let mut horizons: Vec<WorkerEvents> = (0..d_count).map(|_| WorkerEvents::new()).collect();
+    let mut ev_stats = EventStats::default();
+    let mut loads: Vec<WorkerLoad> = Vec::with_capacity(d_count);
+    let mut cursor = 0usize;
+    loop {
+        // Earliest next batch formation across busy decode workers
+        // (ties toward the lowest index), mirroring the homogeneous
+        // sequential driver's causal event discipline.
+        let mut next_step: Option<(f64, usize)> = None;
+        for (j, w) in workers.iter().enumerate() {
+            if let Some(ft) = w.next_time() {
+                if next_step.map_or(true, |(bt, _)| ft < bt) {
+                    next_step = Some((ft, j));
+                }
+            }
+        }
+
+        let submission_due = cursor < handoffs.len()
+            && next_step.map_or(true, |(bt, _)| handoffs[cursor].wait.arrival <= bt);
+        if submission_due {
+            let h = &handoffs[cursor];
+            cursor += 1;
+            let view = QueuedReq {
+                id: h.wait.id,
+                arrival: h.wait.arrival,
+                s: h.wait.s,
+                pred: h.wait.pred,
+                class: h.wait.class,
+            };
+            loads.clear();
+            loads.extend(
+                workers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| !w.stopped())
+                    .map(|(j, w)| WorkerLoad {
+                        // Global worker index: the trace's Route events
+                        // and the router's view both speak fleet-wide
+                        // ids, prefill tier first.
+                        worker: p_count + j,
+                        queued: w.queued_len(),
+                        running: w.running_len(),
+                        kv_used: w.kv_used(),
+                        kv_budget: w.budget(),
+                        queued_demand: w.queued_demand(),
+                        assigned: w.assigned(),
+                    }),
+            );
+            let pick = if loads.is_empty() {
+                // Every decode worker capped out: the handoff is
+                // unservable; park it on the first decode worker (shows
+                // up in assigned − completed), as the homogeneous
+                // driver parks on worker 0.
+                p_count
+            } else {
+                let id = router.route(&view, &loads, &mut router_rng);
+                assert!(
+                    id >= p_count && id < w_count,
+                    "decode router picked worker {id} outside the decode tier"
+                );
+                id
+            };
+            if let Some(sink) = &sink {
+                sink.record(TraceEvent::Transfer {
+                    t: h.wait.arrival,
+                    from: h.from,
+                    id: h.wait.id,
+                    tokens: h.wait.s,
+                });
+                sink.record(TraceEvent::Route {
+                    t: h.wait.arrival,
+                    worker: pick,
+                    id: h.wait.id,
+                });
+            }
+            workers[pick - p_count].deliver(h.wait.clone());
+            continue;
+        }
+
+        let Some((_, j)) = next_step else {
+            break; // no handoffs left, no busy workers: done
+        };
+        match cfg.engine {
+            EngineKind::Round => workers[j].step(scheds[p_count + j].as_mut(), perf)?,
+            EngineKind::Event => {
+                horizons[j].turn(&mut workers[j], scheds[p_count + j].as_mut(), perf, &mut ev_stats)?
+            }
+        }
+    }
+
+    // ---- Stitch records across the phase boundary --------------------
+    let mut decode_outs: Vec<SimOutcome> = workers.into_iter().map(WorkerSim::finish).collect();
+    for out in &mut decode_outs {
+        out.classes = inst.classes.clone();
+        for rec in &mut out.per_request {
+            let (_, p) = prefill_rec[rec.id]
+                .as_ref()
+                .expect("decode record without a prefill record");
+            rec.arrival = p.arrival;
+            rec.start = p.start;
+            rec.first_token = p.first_token;
+            rec.restarts += p.restarts;
+        }
+    }
+
+    let mut per_worker = prefill_outs;
+    per_worker.extend(decode_outs);
+    Ok(FleetOutcome::new("prefill-balance+kv-headroom", per_worker))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Request;
+    use crate::perf::UnitTime;
+    use crate::sched::by_name;
+
+    fn scheds(algo: &str, workers: usize) -> Vec<Box<dyn Scheduler>> {
+        (0..workers).map(|_| by_name(algo).unwrap()).collect()
+    }
+
+    /// Spaced arrivals, 1 prefill + 1 decode worker, zero transfer cost:
+    /// every request's stitched record matches the homogeneous
+    /// single-worker run bit for bit (the corpus-scale version lives in
+    /// tests/phase_reduction.rs).
+    #[test]
+    fn serial_zero_cost_reduces_to_single_worker() {
+        let inst = Instance::new(
+            60,
+            vec![
+                Request::new(0, 0.0, 5, 7),
+                Request::new(1, 20.0, 3, 4),
+                Request::new(2, 40.0, 8, 6),
+            ],
+        );
+        let cfg = SimConfig::default();
+        let base = super::super::engine::run(
+            &inst,
+            by_name("mcsf").unwrap().as_mut(),
+            &Predictor::exact(),
+            &UnitTime,
+            9,
+            cfg,
+        )
+        .unwrap();
+        let out = run_fleet_disagg(
+            &inst,
+            &mut scheds("mcsf", 2),
+            DisaggSpec::default(),
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            9,
+            cfg,
+        )
+        .unwrap();
+        assert!(out.finished());
+        assert_eq!(out.completed(), 3);
+        let mut recs: Vec<_> = out
+            .per_worker
+            .iter()
+            .flat_map(|w| w.per_request.iter().cloned())
+            .collect();
+        recs.sort_by_key(|r| r.id);
+        assert_eq!(recs, base.per_request);
+        assert_eq!(out.unserved(), 0);
+    }
+
+    /// Transfer cost delays completions but not the prefill-side TTFT.
+    #[test]
+    fn transfer_cost_shifts_completions_only() {
+        let inst = Instance::new(60, vec![Request::new(0, 0.0, 5, 7)]);
+        let cfg = SimConfig::default();
+        let run_with = |spec: DisaggSpec| {
+            run_fleet_disagg(
+                &inst,
+                &mut scheds("mcsf", 2),
+                spec,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                9,
+                cfg,
+            )
+            .unwrap()
+        };
+        let free = run_with(DisaggSpec::default());
+        let costly = run_with(DisaggSpec {
+            transfer_latency: 2.0,
+            transfer_per_token: 0.5,
+            ..DisaggSpec::default()
+        });
+        let rec = |o: &FleetOutcome| {
+            o.per_worker
+                .iter()
+                .flat_map(|w| w.per_request.iter())
+                .next()
+                .unwrap()
+                .clone()
+        };
+        let (f, c) = (rec(&free), rec(&costly));
+        assert_eq!(f.first_token, c.first_token, "TTFT is a prefill-tier property");
+        // transfer_time(5) = 2.0 + 0.5 * 6 = 5.0 later arrival at decode.
+        assert_eq!(c.completion, f.completion + 5.0);
+    }
+
+    /// o = 1 requests never touch the decode tier.
+    #[test]
+    fn single_token_requests_finish_on_prefill_tier() {
+        let inst = Instance::new(60, vec![Request::new(0, 0.0, 5, 1)]);
+        let out = run_fleet_disagg(
+            &inst,
+            &mut scheds("mcsf", 2),
+            DisaggSpec::default(),
+            None,
+            &Predictor::exact(),
+            &UnitTime,
+            9,
+            SimConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(out.per_worker[0].per_request.len(), 1);
+        assert_eq!(out.per_worker[1].per_request.len(), 0);
+        assert_eq!(out.per_worker[1].assigned, 0);
+        assert_eq!(out.unserved(), 0);
+    }
+
+    /// Round and event engines agree on the disagg path.
+    #[test]
+    fn disagg_engines_agree() {
+        let inst = Instance::new(
+            30,
+            vec![
+                Request::new(0, 0.0, 5, 7),
+                Request::new(1, 0.5, 3, 4),
+                Request::new(2, 1.0, 8, 6),
+                Request::new(3, 9.0, 2, 9),
+            ],
+        );
+        let spec = DisaggSpec {
+            prefill_workers: 1,
+            transfer_latency: 0.25,
+            transfer_per_token: 0.0,
+        };
+        let run_kind = |engine: EngineKind| {
+            run_fleet_disagg(
+                &inst,
+                &mut scheds("mcsf", 3),
+                spec,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                9,
+                SimConfig { engine, ..SimConfig::default() },
+            )
+            .unwrap()
+        };
+        let round = run_kind(EngineKind::Round);
+        let event = run_kind(EngineKind::Event);
+        assert_eq!(round.per_worker.len(), event.per_worker.len());
+        for (r, e) in round.per_worker.iter().zip(&event.per_worker) {
+            assert_eq!(r.per_request, e.per_request);
+            assert_eq!(
+                r.total_latency().to_bits(),
+                e.total_latency().to_bits()
+            );
+        }
+    }
+}

@@ -39,6 +39,26 @@
 //! them behind a [`crate::cluster::Router`] with the *same* delivery
 //! discipline, which is what makes a 1-worker fleet bit-identical to
 //! this function (`tests/cluster_reduction.rs`).
+//!
+//! ## Prefill / decode phase split
+//!
+//! Each admitted request runs through two phases. **Prefill** writes the
+//! prompt's KV cache, [`SimConfig::prefill_chunk`] tokens per round
+//! (`0` = the whole prompt in the admission round — the historical
+//! monolithic behavior). **Decode** then produces one output token per
+//! round. The round that writes the last prompt chunk also piggybacks
+//! the first decode token, so with `prefill_chunk = 0` every request's
+//! arithmetic — batch composition, KV trajectory, completion times — is
+//! *bit-identical* to the pre-split engine (`tests/phase_reduction.rs`).
+//! Chunked prefill bounds a prompt's per-round compute contribution,
+//! which is what lets short interactive requests interleave with a long
+//! prompt's prefill instead of waiting behind one giant iteration
+//! (TTFT protection; see ARCHITECTURE.md §Phase lifecycle). A request
+//! evicted mid-prefill loses its prompt KV like any other evictee and
+//! re-prefills from scratch on re-admission. Requests delivered with
+//! [`WaitState::prefilled`]` ≥ s` (disaggregated decode workers —
+//! `sim::disagg`) skip prefill entirely and decode from their first
+//! round.
 
 use crate::core::{ActiveReq, ClassId, Instance, QueuedReq, RequestId};
 use crate::flow::{Decision, FlowControl, FlowLoad};
@@ -115,6 +135,13 @@ pub struct SimConfig {
     /// [`EngineKind::Event`]). Outcomes are bit-identical either way;
     /// the event engine is faster whenever quiet rounds dominate.
     pub engine: EngineKind,
+    /// Prefill chunk size in prompt tokens per round. `0` (the default)
+    /// prefills the whole prompt in the admission round — bit-identical
+    /// to the engine before the phase split. Any other value caps how
+    /// many prompt tokens one request contributes to a single
+    /// iteration's prefill work; the round that writes the last chunk
+    /// also produces the request's first decode token.
+    pub prefill_chunk: u64,
 }
 
 impl Default for SimConfig {
@@ -125,6 +152,7 @@ impl Default for SimConfig {
             record_series: true,
             incremental: true,
             engine: EngineKind::Round,
+            prefill_chunk: 0,
         }
     }
 }
@@ -161,6 +189,11 @@ struct ActiveState {
     pred: u64,
     class: ClassId,
     done: u64,
+    /// Prompt tokens whose KV was written in *previous* rounds. `< s`
+    /// while the request is still prefilling; pinned to `s` once the
+    /// prompt is fully cached (decode phase). Monolithic prefill
+    /// (`prefill_chunk = 0`) jumps `0 → s` in the admission round.
+    prefilled: u64,
     started_round: u64,
     start_time: f64,
 }
@@ -193,6 +226,12 @@ pub(crate) struct WaitState {
     pub(crate) o_true: u64,
     pub(crate) pred: u64,
     pub(crate) class: ClassId,
+    /// Prompt tokens already prefilled *elsewhere* before this delivery
+    /// (clamped to `s` at admission). Zero everywhere except the
+    /// disaggregated decode path (`sim::disagg`), where a decode worker
+    /// receives the prompt's KV over the transfer link and must not
+    /// re-run prefill.
+    pub(crate) prefilled: u64,
 }
 
 impl WaitState {
@@ -286,6 +325,14 @@ pub(crate) struct WorkerSim {
     /// overflow check nor the router-facing [`Self::kv_used`] pays an
     /// O(batch) fold.
     kv_next: u64,
+    /// Effective prefill chunk: `cfg.prefill_chunk`, with the monolithic
+    /// knob value `0` normalized to `u64::MAX` so the hot path takes one
+    /// `min` instead of a branch.
+    chunk: u64,
+    /// Number of actives still in the prefill phase (`prefilled < s`).
+    /// Zero on the entire monolithic path after each round's token loop,
+    /// which keeps batch composition O(1) and quiet rounds eligible.
+    prefilling: usize,
     /// Uniform token-progress debt accumulated by quiet rounds (the
     /// event-driven fast path): instead of incrementing every active's
     /// `done`, a quiet round bumps this shared offset. Always zero on
@@ -341,6 +388,8 @@ impl WorkerSim {
             act_slot: vec![NO_SLOT; n],
             queued_demand: 0,
             kv_next: 0,
+            chunk: if cfg.prefill_chunk == 0 { u64::MAX } else { cfg.prefill_chunk },
+            prefilling: 0,
             quiet_offset: 0,
             t: 0.0,
             round: 0,
@@ -439,6 +488,26 @@ impl WorkerSim {
         self.stopped
     }
 
+    /// KV tokens one active contributes to the *current* round's batch:
+    /// what the overflow check charges it, and the unit `kv_next`
+    /// accounting adds/removes on admit/evict.
+    ///
+    /// - Mid-prefill: the KV written by the end of this round —
+    ///   `prefilled` plus this round's chunk — plus one slot when that
+    ///   chunk finishes the prompt (the piggybacked first decode token).
+    /// - Decode: the classic `s + done + 1`.
+    ///
+    /// With `prefill_chunk = 0` a fresh admission charges
+    /// `0 + min(∞, s) + 1 = s + 1`, exactly the monolithic entry cost.
+    fn round_mem(&self, a: &ActiveState) -> u64 {
+        if a.prefilled < a.s {
+            let next = a.prefilled + (a.s - a.prefilled).min(self.chunk);
+            next + u64::from(next == a.s)
+        } else {
+            a.s + a.done + 1
+        }
+    }
+
     /// Execute one round at `next_time()`. No-op on a worker with
     /// nothing to do.
     pub(crate) fn step(
@@ -507,7 +576,6 @@ impl WorkerSim {
 
         // Validate and move admitted requests into the running set.
         let n = self.wait_slot.len();
-        let mut prefill_tokens = 0u64;
         for &id in &admitted {
             if id >= n || self.wait_slot[id] == NO_SLOT {
                 return Err(SimError::BadAdmission(id));
@@ -529,11 +597,9 @@ impl WorkerSim {
                     id: w.id,
                 });
             }
-            prefill_tokens += w.s;
             self.queued_demand -= w.s + w.pred + 1;
-            self.kv_next += w.s + 1;
             self.act_slot[w.id] = self.active.len();
-            self.active.push(ActiveState {
+            let a = ActiveState {
                 id: w.id,
                 arrival: w.arrival,
                 first_arrival: w.first_arrival,
@@ -542,9 +608,15 @@ impl WorkerSim {
                 pred: w.pred,
                 class: w.class,
                 done: 0,
+                prefilled: w.prefilled.min(w.s),
                 started_round: self.round,
                 start_time: self.t,
-            });
+            };
+            self.kv_next += self.round_mem(&a);
+            if a.prefilled < a.s {
+                self.prefilling += 1;
+            }
+            self.active.push(a);
         }
 
         // Actual memory needed to run this round — the incrementally
@@ -553,11 +625,34 @@ impl WorkerSim {
         let usage = self.kv_next;
         debug_assert_eq!(
             usage,
-            self.active.iter().map(|a| a.s + a.done + 1).sum::<u64>()
+            self.active.iter().map(|a| self.round_mem(a)).sum::<u64>()
         );
+        // Batch composition. With nothing mid-prefill (every monolithic
+        // round after its admissions resolve, since monolithic admission
+        // rounds scan; and every chunked decode-only round) the O(1)
+        // shape is exact: no prefill work, every active decodes. Only
+        // rounds that actually carry prefill pay the O(batch) scan.
+        let (prefill_tokens, decode_reqs) = if self.prefilling == 0 {
+            (0, self.active.len() as u64)
+        } else {
+            let mut pf = 0u64;
+            let mut dr = 0u64;
+            for a in &self.active {
+                if a.prefilled < a.s {
+                    let c = (a.s - a.prefilled).min(self.chunk);
+                    pf += c;
+                    // The round that writes the last chunk piggybacks
+                    // the first decode token.
+                    dr += u64::from(a.prefilled + c == a.s);
+                } else {
+                    dr += 1;
+                }
+            }
+            (pf, dr)
+        };
         let batch = BatchComposition {
             prefill_tokens,
-            decode_reqs: self.active.len() as u64,
+            decode_reqs,
             kv_tokens: usage,
         };
 
@@ -592,8 +687,12 @@ impl WorkerSim {
                 for (i, rest) in self.active[pos..].iter().enumerate() {
                     self.act_slot[rest.id] = pos + i;
                 }
-                post_usage -= a.s + a.done + 1;
-                self.kv_next -= a.s + a.done + 1;
+                let mem = self.round_mem(&a);
+                post_usage -= mem;
+                self.kv_next -= mem;
+                if a.prefilled < a.s {
+                    self.prefilling -= 1;
+                }
                 self.restarts[a.id] += 1;
                 self.outcome.evicted_requests += 1;
                 if let Some(sink) = &self.sink {
@@ -612,6 +711,11 @@ impl WorkerSim {
                     o_true: a.o_true,
                     pred: a.pred,
                     class: a.class,
+                    // Eviction drops the prompt KV along with everything
+                    // else; a re-admission re-prefills from scratch (the
+                    // recompute semantics the monolithic engine always
+                    // had).
+                    prefilled: 0,
                 };
                 self.wait_slot[w.id] = self.waiting.len();
                 if self.incremental {
@@ -645,12 +749,36 @@ impl WorkerSim {
                 .push((self.t, self.queued_len() as u64));
         }
 
-        // Token production + completions. Every active gains one token,
-        // so next round's usage grows by the batch size (completions
-        // subtract themselves back out below).
-        self.kv_next += self.active.len() as u64;
+        // Token production + completions. Decode actives (including the
+        // piggybacked last-chunk prefills) each gain one token, growing
+        // next round's usage by one apiece (completions subtract
+        // themselves back out below); still-prefilling actives instead
+        // book their next chunk's KV delta. With `prefill_chunk = 0`
+        // every admitted request completes prefill in its admission
+        // round, so the arithmetic reduces to the historical
+        // one-token-per-active bulk increment.
         let mut i = 0;
         while i < self.active.len() {
+            if self.active[i].prefilled < self.active[i].s {
+                let p = self.active[i].prefilled;
+                let s = self.active[i].s;
+                let c = (s - p).min(self.chunk);
+                self.active[i].prefilled = p + c;
+                if p + c < s {
+                    // Still mid-prefill: no token produced; stage next
+                    // round's chunk (+1 KV slot if that chunk finishes
+                    // the prompt, for its piggybacked decode token).
+                    let rem = s - (p + c);
+                    let next = rem.min(self.chunk);
+                    self.kv_next += next + u64::from(next == rem);
+                    i += 1;
+                    continue;
+                }
+                // Prompt fully cached this round; fall through to decode
+                // for the piggybacked first token.
+                self.prefilling -= 1;
+            }
+            self.kv_next += 1;
             self.active[i].done += 1;
             if self.active[i].done == 1 && self.first_token[self.active[i].id].is_nan() {
                 // First output token ever produced for this request
@@ -699,7 +827,12 @@ impl WorkerSim {
     /// scheduler call is a guaranteed no-op by the quiescence contract
     /// on [`Scheduler`]), no KV overflow, and the previous round was not
     /// an overflow clearing (whose survivors may still sit at
-    /// `done = 0`, needing a full step to produce their first token).
+    /// `done = 0`, needing a full step to produce their first token),
+    /// and nothing mid-prefill (a prefilling active produces chunk
+    /// writes, not a uniform decode token — chunked rounds always run
+    /// as full steps; with `prefill_chunk = 0` the `prefilling` counter
+    /// is already zero by the end of every token loop, so this clause
+    /// never changes the monolithic engine's quiet/full split).
     /// The caller must additionally rule out completion events due next
     /// round — that knowledge lives in the event heap, not here.
     pub(crate) fn quiet_eligible(&self) -> bool {
@@ -709,6 +842,7 @@ impl WorkerSim {
             && self.pending.front().map_or(true, |w| w.arrival > self.t)
             && self.kv_next <= self.m
             && self.last_overflow_round != self.round
+            && self.prefilling == 0
     }
 
     /// Execute one round known to change nothing but the clock and every
@@ -784,6 +918,12 @@ impl WorkerSim {
     /// quiet rounds from here on: one token per round means request `a`
     /// finishes in round `round + (o_true − done)`. Call with the quiet
     /// offset flushed.
+    /// For a mid-prefill active (`done = 0`, remaining prompt chunks
+    /// still owed) this *underestimates* the true completion round —
+    /// harmless for the event driver, which only uses these as "no quiet
+    /// round past this point" bounds and rebuilds after every full step;
+    /// an early bound merely forces an extra full step (and chunked
+    /// rounds are never quiet anyway, via [`Self::quiet_eligible`]).
     pub(crate) fn completion_rounds(&self) -> impl Iterator<Item = (RequestId, u64)> + '_ {
         debug_assert_eq!(self.quiet_offset, 0);
         self.active
@@ -974,6 +1114,11 @@ pub(crate) fn run_with_preds_flow(
                     o_true: r.output_len,
                     pred: preds[r.id],
                     class: r.class,
+                    // Retries carry no server-side state: a rejection
+                    // happened *before* any KV was written, so the
+                    // re-offer is the original arrival's full prompt —
+                    // nothing prefilled, nothing to resume.
+                    prefilled: 0,
                 });
             }
         }
@@ -1018,6 +1163,102 @@ mod tests {
         // start at t=0, o=7 unit rounds -> completion 7, latency 7.
         assert_eq!(out.per_request[0].completion, 7.0);
         assert_eq!(out.total_latency(), 7.0);
+    }
+
+    fn run_mcsf_chunked(inst: &Instance, chunk: u64) -> SimOutcome {
+        run(
+            inst,
+            &mut McSf::default(),
+            &Predictor::exact(),
+            &UnitTime,
+            1,
+            SimConfig { prefill_chunk: chunk, ..SimConfig::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chunked_single_request_adds_prefill_rounds() {
+        // s=5, chunk=2 -> prefill rounds write 2,2,1 prompt tokens; the
+        // third round piggybacks the first decode token (TTFT = ceil(s/c)
+        // = 3 unit rounds), then o-1 = 6 more decode rounds: completion
+        // at ceil(s/c) - 1 + o = 9.
+        let inst = Instance::new(100, vec![Request::new(0, 0.0, 5, 7)]);
+        let out = run_mcsf_chunked(&inst, 2);
+        assert!(out.finished);
+        assert_eq!(out.per_request.len(), 1);
+        assert_eq!(out.per_request[0].first_token, 3.0);
+        assert_eq!(out.per_request[0].completion, 9.0);
+        assert_eq!(out.rounds, 9);
+    }
+
+    #[test]
+    fn chunk_at_least_prompt_len_matches_monolithic_bitwise() {
+        // A chunk that swallows any prompt whole is the monolithic
+        // engine by construction — pinned bitwise on a multi-request
+        // instance (the corpus-scale version lives in
+        // tests/phase_reduction.rs).
+        let inst = Instance::new(
+            40,
+            vec![
+                Request::new(0, 0.0, 5, 7),
+                Request::new(1, 0.0, 3, 4),
+                Request::new(2, 2.5, 8, 6),
+                Request::new(3, 4.0, 2, 9),
+            ],
+        );
+        let mono = run_mcsf(&inst);
+        let chunked = run_mcsf_chunked(&inst, 1_000);
+        assert_eq!(mono.per_request, chunked.per_request);
+        assert_eq!(mono.mem_series, chunked.mem_series);
+        assert_eq!(mono.tokens_series, chunked.tokens_series);
+        assert_eq!(
+            mono.total_latency().to_bits(),
+            chunked.total_latency().to_bits()
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_respects_kv_budget() {
+        // Two fat prompts under a tight budget: chunked prefill must
+        // never let the formed batch exceed M, and everyone completes.
+        let inst = Instance::new(
+            14,
+            vec![Request::new(0, 0.0, 9, 3), Request::new(1, 0.0, 9, 3)],
+        );
+        let out = run_mcsf_chunked(&inst, 4);
+        assert!(out.finished);
+        assert_eq!(out.per_request.len(), 2);
+        assert!(out.peak_mem <= 14);
+    }
+
+    #[test]
+    fn prefilled_delivery_skips_prefill() {
+        // A WaitState delivered with `prefilled = s` (the disagg decode
+        // handoff) decodes from its first round even under a tiny chunk:
+        // completion after exactly `o` unit rounds, like the monolithic
+        // single-request pin.
+        let mut sched = McSf::default();
+        let cfg = SimConfig { prefill_chunk: 1, ..SimConfig::default() };
+        let mut w = WorkerSim::new(1, 100, &sched.name(), 1, cfg, true);
+        sched.on_reset();
+        w.deliver(WaitState {
+            id: 0,
+            arrival: 0.0,
+            first_arrival: 0.0,
+            s: 6,
+            o_true: 7,
+            pred: 7,
+            class: 0,
+            prefilled: 6,
+        });
+        while w.busy() {
+            w.step(&mut sched, &UnitTime).unwrap();
+        }
+        let out = w.finish();
+        assert_eq!(out.per_request.len(), 1);
+        assert_eq!(out.per_request[0].first_token, 1.0);
+        assert_eq!(out.per_request[0].completion, 7.0);
     }
 
     #[test]

@@ -316,6 +316,7 @@ pub(crate) fn run_events_driver(
                     o_true: r.output_len,
                     pred: preds[r.id],
                     class: r.class,
+                    prefilled: 0,
                 });
             }
         }
@@ -405,6 +406,7 @@ where
                 o_true: r.output_len,
                 pred,
                 class: r.class,
+                prefilled: 0,
             });
         }
         if !worker.busy() {

@@ -11,6 +11,9 @@
 //! * [`cluster::run_fleet`] — N workers behind a pluggable
 //!   [`crate::cluster::Router`], each worker running the same per-round
 //!   loop as the single-worker engines;
+//! * [`disagg::run_fleet_disagg`] — the disaggregated variant: a
+//!   prefill tier and a decode tier with a modeled KV-transfer cost
+//!   between them, stitched per-request records across the boundary;
 //! * [`events::run_events`] — the continuous-time event-driven driver:
 //!   same semantics, but rounds where nothing can happen run through an
 //!   O(1) fast path instead of the full per-round loop, bit-identical
@@ -18,9 +21,11 @@
 
 pub mod cluster;
 pub mod continuous;
+pub mod disagg;
 pub mod discrete;
 pub mod engine;
 pub mod events;
 
+pub use disagg::run_fleet_disagg;
 pub use engine::{EngineKind, SimConfig, SimError};
 pub use events::{run_events, run_events_stats, run_events_stream, EventStats};

@@ -17,6 +17,7 @@
 //! ["reject", t, id, attempt, s, o, pred, class] admission refused (flow control)
 //! ["retry", t, id, attempt, at]                 client re-submission scheduled for `at`
 //! ["shed",  t, id, attempts, class]             retry budget exhausted, dropped
+//! ["xfer",  t, from, id, tokens]                KV handoff prefill → decode tier (disagg)
 //! ```
 //!
 //! The three flow-control events carry no `worker` field: admission sits
@@ -128,6 +129,17 @@ pub enum TraceEvent {
         id: RequestId,
         attempts: u32,
         class: ClassId,
+    },
+    /// Disaggregated fleets only: prefill worker `from` finished `id`'s
+    /// prompt and shipped its `tokens`-slot KV cache (prompt plus the
+    /// piggybacked first token) to the decode tier. `t` is the decode
+    /// arrival — prefill completion plus the modeled transfer time; the
+    /// decode worker appears in the `route` event that follows.
+    Transfer {
+        t: f64,
+        from: usize,
+        id: RequestId,
+        tokens: u64,
     },
 }
 
@@ -244,6 +256,13 @@ impl TraceEvent {
                 Json::from(attempts),
                 Json::from(class),
             ]),
+            TraceEvent::Transfer { t, from, id, tokens } => Json::Arr(vec![
+                Json::from("xfer"),
+                Json::from(t),
+                Json::from(from),
+                Json::from(id),
+                Json::from(tokens),
+            ]),
         }
     }
 
@@ -359,6 +378,15 @@ impl TraceEvent {
                     class: int(4)?,
                 })
             }
+            "xfer" => {
+                want(5)?;
+                Ok(TraceEvent::Transfer {
+                    t: num(1)?,
+                    from: int(2)?,
+                    id: int(3)?,
+                    tokens: int(4)? as u64,
+                })
+            }
             other => Err(anyhow!("unknown trace event tag '{other}'")),
         }
     }
@@ -446,6 +474,14 @@ pub struct TraceMeta {
     /// Retry/backoff spec ([`crate::flow::RetryPolicy::parse`]
     /// grammar); only with `admission`.
     pub retry: Option<String>,
+    /// Prefill chunk size the run scheduled with; `0` (monolithic
+    /// prefill, the pre-phase-split schema) when absent.
+    pub prefill_chunk: u64,
+    /// Disaggregated-fleet spec ([`crate::core::DisaggSpec::parse`]
+    /// grammar) when the trace came from the two-tier driver; `None`
+    /// for homogeneous fleets and single workers. Replay dispatches on
+    /// this to re-run `sim::disagg` instead of the fleet driver.
+    pub disagg: Option<String>,
 }
 
 impl TraceMeta {
@@ -480,6 +516,8 @@ impl TraceMeta {
             admission: None,
             shed: None,
             retry: None,
+            prefill_chunk: 0,
+            disagg: None,
         }
     }
 
@@ -521,6 +559,7 @@ impl TraceMeta {
             record_series: self.record_series,
             incremental: self.incremental,
             engine: EngineKind::Round,
+            prefill_chunk: self.prefill_chunk,
         }
     }
 
@@ -551,6 +590,12 @@ impl TraceMeta {
         }
         if let Some(r) = &self.retry {
             j = j.set("retry", r.as_str());
+        }
+        if self.prefill_chunk != 0 {
+            j = j.set("prefill_chunk", self.prefill_chunk);
+        }
+        if let Some(d) = &self.disagg {
+            j = j.set("disagg", d.as_str());
         }
         j.set("max_rounds", self.max_rounds)
             .set("stall_rounds", self.stall_rounds)
@@ -596,6 +641,11 @@ impl TraceMeta {
                 .map(str::to_string),
             shed: j.get("shed").and_then(Json::as_str).map(str::to_string),
             retry: j.get("retry").and_then(Json::as_str).map(str::to_string),
+            prefill_chunk: j
+                .get("prefill_chunk")
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64,
+            disagg: j.get("disagg").and_then(Json::as_str).map(str::to_string),
         })
     }
 }
@@ -816,6 +866,12 @@ mod tests {
                 attempts: 4,
                 class: 2,
             },
+            TraceEvent::Transfer {
+                t: 9.25,
+                from: 0,
+                id: 0,
+                tokens: 4,
+            },
         ]
     }
 
@@ -839,6 +895,8 @@ mod tests {
             admission: None,
             shed: None,
             retry: None,
+            prefill_chunk: 0,
+            disagg: None,
         }
     }
 
@@ -885,6 +943,21 @@ mod tests {
         assert_eq!(back.flow_spec().unwrap(), Some(flow));
         // Pre-flow metas (no admission fields) read back as flow-less.
         assert_eq!(sample_meta().flow_spec().unwrap(), None);
+        // The phase-split shape: chunked prefill + disagg spec survive,
+        // and the chunk reaches the replay engine config.
+        let meta = TraceMeta {
+            prefill_chunk: 128,
+            disagg: Some("disagg:prefill=1,latency=0,per-token=0".into()),
+            ..sample_meta()
+        };
+        let back = TraceMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(back, meta);
+        assert_eq!(back.sim_config().prefill_chunk, 128);
+        // Pre-phase-split metas (no such keys) read back monolithic:
+        // the zero-chunk default is also omitted on write.
+        let text = sample_meta().to_json().pretty();
+        assert!(!text.contains("prefill_chunk") && !text.contains("disagg"));
+        assert_eq!(sample_meta().sim_config().prefill_chunk, 0);
     }
 
     #[test]

@@ -31,5 +31,8 @@ pub mod record;
 pub mod replay;
 
 pub use event::{Trace, TraceEvent, TraceKind, TraceMeta, TraceSink, TRACE_VERSION};
-pub use record::{perf_by_name, record_fleet, record_fleet_flow, record_sim, record_sim_flow};
+pub use record::{
+    perf_by_name, record_fleet, record_fleet_disagg, record_fleet_flow, record_sim,
+    record_sim_flow,
+};
 pub use replay::{replay_fleet, replay_sim, ReplayError, TraceDivergence};

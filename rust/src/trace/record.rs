@@ -8,13 +8,14 @@
 
 use super::event::{Trace, TraceKind, TraceMeta, TraceSink};
 use crate::cluster::router_by_name_classed;
-use crate::core::Instance;
+use crate::core::{DisaggSpec, Instance};
 use crate::flow::{FlowControl, FlowSpec};
 use crate::metrics::{FleetOutcome, SimOutcome};
 use crate::perf::{Llama70bA100x2, PerfModel, UnitTime};
 use crate::predictor::Predictor;
 use crate::sched::{by_name_classed, Scheduler};
 use crate::sim::cluster::{run_fleet_inner, ROUTER_STREAM};
+use crate::sim::disagg::run_fleet_disagg_inner;
 use crate::sim::engine::{clamped_predictions, run_with_preds_flow};
 use crate::sim::SimConfig;
 use crate::util::error::{anyhow, Result};
@@ -59,6 +60,8 @@ fn meta_from_cfg(
         admission: None,
         shed: None,
         retry: None,
+        prefill_chunk: cfg.prefill_chunk,
+        disagg: None,
     }
 }
 
@@ -124,6 +127,64 @@ pub fn record_sim_flow(
     if let Some(spec) = flow {
         meta = meta.with_flow(spec);
     }
+    Ok((
+        out,
+        Trace {
+            meta,
+            events: sink.take(),
+        },
+    ))
+}
+
+/// Run a disaggregated prefill/decode fleet ([`crate::sim::disagg`])
+/// while recording. Both stages share one sink, so the event stream is
+/// stage-major and fully deterministic: every prefill-tier event first,
+/// then the decode tier's transfer/route/arrival interleave. The spec
+/// string is stamped into the meta (`disagg` key) and dispatches replay
+/// back through the two-tier driver.
+#[allow(clippy::too_many_arguments)]
+pub fn record_fleet_disagg(
+    inst: &Instance,
+    algo: &str,
+    spec: DisaggSpec,
+    workers: usize,
+    worker_m: Option<u64>,
+    predictor: &Predictor,
+    perf: &dyn PerfModel,
+    perf_name: &str,
+    seed: u64,
+    cfg: SimConfig,
+) -> Result<(FleetOutcome, Trace)> {
+    let mut scheds: Vec<Box<dyn Scheduler>> = (0..workers)
+        .map(|_| by_name_classed(algo, &inst.classes))
+        .collect::<Result<_>>()?;
+    spec.validate(workers)?;
+    let m = worker_m.unwrap_or(inst.m);
+    let preds = clamped_predictions(inst, predictor, m)?;
+    let sink = TraceSink::new();
+    let out = run_fleet_disagg_inner(
+        inst,
+        &mut scheds,
+        spec,
+        m,
+        &preds,
+        perf,
+        seed,
+        cfg,
+        Some(sink.clone()),
+    )?;
+    let mut meta = meta_from_cfg(
+        TraceKind::Sim,
+        algo,
+        Some("disagg"),
+        perf_name,
+        seed,
+        workers,
+        m,
+        inst,
+        cfg,
+    );
+    meta.disagg = Some(spec.spec_string());
     Ok((
         out,
         Trace {

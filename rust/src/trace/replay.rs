@@ -19,12 +19,13 @@
 use super::event::{Trace, TraceEvent, TraceKind, TraceSink};
 use crate::cluster::router::{Router, WorkerLoad};
 use crate::cluster::router_by_name_classed;
-use crate::core::{Instance, QueuedReq, Request};
+use crate::core::{DisaggSpec, Instance, QueuedReq, Request};
 use crate::flow::FlowControl;
 use crate::metrics::{FleetOutcome, SimOutcome};
 use crate::perf::PerfModel;
 use crate::sched::{by_name_classed, Scheduler};
 use crate::sim::cluster::run_fleet_inner;
+use crate::sim::disagg::run_fleet_disagg_inner;
 use crate::sim::engine::run_with_preds_flow;
 use crate::sim::SimError;
 use crate::util::rng::Rng;
@@ -122,6 +123,16 @@ pub(crate) struct ReplaySetup {
 /// including requests that were shed and never produced an `Arrival` at
 /// all. Serve recordings apply flow control client-side and count only
 /// admitted requests in `meta.n`, so their rejects are skipped here.
+///
+/// Disaggregated sim recordings split one request across two arrival
+/// events: the prefill tier's (original arrival, original `s`, `o = 1` —
+/// the truncated prefill view) and, when the request owed more tokens,
+/// the decode tier's re-arrival (`s + 1`, `o − 1`). The stage-major sink
+/// order guarantees the prefill arrival comes first; the decode
+/// arrival's remaining output is folded back in, reconstructing the
+/// original `o` for every handed-off request. Requests whose prefill
+/// never completed keep `o = 1` — replay truncates them identically, so
+/// the event diff still verifies bit-exactly.
 pub(crate) fn reconstruct(trace: &Trace) -> Result<ReplaySetup, ReplayError> {
     struct Arr {
         t: f64,
@@ -133,15 +144,22 @@ pub(crate) fn reconstruct(trace: &Trace) -> Result<ReplaySetup, ReplayError> {
         class: usize,
     }
     let meta = &trace.meta;
+    let disagg = meta.kind == TraceKind::Sim && meta.disagg.is_some();
     let mut arrivals: Vec<Arr> = Vec::new();
-    let mut seen: Vec<bool> = Vec::new();
+    let mut slot: Vec<Option<usize>> = Vec::new();
     let mut first_seen = |arrivals: &mut Vec<Arr>, a: Arr| {
-        if a.id >= seen.len() {
-            seen.resize(a.id + 1, false);
+        if a.id >= slot.len() {
+            slot.resize(a.id + 1, None);
         }
-        if !seen[a.id] {
-            seen[a.id] = true;
-            arrivals.push(a);
+        match slot[a.id] {
+            None => {
+                slot[a.id] = Some(arrivals.len());
+                arrivals.push(a);
+            }
+            // Disagg decode re-arrival: fold the remaining output back
+            // into the prefill-view arrival's truncated o = 1.
+            Some(i) if disagg => arrivals[i].o += a.o,
+            Some(_) => {}
         }
     };
     for ev in &trace.events {
@@ -382,6 +400,31 @@ pub fn replay_fleet(trace: &Trace, perf: &dyn PerfModel) -> Result<FleetOutcome,
         .map(|_| by_name_classed(&meta.algo, &meta.classes))
         .collect::<crate::util::error::Result<_>>()
         .map_err(|e| malformed(format!("unknown scheduler '{}': {e}", meta.algo)))?;
+    // Disaggregated recordings replay through the two-tier driver — the
+    // spec string re-derives the tier split and transfer cost, and the
+    // regenerated stage-major event stream (prefill tier, then every
+    // transfer/route/arrival of the decode tier) is diffed bit-exactly.
+    if meta.kind == TraceKind::Sim {
+        if let Some(dspec) = &meta.disagg {
+            let spec = DisaggSpec::parse(dspec)
+                .and_then(|s| s.validate(meta.workers).map(|()| s))
+                .map_err(|e| malformed(format!("bad disagg spec '{dspec}': {e}")))?;
+            let sink = TraceSink::new();
+            let out = run_fleet_disagg_inner(
+                &setup.inst,
+                &mut scheds,
+                spec,
+                meta.m,
+                &setup.preds,
+                perf,
+                meta.seed,
+                meta.sim_config(),
+                Some(sink.clone()),
+            )?;
+            diff_events(&trace.events, &sink.take())?;
+            return Ok(out);
+        }
+    }
     match meta.kind {
         TraceKind::Sim => {
             let mut router = router_by_name_classed(router_spec, &meta.classes)

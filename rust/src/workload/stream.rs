@@ -30,6 +30,12 @@
 //! may be fed directly to [`crate::sim::events::run_events_stream`];
 //! bursty sequences must be materialized through
 //! [`crate::core::Instance::new`], which re-sorts and re-ids.
+//!
+//! The prefill/decode phase split composes with streaming for free: the
+//! chunk size lives in [`crate::sim::SimConfig::prefill_chunk`], which
+//! the streaming driver hands to the same `WorkerSim` rounds as the
+//! materialized engines — `simulate --stream --prefill-chunk` in CI is
+//! the large-n smoke of the reduction test below.
 
 use super::lmsys::LmsysGen;
 use crate::core::{ClassSet, Request};
@@ -232,6 +238,49 @@ mod tests {
         let streamed: Vec<Request> = stream.collect();
         let rebuilt = Instance::new(4000, streamed).with_classes(classes);
         assert_eq!(rebuilt, inst);
+    }
+
+    /// The phase split rides through the streaming driver untouched: a
+    /// chunked-prefill streaming run produces the same per-request
+    /// records as the same chunked run over the materialized instance.
+    #[test]
+    fn stream_run_matches_materialized_under_chunked_prefill() {
+        use crate::perf::UnitTime;
+        use crate::predictor::Predictor;
+        use crate::sched::by_name;
+        use crate::sim::engine::run;
+        use crate::sim::{run_events_stream, SimConfig};
+
+        let gen = LmsysGen::new(500);
+        let mut rng = Rng::new(0x57A2);
+        let inst = gen.instance(200, 10.0, 500, &mut rng);
+        for chunk in [0u64, 32] {
+            let cfg = SimConfig {
+                prefill_chunk: chunk,
+                ..SimConfig::default()
+            };
+            let mut s1 = by_name("mcsf").unwrap();
+            let base = run(&inst, s1.as_mut(), &Predictor::exact(), &UnitTime, 9, cfg).unwrap();
+            let mut s2 = by_name("mcsf").unwrap();
+            let (out, _) = run_events_stream(
+                gen.stream(200, 10.0, Rng::new(0x57A2)),
+                200,
+                500,
+                &inst.classes,
+                s2.as_mut(),
+                &Predictor::exact(),
+                &UnitTime,
+                9,
+                cfg,
+            )
+            .unwrap();
+            assert_eq!(out.per_request, base.per_request, "chunk={chunk}");
+            assert_eq!(
+                out.total_latency().to_bits(),
+                base.total_latency().to_bits(),
+                "chunk={chunk}"
+            );
+        }
     }
 
     /// The iterator contract: exact size, decremented as it drains.

@@ -305,6 +305,74 @@ fn retry_times_match_across_engines_and_the_pure_schedule() {
     }
 }
 
+/// Retries across the phase split: a refused request never wrote any
+/// prompt KV, so every re-offer carries the *full* original prompt —
+/// every arrival and rejection event for a request records its original
+/// `s` and `o`, no matter how many retries preceded admission — and the
+/// recorded retry schedule is bit-identical across the round and event
+/// engines, with and without chunked prefill.
+#[test]
+fn retries_reoffer_full_prompt_and_schedule_is_engine_invariant() {
+    use kvsched::sim::EngineKind;
+
+    let (inst, spec) = rejecting_scenario();
+    let retries = |events: &[TraceEvent]| -> Vec<(usize, u32, u64, u64)> {
+        let mut v: Vec<_> = events
+            .iter()
+            .filter_map(|e| match *e {
+                TraceEvent::Retry { t, id, attempt, at } => {
+                    Some((id, attempt, t.to_bits(), at.to_bits()))
+                }
+                _ => None,
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    for chunk in [0u64, 2] {
+        let record_on = |engine: EngineKind| {
+            record_sim_flow(
+                &inst,
+                "mcsf",
+                &Predictor::exact(),
+                &UnitTime,
+                "unit",
+                7,
+                SimConfig {
+                    engine,
+                    prefill_chunk: chunk,
+                    ..cfg(true)
+                },
+                Some(&spec),
+            )
+            .unwrap()
+        };
+        let (rout, rtrace) = record_on(EngineKind::Round);
+        let (eout, etrace) = record_on(EngineKind::Event);
+        let ctx = format!("chunk={chunk}");
+        let single = retries(&rtrace.events);
+        assert!(!single.is_empty(), "{ctx}: scenario must retry");
+        assert_eq!(
+            single,
+            retries(&etrace.events),
+            "{ctx}: retry schedules must match across engines"
+        );
+        assert_eq!(rout.per_request, eout.per_request, "{ctx}: records");
+        // Full-prompt re-offers: every arrival/reject event — first
+        // attempt or retry — records the original prompt and output.
+        for ev in &rtrace.events {
+            let (id, s, o) = match *ev {
+                TraceEvent::Arrival { id, s, o, .. } => (id, s, o),
+                TraceEvent::Reject { id, s, o, .. } => (id, s, o),
+                _ => continue,
+            };
+            let r = &inst.requests[id];
+            assert_eq!(s, r.prompt_len, "{ctx}: re-offer must keep the full prompt");
+            assert_eq!(o, r.output_len, "{ctx}: re-offer must keep the full output");
+        }
+    }
+}
+
 /// The ISSUE acceptance scenario: a sustained 1.5×-capacity overload,
 /// scored against an SLO whose units match the unit-time clock.
 ///

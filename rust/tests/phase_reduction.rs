@@ -1,0 +1,452 @@
+//! Phase-split reduction differentials: the prefill/decode lifecycle
+//! must be invisible at its neutral configuration and law-abiding away
+//! from it.
+//!
+//! * **Neutral reduction** — `prefill_chunk = 0` (monolithic, the
+//!   default every pre-split test still runs under) and an *infinite*
+//!   chunk (larger than any prompt) must produce **bit-identical**
+//!   `SimOutcome`s: same per-request records, series, counters, and
+//!   latency bits. Checked over the same corpus as
+//!   `tests/incremental_diff.rs` (random instances, §5.1 arrival
+//!   models, Thm-4.1 adversarial), across both engines, single-worker
+//!   and 1-worker fleets behind every router.
+//! * **Engine agreement under chunking** — finite chunks are new
+//!   arithmetic, so round vs event must stay bit-identical there too.
+//! * **Disagg reduction** — a 1-prefill + 1-decode fleet with zero
+//!   KV-transfer cost on serially spaced arrivals reduces to the
+//!   homogeneous single worker, record for record.
+//! * **Chunk laws** — prefill work sums to exactly the prompt length
+//!   (no token lost or double-prefilled), per-iteration prefill work
+//!   never exceeds the chunk, serial TTFT is exactly `ceil(s/c)` unit
+//!   rounds, and under a prefill-cost-proportional clock an interactive
+//!   request's TTFT never *decreases* as the chunk grows — shrinking
+//!   the chunk is what buys TTFT protection.
+
+use std::sync::Mutex;
+
+use kvsched::cluster::Fleet;
+use kvsched::core::{DisaggSpec, FleetSpec, Instance, Request};
+use kvsched::metrics::SimOutcome;
+use kvsched::perf::{BatchComposition, PerfModel, UnitTime};
+use kvsched::predictor::Predictor;
+use kvsched::sched::by_name;
+use kvsched::sim::engine::run;
+use kvsched::sim::{run_fleet_disagg, EngineKind, SimConfig};
+use kvsched::util::prop::{forall_cases, usize_in};
+use kvsched::util::rng::Rng;
+use kvsched::workload::synthetic;
+
+/// Larger than any prompt in the corpus: every prefill completes in its
+/// admission round, exactly like the monolithic path.
+const INF_CHUNK: u64 = 1 << 32;
+
+/// Every registered router, including the two disagg-tier policies.
+const ROUTERS: [&str; 7] = [
+    "rr",
+    "jsq",
+    "least-kv",
+    "po2",
+    "slo-aware",
+    "prefill-balance",
+    "kv-headroom",
+];
+
+/// Incremental implementations plus snapshot-only baselines — the
+/// `incremental_diff` mix trimmed for the extra chunk/engine axes.
+const SPECS: [&str; 4] = [
+    "mcsf",
+    "mc-benchmark",
+    "protect:alpha=0.1,beta=0.5",
+    "fcfs:threshold=0.9",
+];
+
+fn cfg(engine: EngineKind, chunk: u64) -> SimConfig {
+    SimConfig {
+        max_rounds: 10_000,
+        stall_rounds: 1_500,
+        record_series: true,
+        incremental: true,
+        engine,
+        prefill_chunk: chunk,
+    }
+}
+
+fn assert_identical(a: &SimOutcome, b: &SimOutcome, ctx: &str) {
+    assert_eq!(a.algo, b.algo, "{ctx}: algo");
+    assert_eq!(a.assigned, b.assigned, "{ctx}: assigned");
+    assert_eq!(a.finished, b.finished, "{ctx}: finished");
+    assert_eq!(a.rounds, b.rounds, "{ctx}: rounds");
+    assert_eq!(a.peak_mem, b.peak_mem, "{ctx}: peak_mem");
+    assert_eq!(a.overflow_events, b.overflow_events, "{ctx}: overflows");
+    assert_eq!(a.evicted_requests, b.evicted_requests, "{ctx}: evictions");
+    assert_eq!(a.per_request, b.per_request, "{ctx}: per-request records");
+    assert_eq!(a.mem_series, b.mem_series, "{ctx}: memory series");
+    assert_eq!(a.tokens_series, b.tokens_series, "{ctx}: token series");
+    assert_eq!(
+        a.total_latency().to_bits(),
+        b.total_latency().to_bits(),
+        "{ctx}: total latency bits"
+    );
+}
+
+/// The incremental_diff random-instance generator, shared across the
+/// corpus tests below.
+fn random_instance(seed: u64) -> Instance {
+    let mut rng = Rng::new(seed);
+    let m = rng.i64_range(8, 50) as u64;
+    let n = rng.usize_range(1, 30);
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let s = rng.i64_range(1, 5) as u64;
+            let o = rng.i64_range(1, (m - s).min(14) as i64) as u64;
+            let a = rng.i64_range(0, 8) as f64;
+            Request::new(i, a, s, o)
+        })
+        .collect();
+    Instance::new(m, reqs)
+}
+
+/// Monolithic (`chunk = 0`) vs infinite chunk, every spec × predictor ×
+/// engine: bit-identical.
+fn diff_neutral(inst: &Instance, case: &str) -> Result<(), String> {
+    for spec in SPECS {
+        for (pname, pred) in [
+            ("exact", Predictor::exact()),
+            ("noisy", Predictor::uniform_noise(0.5, 11)),
+        ] {
+            for engine in [EngineKind::Round, EngineKind::Event] {
+                let ctx = format!("{case} spec={spec} pred={pname} engine={engine}");
+                let mut s1 = by_name(spec).unwrap();
+                let mono = run(inst, s1.as_mut(), &pred, &UnitTime, 9, cfg(engine, 0))
+                    .map_err(|e| format!("{ctx}: monolithic failed: {e}"))?;
+                let mut s2 = by_name(spec).unwrap();
+                let inf = run(inst, s2.as_mut(), &pred, &UnitTime, 9, cfg(engine, INF_CHUNK))
+                    .map_err(|e| format!("{ctx}: infinite-chunk failed: {e}"))?;
+                assert_identical(&mono, &inf, &ctx);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// 60 random instances: the zero-cost-prefill reduction on both engines.
+#[test]
+fn monolithic_equals_infinite_chunk_on_random_instances() {
+    forall_cases(0x9A5E, 60, usize_in(0, u32::MAX as usize), |&seed| {
+        diff_neutral(&random_instance(seed as u64), &format!("seed={seed:#x}"))
+    });
+}
+
+/// The §5.1 arrival models and the Thm-4.1 adversarial family.
+#[test]
+fn monolithic_equals_infinite_chunk_on_paper_models() {
+    let mut rng = Rng::new(0xA221);
+    for trial in 0..15 {
+        let inst = synthetic::arrival_model_1(&mut rng);
+        diff_neutral(&inst, &format!("model1 trial={trial}")).unwrap();
+    }
+    for trial in 0..15 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        diff_neutral(&inst, &format!("model2 trial={trial}")).unwrap();
+    }
+    for m in [16u64, 64, 144] {
+        let inst = synthetic::adversarial_thm41(m, 0);
+        diff_neutral(&inst, &format!("thm41 m={m}")).unwrap();
+    }
+}
+
+/// A 1-worker fleet behind every router keeps the reduction under
+/// chunking: fleet(chunk) ≡ engine(chunk) for monolithic, finite, and
+/// infinite chunks, on both engines.
+#[test]
+fn one_worker_fleet_matches_engine_under_chunking() {
+    forall_cases(0xC4A2, 25, usize_in(0, u32::MAX as usize), |&seed| {
+        let inst = random_instance(seed as u64);
+        for chunk in [0u64, 3, INF_CHUNK] {
+            for engine in [EngineKind::Round, EngineKind::Event] {
+                let mut single = by_name("mcsf").unwrap();
+                let base = run(
+                    &inst,
+                    single.as_mut(),
+                    &Predictor::exact(),
+                    &UnitTime,
+                    9,
+                    cfg(engine, chunk),
+                )
+                .map_err(|e| format!("seed={seed:#x} chunk={chunk}: engine failed: {e}"))?;
+                for router in ROUTERS {
+                    let ctx =
+                        format!("seed={seed:#x} chunk={chunk} engine={engine} router={router}");
+                    let mut fleet = Fleet::new(FleetSpec::single(), "mcsf", router).unwrap();
+                    let out = fleet
+                        .try_simulate(&inst, &Predictor::exact(), &UnitTime, 9, cfg(engine, chunk))
+                        .map_err(|e| format!("{ctx}: fleet failed: {e}"))?;
+                    assert_identical(&base, &out.per_worker[0], &ctx);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Finite chunks are new arithmetic — round and event engines must agree
+/// bit for bit there too, across the random corpus.
+#[test]
+fn chunked_runs_identical_across_engines() {
+    forall_cases(0xE7E4, 40, usize_in(0, u32::MAX as usize), |&seed| {
+        let inst = random_instance(seed as u64);
+        for spec in SPECS {
+            for chunk in [1u64, 2, 7] {
+                let ctx = format!("seed={seed:#x} spec={spec} chunk={chunk}");
+                let mut s1 = by_name(spec).unwrap();
+                let round = run(
+                    &inst,
+                    s1.as_mut(),
+                    &Predictor::exact(),
+                    &UnitTime,
+                    9,
+                    cfg(EngineKind::Round, chunk),
+                )
+                .map_err(|e| format!("{ctx}: round failed: {e}"))?;
+                let mut s2 = by_name(spec).unwrap();
+                let event = run(
+                    &inst,
+                    s2.as_mut(),
+                    &Predictor::exact(),
+                    &UnitTime,
+                    9,
+                    cfg(EngineKind::Event, chunk),
+                )
+                .map_err(|e| format!("{ctx}: event failed: {e}"))?;
+                assert_identical(&round, &event, &ctx);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Serially spaced random instance: request i arrives only after request
+/// i−1 has had time to fully complete anywhere (prefill + transfer +
+/// decode), so no tier ever queues.
+fn serial_instance(seed: u64) -> Instance {
+    let mut rng = Rng::new(seed);
+    let m = rng.i64_range(30, 80) as u64;
+    let n = rng.usize_range(1, 12);
+    let mut t = 0.0f64;
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let s = rng.i64_range(1, 8) as u64;
+            let o = rng.i64_range(1, 12) as u64;
+            let r = Request::new(i, t, s, o);
+            // Unit-time worst case even at chunk = 1: ceil(s/1) + o − 1
+            // rounds of service, plus slack.
+            t += (s + o + 4) as f64;
+            r
+        })
+        .collect();
+    Instance::new(m, reqs)
+}
+
+/// The acceptance-criteria reduction: a disagg fleet with zero
+/// KV-transfer cost and identical workers reduces to the homogeneous
+/// engine — stitched per-request records bit-identical, corpus-scale,
+/// both engines.
+#[test]
+fn disagg_zero_transfer_reduces_to_homogeneous() {
+    forall_cases(0xD15A, 40, usize_in(0, u32::MAX as usize), |&seed| {
+        let inst = serial_instance(seed as u64);
+        for engine in [EngineKind::Round, EngineKind::Event] {
+            let ctx = format!("seed={seed:#x} engine={engine}");
+            let mut single = by_name("mcsf").unwrap();
+            let base = run(
+                &inst,
+                single.as_mut(),
+                &Predictor::exact(),
+                &UnitTime,
+                9,
+                cfg(engine, 0),
+            )
+            .map_err(|e| format!("{ctx}: engine failed: {e}"))?;
+            let mut scheds: Vec<_> = (0..2).map(|_| by_name("mcsf").unwrap()).collect();
+            let out = run_fleet_disagg(
+                &inst,
+                &mut scheds,
+                DisaggSpec::default(),
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                9,
+                cfg(engine, 0),
+            )
+            .map_err(|e| format!("{ctx}: disagg failed: {e}"))?;
+            assert!(out.finished(), "{ctx}");
+            assert_eq!(out.unserved(), 0, "{ctx}");
+            let mut recs: Vec<_> = out
+                .per_worker
+                .iter()
+                .flat_map(|w| w.per_request.iter().cloned())
+                .collect();
+            recs.sort_by_key(|r| r.id);
+            assert_eq!(recs, base.per_request, "{ctx}: stitched records");
+            assert_eq!(
+                out.total_latency().to_bits(),
+                base.total_latency().to_bits(),
+                "{ctx}: total latency bits"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Unit-clock perf model that remembers every batch it timed, for
+/// auditing the engine's prefill accounting from the outside.
+struct CountingPerf(Mutex<Vec<BatchComposition>>);
+
+impl CountingPerf {
+    fn new() -> CountingPerf {
+        CountingPerf(Mutex::new(Vec::new()))
+    }
+}
+
+impl PerfModel for CountingPerf {
+    fn name(&self) -> String {
+        "counting-unit".into()
+    }
+
+    fn iteration_time(&self, batch: &BatchComposition) -> f64 {
+        self.0.lock().unwrap().push(*batch);
+        1.0
+    }
+}
+
+/// Chunk accounting: across a run with no evictions, the prefill tokens
+/// the perf model is billed for sum to exactly the instance's total
+/// prompt length — every chunk size, no token lost or double-prefilled —
+/// and (serial instances, so one request in flight) no iteration is
+/// billed more than one chunk.
+#[test]
+fn chunk_accounting_sums_to_prompt_length() {
+    forall_cases(0xACC7, 30, usize_in(0, u32::MAX as usize), |&seed| {
+        let inst = serial_instance(seed as u64);
+        let total = inst.total_prompt_tokens();
+        for chunk in [1u64, 2, 3, 5, INF_CHUNK] {
+            let ctx = format!("seed={seed:#x} chunk={chunk}");
+            let perf = CountingPerf::new();
+            let mut sched = by_name("mcsf").unwrap();
+            let out = run(
+                &inst,
+                sched.as_mut(),
+                &Predictor::exact(),
+                &perf,
+                9,
+                cfg(EngineKind::Round, chunk),
+            )
+            .map_err(|e| format!("{ctx}: run failed: {e}"))?;
+            assert!(out.finished(), "{ctx}");
+            assert_eq!(out.evicted_requests, 0, "{ctx}: accounting needs no evictions");
+            let batches = perf.0.lock().unwrap();
+            let billed: u64 = batches.iter().map(|b| b.prefill_tokens).sum();
+            assert_eq!(billed, total, "{ctx}: prefill billing must sum to Σ s_i");
+            let max = batches.iter().map(|b| b.prefill_tokens).max().unwrap_or(0);
+            assert!(
+                max <= chunk,
+                "{ctx}: iteration billed {max} prefill tokens > chunk"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Serial unit-time TTFT is exactly `ceil(s / chunk)` rounds (the last
+/// chunk's round piggybacks the first decode token), so TTFT is weakly
+/// *decreasing* in the chunk size for the request that owns the prompt.
+#[test]
+fn serial_ttft_is_ceil_s_over_chunk() {
+    let s = 12u64;
+    let inst = Instance::new(40, vec![Request::new(0, 0.0, s, 3)]);
+    let mut prev = f64::INFINITY;
+    for chunk in [1u64, 2, 3, 4, 5, 6, 12, INF_CHUNK, 0] {
+        let mut sched = by_name("mcsf").unwrap();
+        let out = run(
+            &inst,
+            sched.as_mut(),
+            &Predictor::exact(),
+            &UnitTime,
+            9,
+            cfg(EngineKind::Round, chunk),
+        )
+        .unwrap();
+        let ttft = out.per_request[0].ttft();
+        let expect = if chunk == 0 { 1 } else { s.div_ceil(chunk) };
+        assert_eq!(ttft, expect as f64, "chunk={chunk}");
+        // 0 means monolithic = infinite chunk: keep it last so the
+        // monotone sweep stays valid.
+        assert!(ttft <= prev, "chunk={chunk}: TTFT must not rise with chunk");
+        prev = ttft;
+        // The decode phase is untouched by chunking: o − 1 rounds after
+        // the first token, plus the KV-transfer-free boundary.
+        assert_eq!(out.per_request[0].decode_time(), 2.0, "chunk={chunk}");
+    }
+}
+
+/// Iteration cost proportional to prefill work — the clock under which
+/// chunking matters (UnitTime charges a 1000-token prefill and a
+/// 1-token decode identically).
+struct PrefillCost;
+
+impl PerfModel for PrefillCost {
+    fn name(&self) -> String {
+        "prefill-cost".into()
+    }
+
+    fn iteration_time(&self, batch: &BatchComposition) -> f64 {
+        1.0 + 0.01 * batch.prefill_tokens as f64
+    }
+}
+
+/// The ISSUE invariant: on a fixed instance — a long prompt hogging the
+/// worker plus a short interactive request right behind it — the
+/// interactive TTFT never decreases as the chunk size grows. Small
+/// chunks bound each iteration's prefill work, letting the short
+/// request's first token out early; monolithic prefill makes it wait
+/// out the entire long prompt.
+#[test]
+fn interactive_ttft_never_decreases_as_chunk_grows() {
+    let inst = Instance::new(
+        1100,
+        vec![
+            Request::new(0, 0.0, 1000, 5), // batch prompt
+            Request::new(1, 0.1, 10, 5),   // interactive
+        ],
+    );
+    let ttft_at = |chunk: u64| {
+        let mut sched = by_name("mcsf").unwrap();
+        let out = run(
+            &inst,
+            sched.as_mut(),
+            &Predictor::exact(),
+            &PrefillCost,
+            9,
+            cfg(EngineKind::Round, chunk),
+        )
+        .unwrap();
+        out.per_request
+            .iter()
+            .find(|r| r.id == 1)
+            .expect("interactive request completed")
+            .ttft()
+    };
+    // 0 = monolithic, the infinite-chunk limit: last in the sweep.
+    let sweep = [25u64, 50, 100, 250, 500, 1000, 0];
+    let ttfts: Vec<f64> = sweep.iter().map(|&c| ttft_at(c)).collect();
+    for w in ttfts.windows(2) {
+        assert!(
+            w[1] >= w[0],
+            "interactive TTFT decreased as chunk grew: {ttfts:?}"
+        );
+    }
+    assert!(
+        *ttfts.last().unwrap() >= 2.0 * ttfts[0],
+        "chunked prefill should cut interactive TTFT well below monolithic: {ttfts:?}"
+    );
+}

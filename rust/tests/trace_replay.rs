@@ -9,15 +9,15 @@
 //! event, and the committed golden traces under `golden/` must keep
 //! replaying clean (CI diffs them against fresh recordings).
 
-use kvsched::core::{ClassSet, Instance, Request};
+use kvsched::core::{ClassSet, DisaggSpec, Instance, Request};
 use kvsched::flow::FlowSpec;
 use kvsched::metrics::SimOutcome;
 use kvsched::perf::UnitTime;
 use kvsched::predictor::Predictor;
 use kvsched::sim::{EngineKind, SimConfig};
 use kvsched::trace::{
-    record_fleet, record_fleet_flow, record_sim, record_sim_flow, replay_fleet, replay_sim,
-    ReplayError, Trace, TraceEvent,
+    record_fleet, record_fleet_disagg, record_fleet_flow, record_sim, record_sim_flow,
+    replay_fleet, replay_sim, ReplayError, Trace, TraceEvent,
 };
 use kvsched::util::prop::{forall_cases, usize_in};
 use kvsched::util::rng::Rng;
@@ -508,6 +508,200 @@ fn traces_are_engine_independent_and_replay_cross_engine() {
                 .unwrap_or_else(|e| panic!("{ctx}: cross-engine replay failed: {e}"));
             assert_identical(&eout, &replayed, &ctx);
         }
+    }
+}
+
+/// Chunked-prefill recordings carry the chunk in the meta, replay
+/// bit-identically through the text round-trip, and stay
+/// engine-independent (round vs event recordings are byte-identical).
+#[test]
+fn chunked_prefill_records_replay_bit_identically() {
+    let mut rng = Rng::new(0xC4E4);
+    for trial in 0..4 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        for chunk in [1u64, 3] {
+            let ctx = format!("trial={trial} chunk={chunk}");
+            let record_on = |engine: EngineKind| {
+                record_sim(
+                    &inst,
+                    "mcsf",
+                    &Predictor::exact(),
+                    &UnitTime,
+                    "unit",
+                    9,
+                    SimConfig {
+                        engine,
+                        prefill_chunk: chunk,
+                        ..cfg(true)
+                    },
+                )
+                .unwrap()
+            };
+            let (rout, rtrace) = record_on(EngineKind::Round);
+            let (eout, etrace) = record_on(EngineKind::Event);
+            assert_identical(&rout, &eout, &ctx);
+            assert_eq!(
+                rtrace.to_text(),
+                etrace.to_text(),
+                "{ctx}: chunked trace text must not depend on the engine"
+            );
+            assert_eq!(rtrace.meta.prefill_chunk, chunk, "{ctx}: meta chunk");
+            let reparsed = Trace::from_text(&rtrace.to_text()).unwrap();
+            assert_eq!(rtrace, reparsed, "{ctx}: text round-trip");
+            assert_eq!(reparsed.meta.prefill_chunk, chunk, "{ctx}: reparsed chunk");
+            let replayed = replay_sim(&reparsed, &UnitTime)
+                .unwrap_or_else(|e| panic!("{ctx}: replay failed: {e}"));
+            assert_identical(&rout, &replayed, &ctx);
+        }
+    }
+}
+
+/// Disaggregated recordings: the trace carries the spec string and the
+/// decode tier's KV-transfer events, survives the text round-trip
+/// exactly, replays to a bit-identical stitched outcome, and is
+/// engine-independent — including cross-engine replay (the replayer's
+/// round clock consuming an event-engine recording).
+#[test]
+fn disagg_records_replay_bit_identically() {
+    let mut rng = Rng::new(0xD15A6);
+    for trial in 0..3 {
+        let inst = synthetic::arrival_model_2(&mut rng);
+        let spec = DisaggSpec {
+            prefill_workers: 1,
+            transfer_latency: 0.25,
+            transfer_per_token: 0.01,
+        };
+        let ctx = format!("trial={trial}");
+        let record_on = |engine: EngineKind| {
+            record_fleet_disagg(
+                &inst,
+                "mcsf",
+                spec,
+                3,
+                None,
+                &Predictor::exact(),
+                &UnitTime,
+                "unit",
+                9,
+                SimConfig { engine, ..cfg(true) },
+            )
+            .unwrap()
+        };
+        let (rout, rtrace) = record_on(EngineKind::Round);
+        let (eout, etrace) = record_on(EngineKind::Event);
+        assert_eq!(rtrace.meta.disagg.as_deref(), Some(spec.spec_string().as_str()));
+        assert!(
+            rtrace
+                .events
+                .iter()
+                .any(|e| matches!(e, TraceEvent::Transfer { .. })),
+            "{ctx}: KV-transfer events recorded"
+        );
+        assert_eq!(
+            rtrace.to_text(),
+            etrace.to_text(),
+            "{ctx}: disagg trace text must not depend on the engine"
+        );
+        let reparsed = Trace::from_text(&rtrace.to_text()).unwrap();
+        assert_eq!(rtrace, reparsed, "{ctx}: text round-trip");
+        for (name, trace, out) in [("round", &reparsed, &rout), ("event", &etrace, &eout)] {
+            let replayed = replay_fleet(trace, &UnitTime)
+                .unwrap_or_else(|e| panic!("{ctx}: {name} replay failed: {e}"));
+            assert_eq!(out.completed(), replayed.completed(), "{ctx} {name}");
+            for w in 0..3 {
+                assert_identical(
+                    &out.per_worker[w],
+                    &replayed.per_worker[w],
+                    &format!("{ctx} {name} worker={w}"),
+                );
+            }
+        }
+    }
+}
+
+/// A tampered KV-transfer event must surface as a divergence at exactly
+/// that event.
+#[test]
+fn tampered_transfer_event_reports_divergence() {
+    let mut rng = Rng::new(0xD15AB);
+    let inst = synthetic::arrival_model_2(&mut rng);
+    let (_, mut trace) = record_fleet_disagg(
+        &inst,
+        "mcsf",
+        DisaggSpec {
+            transfer_latency: 0.5,
+            ..DisaggSpec::default()
+        },
+        2,
+        None,
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        cfg(true),
+    )
+    .unwrap();
+    let pos = trace
+        .events
+        .iter()
+        .position(|e| matches!(e, TraceEvent::Transfer { .. }))
+        .expect("a multi-token run hands prefills to the decode tier");
+    if let TraceEvent::Transfer { t, .. } = &mut trace.events[pos] {
+        *t += 0.125;
+    }
+    match replay_fleet(&trace, &UnitTime) {
+        Err(ReplayError::Divergence(d)) => {
+            assert_eq!(d.index, pos, "divergence must point at the tampered transfer");
+        }
+        Err(other) => panic!("expected a divergence, got: {other}"),
+        Ok(_) => panic!("tampered transfer must not replay clean"),
+    }
+}
+
+/// The committed prefill/decode fixture: a chunked-prefill disaggregated
+/// run — phase split and KV-transfer events together — must keep
+/// matching its golden trace byte-for-byte and replaying bit-identically
+/// on both engines (the event-engine replay consumes the same fixture).
+#[test]
+fn golden_phase_disagg_trace_replays_bit_identically() {
+    let mut rng = Rng::new(0x601D_9);
+    let inst = synthetic::arrival_model_2(&mut rng);
+    let spec = DisaggSpec {
+        prefill_workers: 1,
+        transfer_latency: 0.5,
+        transfer_per_token: 0.01,
+    };
+    let (out, trace) = record_fleet_disagg(
+        &inst,
+        "mcsf",
+        spec,
+        3,
+        None,
+        &Predictor::exact(),
+        &UnitTime,
+        "unit",
+        9,
+        SimConfig {
+            prefill_chunk: 2,
+            ..cfg(true)
+        },
+    )
+    .unwrap();
+    assert!(
+        trace
+            .events
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Transfer { .. })),
+        "fixture must carry KV-transfer events"
+    );
+    check_golden("phase_disagg.trace", &trace);
+    let replayed = replay_fleet(&trace, &UnitTime).unwrap();
+    for w in 0..3 {
+        assert_identical(
+            &out.per_worker[w],
+            &replayed.per_worker[w],
+            &format!("golden phase_disagg worker={w}"),
+        );
     }
 }
 

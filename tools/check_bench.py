@@ -17,7 +17,11 @@ Acceptance ratios (mirrored from the ledger notes — update both together):
                         utilization <= 0.3 (rows above 0.3 document the
                         crossover and are exempt);
                         fleet_low_util: event fleet speedup_vs_round >= 2x at
-                        every utilization <= 0.3.
+                        every utilization <= 0.3;
+                        prefill_phase: the smallest-chunk row's interactive
+                        TTFT goodput >= the monolithic (prefill_chunk=0)
+                        row's — deterministic model-time rows, so the
+                        comparison is machine-independent.
   BENCH_cluster.json    scaling: power-of-two throughput at the largest fleet
                         >= 2x its workers=1 value;
                         routing: power-of-two avg_latency_s <= 1.05x
@@ -105,8 +109,12 @@ def check_sim(doc):
     over = [r for r in rows if r.get("section") == "overloaded"]
     low = [r for r in rows if r.get("section") == "low_util"]
     fleet = [r for r in rows if r.get("section") == "fleet_low_util"]
-    if not over or not low or not fleet:
-        fail("BENCH_sim.json: missing 'overloaded', 'low_util', or 'fleet_low_util' rows")
+    phase = [r for r in rows if r.get("section") == "prefill_phase"]
+    if not over or not low or not fleet or not phase:
+        fail(
+            "BENCH_sim.json: missing 'overloaded', 'low_util', "
+            "'fleet_low_util', or 'prefill_phase' rows"
+        )
         return
     for w in sorted({r["waiting"] for r in over}):
         if w < 6400:
@@ -140,6 +148,23 @@ def check_sim(doc):
                 f"BENCH_sim.json: fleet_low_util u={r['utilization']} "
                 f"event fleet only {sp:.2f}x (< 2x)"
             )
+    mono = next((r for r in phase if r["prefill_chunk"] == 0), None)
+    chunked = [r for r in phase if r["prefill_chunk"] > 0]
+    if mono is None or not chunked:
+        fail("BENCH_sim.json: prefill_phase needs a monolithic and a chunked row")
+        return
+    best = min(chunked, key=lambda r: r["prefill_chunk"])
+    cg, mg = best["interactive_ttft_goodput"], mono["interactive_ttft_goodput"]
+    if cg >= mg:
+        ok(
+            f"sim prefill_phase: chunk={best['prefill_chunk']} interactive TTFT "
+            f"goodput {cg:.3f} >= monolithic {mg:.3f}"
+        )
+    else:
+        fail(
+            f"BENCH_sim.json: prefill_phase chunk={best['prefill_chunk']} interactive "
+            f"TTFT goodput {cg:.3f} < monolithic {mg:.3f}"
+        )
 
 
 def check_cluster(doc):
